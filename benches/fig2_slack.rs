@@ -1,0 +1,33 @@
+//! Bench: regenerate paper Fig. 2 (slack/selection traces) and time the
+//! protocol-only round engine.
+//!
+//! Run: `cargo bench --bench fig2_slack` (`--full` for 10 repetitions with
+//! distinct seeds, reporting trace variance).
+
+use hybridfl::benchkit::{bench, black_box, BenchArgs};
+use hybridfl::harness::{fig2, run_fig2};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let out = std::path::PathBuf::from("reports");
+
+    println!("=== Fig. 2 — regional slack factor traces ===");
+    let seeds: Vec<u64> = if args.full { (40..50).collect() } else { vec![42] };
+    for seed in &seeds {
+        let (result, stats) = run_fig2(&out, *seed).unwrap();
+        println!("seed {seed}:");
+        print!("{}", fig2::render_stats(&stats));
+        println!(
+            "  ({} rounds, {} deadline-bound)",
+            result.rounds.len(),
+            result.rounds.iter().filter(|r| r.deadline_hit).count()
+        );
+    }
+
+    // Engine throughput: the 100-round protocol-only run.
+    let stats = bench(1, if args.quick { 3 } else { 10 }, || {
+        let dir = std::env::temp_dir().join("hybridfl_fig2_bench");
+        black_box(run_fig2(&dir, 42).unwrap());
+    });
+    stats.report("fig2: 100-round HybridFL run (mock engine)");
+}

@@ -1,0 +1,80 @@
+//! Bench: regenerate the accuracy-trace panels of paper Figs. 4 (Task 1)
+//! and 6 (Task 2): per-round global-model accuracy for the three
+//! protocols at C ∈ {0.1, 0.3} × E[dr] ∈ {0.3, 0.6} (the paper's most
+//! informative panels), written as CSV series and summarized as terminal
+//! sparklines.
+//!
+//! Task 1 runs real PJRT training; Task 2 uses a reduced round budget.
+
+use hybridfl::benchkit::BenchArgs;
+use hybridfl::config::{ExperimentConfig, ProtocolKind, TaskKind};
+use hybridfl::metrics;
+use hybridfl::sim::FlRun;
+
+fn spark(series: &[f64]) -> String {
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let hi = series.iter().copied().fold(f64::MIN, f64::max).max(1e-9);
+    series
+        .iter()
+        .map(|&v| GLYPHS[((v / hi) * 7.0).round().clamp(0.0, 7.0) as usize])
+        .collect()
+}
+
+fn main() -> hybridfl::Result<()> {
+    let args = BenchArgs::from_env();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("traces bench requires `make artifacts`; skipping");
+        return Ok(());
+    }
+    let out = std::path::PathBuf::from("reports");
+    std::fs::create_dir_all(&out)?;
+
+    for (task, fig, rounds) in [
+        (TaskKind::Aerofoil, "fig4", 300usize),
+        (TaskKind::Mnist, "fig6", 30),
+    ] {
+        println!("=== {fig} — accuracy traces ({}) ===", task.as_str());
+        let grid: &[(f64, f64)] = if args.quick {
+            &[(0.3, 0.1)]
+        } else {
+            &[(0.3, 0.1), (0.3, 0.3), (0.6, 0.1), (0.6, 0.3)]
+        };
+        for &(dr, c) in grid {
+            println!("panel E[dr]={dr}, C={c}:");
+            for proto in ProtocolKind::ALL {
+                let mut cfg = match task {
+                    TaskKind::Aerofoil => ExperimentConfig::task1_scaled(),
+                    TaskKind::Mnist => ExperimentConfig::task2_scaled(),
+                };
+                cfg.protocol = proto;
+                cfg.dropout.mean = dr;
+                cfg.c_fraction = c;
+                cfg.t_max = rounds;
+                let result = FlRun::new(cfg)?.run()?;
+                // Sample 40 points for the sparkline.
+                let step = (result.rounds.len() / 40).max(1);
+                let series: Vec<f64> = result
+                    .rounds
+                    .iter()
+                    .step_by(step)
+                    .map(|r| r.best_accuracy)
+                    .collect();
+                println!(
+                    "  {:<9} {}  (best {:.3})",
+                    proto.as_str(),
+                    spark(&series),
+                    result.summary.best_accuracy
+                );
+                metrics::write_csv(
+                    &out.join(format!(
+                        "{fig}_dr{dr}_c{c}_{}.csv",
+                        proto.as_str()
+                    )),
+                    &result.rounds,
+                )?;
+            }
+        }
+    }
+    println!("CSV series -> reports/fig4_*.csv, reports/fig6_*.csv");
+    Ok(())
+}

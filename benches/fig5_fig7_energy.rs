@@ -1,0 +1,75 @@
+//! Bench: regenerate the device-energy comparisons of paper Figs. 5
+//! (Task 1) and 7 (Task 2): mean on-device Wh to reach the accuracy
+//! target per protocol × (E[dr], C).
+//!
+//! Task 1 runs real PJRT training on the full grid; Task 2 runs the two
+//! most telling columns (C = 0.1, 0.3) at a reduced round budget.
+
+use hybridfl::benchkit::BenchArgs;
+use hybridfl::config::{ExperimentConfig, ProtocolKind, TaskKind};
+use hybridfl::metrics::Table;
+use hybridfl::sim::FlRun;
+
+fn main() -> hybridfl::Result<()> {
+    let args = BenchArgs::from_env();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("energy bench requires `make artifacts`; skipping");
+        return Ok(());
+    }
+
+    for (task, fig, target, rounds, grid) in [
+        (
+            TaskKind::Aerofoil,
+            "Fig. 5",
+            0.65,
+            400usize,
+            if args.quick {
+                vec![(0.3, 0.1)]
+            } else {
+                vec![(0.1, 0.1), (0.3, 0.1), (0.6, 0.1), (0.3, 0.3), (0.6, 0.3)]
+            },
+        ),
+        (
+            TaskKind::Mnist,
+            "Fig. 7",
+            0.90,
+            30,
+            if args.quick {
+                vec![(0.3, 0.1)]
+            } else {
+                vec![(0.3, 0.1), (0.6, 0.1), (0.3, 0.3)]
+            },
+        ),
+    ] {
+        println!("=== {fig} — mean device energy (Wh) to reach acc={target} ===");
+        let mut table = Table::new(&["E[dr]", "C", "fedavg", "hierfavg", "hybridfl"]);
+        for &(dr, c) in &grid {
+            let mut row = vec![format!("{dr:.1}"), format!("{c:.1}")];
+            for proto in ProtocolKind::ALL {
+                let mut cfg = match task {
+                    TaskKind::Aerofoil => ExperimentConfig::task1_scaled(),
+                    TaskKind::Mnist => ExperimentConfig::task2_scaled(),
+                };
+                let n = cfg.n_clients as f64;
+                cfg.protocol = proto;
+                cfg.dropout.mean = dr;
+                cfg.c_fraction = c;
+                cfg.t_max = rounds;
+                let result = FlRun::new(cfg)?.run()?;
+                let crossing = result
+                    .rounds
+                    .iter()
+                    .find(|r| r.best_accuracy >= target);
+                let energy_j = crossing
+                    .map(|r| r.cum_energy_j)
+                    .unwrap_or_else(|| result.rounds.last().unwrap().cum_energy_j);
+                let mark = if crossing.is_some() { "" } else { "*" };
+                row.push(format!("{:.3}{mark}", energy_j / 3600.0 / n));
+            }
+            table.row(row);
+        }
+        print!("{}", table.render());
+        println!("(* = target not reached; energy at t_max)\n");
+    }
+    Ok(())
+}

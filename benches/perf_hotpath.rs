@@ -1,0 +1,123 @@
+//! Perf microbenches over the hot paths of all three layers — the §Perf
+//! evidence in EXPERIMENTS.md comes from this binary.
+//!
+//! * L3 coordinator: aggregation axpy bandwidth, slack estimator updates,
+//!   client selection, full mock rounds (protocol overhead in isolation).
+//! * L1/L2 via PJRT: train-step latency per bucket, eval latency — the
+//!   compute the coordinator schedules around.
+
+use std::time::Duration;
+
+use hybridfl::benchkit::{bench, bench_for, black_box, BenchArgs};
+use hybridfl::config::{EngineKind, ExperimentConfig, ProtocolKind};
+use hybridfl::model::{weighted_average, ModelParams};
+use hybridfl::rng::Rng;
+use hybridfl::selection::SlackEstimator;
+use hybridfl::sim::FlRun;
+
+fn lenet_sized_params(seed: u64) -> ModelParams {
+    // 44,426 params in LeNet's tensor layout.
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![25, 6], vec![6], vec![150, 16], vec![16], vec![256, 120],
+        vec![120], vec![120, 84], vec![84], vec![84, 10], vec![10],
+    ];
+    let mut rng = Rng::new(seed);
+    let tensors = shapes
+        .iter()
+        .map(|s| {
+            (0..s.iter().product::<usize>())
+                .map(|_| rng.normal(0.0, 0.1) as f32)
+                .collect()
+        })
+        .collect();
+    ModelParams::new(tensors, shapes)
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let iters = if args.quick { 20 } else { 200 };
+
+    println!("=== L3 coordinator hot paths ===");
+
+    // Aggregation: EDC-weighted average of 50 LeNet-sized models.
+    let models: Vec<ModelParams> = (0..50).map(|i| lenet_sized_params(i)).collect();
+    let weighted: Vec<(&ModelParams, f64)> =
+        models.iter().map(|m| (m, 100.0)).collect();
+    let stats = bench(3, iters.min(100), || {
+        black_box(weighted_average(&weighted).unwrap());
+    });
+    stats.report("aggregate 50 x 44k-param models (axpy)");
+    let bytes = 50.0 * 44_426.0 * 4.0;
+    println!(
+        "  -> {:.2} GB/s effective read bandwidth",
+        bytes / stats.mean.as_secs_f64() / 1e9
+    );
+
+    // Slack estimator: O(1) per round by design.
+    let stats = bench(10, iters, || {
+        let mut est = SlackEstimator::new(50, 0.3, 0.5);
+        for t in 0..1000 {
+            est.observe(black_box(t % 20), t % 3 != 0);
+        }
+        black_box(est.theta());
+    });
+    stats.report("slack estimator: 1000 observe() updates");
+
+    // Selection: partial Fisher-Yates over a 500-client region.
+    let mut rng = Rng::new(7);
+    let stats = bench(10, iters, || {
+        black_box(rng.sample_indices(500, 150));
+    });
+    stats.report("select 150 of 500 clients");
+
+    // Full protocol round, mock engine: pure coordinator overhead.
+    let mut cfg = ExperimentConfig::task2_scaled();
+    cfg.engine = EngineKind::Mock;
+    cfg.n_clients = 500;
+    cfg.n_edges = 10;
+    cfg.dataset_size = 20_000;
+    cfg.eval_size = 100;
+    cfg.t_max = 50;
+    cfg.protocol = ProtocolKind::HybridFl;
+    let stats = bench(1, if args.quick { 3 } else { 10 }, || {
+        black_box(FlRun::new(cfg.clone()).unwrap().run().unwrap());
+    });
+    stats.report("50 rounds x 500 clients, mock engine (full L3 stack)");
+    println!(
+        "  -> {:.1} us/client-round of coordinator overhead",
+        stats.mean.as_secs_f64() * 1e6 / (50.0 * 150.0)
+    );
+
+    // PJRT train/eval latency (L1+L2 compute the coordinator schedules).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n=== L1/L2 via PJRT (real compute) ===");
+        use hybridfl::runtime::{build_engine, Engine};
+        use std::sync::Arc;
+
+        for (preset, label, part) in [
+            (ExperimentConfig::task1_scaled(), "aerofoil train (p64 bucket, tau=5)", 40usize),
+            (ExperimentConfig::task2_scaled(), "lenet train (p64 bucket, tau=5)", 50),
+        ] {
+            let mut cfg = preset;
+            cfg.dataset_size = 500;
+            cfg.eval_size = 256;
+            cfg.n_clients = 5;
+            cfg.n_edges = 2;
+            let mut rng = Rng::new(1);
+            let data = Arc::new(hybridfl::data::build(&cfg, &mut rng));
+            let mut engine = build_engine(&cfg, data).unwrap();
+            let w0 = engine.init_params();
+            let idx: Vec<usize> = (0..part).collect();
+            let stats = bench_for(Duration::from_secs(if args.quick { 2 } else { 6 }), || {
+                black_box(engine.train_local(&w0, &idx, 5, 0.05).unwrap());
+            });
+            stats.report(label);
+            let stats = bench_for(Duration::from_secs(if args.quick { 2 } else { 4 }), || {
+                black_box(engine.evaluate(&w0).unwrap());
+            });
+            stats.report("  matching eval (256 samples)");
+        }
+    } else {
+        eprintln!("(skipping PJRT section: run `make artifacts`)");
+    }
+}

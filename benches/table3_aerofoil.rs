@@ -1,0 +1,73 @@
+//! Bench: regenerate paper Table III (Task 1: Aerofoil) — the full
+//! protocol × E[dr] × C grid with real PJRT training — and print the
+//! paper-style rows plus wall-clock cost and shape checks.
+//!
+//! Run: `cargo bench --bench table3_aerofoil` (≈3 min at scaled preset on
+//! one core; `--quick` for the 6-cell smoke grid, `--full` for the exact
+//! paper scale).
+
+use std::time::Instant;
+
+use hybridfl::benchkit::BenchArgs;
+use hybridfl::config::{ProtocolKind, TaskKind};
+use hybridfl::harness::sweep::{render_energy, render_table};
+use hybridfl::harness::{run_task_sweep, SweepOpts, SweepResult};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("table3 bench requires `make artifacts`; skipping");
+        return;
+    }
+    let opts = SweepOpts {
+        full: args.full,
+        quick: args.quick,
+        ..Default::default()
+    };
+    let out = std::path::PathBuf::from("reports");
+    let t0 = Instant::now();
+    let sweep = run_task_sweep(TaskKind::Aerofoil, &opts, &out).unwrap();
+    let wall = t0.elapsed();
+
+    print!("{}", render_table(&sweep));
+    println!();
+    print!("{}", render_energy(&sweep));
+    println!(
+        "\n{} cells regenerated in {wall:.1?} ({:.2?}/run)",
+        sweep.cells.len(),
+        wall / sweep.cells.len() as u32
+    );
+    println!("paper shape checks:");
+    shape_checks(&sweep);
+}
+
+/// The qualitative claims Table III makes, scored on the regenerated data.
+fn shape_checks(sweep: &SweepResult) {
+    let cell = |p: ProtocolKind, dr: f64, c: f64| {
+        sweep
+            .cells
+            .iter()
+            .find(|x| x.protocol == p && (x.e_dr - dr).abs() < 1e-9 && (x.c - c).abs() < 1e-9)
+    };
+    let (mut len_pass, mut time_pass, mut total) = (0, 0, 0);
+    for &dr in &[0.1, 0.3, 0.6] {
+        for &c in &[0.1, 0.3, 0.5] {
+            let (Some(h), Some(f)) =
+                (cell(ProtocolKind::HybridFl, dr, c), cell(ProtocolKind::FedAvg, dr, c))
+            else {
+                continue;
+            };
+            total += 1;
+            if h.avg_round_len < f.avg_round_len {
+                len_pass += 1;
+            }
+            let ht = h.time_to_target.unwrap_or(f64::MAX);
+            let ft = f.time_to_target.unwrap_or(f64::MAX);
+            if ht <= ft {
+                time_pass += 1;
+            }
+        }
+    }
+    println!("  round length: HybridFL < FedAvg in {len_pass}/{total} cells");
+    println!("  time-to-target: HybridFL <= FedAvg in {time_pass}/{total} cells");
+}

@@ -1,0 +1,44 @@
+//! Quickstart: run HybridFL on the Aerofoil task for 60 rounds with real
+//! PJRT training and print what happened.
+//!
+//! ```bash
+//! make artifacts            # once: AOT-compile the JAX/Pallas models
+//! cargo run --release --example quickstart
+//! ```
+
+use hybridfl::config::ExperimentConfig;
+use hybridfl::sim::FlRun;
+
+fn main() -> hybridfl::Result<()> {
+    // Start from the scaled Task-1 preset (15 clients, 3 edge nodes) and
+    // dial in a short demo run under moderate unreliability.
+    let mut cfg = ExperimentConfig::task1_scaled();
+    cfg.t_max = 60;
+    cfg.dropout.mean = 0.3; // 30% of clients drop out of any given round
+    cfg.c_fraction = 0.3; //   the cloud wants models from 30% per round
+
+    println!(
+        "HybridFL quickstart: {} clients / {} edges, E[dr]={}, C={}",
+        cfg.n_clients, cfg.n_edges, cfg.dropout.mean, cfg.c_fraction
+    );
+
+    let result = FlRun::new(cfg)?.run()?;
+
+    // Accuracy trace, ten-round granularity.
+    println!("\n round | accuracy | round len (s) | submissions");
+    for row in result.rounds.iter().filter(|r| r.t % 10 == 0) {
+        println!(
+            " {:>5} | {:>8.3} | {:>13.1} | {:?}",
+            row.t,
+            row.accuracy,
+            row.round_len,
+            row.submissions
+        );
+    }
+
+    let s = &result.summary;
+    println!("\nbest accuracy        : {:.3}", s.best_accuracy);
+    println!("avg federated round  : {:.1} s (virtual)", s.avg_round_len);
+    println!("mean device energy   : {:.4} Wh", s.mean_device_energy_wh);
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile package: L1 Pallas kernels + L2 JAX models + AOT lowering.
+
+Nothing in this package is imported at runtime — `make artifacts` runs
+`python -m compile.aot` once, and the Rust coordinator only touches the
+emitted `artifacts/` files from then on.
+"""

@@ -1,0 +1,149 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas kernels) -> HLO text artifacts.
+
+Run once via `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, per task and per batch-capacity bucket:
+
+    artifacts/<task>_train_p<P>.hlo.txt   (params..., x, y, mask, lr,
+                                          epochs:i32) -> (params'..., loss)
+                                          — the epoch loop is a lax.fori_loop
+                                          inside the HLO (one PJRT call per
+                                          client-round)
+    artifacts/<task>_eval_b<B>.hlo.txt    (params..., x, y, mask) -> 3 sums
+    artifacts/<task>_init.npz             initial parameters (p000, p001, ...)
+    artifacts/manifest.json               shapes, param order, bucket sizes
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Bucketed capacities: HLO is static-shaped, client partitions are not. We
+compile each train step at several capacities P and let the Rust runtime
+pick the smallest bucket that fits a client's partition — the same idiom
+serving systems use for batched executables. Python never runs after this
+script completes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Batch-capacity buckets per task. The scaled experiment presets use the
+# small buckets; the paper-scale presets use the large ones.
+TRAIN_BUCKETS = {"aerofoil": [64, 192], "mnist": [64, 256]}
+EVAL_BUCKETS = {"aerofoil": [256], "mnist": [256]}
+
+TASKS = {
+    "aerofoil": dict(
+        init=model.fcn_init,
+        train=model.fcn_train_epochs,
+        evaluate=model.fcn_eval,
+        x_dims=(model.AEROFOIL_FEATURES,),
+        eval_outputs=["sq_err_sum", "abs_err_sum", "count"],
+        param_names=[f"{n}{i}" for i in range(3) for n in ("w", "b")],
+    ),
+    "mnist": dict(
+        init=model.lenet_init,
+        train=model.lenet_train_epochs,
+        evaluate=model.lenet_eval,
+        x_dims=(1, model.MNIST_HW, model.MNIST_HW),
+        eval_outputs=["nll_sum", "correct", "count"],
+        param_names=[n for n, _ in model.LENET_SHAPES],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(shapes, dtype=jnp.float32):
+    return [jax.ShapeDtypeStruct(s, dtype) for s in shapes]
+
+
+def lower_task(task: str, out_dir: str, seed: int) -> dict:
+    """Lower all buckets for one task; write artifacts; return manifest entry."""
+    cfg = TASKS[task]
+    params = cfg["init"](seed)
+    param_shapes = [list(p.shape) for p in params]
+    p_specs = _specs([tuple(p.shape) for p in params])
+    entry = {
+        "params": [
+            {"name": n, "shape": s}
+            for n, s in zip(cfg["param_names"], param_shapes)
+        ],
+        "x_dims": list(cfg["x_dims"]),
+        "eval_outputs": cfg["eval_outputs"],
+        "train_buckets": {},
+        "eval_buckets": {},
+        "init_npz": f"{task}_init.npz",
+        "seed": seed,
+    }
+
+    for p in TRAIN_BUCKETS[task]:
+        batch = _specs([(p, *cfg["x_dims"]), (p,), (p,)])
+        lr = jax.ShapeDtypeStruct((), jnp.float32)
+        epochs = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jax.jit(cfg["train"]).lower(p_specs, *batch, lr, epochs)
+        fname = f"{task}_train_p{p}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entry["train_buckets"][str(p)] = fname
+        print(f"  lowered {fname}")
+
+    for b in EVAL_BUCKETS[task]:
+        batch = _specs([(b, *cfg["x_dims"]), (b,), (b,)])
+        lowered = jax.jit(cfg["evaluate"]).lower(p_specs, *batch)
+        fname = f"{task}_eval_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entry["eval_buckets"][str(b)] = fname
+        print(f"  lowered {fname}")
+
+    # Initial parameters: zero-padded names keep npz iteration order stable.
+    np.savez(
+        os.path.join(out_dir, entry["init_npz"]),
+        **{f"p{i:03d}": p for i, p in enumerate(params)},
+    )
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=42, help="param init seed")
+    ap.add_argument(
+        "--tasks", default="aerofoil,mnist", help="comma-separated task subset"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": 1, "tasks": {}}
+    for task in args.tasks.split(","):
+        print(f"[aot] lowering task {task}")
+        manifest["tasks"][task] = lower_task(task, args.out, args.seed)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest.json with {len(manifest['tasks'])} tasks")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Pallas kernel package (L1). See fused_dense.py / softmax_nll.py / ref.py."""
+
+from . import ref  # noqa: F401
+from .fused_dense import dense, matmul  # noqa: F401
+from .softmax_nll import softmax_nll  # noqa: F401

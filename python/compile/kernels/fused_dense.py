@@ -1,0 +1,202 @@
+"""L1 Pallas kernels: tiled matmul and fused dense (matmul + bias + activation).
+
+TPU-shaped tiling, CPU-interpret execution
+------------------------------------------
+The kernels tile the output over a ``(M/bm, N/bn)`` grid with the contraction
+dimension K resident per program instance — the classic TPU schedule where
+each grid step keeps an ``x`` row-block and a ``w`` column-block in VMEM and
+feeds the MXU with an f32-accumulating ``jnp.dot``. BlockSpec expresses the
+HBM→VMEM movement; edge tiles are handled by zero-padding in the wrappers so
+block shapes always divide the padded operand shapes.
+
+All ``pallas_call`` sites run with ``interpret=True``: on this CPU-only image
+the Mosaic TPU backend is unavailable, and interpret mode lowers to plain HLO
+ops so the kernels AOT-compile into the same ``artifacts/*.hlo.txt`` the Rust
+PJRT runtime loads. Real-TPU performance is estimated analytically in
+DESIGN.md §Hardware-Adaptation (the shapes used by the paper's models fit
+VMEM whole, so the grid only engages on the large synthetic sweeps).
+
+The backward pass is wired with ``jax.custom_vjp`` so that ``jax.grad`` of
+the L2 model differentiates *through* the Pallas kernels: dgrad/wgrad are the
+same tiled matmul kernel on transposed operands, and the activation gradient
+is a fused elementwise Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Ceiling on block edge; shapes smaller than this run as a single program
+# instance (whole operand resident), larger shapes get a grid.
+#
+# CPU-interpret tuning: every grid step lowers to one iteration of an HLO
+# while-loop with dynamic-slice traffic, so small tiles drown in loop
+# overhead (measured 1.35 s -> ~0.1 s per LeNet train step when moving
+# from 128-row to 4096-row blocks; EXPERIMENTS.md §Perf). On a real TPU
+# these ceilings would be the VMEM-shaped 128/256 — see DESIGN.md
+# §Hardware-Adaptation; the numbers below are the CPU-path schedule.
+_MAX_BLOCK_M = 4096
+_MAX_BLOCK_N = 512
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, ceiling: int) -> int:
+    """Block edge: whole dim if small, otherwise the ceiling tile."""
+    return dim if dim <= ceiling else ceiling
+
+
+# --------------------------------------------------------------------------
+# Tiled matmul kernel
+# --------------------------------------------------------------------------
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # One (bm, K) x (K, bn) -> (bm, bn) MXU tile, f32 accumulation.
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Tiled Pallas matmul: ``a[M,K] @ b[K,N] -> [M,N]``.
+
+    Pads M and N up to block multiples (K stays resident), launches a
+    ``(M/bm, N/bn)`` grid, and slices the result back to the true shape.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
+    bm = _pick_block(m, _MAX_BLOCK_M)
+    bn = _pick_block(n, _MAX_BLOCK_N)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, 0))) if mp != m else a
+    b_p = jnp.pad(b, ((0, 0), (0, np_ - n))) if np_ != n else b
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# Fused dense: act(x @ w + b), custom VJP
+# --------------------------------------------------------------------------
+
+
+def _dense_fwd_kernel(x_ref, w_ref, b_ref, o_ref, pre_ref, *, activation: str):
+    pre = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...][None, :]
+    )
+    pre_ref[...] = pre.astype(pre_ref.dtype)
+    o_ref[...] = ref.apply_activation(pre, activation).astype(o_ref.dtype)
+
+
+def _dense_fwd_pallas(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out, pre) — pre-activation saved for the VJP."""
+    m, k = x.shape
+    _, n = w.shape
+    bm = _pick_block(m, _MAX_BLOCK_M)
+    bn = _pick_block(n, _MAX_BLOCK_N)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    x_p = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    w_p = jnp.pad(w, ((0, 0), (0, np_ - n))) if np_ != n else w
+    b_p = jnp.pad(b, (0, np_ - n)) if np_ != n else b
+    out, pre = pl.pallas_call(
+        functools.partial(_dense_fwd_kernel, activation=activation),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), x.dtype),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        interpret=True,
+    )(x_p, w_p, b_p)
+    return out[:m, :n], pre[:m, :n]
+
+
+def _act_grad_kernel(g_ref, pre_ref, o_ref, *, activation: str):
+    # Fused elementwise: g * act'(pre). One row-block per program instance.
+    o_ref[...] = (g_ref[...] * ref.activation_grad(pre_ref[...], activation)).astype(
+        o_ref.dtype
+    )
+
+
+def _act_grad_pallas(g: jnp.ndarray, pre: jnp.ndarray, activation: str) -> jnp.ndarray:
+    m, n = g.shape
+    bm = _pick_block(m, _MAX_BLOCK_M)
+    mp = _round_up(m, bm)
+    g_p = jnp.pad(g, ((0, mp - m), (0, 0))) if mp != m else g
+    pre_p = jnp.pad(pre, ((0, mp - m), (0, 0))) if mp != m else pre
+    out = pl.pallas_call(
+        functools.partial(_act_grad_kernel, activation=activation),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), g.dtype),
+        interpret=True,
+    )(g_p, pre_p)
+    return out[:m]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str = "linear"):
+    """Fused dense layer ``act(x @ w + b)`` as a Pallas kernel with custom VJP.
+
+    Args:
+      x: [B, K] input batch.
+      w: [K, N] weights.
+      b: [N] bias.
+      activation: 'linear' | 'relu' | 'tanh'.
+    Returns:
+      [B, N] activations.
+    """
+    out, _ = _dense_fwd_pallas(x, w, b, activation)
+    return out
+
+
+def _dense_vjp_fwd(x, w, b, activation):
+    out, pre = _dense_fwd_pallas(x, w, b, activation)
+    return out, (x, w, pre)
+
+
+def _dense_vjp_bwd(activation, res, g):
+    x, w, pre = res
+    gp = _act_grad_pallas(g, pre, activation)  # [B, N]
+    dx = matmul(gp, w.T)  # [B, K]
+    dw = matmul(x.T, gp)  # [K, N]
+    db = jnp.sum(gp, axis=0)  # [N]
+    return dx, dw, db
+
+
+dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `*_ref` counterpart to float32 tolerance under pytest +
+hypothesis sweeps (see python/tests/). They are also used directly by the
+L2 model as a fallback when `HYBRIDFL_NO_PALLAS=1` (debug aid only — the
+shipped artifacts always go through the Pallas path).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain f32 matmul oracle: [M,K] @ [K,N] -> [M,N]."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def apply_activation(pre: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """Activation used by the fused dense kernel. 'linear'|'relu'|'tanh'."""
+    if activation == "linear":
+        return pre
+    if activation == "relu":
+        return jnp.maximum(pre, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(pre)
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def activation_grad(pre: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """d act(pre) / d pre, evaluated at the saved pre-activation."""
+    if activation == "linear":
+        return jnp.ones_like(pre)
+    if activation == "relu":
+        return (pre > 0.0).astype(pre.dtype)
+    if activation == "tanh":
+        t = jnp.tanh(pre)
+        return 1.0 - t * t
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def dense_ref(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str = "linear"
+) -> jnp.ndarray:
+    """Fused dense oracle: act(x @ w + b)."""
+    return apply_activation(matmul_ref(x, w) + b[None, :], activation)
+
+
+def softmax_nll_ref(logits: jnp.ndarray, y_onehot: jnp.ndarray) -> jnp.ndarray:
+    """Per-row negative log-likelihood oracle.
+
+    loss_i = logsumexp(logits_i) - <logits_i, y_i>   for one-hot y.
+    Returns shape [B].
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.squeeze(m, -1) + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    return lse - jnp.sum(logits * y_onehot, axis=-1)
+
+
+def softmax_nll_grad_ref(
+    logits: jnp.ndarray, y_onehot: jnp.ndarray, g: jnp.ndarray
+) -> jnp.ndarray:
+    """d(sum g_i * loss_i)/d logits = g[:,None] * (softmax(logits) - y)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    sm = e / jnp.sum(e, axis=-1, keepdims=True)
+    return g[:, None] * (sm - y_onehot)

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: row-wise fused log-softmax + negative log-likelihood.
+
+Computes ``loss_i = logsumexp(logits_i) - <logits_i, y_i>`` for one-hot
+labels in a single VMEM-resident pass per row-block (max, exp, sum, dot all
+fused — no [B,C] intermediate ever round-trips to HBM), plus the matching
+backward kernel ``g_i * (softmax(logits_i) - y_i)`` wired via
+``jax.custom_vjp``.
+
+Same interpret-mode caveat as fused_dense.py: on this CPU image the kernels
+lower to plain HLO so they embed into the AOT artifacts the Rust runtime
+executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_MAX_BLOCK_B = 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, ceiling: int) -> int:
+    return dim if dim <= ceiling else ceiling
+
+
+def _nll_fwd_kernel(x_ref, y_ref, loss_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    lse = jnp.squeeze(m, -1) + jnp.log(jnp.sum(jnp.exp(x - m), axis=-1))
+    loss_ref[...] = (lse - jnp.sum(x * y_ref[...], axis=-1)).astype(loss_ref.dtype)
+
+
+def _nll_bwd_kernel(x_ref, y_ref, g_ref, dx_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    sm = e / jnp.sum(e, axis=-1, keepdims=True)
+    dx_ref[...] = (g_ref[...][:, None] * (sm - y_ref[...])).astype(dx_ref.dtype)
+
+
+def _call_rowwise(kernel, outs_shape, b: int, c: int, *args):
+    bb = _pick_block(b, _MAX_BLOCK_B)
+    bp = _round_up(b, bb)
+    padded = []
+    for a in args:
+        if a.shape[0] != bp:
+            pad = [(0, bp - b)] + [(0, 0)] * (a.ndim - 1)
+            a = jnp.pad(a, pad)
+        padded.append(a)
+    in_specs = [
+        # nd bound per-arg (default-arg trick: avoids late-binding closure).
+        pl.BlockSpec((bb,) + a.shape[1:], lambda i, nd=a.ndim: (i,) + (0,) * (nd - 1))
+        for a in padded
+    ]
+    out = pl.pallas_call(
+        kernel,
+        grid=(bp // bb,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (bb,) + outs_shape[1:], lambda i: (i,) + (0,) * (len(outs_shape) - 1)
+        ),
+        out_shape=jax.ShapeDtypeStruct((bp,) + outs_shape[1:], jnp.float32),
+        interpret=True,
+    )(*padded)
+    return out[:b]
+
+
+@jax.custom_vjp
+def softmax_nll(logits: jnp.ndarray, y_onehot: jnp.ndarray) -> jnp.ndarray:
+    """Per-row NLL of ``softmax(logits)`` against one-hot labels.
+
+    Args:
+      logits: [B, C] raw scores.
+      y_onehot: [B, C] one-hot labels (rows may be all-zero for padded
+        samples — those rows yield ``loss = logsumexp(logits)`` and must be
+        masked out by the caller, which the L2 model does).
+    Returns:
+      [B] per-sample loss.
+    """
+    b, c = logits.shape
+    return _call_rowwise(_nll_fwd_kernel, (b,), b, c, logits, y_onehot)
+
+
+def _nll_vjp_fwd(logits, y_onehot):
+    return softmax_nll(logits, y_onehot), (logits, y_onehot)
+
+
+def _nll_vjp_bwd(res, g):
+    logits, y_onehot = res
+    b, c = logits.shape
+    dx = _call_rowwise(_nll_bwd_kernel, (b, c), b, c, logits, y_onehot, g)
+    return dx, jnp.zeros_like(y_onehot)
+
+
+softmax_nll.defvjp(_nll_vjp_fwd, _nll_vjp_bwd)

@@ -1,0 +1,221 @@
+"""L2 JAX models: the paper's two on-device workloads (Table II).
+
+* Task 1 — Aerofoil: fully-connected regressor (5 -> 64 -> 32 -> 1, tanh),
+  masked MSE loss.
+* Task 2 — MNIST: LeNet-5 (conv 1->6 k5, pool, conv 6->16 k5, pool,
+  fc 256->120->84->10), masked NLL loss. Convolutions are lowered as
+  im2col + the L1 Pallas fused-dense kernel, so the MXU-shaped matmul
+  kernel carries all of the FLOPs.
+
+Every dense contraction and the log-softmax/NLL loss go through the L1
+Pallas kernels (`kernels.dense`, `kernels.softmax_nll`), so `jax.grad`
+differentiates through their custom VJPs and the whole train step lowers
+into a single HLO module per (task, batch-capacity) that the Rust PJRT
+runtime executes.
+
+Fixed-shape + mask convention
+-----------------------------
+HLO is static-shaped but client partitions vary, so every batch is padded
+to a capacity P and accompanied by a {0,1} mask; all losses/metrics are
+mask-weighted. Padded label rows are ignored by construction.
+
+Train step = one full-batch gradient-descent epoch (paper Alg. 1 runs tau
+GD epochs per round; the Rust coordinator calls this step tau times).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels as K
+
+Params = Sequence[jnp.ndarray]
+
+# ---------------------------------------------------------------------------
+# Task 1: Aerofoil FCN
+# ---------------------------------------------------------------------------
+
+AEROFOIL_FEATURES = 5
+FCN_LAYERS = [(AEROFOIL_FEATURES, 64), (64, 32), (32, 1)]
+FCN_ACTS = ["tanh", "tanh", "linear"]
+
+
+def fcn_init(seed: int = 0) -> List[np.ndarray]:
+    """Glorot-uniform FCN parameters as the flat [w0,b0,w1,b1,w2,b2] list."""
+    rng = np.random.default_rng(seed)
+    params: List[np.ndarray] = []
+    for fan_in, fan_out in FCN_LAYERS:
+        lim = np.sqrt(6.0 / (fan_in + fan_out))
+        params.append(rng.uniform(-lim, lim, (fan_in, fan_out)).astype(np.float32))
+        params.append(np.zeros((fan_out,), dtype=np.float32))
+    return params
+
+
+def fcn_forward(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """FCN forward: x[B,5] -> prediction [B]."""
+    h = x
+    for li, act in enumerate(FCN_ACTS):
+        h = K.dense(h, params[2 * li], params[2 * li + 1], act)
+    return jnp.squeeze(h, -1)
+
+
+def fcn_loss(params: Params, x, y, mask) -> jnp.ndarray:
+    """Masked-mean MSE."""
+    pred = fcn_forward(params, x)
+    se = (pred - y) ** 2
+    return jnp.sum(se * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _train_epochs(loss_fn, params: Params, x, y, mask, lr, epochs):
+    """`epochs` full-batch GD steps as a single lowered computation.
+
+    The epoch loop lives *inside* the HLO (lax.fori_loop with a runtime
+    trip count), so the Rust coordinator makes exactly one PJRT call per
+    client-round — no host round-trips between local epochs. Returns
+    (*new_params, loss_before_last_step).
+    """
+
+    def body(_, carry):
+        ps, _ = carry
+        loss, grads = jax.value_and_grad(loss_fn)(ps, x, y, mask)
+        return ([p - lr * g for p, g in zip(ps, grads)], loss)
+
+    final, last_loss = jax.lax.fori_loop(
+        0, epochs, body, (list(params), jnp.float32(0.0))
+    )
+    return tuple(final) + (last_loss,)
+
+
+def fcn_train_epoch(params: Params, x, y, mask, lr) -> Tuple[jnp.ndarray, ...]:
+    """One full-batch GD epoch. Returns (*new_params, loss_before_step)."""
+    loss, grads = jax.value_and_grad(fcn_loss)(list(params), x, y, mask)
+    new = [p - lr * g for p, g in zip(params, grads)]
+    return tuple(new) + (loss,)
+
+
+def fcn_train_epochs(params: Params, x, y, mask, lr, epochs) -> Tuple[jnp.ndarray, ...]:
+    """`epochs` GD epochs in one call (the AOT-exported entry point)."""
+    return _train_epochs(fcn_loss, params, x, y, mask, lr, epochs)
+
+
+def fcn_eval(params: Params, x, y, mask) -> Tuple[jnp.ndarray, ...]:
+    """Masked sums for regression metrics: (sq_err_sum, abs_err_sum, count).
+
+    The coordinator turns these into MSE / the paper-style regression
+    "accuracy" (1 - normalized MAE) across eval chunks.
+    """
+    pred = fcn_forward(params, x)
+    err = pred - y
+    sse = jnp.sum(err * err * mask)
+    sae = jnp.sum(jnp.abs(err) * mask)
+    cnt = jnp.sum(mask)
+    return (sse, sae, cnt)
+
+
+# ---------------------------------------------------------------------------
+# Task 2: MNIST LeNet-5
+# ---------------------------------------------------------------------------
+
+MNIST_CLASSES = 10
+MNIST_HW = 28
+_K = 5  # conv kernel edge
+
+# (name, shape) in flat parameter order. Conv weights are stored im2col-ready
+# as [C_in*k*k, C_out].
+LENET_SHAPES = [
+    ("conv1_w", (1 * _K * _K, 6)),
+    ("conv1_b", (6,)),
+    ("conv2_w", (6 * _K * _K, 16)),
+    ("conv2_b", (16,)),
+    ("fc1_w", (256, 120)),
+    ("fc1_b", (120,)),
+    ("fc2_w", (120, 84)),
+    ("fc2_b", (84,)),
+    ("fc3_w", (84, 10)),
+    ("fc3_b", (10,)),
+]
+
+
+def lenet_init(seed: int = 0) -> List[np.ndarray]:
+    """Glorot-uniform LeNet-5 parameters in LENET_SHAPES order."""
+    rng = np.random.default_rng(seed)
+    params: List[np.ndarray] = []
+    for _, shape in LENET_SHAPES:
+        if len(shape) == 2:
+            lim = np.sqrt(6.0 / (shape[0] + shape[1]))
+            params.append(rng.uniform(-lim, lim, shape).astype(np.float32))
+        else:
+            params.append(np.zeros(shape, dtype=np.float32))
+    return params
+
+
+def _im2col(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """[B,C,H,W] -> [B*Ho*Wo, C*k*k] valid-conv patches (C-major layout)."""
+    b, c, h, w = x.shape
+    ho, wo = h - k + 1, w - k + 1
+    cols = jnp.stack(
+        [x[:, :, i : i + ho, j : j + wo] for i in range(k) for j in range(k)],
+        axis=2,
+    )  # [B, C, k*k, Ho, Wo]
+    return cols.transpose(0, 3, 4, 1, 2).reshape(b * ho * wo, c * k * k)
+
+
+def _conv_relu(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Valid 5x5 conv + ReLU via im2col + the Pallas fused-dense kernel."""
+    bb, c, h, _ = x.shape
+    ho = h - _K + 1
+    cols = _im2col(x, _K)
+    out = K.dense(cols, w, b, "relu")  # [B*Ho*Wo, OC]
+    return out.reshape(bb, ho, ho, -1).transpose(0, 3, 1, 2)
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def lenet_forward(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """LeNet-5 forward: x[B,1,28,28] -> logits [B,10]."""
+    h = _conv_relu(x, params[0], params[1])  # [B,6,24,24]
+    h = _maxpool2(h)  # [B,6,12,12]
+    h = _conv_relu(h, params[2], params[3])  # [B,16,8,8]
+    h = _maxpool2(h)  # [B,16,4,4]
+    h = h.reshape(h.shape[0], -1)  # [B,256]
+    h = K.dense(h, params[4], params[5], "relu")
+    h = K.dense(h, params[6], params[7], "relu")
+    return K.dense(h, params[8], params[9], "linear")
+
+
+def lenet_loss(params: Params, x, y, mask) -> jnp.ndarray:
+    """Masked-mean NLL via the Pallas softmax_nll kernel. y is float labels."""
+    logits = lenet_forward(params, x)
+    y1h = jax.nn.one_hot(y.astype(jnp.int32), MNIST_CLASSES, dtype=logits.dtype)
+    nll = K.softmax_nll(logits, y1h * mask[:, None])
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lenet_train_epoch(params: Params, x, y, mask, lr) -> Tuple[jnp.ndarray, ...]:
+    """One full-batch GD epoch. Returns (*new_params, loss_before_step)."""
+    loss, grads = jax.value_and_grad(lenet_loss)(list(params), x, y, mask)
+    new = [p - lr * g for p, g in zip(params, grads)]
+    return tuple(new) + (loss,)
+
+
+def lenet_train_epochs(params: Params, x, y, mask, lr, epochs) -> Tuple[jnp.ndarray, ...]:
+    """`epochs` GD epochs in one call (the AOT-exported entry point)."""
+    return _train_epochs(lenet_loss, params, x, y, mask, lr, epochs)
+
+
+def lenet_eval(params: Params, x, y, mask) -> Tuple[jnp.ndarray, ...]:
+    """Masked sums: (nll_sum, correct_count, count)."""
+    logits = lenet_forward(params, x)
+    yi = y.astype(jnp.int32)
+    y1h = jax.nn.one_hot(yi, MNIST_CLASSES, dtype=logits.dtype)
+    nll = K.softmax_nll(logits, y1h * mask[:, None])
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == yi).astype(jnp.float32) * mask)
+    return (jnp.sum(nll * mask), correct, jnp.sum(mask))

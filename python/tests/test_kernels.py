@@ -1,0 +1,189 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (pytest + hypothesis).
+
+Hypothesis sweeps shapes (both the single-block and the gridded/padded
+paths) and dtypes; every case asserts allclose against ref.py. Gradients
+are checked through the custom VJPs so the backward kernels are covered by
+the same sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+COMMON = dict(max_examples=20, deadline=None)
+
+
+def _arr(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((rng.standard_normal(shape) * scale).astype(dtype))
+
+
+dims_small = st.integers(min_value=1, max_value=40)
+# > 128 exercises the grid + edge-tile padding path.
+dims_grid = st.integers(min_value=129, max_value=300)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+
+@settings(**COMMON)
+@given(m=dims_small, k=dims_small, n=dims_small, seed=seeds)
+def test_matmul_small_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _arr(rng, (m, k)), _arr(rng, (k, n))
+    np.testing.assert_allclose(
+        K.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(m=dims_grid, n=dims_grid, seed=seeds)
+def test_matmul_grid_path(m, n, seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, 64))
+    a, b = _arr(rng, (m, k)), _arr(rng, (k, n))
+    np.testing.assert_allclose(
+        K.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.standard_normal((33, 17)), dtype=dtype)
+    b = jnp.asarray(rng.standard_normal((17, 9)), dtype=dtype)
+    out = K.matmul(a, b)
+    assert out.dtype == a.dtype
+    tol = 1e-5 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32),
+        np.asarray(ref.matmul_ref(a, b), dtype=np.float32),
+        rtol=tol,
+        atol=tol,
+    )
+
+
+def test_matmul_rejects_contraction_mismatch():
+    a, b = jnp.zeros((3, 4)), jnp.zeros((5, 2))
+    with pytest.raises(AssertionError):
+        K.matmul(a, b)
+
+
+# --------------------------------------------------------------------------
+# fused dense (fwd + custom VJP)
+# --------------------------------------------------------------------------
+
+
+@settings(**COMMON)
+@given(
+    m=dims_small,
+    k=dims_small,
+    n=dims_small,
+    act=st.sampled_from(["linear", "relu", "tanh"]),
+    seed=seeds,
+)
+def test_dense_forward(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (m, k)), _arr(rng, (k, n)), _arr(rng, (n,))
+    np.testing.assert_allclose(
+        K.dense(x, w, b, act), ref.dense_ref(x, w, b, act), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(2, 24),
+    k=st.integers(2, 24),
+    n=st.integers(2, 24),
+    act=st.sampled_from(["linear", "tanh"]),  # relu grad is kink-sensitive
+    seed=seeds,
+)
+def test_dense_grads_match_oracle(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (m, k)), _arr(rng, (k, n)), _arr(rng, (n,))
+
+    def loss_k(x, w, b):
+        return jnp.sum(K.dense(x, w, b, act) ** 2)
+
+    def loss_r(x, w, b):
+        return jnp.sum(ref.dense_ref(x, w, b, act) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gk, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_relu_grad_at_positive_preacts():
+    # Deterministic check away from the ReLU kink.
+    x = jnp.ones((4, 3))
+    w = jnp.full((3, 2), 0.5)
+    b = jnp.full((2,), 0.25)
+    g = jax.grad(lambda x: jnp.sum(K.dense(x, w, b, "relu")))(x)
+    ge = jax.grad(lambda x: jnp.sum(ref.dense_ref(x, w, b, "relu")))(x)
+    np.testing.assert_allclose(g, ge, rtol=1e-6, atol=1e-6)
+
+
+def test_dense_grid_path_forward():
+    rng = np.random.default_rng(3)
+    x, w, b = _arr(rng, (260, 150)), _arr(rng, (150, 140)), _arr(rng, (140,))
+    np.testing.assert_allclose(
+        K.dense(x, w, b, "relu"), ref.dense_ref(x, w, b, "relu"), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_dense_unknown_activation_raises():
+    with pytest.raises(ValueError):
+        K.dense(jnp.zeros((2, 2)), jnp.zeros((2, 2)), jnp.zeros((2,)), "gelu")
+
+
+# --------------------------------------------------------------------------
+# softmax_nll (fwd + custom VJP)
+# --------------------------------------------------------------------------
+
+
+@settings(**COMMON)
+@given(b=st.integers(1, 64), c=st.integers(2, 20), seed=seeds)
+def test_softmax_nll_forward(b, c, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (b, c), scale=3.0)
+    y = jax.nn.one_hot(rng.integers(0, c, b), c, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        K.softmax_nll(x, y), ref.softmax_nll_ref(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 48), c=st.integers(2, 16), seed=seeds)
+def test_softmax_nll_grad(b, c, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (b, c), scale=3.0)
+    y = jax.nn.one_hot(rng.integers(0, c, b), c, dtype=jnp.float32)
+    gw = jnp.asarray(rng.standard_normal(b).astype(np.float32))
+    gk = jax.grad(lambda x: jnp.sum(K.softmax_nll(x, y) * gw))(x)
+    ge = ref.softmax_nll_grad_ref(x, y, gw)
+    np.testing.assert_allclose(gk, ge, rtol=1e-4, atol=1e-4)
+
+
+def test_softmax_nll_numerically_stable_large_logits():
+    x = jnp.asarray([[1000.0, 0.0, -1000.0], [500.0, 500.0, 500.0]])
+    y = jnp.asarray([[1.0, 0.0, 0.0], [0.0, 1.0, 0.0]])
+    out = K.softmax_nll(x, y)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, ref.softmax_nll_ref(x, y), rtol=1e-6, atol=1e-6)
+
+
+def test_softmax_nll_grid_path():
+    rng = np.random.default_rng(5)
+    x = _arr(rng, (300, 10), scale=2.0)
+    y = jax.nn.one_hot(rng.integers(0, 10, 300), 10, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        K.softmax_nll(x, y), ref.softmax_nll_ref(x, y), rtol=1e-5, atol=1e-5
+    )

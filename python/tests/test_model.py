@@ -1,0 +1,170 @@
+"""L2 correctness: model shapes, mask semantics, and GD-learns sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def _aerofoil_batch(rng, n, p):
+    """Synthetic regression batch padded to capacity p with a mask."""
+    x = rng.standard_normal((p, model.AEROFOIL_FEATURES)).astype(np.float32)
+    y = (np.sin(x[:, 0]) + 0.5 * x[:, 1] - 0.25 * x[:, 2] * x[:, 3]).astype(np.float32)
+    mask = np.zeros(p, dtype=np.float32)
+    mask[:n] = 1.0
+    x[n:] = 0.0
+    y[n:] = 0.0
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask)
+
+
+def _mnist_batch(rng, n, p):
+    """Synthetic 10-class image batch: class-dependent blocks + noise."""
+    labels = rng.integers(0, 10, p)
+    x = rng.standard_normal((p, 1, 28, 28)).astype(np.float32) * 0.3
+    for i, c in enumerate(labels):
+        r = (c // 5) * 14
+        col = (c % 5) * 5
+        x[i, 0, r : r + 14, col : col + 5] += 2.0
+    mask = np.zeros(p, dtype=np.float32)
+    mask[:n] = 1.0
+    return jnp.asarray(x), jnp.asarray(labels.astype(np.float32)), jnp.asarray(mask)
+
+
+# --------------------------------------------------------------------------
+# Shapes & parameter inventories
+# --------------------------------------------------------------------------
+
+
+def test_fcn_param_inventory():
+    params = model.fcn_init(0)
+    assert [p.shape for p in params] == [
+        (5, 64), (64,), (64, 32), (32,), (32, 1), (1,),
+    ]
+    assert all(p.dtype == np.float32 for p in params)
+
+
+def test_lenet_param_inventory():
+    params = model.lenet_init(0)
+    assert [tuple(p.shape) for p in params] == [s for _, s in model.LENET_SHAPES]
+    total = sum(int(np.prod(p.shape)) for p in params)
+    # LeNet-5 on 28x28 valid convs (flatten 256, not the 32x32-input 400):
+    # 25*6+6 + 150*16+16 + 256*120+120 + 120*84+84 + 84*10+10 = 44,426
+    assert total == 44_426
+
+
+def test_fcn_forward_shape():
+    params = [jnp.asarray(p) for p in model.fcn_init(0)]
+    x = jnp.zeros((17, 5))
+    assert model.fcn_forward(params, x).shape == (17,)
+
+
+def test_lenet_forward_shape():
+    params = [jnp.asarray(p) for p in model.lenet_init(0)]
+    x = jnp.zeros((3, 1, 28, 28))
+    assert model.lenet_forward(params, x).shape == (3, 10)
+
+
+def test_init_deterministic_per_seed():
+    a, b = model.lenet_init(7), model.lenet_init(7)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+    c = model.lenet_init(8)
+    assert any(not np.array_equal(pa, pc) for pa, pc in zip(a, c))
+
+
+# --------------------------------------------------------------------------
+# Mask semantics: padding must not change losses/metrics
+# --------------------------------------------------------------------------
+
+
+def test_fcn_loss_pad_invariant():
+    rng = np.random.default_rng(0)
+    params = [jnp.asarray(p) for p in model.fcn_init(0)]
+    x, y, mask = _aerofoil_batch(rng, 20, 20)
+    x2, y2, m2 = _aerofoil_batch(np.random.default_rng(0), 20, 64)
+    l1 = model.fcn_loss(params, x, y, mask)
+    l2 = model.fcn_loss(params, x2, y2, m2)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+
+
+def test_fcn_loss_ignores_garbage_in_padding():
+    rng = np.random.default_rng(1)
+    params = [jnp.asarray(p) for p in model.fcn_init(0)]
+    x, y, mask = _aerofoil_batch(rng, 10, 32)
+    x_dirty = x.at[10:].set(1e3)
+    y_dirty = y.at[10:].set(-1e3)
+    np.testing.assert_allclose(
+        model.fcn_loss(params, x, y, mask),
+        model.fcn_loss(params, x_dirty, y_dirty, mask),
+        rtol=1e-5,
+    )
+
+
+def test_lenet_loss_pad_invariant():
+    params = [jnp.asarray(p) for p in model.lenet_init(0)]
+    x, y, mask = _mnist_batch(np.random.default_rng(2), 12, 12)
+    x2 = jnp.pad(x, ((0, 20), (0, 0), (0, 0), (0, 0)))
+    y2 = jnp.pad(y, (0, 20))
+    m2 = jnp.pad(mask, (0, 20))
+    np.testing.assert_allclose(
+        model.lenet_loss(params, x, y, mask),
+        model.lenet_loss(params, x2, y2, m2),
+        rtol=1e-5,
+    )
+
+
+def test_eval_counts_match_mask():
+    params = [jnp.asarray(p) for p in model.lenet_init(0)]
+    x, y, mask = _mnist_batch(np.random.default_rng(3), 9, 24)
+    nll_sum, correct, cnt = model.lenet_eval(params, x, y, mask)
+    assert float(cnt) == 9.0
+    assert 0.0 <= float(correct) <= 9.0
+    assert np.isfinite(float(nll_sum))
+
+
+# --------------------------------------------------------------------------
+# GD-learns sanity: a few epochs of the exact train step reduce the loss
+# --------------------------------------------------------------------------
+
+
+def test_fcn_train_epoch_reduces_loss():
+    rng = np.random.default_rng(4)
+    params = [jnp.asarray(p) for p in model.fcn_init(0)]
+    x, y, mask = _aerofoil_batch(rng, 48, 64)
+    step = jax.jit(model.fcn_train_epoch)
+    first = None
+    for _ in range(40):
+        *params, loss = step(params, x, y, mask, jnp.float32(0.05))
+        first = first if first is not None else float(loss)
+    assert float(loss) < 0.7 * first
+
+
+def test_lenet_train_epoch_reduces_loss():
+    rng = np.random.default_rng(5)
+    params = [jnp.asarray(p) for p in model.lenet_init(0)]
+    x, y, mask = _mnist_batch(rng, 48, 64)
+    step = jax.jit(model.lenet_train_epoch)
+    first = None
+    for _ in range(15):
+        *params, loss = step(params, x, y, mask, jnp.float32(0.05))
+        first = first if first is not None else float(loss)
+    assert float(loss) < 0.8 * first
+
+
+def test_train_epoch_preserves_param_shapes():
+    params = [jnp.asarray(p) for p in model.lenet_init(0)]
+    x, y, mask = _mnist_batch(np.random.default_rng(6), 8, 16)
+    out = model.lenet_train_epoch(params, x, y, mask, jnp.float32(0.01))
+    assert len(out) == len(params) + 1
+    for old, new in zip(params, out[:-1]):
+        assert old.shape == new.shape
+
+
+def test_zero_lr_is_identity():
+    params = [jnp.asarray(p) for p in model.fcn_init(0)]
+    x, y, mask = _aerofoil_batch(np.random.default_rng(7), 16, 32)
+    out = model.fcn_train_epoch(params, x, y, mask, jnp.float32(0.0))
+    for old, new in zip(params, out[:-1]):
+        np.testing.assert_allclose(old, new, atol=1e-7)

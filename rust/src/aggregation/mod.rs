@@ -1,0 +1,127 @@
+//! Model aggregation (S1, paper §III.B): FedAvg weighted averaging,
+//! regional aggregation with model caching (eq. 17), Effective Data
+//! Coverage (eqs. 18–19) and EDC-weighted cloud aggregation (eq. 20).
+
+use crate::model::{weighted_average, ModelParams};
+
+/// Plain FedAvg: `w = Σ (|D_k|/Σ|D|) · w_k` over the received models.
+/// Returns `None` if nothing was received (callers keep the old model).
+pub fn fedavg(models: &[(&ModelParams, f64)]) -> Option<ModelParams> {
+    weighted_average(models)
+}
+
+/// Regional aggregation with the paper's cache rule (eq. 17).
+///
+/// Eq. 17 sums over *all* clients of the region, substituting the previous
+/// regional model for clients without a successful update:
+/// `w_k^r(t) = w^r(t−1) if k ∉ S_r(t)`. That sum algebraically reduces to
+///
+/// ```text
+///   w^r(t) = Σ_{k∈S_r} (|D_k|/|D^r|)·w_k(t)  +  (1 − coverage_r)·w^r(t−1)
+/// ```
+///
+/// with `coverage_r = Σ_{k∈S_r} |D_k| / |D^r|` — which is what we compute
+/// (exactly equivalent, touches |S_r| models instead of n_r).
+pub fn regional_with_cache(
+    submitted: &[(&ModelParams, f64)],
+    region_data: f64,
+    prev_regional: &ModelParams,
+) -> ModelParams {
+    debug_assert!(region_data > 0.0);
+    let covered: f64 = submitted.iter().map(|(_, d)| *d).sum();
+    let mut out = prev_regional.zeros_like();
+    for (m, d) in submitted {
+        out.axpy((*d / region_data) as f32, m);
+    }
+    out.axpy((1.0 - covered / region_data).max(0.0) as f32, prev_regional);
+    out
+}
+
+/// EDC_r(t) — effective data coverage of a region (eq. 18): total samples
+/// held by this round's successful submitters.
+pub fn edc_region(submitted_partition_sizes: &[usize]) -> f64 {
+    submitted_partition_sizes.iter().map(|&s| s as f64).sum()
+}
+
+/// Cloud aggregation (eq. 20): regional models weighted by EDC_r / EDC.
+/// `None` when EDC(t) = 0 — no region received anything; the cloud keeps
+/// w(t−1).
+pub fn edc_cloud(regionals: &[(&ModelParams, f64)]) -> Option<ModelParams> {
+    weighted_average(regionals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(vals: &[f32]) -> ModelParams {
+        ModelParams::new(vec![vals.to_vec()], vec![vec![vals.len()]])
+    }
+
+    #[test]
+    fn fedavg_weights_by_partition_size() {
+        let a = p(&[1.0]);
+        let b = p(&[4.0]);
+        let w = fedavg(&[(&a, 100.0), (&b, 300.0)]).unwrap();
+        assert!((w.tensors[0][0] - 3.25).abs() < 1e-6);
+        assert!(fedavg(&[]).is_none());
+    }
+
+    /// The reduced cache formula must equal the literal eq. 17 sum over all
+    /// region clients with cached models substituted.
+    #[test]
+    fn cache_reduction_matches_literal_eq17() {
+        let prev = p(&[10.0, -2.0]);
+        let w1 = p(&[1.0, 1.0]); // client with |D|=30 submitted
+        let w2 = p(&[5.0, 3.0]); // client with |D|=20 submitted
+        // Region has 4 clients with |D| = 30, 20, 25, 25 (total 100).
+        let out = regional_with_cache(&[(&w1, 30.0), (&w2, 20.0)], 100.0, &prev);
+        // Literal eq. 17: 0.3·w1 + 0.2·w2 + 0.25·prev + 0.25·prev
+        let mut lit = prev.zeros_like();
+        lit.axpy(0.3, &w1);
+        lit.axpy(0.2, &w2);
+        lit.axpy(0.25, &prev);
+        lit.axpy(0.25, &prev);
+        assert!(out.l2_distance(&lit) < 1e-6);
+    }
+
+    #[test]
+    fn empty_submissions_keep_previous_regional() {
+        let prev = p(&[3.0, 4.0]);
+        let out = regional_with_cache(&[], 50.0, &prev);
+        assert!(out.l2_distance(&prev) < 1e-7);
+    }
+
+    #[test]
+    fn full_coverage_ignores_previous() {
+        let prev = p(&[100.0]);
+        let w1 = p(&[2.0]);
+        let out = regional_with_cache(&[(&w1, 50.0)], 50.0, &prev);
+        assert!((out.tensors[0][0] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn edc_math() {
+        assert_eq!(edc_region(&[100, 40, 10]), 150.0);
+        assert_eq!(edc_region(&[]), 0.0);
+        let a = p(&[0.0]);
+        let b = p(&[6.0]);
+        let w = edc_cloud(&[(&a, 100.0), (&b, 200.0)]).unwrap();
+        assert!((w.tensors[0][0] - 4.0).abs() < 1e-6);
+        assert!(edc_cloud(&[(&a, 0.0), (&b, 0.0)]).is_none());
+    }
+
+    /// Weights in the combined two-level aggregation sum to 1 (the γ
+    /// normalization in eq. 21 that the convergence proof relies on).
+    #[test]
+    fn two_level_weights_normalize() {
+        let w1 = p(&[1.0]);
+        let w2 = p(&[1.0]);
+        let prev1 = p(&[1.0]);
+        let r1 = regional_with_cache(&[(&w1, 60.0)], 100.0, &prev1);
+        let r2 = regional_with_cache(&[(&w2, 30.0)], 80.0, &prev1);
+        let cloud = edc_cloud(&[(&r1, 60.0), (&r2, 30.0)]).unwrap();
+        // Every contributing model is all-ones → any convex combination is 1.
+        assert!((cloud.tensors[0][0] - 1.0).abs() < 1e-6);
+    }
+}

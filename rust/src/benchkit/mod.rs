@@ -1,0 +1,127 @@
+//! Tiny benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Used by the `benches/` targets (`harness = false`): warmup + timed
+//! iterations with mean / stddev / min / p50 reporting, plus a
+//! `black_box` to defeat const-folding.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Timing statistics over `n` iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+}
+
+impl Stats {
+    pub fn report(&self, name: &str) {
+        println!(
+            "{name:<44} {:>12} iters  mean {:>12?}  p50 {:>12?}  min {:>12?}  σ {:>10?}",
+            self.iters, self.mean, self.p50, self.min, self.stddev
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    stats(&mut samples)
+}
+
+/// Run `f` repeatedly until `budget` elapses (at least once); report stats.
+pub fn bench_for<F: FnMut()>(budget: Duration, mut f: F) -> Stats {
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if start.elapsed() >= budget {
+            break;
+        }
+    }
+    stats(&mut samples)
+}
+
+fn stats(samples: &mut [Duration]) -> Stats {
+    samples.sort();
+    let n = samples.len().max(1);
+    let total: Duration = samples.iter().sum();
+    let mean = total / n as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|d| {
+            let x = d.as_secs_f64() - mean_s;
+            x * x
+        })
+        .sum::<f64>()
+        / n as f64;
+    Stats {
+        iters: n,
+        mean,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: samples.first().copied().unwrap_or_default(),
+        p50: samples[n / 2.min(n - 1)],
+    }
+}
+
+/// Parse common bench CLI flags: `--full` (paper scale) and
+/// `--quick` (minimal iterations for CI smoke).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BenchArgs {
+    pub full: bool,
+    pub quick: bool,
+}
+
+impl BenchArgs {
+    pub fn from_env() -> BenchArgs {
+        let args: Vec<String> = std::env::args().collect();
+        BenchArgs {
+            full: args.iter().any(|a| a == "--full"),
+            quick: args.iter().any(|a| a == "--quick"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut acc = 0u64;
+        let s = bench(2, 10, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.min <= s.p50);
+        assert!(s.p50 <= s.mean * 10);
+    }
+
+    #[test]
+    fn bench_for_respects_budget_loosely() {
+        let s = bench_for(Duration::from_millis(5), || {
+            std::thread::sleep(Duration::from_micros(100));
+        });
+        assert!(s.iters >= 1);
+    }
+}

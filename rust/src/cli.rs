@@ -1,0 +1,121 @@
+//! Minimal CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `hybridfl <command> [positional...] [--key value|--key=value]
+//! [--switch]`. Unknown keys are the caller's concern; `Args` just
+//! tokenizes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, Vec<String>>,
+    switches: Vec<String>,
+}
+
+/// Option keys that take a value; everything else starting with `--` is a
+/// boolean switch.
+const VALUE_KEYS: &[&str] = &[
+    "set", "preset", "config", "out", "seed", "protocol", "rounds", "c", "e-dr",
+    "scale", "target",
+];
+
+impl Args {
+    pub fn parse(raw: impl Iterator<Item = String>) -> Result<Args> {
+        let mut args = Args::default();
+        let mut raw = raw.peekable();
+        while let Some(tok) = raw.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.entry(k.to_string()).or_default().push(v.to_string());
+                } else if VALUE_KEYS.contains(&stripped) {
+                    match raw.next() {
+                        Some(v) => args
+                            .options
+                            .entry(stripped.to_string())
+                            .or_default()
+                            .push(v),
+                        None => bail!("--{stripped} expects a value"),
+                    }
+                } else {
+                    args.switches.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// First positional (the subcommand).
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Last value for `--key` (repeatable keys: see `all`).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values given for a repeatable option (e.g. `--set k=v`).
+    pub fn all(&self, key: &str) -> Vec<String> {
+        self.options.get(key).cloned().unwrap_or_default()
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(e) => bail!("--{key} {v}: {e}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_commands_options_switches() {
+        let a = parse(&[
+            "table3", "--set", "c=0.5", "--set=e_dr=0.6", "--full", "--out", "x.csv",
+        ]);
+        assert_eq!(a.command(), Some("table3"));
+        assert_eq!(a.all("set"), vec!["c=0.5", "e_dr=0.6"]);
+        assert!(a.has("full"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+        assert!(!a.has("quick"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(["--preset".to_string()].into_iter()).is_err());
+    }
+
+    #[test]
+    fn get_parsed_types() {
+        let a = parse(&["run", "--rounds", "42"]);
+        assert_eq!(a.get_parsed::<usize>("rounds").unwrap(), Some(42));
+        let bad = parse(&["run", "--rounds", "xyz"]);
+        assert!(bad.get_parsed::<usize>("rounds").is_err());
+    }
+}

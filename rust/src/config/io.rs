@@ -1,0 +1,275 @@
+//! Config serialization (JSON) and `key=value` CLI overrides.
+
+use anyhow::{bail, Context, Result};
+
+use super::{
+    CacheMode, Dist, EngineKind, ExperimentConfig, PartitionScheme, ProtocolKind,
+    RegionSpec, TaskKind,
+};
+use crate::jsonx::Json;
+
+impl Dist {
+    fn to_json(self) -> Json {
+        Json::obj().set("mean", self.mean).set("std", self.std)
+    }
+
+    fn from_json(j: &Json) -> Result<Dist> {
+        Ok(Dist {
+            mean: j.req("mean")?.as_f64()?,
+            std: j.req("std")?.as_f64()?,
+        })
+    }
+}
+
+impl PartitionScheme {
+    fn to_json(&self) -> Json {
+        match self {
+            PartitionScheme::GaussianSize(d) => {
+                Json::obj().set("kind", "gaussian").set("size", d.to_json())
+            }
+            PartitionScheme::NonIid { skew } => {
+                Json::obj().set("kind", "noniid").set("skew", *skew)
+            }
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<PartitionScheme> {
+        match j.req("kind")?.as_str()? {
+            "gaussian" => Ok(PartitionScheme::GaussianSize(Dist::from_json(
+                j.req("size")?,
+            )?)),
+            "noniid" => Ok(PartitionScheme::NonIid {
+                skew: j.req("skew")?.as_f64()?,
+            }),
+            k => bail!("unknown partition kind '{k}'"),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Serialize to JSON (stable key order; suitable for committing).
+    pub fn to_json(&self) -> Json {
+        let regions: Vec<Json> = self
+            .regions
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("n_clients", r.n_clients)
+                    .set("dropout_mean", r.dropout_mean)
+            })
+            .collect();
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("task", self.task.as_str())
+            .set("protocol", self.protocol.as_str())
+            .set("engine", self.engine.as_str())
+            .set("n_clients", self.n_clients)
+            .set("n_edges", self.n_edges)
+            .set("region_pop", self.region_pop.to_json())
+            .set("regions", Json::Arr(regions))
+            .set("c_fraction", self.c_fraction)
+            .set("t_max", self.t_max)
+            .set("local_epochs", self.local_epochs)
+            .set("lr", self.lr)
+            .set(
+                "target_accuracy",
+                match self.target_accuracy {
+                    Some(a) => Json::Num(a),
+                    None => Json::Null,
+                },
+            )
+            .set("theta_init", self.theta_init)
+            .set("hier_kappa2", self.hier_kappa2)
+            .set("cache_mode", self.cache_mode.as_str())
+            .set("perf_ghz", self.perf_ghz.to_json())
+            .set("bw_mhz", self.bw_mhz.to_json())
+            .set("dropout", self.dropout.to_json())
+            .set("snr", self.snr)
+            .set("cloud_edge_mbps", self.cloud_edge_mbps)
+            .set("model_size_mb", self.model_size_mb)
+            .set("bits_per_sample", self.bits_per_sample)
+            .set("cycles_per_bit", self.cycles_per_bit)
+            .set("p_trans_w", self.p_trans_w)
+            .set("p_comp_base_w", self.p_comp_base_w)
+            .set("dataset_size", self.dataset_size)
+            .set("eval_size", self.eval_size)
+            .set("partition", self.partition.to_json())
+            .set("seed", self.seed)
+            .set("artifacts_dir", self.artifacts_dir.as_str())
+            .set("eval_every", self.eval_every)
+    }
+
+    /// Deserialize from JSON produced by [`Self::to_json`].
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        let regions = j
+            .req("regions")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(RegionSpec {
+                    n_clients: r.req("n_clients")?.as_usize()?,
+                    dropout_mean: r.req("dropout_mean")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ExperimentConfig {
+            name: j.req("name")?.as_str()?.to_string(),
+            task: TaskKind::parse(j.req("task")?.as_str()?)?,
+            protocol: ProtocolKind::parse(j.req("protocol")?.as_str()?)?,
+            engine: EngineKind::parse(j.req("engine")?.as_str()?)?,
+            n_clients: j.req("n_clients")?.as_usize()?,
+            n_edges: j.req("n_edges")?.as_usize()?,
+            region_pop: Dist::from_json(j.req("region_pop")?)?,
+            regions,
+            c_fraction: j.req("c_fraction")?.as_f64()?,
+            t_max: j.req("t_max")?.as_usize()?,
+            local_epochs: j.req("local_epochs")?.as_usize()?,
+            lr: j.req("lr")?.as_f64()?,
+            target_accuracy: match j.req("target_accuracy")? {
+                Json::Null => None,
+                v => Some(v.as_f64()?),
+            },
+            theta_init: j.req("theta_init")?.as_f64()?,
+            hier_kappa2: j.req("hier_kappa2")?.as_usize()?,
+            cache_mode: CacheMode::parse(j.req("cache_mode")?.as_str()?)?,
+            perf_ghz: Dist::from_json(j.req("perf_ghz")?)?,
+            bw_mhz: Dist::from_json(j.req("bw_mhz")?)?,
+            dropout: Dist::from_json(j.req("dropout")?)?,
+            snr: j.req("snr")?.as_f64()?,
+            cloud_edge_mbps: j.req("cloud_edge_mbps")?.as_f64()?,
+            model_size_mb: j.req("model_size_mb")?.as_f64()?,
+            bits_per_sample: j.req("bits_per_sample")?.as_f64()?,
+            cycles_per_bit: j.req("cycles_per_bit")?.as_f64()?,
+            p_trans_w: j.req("p_trans_w")?.as_f64()?,
+            p_comp_base_w: j.req("p_comp_base_w")?.as_f64()?,
+            dataset_size: j.req("dataset_size")?.as_usize()?,
+            eval_size: j.req("eval_size")?.as_usize()?,
+            partition: PartitionScheme::from_json(j.req("partition")?)?,
+            seed: j.req("seed")?.as_f64()? as u64,
+            artifacts_dir: j.req("artifacts_dir")?.as_str()?.to_string(),
+            eval_every: j.req("eval_every")?.as_usize()?,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ExperimentConfig> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+/// Apply `key=value` overrides (the CLI's `--set` flags) to a config.
+/// Covers the knobs experiments sweep; unknown keys error loudly.
+pub fn apply_overrides(cfg: &mut ExperimentConfig, overrides: &[String]) -> Result<()> {
+    for ov in overrides {
+        let (key, val) = ov
+            .split_once('=')
+            .with_context(|| format!("override '{ov}' is not key=value"))?;
+        apply_one(cfg, key.trim(), val.trim())
+            .with_context(|| format!("applying override '{ov}'"))?;
+    }
+    Ok(())
+}
+
+fn apply_one(cfg: &mut ExperimentConfig, key: &str, val: &str) -> Result<()> {
+    match key {
+        "name" => cfg.name = val.to_string(),
+        "task" => cfg.task = TaskKind::parse(val)?,
+        "protocol" => cfg.protocol = ProtocolKind::parse(val)?,
+        "engine" => cfg.engine = EngineKind::parse(val)?,
+        "n_clients" => cfg.n_clients = val.parse()?,
+        "n_edges" => cfg.n_edges = val.parse()?,
+        "c" | "c_fraction" => cfg.c_fraction = val.parse()?,
+        "t_max" => cfg.t_max = val.parse()?,
+        "tau" | "local_epochs" => cfg.local_epochs = val.parse()?,
+        "lr" => cfg.lr = val.parse()?,
+        "target_accuracy" => {
+            cfg.target_accuracy = if val == "none" { None } else { Some(val.parse()?) }
+        }
+        "theta_init" => cfg.theta_init = val.parse()?,
+        "hier_kappa2" => cfg.hier_kappa2 = val.parse()?,
+        "cache_mode" => cfg.cache_mode = CacheMode::parse(val)?,
+        "dropout_mean" | "e_dr" => cfg.dropout.mean = val.parse()?,
+        "dropout_std" => cfg.dropout.std = val.parse()?,
+        "perf_mean" => cfg.perf_ghz.mean = val.parse()?,
+        "perf_std" => cfg.perf_ghz.std = val.parse()?,
+        "bw_mean" => cfg.bw_mhz.mean = val.parse()?,
+        "bw_std" => cfg.bw_mhz.std = val.parse()?,
+        "snr" => cfg.snr = val.parse()?,
+        "cloud_edge_mbps" => cfg.cloud_edge_mbps = val.parse()?,
+        "model_size_mb" => cfg.model_size_mb = val.parse()?,
+        "dataset_size" => cfg.dataset_size = val.parse()?,
+        "eval_size" => cfg.eval_size = val.parse()?,
+        "seed" => cfg.seed = val.parse()?,
+        "artifacts_dir" => cfg.artifacts_dir = val.to_string(),
+        "eval_every" => cfg.eval_every = val.parse()?,
+        _ => bail!("unknown config key '{key}'"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_all_presets() {
+        for cfg in [
+            ExperimentConfig::task1_paper(),
+            ExperimentConfig::task2_paper(),
+            ExperimentConfig::task2_scaled(),
+            ExperimentConfig::fig2(),
+        ] {
+            let j = cfg.to_json();
+            let back = ExperimentConfig::from_json(&j).unwrap();
+            assert_eq!(cfg, back, "roundtrip mismatch for {}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn roundtrip_with_target_accuracy() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.target_accuracy = Some(0.7);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.target_accuracy, Some(0.7));
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        apply_overrides(
+            &mut cfg,
+            &[
+                "c=0.5".into(),
+                "e_dr=0.6".into(),
+                "protocol=fedavg".into(),
+                "t_max=10".into(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.c_fraction, 0.5);
+        assert_eq!(cfg.dropout.mean, 0.6);
+        assert_eq!(cfg.protocol, ProtocolKind::FedAvg);
+        assert_eq!(cfg.t_max, 10);
+    }
+
+    #[test]
+    fn overrides_reject_unknown_key() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        assert!(apply_overrides(&mut cfg, &["bogus=1".into()]).is_err());
+        assert!(apply_overrides(&mut cfg, &["no_equals".into()]).is_err());
+    }
+
+    #[test]
+    fn save_load_file() {
+        let cfg = ExperimentConfig::task2_scaled();
+        let path = std::env::temp_dir().join("hybridfl_cfg_test.json");
+        cfg.save(&path).unwrap();
+        let back = ExperimentConfig::load(&path).unwrap();
+        assert_eq!(cfg, back);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,384 @@
+//! Experiment configuration: every knob of the paper's Table II plus the
+//! runtime/engine switches, with JSON load/save, CLI overrides, and presets
+//! for each experiment (paper scale and laptop scale).
+
+mod io;
+mod presets;
+
+pub use io::apply_overrides;
+
+use anyhow::{bail, Result};
+
+/// Which of the paper's two ML tasks drives on-device training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Task 1 — Aerofoil self-noise regression (FCN, MSE).
+    Aerofoil,
+    /// Task 2 — MNIST-like image classification (LeNet-5, NLL, non-IID).
+    Mnist,
+}
+
+impl TaskKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TaskKind::Aerofoil => "aerofoil",
+            TaskKind::Mnist => "mnist",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "aerofoil" => Ok(TaskKind::Aerofoil),
+            "mnist" => Ok(TaskKind::Mnist),
+            _ => bail!("unknown task '{s}' (aerofoil|mnist)"),
+        }
+    }
+}
+
+/// FL control protocol under test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtocolKind {
+    /// McMahan et al. — two-layer client/cloud, wait-for-all-selected.
+    FedAvg,
+    /// Liu et al. — three-layer, edge aggregation every round, cloud
+    /// aggregation every `hier_kappa2` rounds, wait-for-all per region.
+    HierFavg,
+    /// This paper — regional slack factors + quota-triggered regional
+    /// aggregation + EDC-weighted immediate cloud aggregation.
+    HybridFl,
+}
+
+impl ProtocolKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ProtocolKind::FedAvg => "fedavg",
+            ProtocolKind::HierFavg => "hierfavg",
+            ProtocolKind::HybridFl => "hybridfl",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fedavg" => Ok(ProtocolKind::FedAvg),
+            "hierfavg" => Ok(ProtocolKind::HierFavg),
+            "hybridfl" => Ok(ProtocolKind::HybridFl),
+            _ => bail!("unknown protocol '{s}' (fedavg|hierfavg|hybridfl)"),
+        }
+    }
+
+    pub const ALL: [ProtocolKind; 3] = [
+        ProtocolKind::FedAvg,
+        ProtocolKind::HierFavg,
+        ProtocolKind::HybridFl,
+    ];
+}
+
+/// Which compute engine executes local training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Real training: AOT HLO artifacts executed on the PJRT CPU client.
+    Pjrt,
+    /// Analytic learning-curve proxy — protocol dynamics only (Fig. 2,
+    /// property tests, quick smoke runs). No artifacts needed.
+    Mock,
+}
+
+impl EngineKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EngineKind::Pjrt => "pjrt",
+            EngineKind::Mock => "mock",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pjrt" => Ok(EngineKind::Pjrt),
+            "mock" => Ok(EngineKind::Mock),
+            _ => bail!("unknown engine '{s}' (pjrt|mock)"),
+        }
+    }
+}
+
+/// A Gaussian 𝓝(mean, std²) — Table II samples every heterogeneity
+/// parameter from one of these.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dist {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Dist {
+    pub const fn new(mean: f64, std: f64) -> Dist {
+        Dist { mean, std }
+    }
+}
+
+/// HybridFL regional-aggregation cache rule.
+///
+/// The paper's eq. 17 taken literally averages *all* region clients with
+/// `w^r(t−1)` substituted for non-submitters — an EMA whose inertia
+/// measurably *slows* per-round convergence below both baselines (see the
+/// ablation bench + EXPERIMENTS.md), contradicting the paper's own Tables
+/// III/IV. The default is therefore [`CacheMode::Fresh`], which reproduces
+/// the paper's reported behaviour; `Regional` keeps the literal equation
+/// available for the ablation. DESIGN.md §Deviations has the analysis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheMode {
+    /// Literal eq. 17: aggregate over *all* region clients, substituting
+    /// w^r(t−1) for non-submitters — an EMA over rounds.
+    Regional,
+    /// Default: aggregate only the round's submitted models (FedAvg-style
+    /// regional average); EDC cloud weighting unchanged.
+    Fresh,
+}
+
+impl CacheMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CacheMode::Regional => "regional",
+            CacheMode::Fresh => "fresh",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "regional" => Ok(CacheMode::Regional),
+            "fresh" => Ok(CacheMode::Fresh),
+            _ => bail!("unknown cache mode '{s}' (regional|fresh)"),
+        }
+    }
+}
+
+/// How training data is spread over clients.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PartitionScheme {
+    /// Partition sizes drawn from 𝓝 (Task 1): "data distribution
+    /// 𝓝(100, 30²)".
+    GaussianSize(Dist),
+    /// Label-skewed non-IID (Task 2): sample of class y goes to a client
+    /// with index ≡ y (mod classes) with probability `skew`, else uniform.
+    NonIid { skew: f64 },
+}
+
+/// Explicit per-region override used by the Fig. 2 experiment, where the
+/// two regions have different client counts and reliability means.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegionSpec {
+    pub n_clients: usize,
+    /// Mean drop-out probability for this region's clients (std comes from
+    /// `dropout.std`).
+    pub dropout_mean: f64,
+}
+
+/// The full experiment configuration. Field names follow the paper's
+/// symbols (Table I/II) where one exists.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    /// Human-readable run label (used in report files).
+    pub name: String,
+    pub task: TaskKind,
+    pub protocol: ProtocolKind,
+    pub engine: EngineKind,
+
+    // --- population -------------------------------------------------------
+    /// n — number of clients.
+    pub n_clients: usize,
+    /// m — number of edge nodes (regions). Ignored if `regions` is set.
+    pub n_edges: usize,
+    /// Region populations n_r ~ 𝓝 (normalized to sum to n). Ignored if
+    /// `regions` is set.
+    pub region_pop: Dist,
+    /// Explicit regions (Fig. 2 style); empty = sample from `region_pop`.
+    pub regions: Vec<RegionSpec>,
+
+    // --- FL control ---------------------------------------------------------
+    /// C — desired proportion of clients with successful submissions.
+    pub c_fraction: f64,
+    /// t_max — maximum number of federated rounds.
+    pub t_max: usize,
+    /// tau — local epochs per round.
+    pub local_epochs: usize,
+    /// eta — learning rate of local GD.
+    pub lr: f64,
+    /// Stop early once the global model reaches this accuracy ("Stop @Acc").
+    pub target_accuracy: Option<f64>,
+    /// theta_r(1) — initial regional slack factor (HybridFL).
+    pub theta_init: f64,
+    /// kappa_2 — cloud aggregation interval for HierFAVG (paper uses 10).
+    pub hier_kappa2: usize,
+    /// HybridFL cache rule (eq. 17 literal vs fresh-only ablation).
+    pub cache_mode: CacheMode,
+
+    // --- device heterogeneity (Table II) ------------------------------------
+    /// s_k ~ 𝓝, in GHz.
+    pub perf_ghz: Dist,
+    /// bw_k ~ 𝓝, in MHz.
+    pub bw_mhz: Dist,
+    /// dr_k ~ 𝓝 — drop-out probability per round.
+    pub dropout: Dist,
+    /// Wireless signal-to-noise ratio (linear, not dB).
+    pub snr: f64,
+
+    // --- network / workload constants ---------------------------------------
+    /// BR — cloud-edge throughput, Mbps.
+    pub cloud_edge_mbps: f64,
+    /// msize — model size in MB (5 for Task 1, 10 for Task 2).
+    pub model_size_mb: f64,
+    /// BPS — bits per training sample.
+    pub bits_per_sample: f64,
+    /// CPB — CPU cycles per bit of training data per epoch.
+    pub cycles_per_bit: f64,
+
+    // --- energy model ---------------------------------------------------------
+    /// P_trans — transmitter power, Watt.
+    pub p_trans_w: f64,
+    /// Base compute power coefficient: P_comp = p_comp_base * s_k^3, Watt.
+    pub p_comp_base_w: f64,
+
+    // --- data -------------------------------------------------------------
+    /// |D| — training corpus size.
+    pub dataset_size: usize,
+    /// Held-out evaluation set size (cloud-side metric only).
+    pub eval_size: usize,
+    pub partition: PartitionScheme,
+
+    // --- runtime ------------------------------------------------------------
+    pub seed: u64,
+    /// Directory with the AOT artifacts (`make artifacts`).
+    pub artifacts_dir: String,
+    /// Evaluate the global model every k rounds (1 = every round).
+    pub eval_every: usize,
+}
+
+impl ExperimentConfig {
+    // ---- unit conversions used by the timing/energy models ------------------
+
+    /// msize in bits.
+    pub fn model_size_bits(&self) -> f64 {
+        self.model_size_mb * 8.0e6
+    }
+
+    /// BR in bits/second.
+    pub fn cloud_edge_bps(&self) -> f64 {
+        self.cloud_edge_mbps * 1.0e6
+    }
+
+    /// Mean partition size |D|/n — the paper's "average partition" used for
+    /// the straggler limit T_lim.
+    pub fn mean_partition(&self) -> f64 {
+        self.dataset_size as f64 / self.n_clients as f64
+    }
+
+    /// Quota = C · n, the number of global submissions that triggers
+    /// aggregation in HybridFL (at least 1).
+    pub fn quota(&self) -> usize {
+        ((self.c_fraction * self.n_clients as f64).round() as usize).max(1)
+    }
+
+    /// Sanity-check invariants before a run.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_clients == 0 {
+            bail!("n_clients must be > 0");
+        }
+        if self.regions.is_empty() && self.n_edges == 0 {
+            bail!("n_edges must be > 0 (or provide explicit regions)");
+        }
+        if !self.regions.is_empty() {
+            let total: usize = self.regions.iter().map(|r| r.n_clients).sum();
+            if total != self.n_clients {
+                bail!(
+                    "explicit regions sum to {total} clients but n_clients={}",
+                    self.n_clients
+                );
+            }
+        }
+        if !(0.0 < self.c_fraction && self.c_fraction <= 1.0) {
+            bail!("c_fraction must be in (0, 1], got {}", self.c_fraction);
+        }
+        if self.local_epochs == 0 {
+            bail!("local_epochs must be >= 1");
+        }
+        if self.t_max == 0 {
+            bail!("t_max must be >= 1");
+        }
+        if !(0.0..1.0).contains(&self.dropout.mean) {
+            bail!("dropout.mean must be in [0,1), got {}", self.dropout.mean);
+        }
+        if self.theta_init <= 0.0 || self.theta_init > 1.0 {
+            bail!("theta_init must be in (0,1], got {}", self.theta_init);
+        }
+        if self.hier_kappa2 == 0 {
+            bail!("hier_kappa2 must be >= 1");
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be >= 1");
+        }
+        if self.dataset_size < self.n_clients {
+            bail!(
+                "dataset_size {} smaller than n_clients {}",
+                self.dataset_size,
+                self.n_clients
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for cfg in [
+            ExperimentConfig::task1_paper(),
+            ExperimentConfig::task1_scaled(),
+            ExperimentConfig::task2_paper(),
+            ExperimentConfig::task2_scaled(),
+            ExperimentConfig::fig2(),
+        ] {
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+        }
+    }
+
+    #[test]
+    fn quota_rounds_and_floors() {
+        let mut cfg = ExperimentConfig::task1_paper();
+        cfg.n_clients = 15;
+        cfg.c_fraction = 0.1;
+        assert_eq!(cfg.quota(), 2); // 1.5 rounds to 2
+        cfg.c_fraction = 0.01;
+        assert_eq!(cfg.quota(), 1); // floor at 1
+    }
+
+    #[test]
+    fn unit_conversions() {
+        let cfg = ExperimentConfig::task1_paper();
+        assert!((cfg.model_size_bits() - 40.0e6).abs() < 1.0);
+        assert!((cfg.cloud_edge_bps() - 1.0e9).abs() < 1.0);
+        assert!((cfg.mean_partition() - 100.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn validate_rejects_bad_fields() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.c_fraction = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.dropout.mean = 1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.regions = vec![RegionSpec { n_clients: 3, dropout_mean: 0.1 }];
+        assert!(cfg.validate().is_err()); // doesn't sum to n_clients
+    }
+
+    #[test]
+    fn enum_parse_roundtrip() {
+        for p in ProtocolKind::ALL {
+            assert_eq!(ProtocolKind::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(TaskKind::parse("nope").is_err());
+        assert!(EngineKind::parse("tpu").is_err());
+    }
+}

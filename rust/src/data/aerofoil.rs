@@ -1,0 +1,99 @@
+//! Synthetic Aerofoil self-noise surrogate (Task 1).
+//!
+//! The paper trains on the UCI Airfoil Self-Noise set (1503 rows, 5
+//! features: frequency, angle of attack, chord length, free-stream
+//! velocity, suction-side displacement thickness; target: scaled sound
+//! pressure level). That file is not available offline, so we generate a
+//! surrogate with the same shape: 5 standardized features and a smooth
+//! nonlinear response + irreducible noise, calibrated so a well-trained
+//! FCN plateaus at a regression accuracy (1 − MAE/MAD) around the paper's
+//! ≈0.727 best-accuracy scale (see DESIGN.md §Substitutions).
+
+use super::dataset::Dataset;
+use crate::rng::Rng;
+
+/// Irreducible noise level on the standardized target. With a standard
+/// normal-ish response, best-case accuracy ≈ 1 − noise_std ≈ 0.85; the
+/// paper's 0.70 accuracy target then sits at ~82% of the plateau, a
+/// comparable relative height to the paper's (0.70 of ~0.727).
+const NOISE_STD: f64 = 0.15;
+
+/// The smooth nonlinear response the FCN has to learn. Chosen to involve
+/// every feature, saturating and interaction terms (the flavor of the
+/// physical NASA airfoil response), and to be comfortably within reach of
+/// a 5-64-32-1 tanh network.
+fn response(f: &[f64; 5]) -> f64 {
+    (std::f64::consts::PI * f[0] * 0.8).sin()
+        + 0.6 * f[1] * f[1]
+        - 0.4 * f[2] * f[3]
+        + 0.9 * (1.2 * f[4]).tanh()
+        + 0.3 * f[0] * f[4]
+}
+
+/// Generate `n` samples. Features are i.i.d. 𝓝(0,1); the target is
+/// standardized to zero mean / unit variance over the generated set so the
+/// MSE loss and the accuracy normalizer are scale-free.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xAE20_F011);
+    let mut x = Vec::with_capacity(n * 5);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut f = [0.0f64; 5];
+        for v in f.iter_mut() {
+            *v = rng.gaussian();
+        }
+        let target = response(&f) + NOISE_STD * rng.gaussian();
+        x.extend(f.iter().map(|&v| v as f32));
+        y.push(target);
+    }
+    // Standardize the target.
+    let mean = y.iter().sum::<f64>() / n.max(1) as f64;
+    let var = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n.max(1) as f64;
+    let std = var.sqrt().max(1e-9);
+    let y: Vec<f32> = y.iter().map(|v| ((v - mean) / std) as f32).collect();
+    Dataset {
+        x,
+        y,
+        feature_dims: vec![5],
+        n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_determinism() {
+        let a = generate(100, 7);
+        assert_eq!(a.n, 100);
+        assert_eq!(a.x.len(), 500);
+        assert_eq!(a.y.len(), 100);
+        let b = generate(100, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = generate(100, 8);
+        assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn target_is_standardized() {
+        let d = generate(2000, 1);
+        let mean: f64 = d.y.iter().map(|&v| v as f64).sum::<f64>() / d.n as f64;
+        let var: f64 =
+            d.y.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / d.n as f64;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn response_is_learnable_signal_dominant() {
+        // Signal-to-noise: the nonlinear response must dominate the noise,
+        // otherwise the task degenerates and accuracy saturates near 0.
+        let d = generate(3000, 3);
+        // MAD should be close to sqrt(2/pi) ~ 0.8 for a standardized,
+        // near-Gaussian target.
+        let mad = d.y_mad();
+        assert!(mad > 0.6 && mad < 1.0, "mad={mad}");
+    }
+}

@@ -1,0 +1,103 @@
+//! Core dataset containers shared by both tasks.
+
+/// A dense, row-major dataset: `x` is `[n, feat_len]`, `y` is `[n]`
+/// (regression target, or a class label stored as f32 — the AOT graphs take
+/// all inputs as f32 and cast internally).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    /// Logical feature dimensions, e.g. `[5]` (Aerofoil) or `[1, 28, 28]`.
+    pub feature_dims: Vec<usize>,
+    pub n: usize,
+}
+
+impl Dataset {
+    pub fn feat_len(&self) -> usize {
+        self.feature_dims.iter().product()
+    }
+
+    /// Feature row for sample `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let f = self.feat_len();
+        &self.x[i * f..(i + 1) * f]
+    }
+
+    /// Mean absolute deviation of `y` around its mean — the normalizer for
+    /// the regression "accuracy" score (1 − MAE / MAD). A constant
+    /// predictor at the mean scores ~0; the paper's FCN plateaus ~0.73.
+    pub fn y_mad(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let mean: f64 = self.y.iter().map(|&v| v as f64).sum::<f64>() / self.n as f64;
+        self.y
+            .iter()
+            .map(|&v| (v as f64 - mean).abs())
+            .sum::<f64>()
+            / self.n as f64
+    }
+}
+
+/// A dataset split into per-client partitions plus a held-out test set.
+/// Partitions are index lists into `train` — data never moves between
+/// clients (the FL privacy constraint is structural here).
+#[derive(Clone, Debug)]
+pub struct FederatedData {
+    pub train: Dataset,
+    pub test: Dataset,
+    /// `partitions[k]` = the sample indices owned by client `k`.
+    pub partitions: Vec<Vec<usize>>,
+}
+
+impl FederatedData {
+    /// |D_k| per client.
+    pub fn partition_sizes(&self) -> Vec<usize> {
+        self.partitions.iter().map(|p| p.len()).collect()
+    }
+
+    /// |D^r| for a region given its client ids.
+    pub fn region_data_size(&self, clients: &[usize]) -> usize {
+        clients.iter().map(|&k| self.partitions[k].len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            x: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            y: vec![0.0, 2.0, 4.0],
+            feature_dims: vec![2],
+            n: 3,
+        }
+    }
+
+    #[test]
+    fn row_access() {
+        let d = tiny();
+        assert_eq!(d.feat_len(), 2);
+        assert_eq!(d.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn mad_of_symmetric_targets() {
+        let d = tiny();
+        // mean=2, deviations |{-2,0,2}| -> mad = 4/3
+        assert!((d.y_mad() - 4.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn federated_sizes() {
+        let d = tiny();
+        let fd = FederatedData {
+            train: d.clone(),
+            test: d,
+            partitions: vec![vec![0], vec![1, 2]],
+        };
+        assert_eq!(fd.partition_sizes(), vec![1, 2]);
+        assert_eq!(fd.region_data_size(&[0, 1]), 3);
+    }
+}

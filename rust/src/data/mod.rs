@@ -1,0 +1,127 @@
+//! Datasets and federated partitioning (S12 in DESIGN.md).
+//!
+//! Builds the training corpus, the held-out evaluation set, and the
+//! per-client partitions for either task from an [`ExperimentConfig`].
+
+pub mod aerofoil;
+pub mod dataset;
+pub mod mnist_synth;
+pub mod partition;
+
+pub use dataset::{Dataset, FederatedData};
+
+use crate::config::{ExperimentConfig, PartitionScheme, TaskKind};
+use crate::rng::Rng;
+
+/// Minimum partition size for the Gaussian-size scheme (a client with no
+/// data cannot train).
+const MIN_PARTITION: usize = 5;
+
+/// Build the complete federated dataset for an experiment. Deterministic in
+/// `cfg.seed`; the test set uses an independent RNG stream so changing
+/// `eval_size` does not reshuffle training partitions.
+pub fn build(cfg: &ExperimentConfig, rng: &mut Rng) -> FederatedData {
+    let (train, test) = match cfg.task {
+        TaskKind::Aerofoil => (
+            aerofoil::generate(cfg.dataset_size, cfg.seed ^ 0xD474_0001),
+            aerofoil::generate(cfg.eval_size, cfg.seed ^ 0xD474_0002),
+        ),
+        TaskKind::Mnist => {
+            // mnist_synth derives class prototypes from the corpus seed, so
+            // train and test must share it: generate one corpus and split.
+            let all = mnist_synth::generate(
+                cfg.dataset_size + cfg.eval_size,
+                cfg.seed ^ 0xD474_0001,
+            );
+            split(all, cfg.dataset_size)
+        }
+    };
+
+    let mut prng = rng.split(0x9A27);
+    let partitions = match &cfg.partition {
+        PartitionScheme::GaussianSize(d) => partition::gaussian_partition(
+            train.n,
+            cfg.n_clients,
+            *d,
+            MIN_PARTITION,
+            &mut prng,
+        ),
+        PartitionScheme::NonIid { skew } => partition::noniid_partition(
+            &train.y,
+            cfg.n_clients,
+            mnist_synth::CLASSES,
+            *skew,
+            &mut prng,
+        ),
+    };
+    FederatedData {
+        train,
+        test,
+        partitions,
+    }
+}
+
+/// Split a dataset into (first `n_train`, rest).
+fn split(all: Dataset, n_train: usize) -> (Dataset, Dataset) {
+    let f = all.feat_len();
+    let train = Dataset {
+        x: all.x[..n_train * f].to_vec(),
+        y: all.y[..n_train].to_vec(),
+        feature_dims: all.feature_dims.clone(),
+        n: n_train,
+    };
+    let test = Dataset {
+        x: all.x[n_train * f..].to_vec(),
+        y: all.y[n_train..].to_vec(),
+        feature_dims: all.feature_dims,
+        n: all.n - n_train,
+    };
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_task1_covers_corpus() {
+        let cfg = ExperimentConfig::task1_scaled();
+        let mut rng = Rng::new(cfg.seed);
+        let fd = build(&cfg, &mut rng);
+        assert_eq!(fd.train.n, cfg.dataset_size);
+        assert_eq!(fd.test.n, cfg.eval_size);
+        assert_eq!(fd.partitions.len(), cfg.n_clients);
+        assert_eq!(
+            fd.partitions.iter().map(|p| p.len()).sum::<usize>(),
+            cfg.dataset_size
+        );
+    }
+
+    #[test]
+    fn build_task2_shares_prototypes_across_split() {
+        let mut cfg = ExperimentConfig::task2_scaled();
+        cfg.dataset_size = 400;
+        cfg.eval_size = 100;
+        let mut rng = Rng::new(cfg.seed);
+        let fd = build(&cfg, &mut rng);
+        assert_eq!(fd.train.n, 400);
+        assert_eq!(fd.test.n, 100);
+        // Train/test must both contain all 10 classes (shared prototypes).
+        for set in [&fd.train, &fd.test] {
+            let mut seen = [false; 10];
+            for &l in &set.y {
+                seen[l as usize] = true;
+            }
+            assert!(seen.iter().filter(|&&s| s).count() >= 8);
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let cfg = ExperimentConfig::task1_scaled();
+        let a = build(&cfg, &mut Rng::new(cfg.seed));
+        let b = build(&cfg, &mut Rng::new(cfg.seed));
+        assert_eq!(a.train.y, b.train.y);
+        assert_eq!(a.partitions, b.partitions);
+    }
+}

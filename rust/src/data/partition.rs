@@ -1,0 +1,162 @@
+//! Client data partitioners — the paper's two data-distribution regimes.
+
+use crate::config::Dist;
+use crate::rng::Rng;
+
+/// Task 1 regime: partition sizes drawn from 𝓝(μ, σ²) ("data distribution
+/// 𝓝(100, 30²)"), clipped to ≥ `min_size`, then scaled so the disjoint
+/// partitions exactly cover the `n_samples` corpus. Returns per-client
+/// index lists over a shuffled corpus.
+pub fn gaussian_partition(
+    n_samples: usize,
+    n_clients: usize,
+    dist: Dist,
+    min_size: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(n_clients > 0);
+    // Draw raw sizes and normalize to the corpus size.
+    let raw: Vec<f64> = (0..n_clients)
+        .map(|_| rng.normal(dist.mean, dist.std).max(min_size as f64))
+        .collect();
+    let total: f64 = raw.iter().sum();
+    let mut sizes: Vec<usize> = raw
+        .iter()
+        .map(|r| ((r / total) * n_samples as f64).floor() as usize)
+        .collect();
+    // Distribute the rounding remainder one sample at a time.
+    let mut assigned: usize = sizes.iter().sum();
+    let mut i = 0;
+    while assigned < n_samples {
+        sizes[i % n_clients] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    // Hand out shuffled indices contiguously.
+    let mut idx: Vec<usize> = (0..n_samples).collect();
+    rng.shuffle(&mut idx);
+    let mut out = Vec::with_capacity(n_clients);
+    let mut cursor = 0;
+    for &s in &sizes {
+        out.push(idx[cursor..cursor + s].to_vec());
+        cursor += s;
+    }
+    out
+}
+
+/// Task 2 regime: label-skewed non-IID. Sample `(x_i, y_i)` goes, with
+/// probability `skew` (paper: 0.75), to a uniformly-chosen client whose
+/// index is ≡ y_i (mod `n_classes`); otherwise to a uniformly-chosen
+/// client. Mirrors the paper's "samples of class y_i assigned by
+/// probability 0.75 to the clients with indices k ≡ y_i (mod 10)".
+pub fn noniid_partition(
+    labels: &[f32],
+    n_clients: usize,
+    n_classes: usize,
+    skew: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(n_clients > 0 && n_classes > 0);
+    let mut out = vec![Vec::new(); n_clients];
+    // Pre-index clients by (index mod n_classes) congruence class.
+    let mut by_residue: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+    for k in 0..n_clients {
+        by_residue[k % n_classes].push(k);
+    }
+    for (i, &label) in labels.iter().enumerate() {
+        let y = (label as usize) % n_classes;
+        let k = if rng.bernoulli(skew) && !by_residue[y].is_empty() {
+            by_residue[y][rng.below(by_residue[y].len())]
+        } else {
+            rng.below(n_clients)
+        };
+        out[k].push(i);
+    }
+    out
+}
+
+/// Label-skew diagnostic: fraction of a client's samples whose label is
+/// congruent to the client index. Used by tests and the data report.
+pub fn skew_fraction(
+    partitions: &[Vec<usize>],
+    labels: &[f32],
+    n_classes: usize,
+) -> f64 {
+    let mut matched = 0usize;
+    let mut total = 0usize;
+    for (k, part) in partitions.iter().enumerate() {
+        for &i in part {
+            if (labels[i] as usize) % n_classes == k % n_classes {
+                matched += 1;
+            }
+            total += 1;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        matched as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_covers_corpus_disjointly() {
+        let mut rng = Rng::new(0);
+        let parts = gaussian_partition(1503, 15, Dist::new(100.0, 30.0), 5, &mut rng);
+        assert_eq!(parts.len(), 15);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        assert_eq!(all.len(), 1503);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 1503, "partitions overlap");
+    }
+
+    #[test]
+    fn gaussian_sizes_vary() {
+        let mut rng = Rng::new(1);
+        let parts = gaussian_partition(1503, 15, Dist::new(100.0, 30.0), 5, &mut rng);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max > min, "sizes={sizes:?}");
+        assert!(min >= 5);
+    }
+
+    #[test]
+    fn noniid_covers_corpus_disjointly() {
+        let mut rng = Rng::new(2);
+        let labels: Vec<f32> = (0..5000).map(|i| (i % 10) as f32).collect();
+        let parts = noniid_partition(&labels, 50, 10, 0.75, &mut rng);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        assert_eq!(all.len(), 5000);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 5000);
+    }
+
+    #[test]
+    fn noniid_skew_is_strong() {
+        let mut rng = Rng::new(3);
+        let labels: Vec<f32> = (0..20_000).map(|i| (i % 10) as f32).collect();
+        let parts = noniid_partition(&labels, 50, 10, 0.75, &mut rng);
+        let skew = skew_fraction(&parts, &labels, 10);
+        // 0.75 direct + 0.25 * (5/50 clients share the residue) ≈ 0.775
+        assert!(skew > 0.7, "skew={skew}");
+        // And an IID control is near 1/10... (5 clients per residue of 50)
+        let iid = noniid_partition(&labels, 50, 10, 0.0, &mut rng);
+        let skew_iid = skew_fraction(&iid, &labels, 10);
+        assert!(skew_iid < 0.2, "iid skew={skew_iid}");
+    }
+
+    #[test]
+    fn noniid_handles_more_classes_than_clients() {
+        let mut rng = Rng::new(4);
+        let labels: Vec<f32> = (0..100).map(|i| (i % 10) as f32).collect();
+        let parts = noniid_partition(&labels, 3, 10, 0.75, &mut rng);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 100);
+    }
+}

@@ -1,0 +1,135 @@
+//! Client device heterogeneity & reliability model (S5, paper §III.D).
+//!
+//! Every end device gets a [`ClientProfile`] sampled from the Table II
+//! distributions: compute performance `s_k ~ 𝓝` (GHz), bandwidth
+//! `bw_k ~ 𝓝` (MHz) and a per-round drop-out probability `dr_k ~ 𝓝`.
+//!
+//! **Privacy boundary.** Profiles live on the *simulator* side of the
+//! system. Protocol code (selection, slack estimation, aggregation) never
+//! receives a `ClientProfile` — it only observes submission counts, exactly
+//! as the paper's reliability-agnostic setting prescribes. The type is
+//! deliberately not exported through the `protocols` API.
+
+use crate::config::ExperimentConfig;
+use crate::rng::Rng;
+use crate::topology::Topology;
+
+/// Static per-device truth (hidden from protocols).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientProfile {
+    /// CPU performance s_k in GHz.
+    pub perf_ghz: f64,
+    /// Wireless bandwidth bw_k in MHz.
+    pub bw_mhz: f64,
+    /// Probability the client drops/opts out of a round (dr_k). The
+    /// no-abort probability is P_k = 1 − dr_k.
+    pub dropout_p: f64,
+}
+
+/// Floor on physical quantities so a pathological draw cannot produce a
+/// zero/negative-speed device (𝓝 has unbounded support).
+const PHYS_FLOOR_FRACTION: f64 = 0.05;
+/// Drop-out probabilities clamp into [0, 0.99] — a 1.0 client would be
+/// permanently dead, which the paper's Gaussian never intends.
+const DROPOUT_MAX: f64 = 0.99;
+
+/// Sample one profile given the config distributions and a per-region
+/// drop-out mean (regions may override it, e.g. Fig. 2).
+pub fn sample_profile(
+    cfg: &ExperimentConfig,
+    dropout_mean: f64,
+    rng: &mut Rng,
+) -> ClientProfile {
+    let perf_floor = cfg.perf_ghz.mean * PHYS_FLOOR_FRACTION;
+    let bw_floor = cfg.bw_mhz.mean * PHYS_FLOOR_FRACTION;
+    ClientProfile {
+        perf_ghz: rng.normal_clamped(cfg.perf_ghz.mean, cfg.perf_ghz.std, perf_floor, f64::MAX),
+        bw_mhz: rng.normal_clamped(cfg.bw_mhz.mean, cfg.bw_mhz.std, bw_floor, f64::MAX),
+        dropout_p: rng.normal_clamped(dropout_mean, cfg.dropout.std, 0.0, DROPOUT_MAX),
+    }
+}
+
+/// Sample the whole fleet, honoring per-region drop-out overrides from the
+/// topology (explicit `RegionSpec`s) or the global `cfg.dropout.mean`.
+pub fn sample_fleet(
+    cfg: &ExperimentConfig,
+    topo: &Topology,
+    rng: &mut Rng,
+) -> Vec<ClientProfile> {
+    let mut profiles = vec![
+        ClientProfile {
+            perf_ghz: 0.0,
+            bw_mhz: 0.0,
+            dropout_p: 0.0
+        };
+        cfg.n_clients
+    ];
+    let mut drng = rng.split(0xDE_01CE);
+    for (r, clients) in topo.regions.iter().enumerate() {
+        let mean = topo
+            .dropout_mean_override(r)
+            .unwrap_or(cfg.dropout.mean);
+        for &k in clients {
+            profiles[k] = sample_profile(cfg, mean, &mut drng);
+        }
+    }
+    profiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RegionSpec;
+
+    #[test]
+    fn fleet_matches_population_and_bounds() {
+        let cfg = ExperimentConfig::task2_scaled();
+        let topo = Topology::build(&cfg, &mut Rng::new(1)).unwrap();
+        let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(2));
+        assert_eq!(fleet.len(), cfg.n_clients);
+        for p in &fleet {
+            assert!(p.perf_ghz > 0.0);
+            assert!(p.bw_mhz > 0.0);
+            assert!((0.0..=DROPOUT_MAX).contains(&p.dropout_p));
+        }
+    }
+
+    #[test]
+    fn fleet_heterogeneity_sampled() {
+        let cfg = ExperimentConfig::task2_scaled();
+        let topo = Topology::build(&cfg, &mut Rng::new(1)).unwrap();
+        let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(2));
+        let perf_min = fleet.iter().map(|p| p.perf_ghz).fold(f64::MAX, f64::min);
+        let perf_max = fleet.iter().map(|p| p.perf_ghz).fold(0.0, f64::max);
+        assert!(perf_max - perf_min > 0.1, "no heterogeneity sampled");
+    }
+
+    #[test]
+    fn regional_dropout_override_respected() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.n_clients = 40;
+        cfg.n_edges = 2;
+        cfg.regions = vec![
+            RegionSpec { n_clients: 20, dropout_mean: 0.1 },
+            RegionSpec { n_clients: 20, dropout_mean: 0.8 },
+        ];
+        cfg.dropout.std = 0.02;
+        let topo = Topology::build(&cfg, &mut Rng::new(3)).unwrap();
+        let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(4));
+        let mean_r = |r: usize| -> f64 {
+            let cs = &topo.regions[r];
+            cs.iter().map(|&k| fleet[k].dropout_p).sum::<f64>() / cs.len() as f64
+        };
+        assert!(mean_r(0) < 0.2, "region 0 mean {}", mean_r(0));
+        assert!(mean_r(1) > 0.7, "region 1 mean {}", mean_r(1));
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let cfg = ExperimentConfig::task1_scaled();
+        let topo = Topology::build(&cfg, &mut Rng::new(5)).unwrap();
+        let a = sample_fleet(&cfg, &topo, &mut Rng::new(6));
+        let b = sample_fleet(&cfg, &topo, &mut Rng::new(6));
+        assert_eq!(a, b);
+    }
+}

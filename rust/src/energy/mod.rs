@@ -1,0 +1,133 @@
+//! Device energy model (S7): equation (35) of the paper.
+//!
+//! `E_k = P_trans · T_k^comm + P_comp^base · s_k³ · T_k^train`
+//!
+//! with `P_trans = 0.5 W` and `P_comp^base = 0.7 W` (benchmarking numbers
+//! the paper takes from Carroll & Heiser and the frequency-cube power
+//! model of Lin et al.). `s_k` is the CPU frequency in GHz, so the compute
+//! power of an average Task-1 device (0.5 GHz) is 0.7·0.125 ≈ 0.0875 W.
+//!
+//! Accounting policy (the paper does not spell one out — documented in
+//! DESIGN.md): a client that completes its round consumes the full
+//! `E_k`; a client that drops out mid-round consumes half of its training
+//! energy and no transmission energy (it aborts before uploading).
+
+use crate::config::ExperimentConfig;
+use crate::devices::ClientProfile;
+use crate::timing::TimingModel;
+
+/// Per-experiment energy coefficients.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    p_trans_w: f64,
+    p_comp_base_w: f64,
+}
+
+/// Energy outcome of one client-round, in Joules (converted to Wh by the
+/// metrics layer: 1 Wh = 3600 J).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergySpend {
+    pub comm_j: f64,
+    pub comp_j: f64,
+}
+
+impl EnergySpend {
+    pub fn total_j(&self) -> f64 {
+        self.comm_j + self.comp_j
+    }
+
+    pub fn total_wh(&self) -> f64 {
+        self.total_j() / 3600.0
+    }
+}
+
+impl EnergyModel {
+    pub fn new(cfg: &ExperimentConfig) -> EnergyModel {
+        EnergyModel {
+            p_trans_w: cfg.p_trans_w,
+            p_comp_base_w: cfg.p_comp_base_w,
+        }
+    }
+
+    /// Compute power for a device: P_comp^base · s_k³ (frequency-cube model).
+    pub fn comp_power_w(&self, p: &ClientProfile) -> f64 {
+        self.p_comp_base_w * p.perf_ghz.powi(3)
+    }
+
+    /// Eq. (35) for a client that finishes the round (trains + uploads).
+    pub fn full_round(
+        &self,
+        p: &ClientProfile,
+        tm: &TimingModel,
+        partition_size: f64,
+    ) -> EnergySpend {
+        EnergySpend {
+            comm_j: self.p_trans_w * tm.t_comm(p),
+            comp_j: self.comp_power_w(p) * tm.t_train(p, partition_size),
+        }
+    }
+
+    /// A client that drops out mid-round: half the training burn, no upload.
+    pub fn aborted_round(
+        &self,
+        p: &ClientProfile,
+        tm: &TimingModel,
+        partition_size: f64,
+    ) -> EnergySpend {
+        EnergySpend {
+            comm_j: 0.0,
+            comp_j: 0.5 * self.comp_power_w(p) * tm.t_train(p, partition_size),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (ExperimentConfig, TimingModel, EnergyModel, ClientProfile) {
+        let cfg = ExperimentConfig::task1_paper();
+        let tm = TimingModel::new(&cfg);
+        let em = EnergyModel::new(&cfg);
+        let p = ClientProfile { perf_ghz: 0.5, bw_mhz: 0.5, dropout_p: 0.0 };
+        (cfg, tm, em, p)
+    }
+
+    #[test]
+    fn frequency_cube_power() {
+        let (_, _, em, p) = setup();
+        assert!((em.comp_power_w(&p) - 0.7 * 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_round_magnitudes() {
+        let (_, tm, em, p) = setup();
+        let e = em.full_round(&p, &tm, 100.0);
+        // comm: 0.5 W for ~36 s ≈ 18 J; comp: 0.0875 W for ~0.115 s ≈ 0.01 J
+        assert!((e.comm_j - 18.0).abs() < 1.0, "comm={}", e.comm_j);
+        assert!(e.comp_j > 0.0 && e.comp_j < 0.1, "comp={}", e.comp_j);
+        assert!((e.total_wh() - e.total_j() / 3600.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn aborted_round_burns_half_compute_no_comm() {
+        let (_, tm, em, p) = setup();
+        let full = em.full_round(&p, &tm, 100.0);
+        let abort = em.aborted_round(&p, &tm, 100.0);
+        assert_eq!(abort.comm_j, 0.0);
+        assert!((abort.comp_j - 0.5 * full.comp_j).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faster_cpu_burns_more_power_but_less_time() {
+        let (_, tm, em, _) = setup();
+        let slow = ClientProfile { perf_ghz: 0.4, bw_mhz: 0.5, dropout_p: 0.0 };
+        let fast = ClientProfile { perf_ghz: 1.0, bw_mhz: 0.5, dropout_p: 0.0 };
+        assert!(em.comp_power_w(&fast) > em.comp_power_w(&slow));
+        // Net: cube power × linear time → faster CPU costs more energy for
+        // the same work (s³·t ∝ s²).
+        let es = em.full_round(&slow, &tm, 100.0);
+        let ef = em.full_round(&fast, &tm, 100.0);
+        assert!(ef.comp_j > es.comp_j);
+    }
+}

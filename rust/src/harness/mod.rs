@@ -1,0 +1,22 @@
+//! Experiment harness (S18): one runner per table/figure of the paper's
+//! evaluation section. See DESIGN.md §2 for the experiment index.
+//!
+//! * [`fig2`] — §III.A validation: slack/selection traces.
+//! * [`sweep`] — the Table III / Table IV grids (E[dr] × C × protocol),
+//!   which also emit the per-round accuracy traces of Figs. 4/6 and the
+//!   energy numbers of Figs. 5/7.
+
+pub mod ablation;
+pub mod fig2;
+pub mod sweep;
+
+pub use fig2::run_fig2;
+pub use sweep::{run_task_sweep, SweepOpts, SweepResult};
+
+use std::path::PathBuf;
+
+/// Where harness output lands (tables as text, traces as CSV, summaries as
+/// JSON).
+pub fn default_out_dir() -> PathBuf {
+    PathBuf::from("reports")
+}

@@ -1,0 +1,61 @@
+//! # HybridFL — federated learning over reliability-agnostic clients in MEC
+//!
+//! Production-grade reproduction of *Wu, He, Lin, Mao — "Accelerating
+//! Federated Learning over Reliability-Agnostic Clients in Mobile Edge
+//! Computing Systems"* (IEEE TPDS 2020, DOI 10.1109/TPDS.2020.3040867).
+//!
+//! The crate is the **L3 coordinator** of a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels — fused dense
+//!   matmul+bias+activation and row-wise softmax-NLL — the compute hot-spot.
+//! * **L2** (`python/compile/model.py`): the paper's two on-device workloads
+//!   (Aerofoil FCN, MNIST LeNet-5) as JAX train/eval graphs calling the L1
+//!   kernels, AOT-lowered once to HLO text by `python/compile/aot.py`.
+//! * **L3** (this crate): everything the paper's evaluation needs — the
+//!   HybridFL protocol (regional slack factors, quota-triggered regional
+//!   aggregation, EDC-weighted immediate cloud aggregation, model caching),
+//!   the FedAvg/HierFAVG baselines, the MEC timing/energy/reliability
+//!   simulator, a PJRT runtime that executes the AOT artifacts, a live
+//!   threaded cloud/edge/client runtime, metrics and the experiment harness
+//!   regenerating every table and figure of the paper.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! Python invocation, after which the `hybridfl` binary is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use hybridfl::config::ExperimentConfig;
+//! use hybridfl::sim::FlRun;
+//!
+//! // Scaled-down Task 1 (Aerofoil) preset, HybridFL protocol.
+//! let mut cfg = ExperimentConfig::task1_scaled();
+//! cfg.protocol = hybridfl::config::ProtocolKind::HybridFl;
+//! let result = FlRun::new(cfg).unwrap().run().unwrap();
+//! println!("best accuracy: {:.3}", result.summary.best_accuracy);
+//! ```
+
+pub mod aggregation;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod devices;
+pub mod energy;
+pub mod harness;
+pub mod jsonx;
+pub mod live;
+pub mod metrics;
+pub mod model;
+pub mod protocols;
+pub mod rng;
+pub mod runtime;
+pub mod selection;
+pub mod sim;
+pub mod timing;
+pub mod topology;
+
+/// Crate-wide result alias (anyhow-based; the coordinator is an application
+/// stack, not a library with typed error recovery).
+pub type Result<T> = anyhow::Result<T>;

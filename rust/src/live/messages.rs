@@ -1,0 +1,52 @@
+//! Wire messages of the live runtime. In a deployment these would be RPCs
+//! (edge↔cloud over Ethernet, client↔edge over the wireless link); here
+//! they are mpsc payloads with exactly the information each party is
+//! allowed to see — the privacy boundary is the message schema itself:
+//! nothing in `Submission` or `EdgeReport` identifies client reliability,
+//! and the cloud never learns which clients participated.
+
+use crate::model::ModelParams;
+
+/// Cloud → edge.
+#[derive(Debug)]
+pub enum CloudToEdge {
+    /// Start round `t`: distribute the global model, select clients.
+    StartRound { t: usize, global: ModelParams },
+    /// Quota reached (or deadline): stop collecting, aggregate, reply.
+    AggregationSignal { t: usize, quota_met: bool },
+    /// Training is over; tear down.
+    Shutdown,
+}
+
+/// Edge → cloud.
+#[derive(Debug)]
+pub enum EdgeToCloud {
+    /// Live submission-count update ("keeps reporting update count").
+    Progress { region: usize, t: usize, submissions: usize },
+    /// Post-aggregation regional model + effective data coverage.
+    Regional {
+        region: usize,
+        t: usize,
+        model: ModelParams,
+        edc: f64,
+        submissions: usize,
+    },
+}
+
+/// Edge → client.
+#[derive(Debug)]
+pub enum EdgeToClient {
+    /// Train `epochs` local epochs from `model` and submit.
+    Train { t: usize, model: ModelParams, epochs: usize, lr: f32 },
+    Shutdown,
+}
+
+/// Client → edge.
+#[derive(Debug)]
+pub struct Submission {
+    pub t: usize,
+    /// Data volume |D_k| — carried by the model update envelope (needed
+    /// for weighted aggregation), not an identity.
+    pub data_size: f64,
+    pub model: ModelParams,
+}

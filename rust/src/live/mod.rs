@@ -1,0 +1,21 @@
+//! Live threaded runtime (S9): the HybridFL coordination running as a
+//! *real concurrent system* — one cloud leader thread, one thread per edge
+//! node, one thread per client, communicating over mpsc channels.
+//!
+//! The DES in `sim::` is the experiment vehicle (deterministic, virtual
+//! clock); this module is the deployment-shaped proof that the same
+//! protocol state machines (slack estimation, quota trigger, cache rule,
+//! EDC aggregation) compose under actual asynchrony: out-of-order
+//! submissions, racing edges, a cloud that must arbitrate quota vs.
+//! deadline in wall-clock time.
+//!
+//! Client compute uses the mock progress model (`runtime::mock` math)
+//! because the PJRT client is not `Send` (Rc-based FFI handles) — the live
+//! runtime demonstrates *coordination*, the PJRT path carries the real
+//! numerics in the DES. Virtual durations (eqs. 31–34) are scaled to
+//! wall-clock by `time_scale`.
+
+pub mod cluster;
+pub mod messages;
+
+pub use cluster::{LiveCluster, LiveOpts, LiveRoundStats};

@@ -1,0 +1,177 @@
+//! `hybridfl` — the coordinator CLI / experiment launcher.
+//!
+//! ```text
+//! hybridfl run    [--preset P] [--config f.json] [--set k=v]... [--out trace.csv]
+//! hybridfl fig2   [--out dir] [--seed N]
+//! hybridfl table3 [--full|--quick] [--mock] [--target A] [--out dir]
+//! hybridfl table4 [--full|--quick] [--mock] [--target A] [--out dir]
+//! hybridfl live   [--rounds N] [--set k=v]...
+//! hybridfl config [--preset P] [--set k=v]...      # print resolved JSON
+//! ```
+//!
+//! `table3`/`table4` regenerate the paper's tables **and** the trace CSVs
+//! behind Figs. 4/6 and the energy tables of Figs. 5/7 (one sweep produces
+//! all three artifacts — see `harness::sweep`).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use hybridfl::cli::Args;
+use hybridfl::config::{ExperimentConfig, TaskKind};
+use hybridfl::harness::{self, run_fig2, run_task_sweep, SweepOpts};
+use hybridfl::live::{LiveCluster, LiveOpts};
+use hybridfl::metrics;
+use hybridfl::sim::FlRun;
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main() -> hybridfl::Result<()> {
+    let args = Args::from_env()?;
+    match args.command() {
+        Some("run") => cmd_run(&args),
+        Some("fig2") => cmd_fig2(&args),
+        Some("table3") => cmd_table(TaskKind::Aerofoil, &args),
+        Some("table4") => cmd_table(TaskKind::Mnist, &args),
+        Some("ablation") => cmd_ablation(&args),
+        Some("live") => cmd_live(&args),
+        Some("config") => cmd_config(&args),
+        Some(other) => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+hybridfl — federated learning over reliability-agnostic clients in MEC
+commands:
+  run     one FL run (--preset task1|task1-scaled|task2|task2-scaled|fig2,
+          --config cfg.json, --set key=value ..., --out trace.csv)
+  fig2    slack-factor traces (paper Fig. 2) -> reports/fig2_traces.csv
+  table3  Task-1 sweep: Table III + Fig. 4 traces + Fig. 5 energy
+  table4  Task-2 sweep: Table IV + Fig. 6 traces + Fig. 7 energy
+          (--full paper scale, --quick smoke grid, --mock no-PJRT,
+           --target A, --out dir)
+  ablation cache-rule / theta_init / kappa2 / slack-contribution sweeps
+          (--mock for dynamics-only; default real PJRT)
+  live    threaded cloud/edge/client cluster demo (--rounds N)
+  config  print the resolved config as JSON";
+
+/// Resolve a config from --preset / --config plus --set overrides.
+fn resolve_config(args: &Args) -> hybridfl::Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::load(std::path::Path::new(path))?
+    } else {
+        ExperimentConfig::preset(args.get("preset").unwrap_or("task1-scaled"))?
+    };
+    if let Some(seed) = args.get_parsed::<u64>("seed")? {
+        cfg.seed = seed;
+    }
+    let overrides = args.all("set");
+    hybridfl::config::apply_overrides(&mut cfg, &overrides)?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> hybridfl::Result<()> {
+    let cfg = resolve_config(args)?;
+    println!(
+        "running {} ({} / {})",
+        cfg.name,
+        cfg.protocol.as_str(),
+        cfg.engine.as_str()
+    );
+    let result = FlRun::new(cfg)?.run()?;
+    let s = &result.summary;
+    println!("rounds run          : {}", s.rounds_run);
+    println!("best accuracy       : {:.4}", s.best_accuracy);
+    println!("avg round length    : {:.2} s", s.avg_round_len);
+    println!("total virtual time  : {:.1} s", s.total_time);
+    println!("mean device energy  : {:.4} Wh", s.mean_device_energy_wh);
+    if let Some(rt) = s.rounds_to_target {
+        println!("rounds to target    : {rt}");
+        println!(
+            "time to target      : {:.1} s",
+            s.time_to_target.unwrap_or(f64::NAN)
+        );
+    }
+    if let Some(out) = args.get("out") {
+        metrics::write_csv(std::path::Path::new(out), &result.rounds)?;
+        println!("trace written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> hybridfl::Result<()> {
+    let out = out_dir(args);
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(42);
+    let (_, stats) = run_fig2(&out, seed)?;
+    print!("{}", harness::fig2::render_stats(&stats));
+    println!("traces -> {}", out.join("fig2_traces.csv").display());
+    Ok(())
+}
+
+fn cmd_table(task: TaskKind, args: &Args) -> hybridfl::Result<()> {
+    let out = out_dir(args);
+    let opts = SweepOpts {
+        full: args.has("full"),
+        quick: args.has("quick"),
+        mock: args.has("mock"),
+        target: args.get_parsed::<f64>("target")?,
+        t_max: args.get_parsed::<usize>("rounds")?,
+        seed: args.get_parsed::<u64>("seed")?.unwrap_or(42),
+    };
+    let sweep = run_task_sweep(task, &opts, &out)?;
+    print!("{}", harness::sweep::render_table(&sweep));
+    println!();
+    print!("{}", harness::sweep::render_energy(&sweep));
+    println!("artifacts -> {}", out.display());
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> hybridfl::Result<()> {
+    let families = harness::ablation::run_all(args.has("mock"))?;
+    for (name, rows) in &families {
+        print!("{}", harness::ablation::render(name, rows));
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_live(args: &Args) -> hybridfl::Result<()> {
+    let cfg = resolve_config(args)?;
+    let rounds = args.get_parsed::<usize>("rounds")?.unwrap_or(10);
+    println!(
+        "live cluster: {} clients / {} edges, {} rounds (time scale 1e-4)",
+        cfg.n_clients, cfg.n_edges, rounds
+    );
+    let cluster = LiveCluster::new(cfg)?;
+    let stats = cluster.run(&LiveOpts { rounds, time_scale: 1e-4 })?;
+    for s in &stats {
+        println!(
+            "round {:>3}  wall {:>8.1?}  submissions {:?}  quota_met {}  progress {:.2}",
+            s.t, s.wall, s.submissions, s.quota_met, s.global_progress
+        );
+    }
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> hybridfl::Result<()> {
+    let cfg = resolve_config(args)?;
+    println!("{}", cfg.to_json().pretty());
+    Ok(())
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    args.get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(harness::default_out_dir)
+}

@@ -1,0 +1,215 @@
+//! Metrics output (S17): CSV trace emission, fixed-width table rendering,
+//! and JSON report building for the experiment harness.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::jsonx::Json;
+use crate::sim::{RoundTrace, RunResult, RunSummary};
+use crate::Result;
+
+/// Render per-round traces as CSV (one row per round; slack columns appear
+/// when present — HybridFL runs).
+pub fn traces_to_csv(rounds: &[RoundTrace]) -> String {
+    let mut out = String::new();
+    let n_regions = rounds.first().map_or(0, |r| r.submissions.len());
+    let has_slack = rounds.first().is_some_and(|r| r.slack.is_some());
+    out.push_str("t,round_len,cum_time,accuracy,best_accuracy,eval_loss,cum_energy_wh,deadline_hit,cloud_aggregated");
+    for r in 0..n_regions {
+        let _ = write!(out, ",selected_r{r},alive_r{r},submissions_r{r}");
+        if has_slack {
+            let _ = write!(out, ",theta_r{r},c_r{r},q_r{r}");
+        }
+    }
+    out.push('\n');
+    for row in rounds {
+        let _ = write!(
+            out,
+            "{},{:.4},{:.4},{:.6},{:.6},{:.6},{:.6},{},{}",
+            row.t,
+            row.round_len,
+            row.cum_time,
+            row.accuracy,
+            row.best_accuracy,
+            row.eval_loss,
+            row.cum_energy_j / 3600.0,
+            row.deadline_hit as u8,
+            row.cloud_aggregated as u8,
+        );
+        for r in 0..n_regions {
+            let _ = write!(
+                out,
+                ",{},{},{}",
+                row.selected.get(r).copied().unwrap_or(0),
+                row.alive.get(r).copied().unwrap_or(0),
+                row.submissions.get(r).copied().unwrap_or(0),
+            );
+            if has_slack {
+                if let Some(s) = row.slack.as_ref().and_then(|v| v.get(r)) {
+                    let _ = write!(out, ",{:.5},{:.5},{:.5}", s.theta, s.c_r, s.q_r);
+                } else {
+                    out.push_str(",,,");
+                }
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn write_csv(path: &Path, rounds: &[RoundTrace]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, traces_to_csv(rounds))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Summary → JSON (machine-readable reports under `reports/`).
+pub fn summary_to_json(s: &RunSummary) -> Json {
+    Json::obj()
+        .set("protocol", s.protocol.as_str())
+        .set("rounds_run", s.rounds_run)
+        .set("best_accuracy", s.best_accuracy)
+        .set("avg_round_len", s.avg_round_len)
+        .set(
+            "rounds_to_target",
+            s.rounds_to_target.map_or(Json::Null, |v| Json::Num(v as f64)),
+        )
+        .set(
+            "time_to_target",
+            s.time_to_target.map_or(Json::Null, Json::Num),
+        )
+        .set("mean_device_energy_wh", s.mean_device_energy_wh)
+        .set("total_time", s.total_time)
+        .set("final_loss", s.final_loss)
+}
+
+pub fn result_to_json(r: &RunResult) -> Json {
+    summary_to_json(&r.summary)
+}
+
+/// Fixed-width table renderer for terminal output — the harness prints
+/// paper-style rows with it.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let sep_len: usize = widths.iter().sum::<usize>() + 3 * ncol + 1;
+        let fmt_row = |cells: &[String], out: &mut String| {
+            out.push('|');
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, " {:width$} |", c, width = widths[i]);
+            }
+            out.push('\n');
+        };
+        out.push_str(&"-".repeat(sep_len));
+        out.push('\n');
+        fmt_row(&self.headers, &mut out);
+        out.push_str(&"-".repeat(sep_len));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out.push_str(&"-".repeat(sep_len));
+        out.push('\n');
+        out
+    }
+}
+
+/// Format an `Option<f64>` table cell ("-" when the target was not hit).
+pub fn opt_cell(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => format!("{x:.prec$}"),
+        None => "-".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, ExperimentConfig, ProtocolKind};
+    use crate::sim::FlRun;
+
+    fn tiny_result() -> RunResult {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.engine = EngineKind::Mock;
+        cfg.protocol = ProtocolKind::HybridFl;
+        cfg.t_max = 5;
+        cfg.n_clients = 10;
+        cfg.n_edges = 2;
+        cfg.dataset_size = 200;
+        cfg.eval_size = 50;
+        FlRun::new(cfg).unwrap().run().unwrap()
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let r = tiny_result();
+        let csv = traces_to_csv(&r.rounds);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 6); // header + 5 rounds
+        assert!(lines[0].starts_with("t,round_len"));
+        assert!(lines[0].contains("theta_r0")); // HybridFL slack columns
+        // Every row has the same number of fields as the header.
+        let n = lines[0].split(',').count();
+        for l in &lines[1..] {
+            assert_eq!(l.split(',').count(), n, "row: {l}");
+        }
+    }
+
+    #[test]
+    fn summary_json_roundtrips() {
+        let r = tiny_result();
+        let j = summary_to_json(&r.summary);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(
+            parsed.get("protocol").unwrap().as_str().unwrap(),
+            "hybridfl"
+        );
+        assert!(parsed.get("best_accuracy").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["protocol", "acc"]);
+        t.row(vec!["fedavg".into(), "0.93".into()]);
+        t.row(vec!["hybridfl-long-name".into(), "0.96".into()]);
+        let s = t.render();
+        assert!(s.contains("hybridfl-long-name"));
+        // All body lines equal length.
+        let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn opt_cell_formats() {
+        assert_eq!(opt_cell(Some(1.23456), 2), "1.23");
+        assert_eq!(opt_cell(None, 2), "-");
+    }
+}

@@ -1,0 +1,208 @@
+//! `artifacts/manifest.json` loader — the contract between the AOT
+//! pipeline (`python/compile/aot.py`) and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TaskKind;
+use crate::jsonx::Json;
+
+/// One parameter tensor's name and shape, artifact order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Everything the runtime needs to load one task's executables.
+#[derive(Clone, Debug)]
+pub struct TaskManifest {
+    pub task: TaskKind,
+    pub params: Vec<ParamSpec>,
+    /// Input feature dims (e.g. [5] or [1, 28, 28]).
+    pub x_dims: Vec<usize>,
+    /// Names of the three eval-sum outputs (documentation / sanity).
+    pub eval_outputs: Vec<String>,
+    /// (capacity, path) ascending by capacity.
+    pub train_buckets: Vec<(usize, PathBuf)>,
+    /// (capacity, path) ascending by capacity.
+    pub eval_buckets: Vec<(usize, PathBuf)>,
+    pub init_npz: PathBuf,
+}
+
+impl TaskManifest {
+    /// Load the manifest for `task` from `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path, task: TaskKind) -> Result<TaskManifest> {
+        let manifest_path = artifacts_dir.join("manifest.json");
+        let root = Json::parse_file(&manifest_path).with_context(|| {
+            format!(
+                "loading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let entry = root
+            .req("tasks")?
+            .req(task.as_str())
+            .with_context(|| format!("task '{}' not in manifest", task.as_str()))?;
+
+        let params = entry
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let x_dims = entry
+            .req("x_dims")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+
+        let eval_outputs = entry
+            .req("eval_outputs")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+
+        let buckets = |key: &str| -> Result<Vec<(usize, PathBuf)>> {
+            let mut out: Vec<(usize, PathBuf)> = entry
+                .req(key)?
+                .as_obj()?
+                .iter()
+                .map(|(cap, path)| {
+                    let cap: usize = cap
+                        .parse()
+                        .with_context(|| format!("bad bucket capacity '{cap}'"))?;
+                    Ok((cap, artifacts_dir.join(path.as_str()?)))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            out.sort_by_key(|(c, _)| *c);
+            if out.is_empty() {
+                bail!("no {key} in manifest for {}", task.as_str());
+            }
+            Ok(out)
+        };
+
+        let tm = TaskManifest {
+            task,
+            params,
+            x_dims,
+            eval_outputs,
+            train_buckets: buckets("train_buckets")?,
+            eval_buckets: buckets("eval_buckets")?,
+            init_npz: artifacts_dir.join(entry.req("init_npz")?.as_str()?),
+        };
+        for (_, p) in tm.train_buckets.iter().chain(tm.eval_buckets.iter()) {
+            if !p.exists() {
+                bail!("artifact missing: {} — run `make artifacts`", p.display());
+            }
+        }
+        Ok(tm)
+    }
+
+    /// Flattened per-sample feature length.
+    pub fn feat_len(&self) -> usize {
+        self.x_dims.iter().product()
+    }
+
+    /// Smallest train bucket with capacity ≥ `n`, or the largest bucket if
+    /// `n` exceeds all capacities (the batch builder then truncates — see
+    /// DESIGN.md on fixed-shape padding).
+    pub fn pick_train_bucket(&self, n: usize) -> (usize, &Path) {
+        for (cap, path) in &self.train_buckets {
+            if *cap >= n {
+                return (*cap, path);
+            }
+        }
+        let (cap, path) = self.train_buckets.last().unwrap();
+        (*cap, path)
+    }
+
+    pub fn eval_bucket(&self) -> (usize, &Path) {
+        let (cap, path) = self.eval_buckets.last().unwrap();
+        (*cap, path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root; artifacts are built by `make`.
+        PathBuf::from("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_both_tasks() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        for task in [TaskKind::Aerofoil, TaskKind::Mnist] {
+            let m = TaskManifest::load(&artifacts_dir(), task).unwrap();
+            assert!(!m.params.is_empty());
+            assert!(!m.train_buckets.is_empty());
+            assert_eq!(m.eval_outputs.len(), 3);
+            assert!(m.init_npz.exists());
+        }
+    }
+
+    #[test]
+    fn mnist_shapes_match_lenet() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = TaskManifest::load(&artifacts_dir(), TaskKind::Mnist).unwrap();
+        assert_eq!(m.x_dims, vec![1, 28, 28]);
+        assert_eq!(m.params.len(), 10);
+        assert_eq!(m.params[0].shape, vec![25, 6]); // conv1 im2col weights
+        let total: usize = m
+            .params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum();
+        assert_eq!(total, 44_426);
+    }
+
+    #[test]
+    fn bucket_selection_policy() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = TaskManifest::load(&artifacts_dir(), TaskKind::Mnist).unwrap();
+        let (small, _) = m.pick_train_bucket(10);
+        assert_eq!(small, 64);
+        let (big, _) = m.pick_train_bucket(100);
+        assert_eq!(big, 256);
+        // Oversized partitions fall back to the largest bucket.
+        let (cap, _) = m.pick_train_bucket(10_000);
+        assert_eq!(cap, 256);
+    }
+
+    #[test]
+    fn missing_task_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let err = TaskManifest::load(&PathBuf::from("/nonexistent"), TaskKind::Mnist);
+        assert!(err.is_err());
+    }
+}

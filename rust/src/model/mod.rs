@@ -1,0 +1,7 @@
+//! Model parameter store and artifact manifest (S11).
+
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{ParamSpec, TaskManifest};
+pub use params::{weighted_average, ModelParams};

@@ -1,0 +1,171 @@
+//! Flat model parameter store (S11).
+//!
+//! All FL aggregation math — FedAvg weighted averaging (eq. 17), EDC
+//! weighting (eq. 20), model caching — operates on [`ModelParams`]: an
+//! ordered list of f32 tensors matching the AOT artifact's parameter
+//! order. The hot loop is `axpy` (scaled accumulate), which the
+//! aggregators call once per contributing model.
+
+/// An ordered set of named f32 tensors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelParams {
+    /// Tensor payloads, artifact order.
+    pub tensors: Vec<Vec<f32>>,
+    /// Logical shapes (same order). Kept for literal construction and
+    /// sanity checks; `tensors[i].len() == shapes[i].iter().product()`.
+    pub shapes: Vec<Vec<usize>>,
+}
+
+impl ModelParams {
+    pub fn new(tensors: Vec<Vec<f32>>, shapes: Vec<Vec<usize>>) -> ModelParams {
+        debug_assert_eq!(tensors.len(), shapes.len());
+        for (t, s) in tensors.iter().zip(shapes.iter()) {
+            debug_assert_eq!(t.len(), s.iter().product::<usize>());
+        }
+        ModelParams { tensors, shapes }
+    }
+
+    /// All-zero parameters with the same structure.
+    pub fn zeros_like(&self) -> ModelParams {
+        ModelParams {
+            tensors: self.tensors.iter().map(|t| vec![0.0; t.len()]).collect(),
+            shapes: self.shapes.clone(),
+        }
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Total scalar count.
+    pub fn n_values(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// `self += a * x` — the aggregation hot loop.
+    pub fn axpy(&mut self, a: f32, x: &ModelParams) {
+        debug_assert_eq!(self.n_tensors(), x.n_tensors());
+        for (dst, src) in self.tensors.iter_mut().zip(x.tensors.iter()) {
+            debug_assert_eq!(dst.len(), src.len());
+            for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                *d += a * s;
+            }
+        }
+    }
+
+    /// `self *= a`.
+    pub fn scale(&mut self, a: f32) {
+        for t in self.tensors.iter_mut() {
+            for v in t.iter_mut() {
+                *v *= a;
+            }
+        }
+    }
+
+    /// L2 distance to another parameter set (diagnostics, tests,
+    /// convergence probes).
+    pub fn l2_distance(&self, other: &ModelParams) -> f64 {
+        let mut acc = 0.0f64;
+        for (a, b) in self.tensors.iter().zip(other.tensors.iter()) {
+            for (&x, &y) in a.iter().zip(b.iter()) {
+                let d = (x - y) as f64;
+                acc += d * d;
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// Max |value| across all tensors (NaN/blow-up guard in tests).
+    pub fn max_abs(&self) -> f32 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.tensors.iter().all(|t| t.iter().all(|v| v.is_finite()))
+    }
+}
+
+/// Weighted average of models: `Σ w_i · m_i / Σ w_i`. Returns `None` when
+/// the inputs are empty or all weights are ~0 (callers then keep the
+/// previous model — the "round produced nothing" case).
+pub fn weighted_average(models: &[(&ModelParams, f64)]) -> Option<ModelParams> {
+    let total: f64 = models.iter().map(|(_, w)| *w).sum();
+    if models.is_empty() || total <= f64::EPSILON {
+        return None;
+    }
+    let mut out = models[0].0.zeros_like();
+    for (m, w) in models {
+        out.axpy((*w / total) as f32, m);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(vals: &[f32]) -> ModelParams {
+        ModelParams::new(vec![vals.to_vec()], vec![vec![vals.len()]])
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = p(&[1.0, 2.0]);
+        let b = p(&[10.0, 20.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.tensors[0], vec![6.0, 12.0]);
+        a.scale(2.0);
+        assert_eq!(a.tensors[0], vec![12.0, 24.0]);
+    }
+
+    #[test]
+    fn weighted_average_normalizes() {
+        let a = p(&[0.0, 0.0]);
+        let b = p(&[4.0, 8.0]);
+        let avg = weighted_average(&[(&a, 1.0), (&b, 3.0)]).unwrap();
+        assert_eq!(avg.tensors[0], vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn weighted_average_empty_or_zero_is_none() {
+        assert!(weighted_average(&[]).is_none());
+        let a = p(&[1.0]);
+        assert!(weighted_average(&[(&a, 0.0)]).is_none());
+    }
+
+    #[test]
+    fn weighted_average_identity_for_single_model() {
+        let a = p(&[1.5, -2.5, 3.0]);
+        let avg = weighted_average(&[(&a, 0.123)]).unwrap();
+        for (x, y) in avg.tensors[0].iter().zip(a.tensors[0].iter()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn l2_distance_and_max_abs() {
+        let a = p(&[0.0, 3.0]);
+        let b = p(&[4.0, 3.0]);
+        assert!((a.l2_distance(&b) - 4.0).abs() < 1e-9);
+        assert_eq!(b.max_abs(), 4.0);
+        assert!(a.is_finite());
+        let bad = p(&[f32::NAN]);
+        assert!(!bad.is_finite());
+    }
+
+    #[test]
+    fn zeros_like_preserves_structure() {
+        let a = ModelParams::new(
+            vec![vec![1.0; 6], vec![2.0; 3]],
+            vec![vec![2, 3], vec![3]],
+        );
+        let z = a.zeros_like();
+        assert_eq!(z.n_tensors(), 2);
+        assert_eq!(z.n_values(), 9);
+        assert!(z.tensors.iter().flatten().all(|&v| v == 0.0));
+        assert_eq!(z.shapes, a.shapes);
+    }
+}

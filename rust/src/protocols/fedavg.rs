@@ -1,0 +1,138 @@
+//! FedAvg baseline (McMahan et al.) — two-layer client/cloud FL.
+//!
+//! Per round: the cloud selects C·n clients uniformly from the whole
+//! fleet, waits for **all** of them (a dropped client never responds, so
+//! any drop-out stalls the round until the response limit T_lim), then
+//! weight-averages the models that did arrive. There is no edge layer, so
+//! no cloud↔edge time is charged (eq. 32 applies only to 3-layer
+//! protocols).
+
+use crate::config::ProtocolKind;
+use crate::model::ModelParams;
+use crate::protocols::{count_from_fraction, Protocol, RoundCtx, RoundRecord};
+use crate::selection::select_clients;
+use crate::Result;
+
+pub struct FedAvg {
+    global: ModelParams,
+}
+
+impl FedAvg {
+    pub fn new(init: ModelParams) -> FedAvg {
+        FedAvg { global: init }
+    }
+}
+
+impl Protocol for FedAvg {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::FedAvg
+    }
+
+    fn run_round(&mut self, t: usize, ctx: &mut RoundCtx) -> Result<RoundRecord> {
+        // --- selection: C·n clients uniformly over the fleet -----------------
+        let n = ctx.topo.n_clients();
+        let want = count_from_fraction(ctx.cfg.c_fraction, n);
+        let all: Vec<usize> = (0..n).collect();
+        let selected = select_clients(&all, want, ctx.rng);
+        let sel_by_region = ctx.region_counts(&selected);
+
+        // --- simulate fates ---------------------------------------------------
+        let fates = ctx.simulate(&selected);
+        let alive = ctx.count_alive(&fates);
+
+        // Round ends when every selected client responded, or at T_lim
+        // (dropped clients have completion = ∞, so one drop ⇒ T_lim).
+        let max_completion = fates
+            .iter()
+            .map(|f| f.completion)
+            .fold(0.0f64, f64::max);
+        let cutoff = max_completion.min(ctx.tm.t_lim);
+        let deadline_hit = max_completion > ctx.tm.t_lim;
+        ctx.charge_energy(&fates, |_| cutoff);
+
+        // --- aggregate what arrived in time ----------------------------------
+        let arrived: Vec<_> = fates
+            .iter()
+            .filter(|f| !f.dropped && f.completion <= cutoff)
+            .collect();
+        let submissions = ctx.count_by_region(&fates, |f| {
+            !f.dropped && f.completion <= cutoff
+        });
+
+        let mut models: Vec<(ModelParams, f64)> = Vec::with_capacity(arrived.len());
+        let mut loss_sum = 0.0;
+        for f in &arrived {
+            let (m, loss) = ctx.train(&self.global, f.client)?;
+            loss_sum += loss;
+            models.push((m, ctx.data.partitions[f.client].len() as f64));
+        }
+        let refs: Vec<(&ModelParams, f64)> =
+            models.iter().map(|(m, d)| (m, *d)).collect();
+        if let Some(w) = crate::aggregation::fedavg(&refs) {
+            self.global = w;
+        }
+
+        Ok(RoundRecord {
+            t,
+            // Two-layer: no edge RTT term.
+            round_len: cutoff,
+            selected: sel_by_region,
+            alive,
+            submissions,
+            energy_j: ctx.energy_j(),
+            deadline_hit,
+            cloud_aggregated: true,
+            mean_local_loss: if arrived.is_empty() {
+                f64::NAN
+            } else {
+                loss_sum / arrived.len() as f64
+            },
+        })
+    }
+
+    fn global_model(&self) -> &ModelParams {
+        &self.global
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::test_support::mock_ctx_parts;
+
+    #[test]
+    fn aggregates_only_survivors_and_waits_tlim_on_dropout() {
+        let (cfg, topo, data, tm, em, mut engine, profiles) =
+            mock_ctx_parts(0.9 /*dropout*/, 12, 3);
+        let mut rng = crate::rng::Rng::new(5);
+        let mut proto = FedAvg::new(engine.init_params());
+        let mut ctx = RoundCtx::new(
+            &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
+        );
+        let rec = proto.run_round(1, &mut ctx).unwrap();
+        // With 90% drop-out a selected set almost surely loses someone ⇒
+        // the round runs to the deadline.
+        assert!(rec.deadline_hit);
+        assert!((rec.round_len - tm.t_lim).abs() < 1e-9);
+        assert!(rec.energy_j > 0.0);
+    }
+
+    #[test]
+    fn reliable_fleet_finishes_before_deadline() {
+        let (cfg, topo, data, tm, em, mut engine, profiles) =
+            mock_ctx_parts(0.0, 12, 3);
+        let mut rng = crate::rng::Rng::new(6);
+        let mut proto = FedAvg::new(engine.init_params());
+        let mut ctx = RoundCtx::new(
+            &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
+        );
+        let rec = proto.run_round(1, &mut ctx).unwrap();
+        assert!(!rec.deadline_hit);
+        assert!(rec.round_len < tm.t_lim);
+        let total_sel: usize = rec.selected.iter().sum();
+        let total_sub: usize = rec.submissions.iter().sum();
+        assert_eq!(total_sel, total_sub); // nobody dropped
+        // Model moved (training happened).
+        assert!(proto.global_model().tensors[0][0] > 0.0);
+    }
+}

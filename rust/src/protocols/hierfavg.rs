@@ -1,0 +1,219 @@
+//! HierFAVG baseline (Liu et al.) — three-layer hierarchical FL.
+//!
+//! Per round, each edge selects C·n_r of its clients and waits for **all**
+//! of them (drop-outs stall the region until T_lim, exactly the coupling
+//! problem the paper criticizes). Edges aggregate every round; the cloud
+//! aggregates the regional models every κ₂ rounds (paper sets κ₂ = 10,
+//! "shown to be an optimal setting in their work") and redistributes the
+//! global model to the edges. Clients always train from their region's
+//! current model.
+
+use crate::config::{ExperimentConfig, ProtocolKind};
+use crate::model::ModelParams;
+use crate::protocols::{count_from_fraction, Protocol, RoundCtx, RoundRecord};
+use crate::selection::select_clients;
+use crate::topology::Topology;
+use crate::Result;
+
+pub struct HierFavg {
+    /// Last cloud-aggregated model — what the cloud evaluates/deploys.
+    global: ModelParams,
+    /// Per-region models (updated every round by edge aggregation).
+    regionals: Vec<ModelParams>,
+    /// |D^r| per region (constant aggregation weights — the paper notes
+    /// HierFAVG uses constant weights, unlike HybridFL's EDC).
+    region_data: Vec<f64>,
+    kappa2: usize,
+}
+
+impl HierFavg {
+    pub fn new(cfg: &ExperimentConfig, topo: &Topology, init: ModelParams) -> HierFavg {
+        HierFavg {
+            regionals: vec![init.clone(); topo.n_regions()],
+            global: init,
+            region_data: Vec::new(), // filled lazily on first round
+            kappa2: cfg.hier_kappa2,
+        }
+    }
+
+    fn ensure_region_data(&mut self, ctx: &RoundCtx) {
+        if self.region_data.is_empty() {
+            self.region_data = ctx
+                .topo
+                .regions
+                .iter()
+                .map(|cs| ctx.data.region_data_size(cs) as f64)
+                .collect();
+        }
+    }
+}
+
+impl Protocol for HierFavg {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::HierFavg
+    }
+
+    fn run_round(&mut self, t: usize, ctx: &mut RoundCtx) -> Result<RoundRecord> {
+        self.ensure_region_data(ctx);
+        let m = ctx.topo.n_regions();
+
+        // --- per-region selection --------------------------------------------
+        let mut selected: Vec<usize> = Vec::new();
+        for r in 0..m {
+            let region = &ctx.topo.regions[r];
+            let want = count_from_fraction(ctx.cfg.c_fraction, region.len());
+            selected.extend(select_clients(region, want, ctx.rng));
+        }
+        let sel_by_region = ctx.region_counts(&selected);
+
+        // --- fates; every edge waits for all its selected clients -------------
+        let fates = ctx.simulate(&selected);
+        let alive = ctx.count_alive(&fates);
+
+        // Synchronous global round: ends when the slowest region is done.
+        let mut cutoff_r = vec![0.0f64; m];
+        for f in &fates {
+            cutoff_r[f.region] = cutoff_r[f.region].max(f.completion);
+        }
+        for c in cutoff_r.iter_mut() {
+            *c = c.min(ctx.tm.t_lim);
+        }
+        let core = cutoff_r.iter().copied().fold(0.0f64, f64::max);
+        let deadline_hit = fates.iter().any(|f| f.completion > ctx.tm.t_lim);
+        {
+            let cr = cutoff_r.clone();
+            ctx.charge_energy(&fates, move |r| cr[r]);
+        }
+
+        // --- train survivors from their regional model; edge aggregation ------
+        let submissions = ctx.count_by_region(&fates, |f| {
+            !f.dropped && f.completion <= cutoff_r[f.region]
+        });
+        let mut loss_sum = 0.0;
+        let mut n_trained = 0usize;
+        for r in 0..m {
+            let members: Vec<_> = fates
+                .iter()
+                .filter(|f| {
+                    f.region == r && !f.dropped && f.completion <= cutoff_r[r]
+                })
+                .collect();
+            if members.is_empty() {
+                continue; // region keeps its previous model
+            }
+            let start = self.regionals[r].clone();
+            let mut models: Vec<(ModelParams, f64)> = Vec::with_capacity(members.len());
+            for f in members {
+                let (w, loss) = ctx.train(&start, f.client)?;
+                loss_sum += loss;
+                n_trained += 1;
+                models.push((w, ctx.data.partitions[f.client].len() as f64));
+            }
+            let refs: Vec<(&ModelParams, f64)> =
+                models.iter().map(|(w, d)| (w, *d)).collect();
+            if let Some(w) = crate::aggregation::fedavg(&refs) {
+                self.regionals[r] = w;
+            }
+        }
+
+        // --- cloud aggregation every κ₂ rounds --------------------------------
+        let cloud_round = t % self.kappa2 == 0;
+        if cloud_round {
+            let refs: Vec<(&ModelParams, f64)> = self
+                .regionals
+                .iter()
+                .zip(self.region_data.iter())
+                .map(|(w, d)| (w, *d))
+                .collect();
+            if let Some(w) = crate::aggregation::fedavg(&refs) {
+                self.global = w;
+            }
+            // Redistribute the global model to the edges.
+            for r in 0..m {
+                self.regionals[r] = self.global.clone();
+            }
+        }
+
+        Ok(RoundRecord {
+            t,
+            // Edge RTT charged on cloud rounds only (model up+down between
+            // cloud and edges); client comm is inside the completions.
+            round_len: core + if cloud_round { ctx.tm.t_c2e2c } else { 0.0 },
+            selected: sel_by_region,
+            alive,
+            submissions,
+            energy_j: ctx.energy_j(),
+            deadline_hit,
+            cloud_aggregated: cloud_round,
+            mean_local_loss: if n_trained == 0 {
+                f64::NAN
+            } else {
+                loss_sum / n_trained as f64
+            },
+        })
+    }
+
+    fn global_model(&self) -> &ModelParams {
+        &self.global
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::test_support::mock_ctx_parts;
+
+    #[test]
+    fn cloud_aggregates_only_every_kappa2_rounds() {
+        let (mut cfg, topo, data, tm, em, mut engine, profiles) =
+            mock_ctx_parts(0.0, 12, 3);
+        cfg.hier_kappa2 = 3;
+        let mut rng = crate::rng::Rng::new(1);
+        let mut proto = HierFavg::new(&cfg, &topo, engine.init_params());
+        let mut cloud_rounds = Vec::new();
+        for t in 1..=6 {
+            let mut ctx = RoundCtx::new(
+                &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
+            );
+            let rec = proto.run_round(t, &mut ctx).unwrap();
+            if rec.cloud_aggregated {
+                cloud_rounds.push(t);
+            }
+        }
+        assert_eq!(cloud_rounds, vec![3, 6]);
+    }
+
+    #[test]
+    fn global_frozen_between_cloud_rounds_but_regionals_move() {
+        let (mut cfg, topo, data, tm, em, mut engine, profiles) =
+            mock_ctx_parts(0.0, 12, 3);
+        cfg.hier_kappa2 = 10;
+        let mut rng = crate::rng::Rng::new(2);
+        let mut proto = HierFavg::new(&cfg, &topo, engine.init_params());
+        let g0 = proto.global_model().clone();
+        for t in 1..=3 {
+            let mut ctx = RoundCtx::new(
+                &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
+            );
+            proto.run_round(t, &mut ctx).unwrap();
+        }
+        // Global untouched before round 10 …
+        assert!(proto.global_model().l2_distance(&g0) < 1e-9);
+        // … while regionals have accumulated training progress.
+        assert!(proto.regionals.iter().any(|r| r.l2_distance(&g0) > 1e-6));
+    }
+
+    #[test]
+    fn dropouts_stall_regions_to_deadline() {
+        let (cfg, topo, data, tm, em, mut engine, profiles) =
+            mock_ctx_parts(0.95, 12, 3);
+        let mut rng = crate::rng::Rng::new(3);
+        let mut proto = HierFavg::new(&cfg, &topo, engine.init_params());
+        let mut ctx = RoundCtx::new(
+            &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
+        );
+        let rec = proto.run_round(1, &mut ctx).unwrap();
+        assert!(rec.deadline_hit);
+        assert!(rec.round_len >= tm.t_lim);
+    }
+}

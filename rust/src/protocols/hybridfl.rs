@@ -1,0 +1,292 @@
+//! HybridFL — the paper's protocol (§III).
+//!
+//! Round anatomy (Fig. 1's eight steps, collapsed to the four that matter
+//! computationally):
+//!
+//! 1. **Regional client selection** (§III.A): each edge r selects
+//!    `C_r(t)·n_r` clients where `C_r(t) = C/θ̂_r` and θ̂_r is the
+//!    LSE-estimated regional slack factor over observable submission
+//!    counts only ([`SlackEstimator`]).
+//! 2. **Local training**: survivors train τ GD epochs from the global
+//!    model w(t−1).
+//! 3. **Quota-triggered regional aggregation** (§III.B): the cloud ends
+//!    the round the moment C·n models have arrived *globally* (or at
+//!    T_lim), then each edge aggregates with the model-cache rule
+//!    (eq. 17) so stale clients contribute the previous regional model.
+//! 4. **Immediate EDC-weighted cloud aggregation** (eqs. 18–20): regional
+//!    models are combined the same round, weighted by effective data
+//!    coverage.
+
+use crate::config::{CacheMode, ExperimentConfig, ProtocolKind};
+use crate::model::ModelParams;
+use crate::protocols::{Protocol, RoundCtx, RoundRecord};
+use crate::selection::slack::{SlackEstimator, SlackState};
+use crate::selection::select_clients;
+use crate::topology::Topology;
+use crate::Result;
+
+pub struct HybridFl {
+    global: ModelParams,
+    /// w^r(t−1) — previous regional models (the cache substrate, eq. 17).
+    regionals: Vec<ModelParams>,
+    /// One slack estimator per region (edge-resident state in the real
+    /// deployment; see `live::edge`).
+    slack: Vec<SlackEstimator>,
+    /// |D^r| per region.
+    region_data: Vec<f64>,
+    cache_mode: CacheMode,
+}
+
+impl HybridFl {
+    pub fn new(cfg: &ExperimentConfig, topo: &Topology, init: ModelParams) -> HybridFl {
+        let slack = (0..topo.n_regions())
+            .map(|r| {
+                SlackEstimator::new(topo.region_size(r), cfg.c_fraction, cfg.theta_init)
+            })
+            .collect();
+        HybridFl {
+            regionals: vec![init.clone(); topo.n_regions()],
+            global: init,
+            slack,
+            region_data: Vec::new(),
+            cache_mode: cfg.cache_mode,
+        }
+    }
+
+    fn ensure_region_data(&mut self, ctx: &RoundCtx) {
+        if self.region_data.is_empty() {
+            self.region_data = ctx
+                .topo
+                .regions
+                .iter()
+                .map(|cs| ctx.data.region_data_size(cs) as f64)
+                .collect();
+        }
+    }
+}
+
+impl Protocol for HybridFl {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::HybridFl
+    }
+
+    fn run_round(&mut self, t: usize, ctx: &mut RoundCtx) -> Result<RoundRecord> {
+        self.ensure_region_data(ctx);
+        let m = ctx.topo.n_regions();
+
+        // --- step 1: slack-modulated regional selection ------------------------
+        let mut selected: Vec<usize> = Vec::new();
+        for r in 0..m {
+            let want = self.slack[r].selection_count();
+            selected.extend(select_clients(&ctx.topo.regions[r], want, ctx.rng));
+        }
+        let sel_by_region = ctx.region_counts(&selected);
+
+        // --- simulate fates ----------------------------------------------------
+        let fates = ctx.simulate(&selected);
+        let alive = ctx.count_alive(&fates);
+
+        // --- quota trigger: the round ends when C·n models arrived globally ----
+        let quota = ctx.cfg.quota();
+        let mut completions: Vec<f64> = fates
+            .iter()
+            .filter(|f| !f.dropped)
+            .map(|f| f.completion)
+            .collect();
+        completions.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (cutoff, quota_met) = if completions.len() >= quota
+            && completions[quota - 1] <= ctx.tm.t_lim
+        {
+            (completions[quota - 1], true)
+        } else {
+            (ctx.tm.t_lim, false)
+        };
+        // The aggregation signal stops straggling clients at the cutoff —
+        // the quota trigger's energy saving (see RoundCtx::charge_energy).
+        ctx.charge_energy(&fates, |_| cutoff);
+
+        // --- train the in-time survivors from the global model -----------------
+        // S_r(t): alive with completion ≤ cutoff.
+        let submissions = ctx.count_by_region(&fates, |f| {
+            !f.dropped && f.completion <= cutoff
+        });
+        let mut loss_sum = 0.0;
+        let mut n_trained = 0usize;
+        let mut regional_models: Vec<(ModelParams, f64)> = Vec::with_capacity(m);
+        for r in 0..m {
+            let members: Vec<_> = fates
+                .iter()
+                .filter(|f| f.region == r && !f.dropped && f.completion <= cutoff)
+                .collect();
+            let mut models: Vec<(ModelParams, f64)> = Vec::with_capacity(members.len());
+            let mut edc_r = 0.0f64;
+            for f in &members {
+                let (w, loss) = ctx.train(&self.global, f.client)?;
+                loss_sum += loss;
+                n_trained += 1;
+                let d = ctx.data.partitions[f.client].len() as f64;
+                edc_r += d;
+                models.push((w, d));
+            }
+            // Regional aggregation: eq. 17 cache rule, or the fresh-only
+            // ablation (see CacheMode docs).
+            let refs: Vec<(&ModelParams, f64)> =
+                models.iter().map(|(w, d)| (w, *d)).collect();
+            let w_r = match self.cache_mode {
+                CacheMode::Regional => crate::aggregation::regional_with_cache(
+                    &refs,
+                    self.region_data[r],
+                    &self.regionals[r],
+                ),
+                CacheMode::Fresh => crate::aggregation::fedavg(&refs)
+                    .unwrap_or_else(|| self.regionals[r].clone()),
+            };
+            regional_models.push((w_r, edc_r));
+        }
+
+        // --- immediate EDC-weighted cloud aggregation (eqs. 18–20) -------------
+        let refs: Vec<(&ModelParams, f64)> = regional_models
+            .iter()
+            .map(|(w, edc)| (w, *edc))
+            .collect();
+        if let Some(w) = crate::aggregation::edc_cloud(&refs) {
+            self.global = w;
+        }
+        // The regional cache advances regardless (w^r(t) is defined by
+        // eq. 17 whether or not the cloud used it).
+        for (r, (w_r, _)) in regional_models.into_iter().enumerate() {
+            self.regionals[r] = w_r;
+        }
+
+        // --- slack update from the observable submission counts ---------------
+        for r in 0..m {
+            self.slack[r].observe(submissions[r], quota_met);
+        }
+
+        Ok(RoundRecord {
+            t,
+            // Three-layer: edge↔cloud exchange happens every round.
+            round_len: cutoff + ctx.tm.t_c2e2c,
+            selected: sel_by_region,
+            alive,
+            submissions,
+            energy_j: ctx.energy_j(),
+            deadline_hit: !quota_met,
+            cloud_aggregated: true,
+            mean_local_loss: if n_trained == 0 {
+                f64::NAN
+            } else {
+                loss_sum / n_trained as f64
+            },
+        })
+    }
+
+    fn global_model(&self) -> &ModelParams {
+        &self.global
+    }
+
+    fn slack_states(&self) -> Option<Vec<SlackState>> {
+        Some(
+            self.slack
+                .iter()
+                .map(|s| {
+                    s.last_state().unwrap_or(SlackState {
+                        theta: s.theta(),
+                        c_r: s.c_r(),
+                        q_r: 0.0,
+                        submissions: 0,
+                    })
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::test_support::mock_ctx_parts;
+
+    fn run_rounds(
+        dropout: f64,
+        n: usize,
+        m: usize,
+        rounds: usize,
+        seed: u64,
+    ) -> (HybridFl, Vec<RoundRecord>) {
+        let (cfg, topo, data, tm, em, mut engine, profiles) =
+            mock_ctx_parts(dropout, n, m);
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut proto = HybridFl::new(&cfg, &topo, engine.init_params());
+        let mut recs = Vec::new();
+        for t in 1..=rounds {
+            let mut ctx = RoundCtx::new(
+                &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
+            );
+            recs.push(proto.run_round(t, &mut ctx).unwrap());
+        }
+        (proto, recs)
+    }
+
+    #[test]
+    fn quota_ends_round_before_deadline_when_reliable() {
+        let (_, recs) = run_rounds(0.0, 20, 2, 5, 1);
+        for rec in &recs {
+            assert!(!rec.deadline_hit);
+            let subs: usize = rec.submissions.iter().sum();
+            assert_eq!(subs, 6); // quota = 0.3 * 20
+        }
+    }
+
+    /// The §III.A claim: slack modulation drives the per-region alive count
+    /// toward C·n_r despite heavy unreliability.
+    #[test]
+    fn slack_modulation_compensates_dropout() {
+        let (proto, recs) = run_rounds(0.5, 40, 2, 120, 2);
+        // After convergence, mean |X_r|/n_r should be near C = 0.3 and
+        // selections should exceed quota to compensate the 50% drop rate.
+        let tail = &recs[60..];
+        let mean_alive_frac: f64 = tail
+            .iter()
+            .map(|r| r.alive.iter().sum::<usize>() as f64 / 40.0)
+            .sum::<f64>()
+            / tail.len() as f64;
+        assert!(
+            (mean_alive_frac - 0.3).abs() < 0.12,
+            "alive fraction {mean_alive_frac} should hover near C=0.3"
+        );
+        // θ̂ must have moved off its 0.5 init toward ~P(1 - dr) territory.
+        let states = proto.slack_states().unwrap();
+        for s in states {
+            assert!(s.theta < 0.75, "theta should reflect unreliability: {s:?}");
+        }
+    }
+
+    #[test]
+    fn unreachable_quota_degrades_to_deadline() {
+        // C = 0.3 but 95% drop-out: alive ≈ 5% of selections, far below
+        // quota even with C_r at its 1.0 clamp ⇒ rounds run to T_lim (the
+        // paper's "interesting result" at E[dr]=0.6, C=0.5).
+        let (_, recs) = run_rounds(0.95, 20, 2, 30, 3);
+        let deadline_rounds = recs.iter().filter(|r| r.deadline_hit).count();
+        assert!(deadline_rounds > 25, "{deadline_rounds}");
+    }
+
+    #[test]
+    fn global_model_advances_every_round() {
+        let (proto, recs) = run_rounds(0.2, 20, 2, 10, 4);
+        assert!(recs.iter().all(|r| r.cloud_aggregated));
+        assert!(proto.global_model().tensors[0][0] > 0.0);
+    }
+
+    #[test]
+    fn slack_states_exposed_for_fig2() {
+        let (proto, _) = run_rounds(0.3, 20, 2, 5, 5);
+        let states = proto.slack_states().unwrap();
+        assert_eq!(states.len(), 2);
+        for s in states {
+            assert!(s.theta > 0.0 && s.theta <= 1.0);
+            assert!(s.c_r >= 0.3 - 1e-12);
+        }
+    }
+}

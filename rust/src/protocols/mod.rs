@@ -1,0 +1,262 @@
+//! FL control protocols (S1–S3): the paper's HybridFL and the two
+//! baselines it is evaluated against.
+//!
+//! Protocols orchestrate a federated round through a [`RoundCtx`], which
+//! exposes exactly two capabilities:
+//!
+//! * `simulate(selected)` — the MEC simulator decides each selected
+//!   client's fate (drop-out draw + completion time). Protocols receive
+//!   [`ClientFate`]s — *who finished when* — never the underlying device
+//!   profiles, mirroring the paper's reliability-agnostic constraint.
+//! * `train(start, client)` — run the client's local GD epochs on the
+//!   compute engine and get the updated model.
+//!
+//! The returned [`RoundRecord`] carries everything the metrics layer and
+//! the experiment harness need (round length, per-region submission and
+//! aliveness counts, energy).
+
+pub mod fedavg;
+pub mod hierfavg;
+pub mod hybridfl;
+
+pub use fedavg::FedAvg;
+pub use hierfavg::HierFavg;
+pub use hybridfl::HybridFl;
+
+use crate::config::{ExperimentConfig, ProtocolKind};
+use crate::data::FederatedData;
+use crate::devices::ClientProfile;
+use crate::energy::EnergyModel;
+use crate::model::ModelParams;
+use crate::rng::Rng;
+use crate::runtime::Engine;
+use crate::selection::slack::SlackState;
+use crate::timing::TimingModel;
+use crate::topology::Topology;
+use crate::Result;
+
+/// A selected client's simulated fate in one round.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientFate {
+    pub client: usize,
+    pub region: usize,
+    /// True if the client dropped/opted out this round (never responds).
+    pub dropped: bool,
+    /// Completion time from round start (comm + training) when not
+    /// dropped; `f64::INFINITY` when dropped.
+    pub completion: f64,
+}
+
+/// What a protocol reports after running one round.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub t: usize,
+    /// T_round (eq. 31), seconds of simulated time.
+    pub round_len: f64,
+    /// |U_r(t)| — clients selected, per region.
+    pub selected: Vec<usize>,
+    /// |X_r(t)| — selected clients that did not drop out, per region
+    /// (simulator ground truth; protocols never see this, it is recorded
+    /// by the context during `simulate`).
+    pub alive: Vec<usize>,
+    /// |S_r(t)| — models collected in time, per region.
+    pub submissions: Vec<usize>,
+    /// Total device energy spent this round (Joules).
+    pub energy_j: f64,
+    /// Whether the quota / all-responses condition was met before T_lim.
+    pub deadline_hit: bool,
+    /// Whether this round updated the cloud's global model.
+    pub cloud_aggregated: bool,
+    /// Mean local training loss across this round's aggregated models
+    /// (diagnostic).
+    pub mean_local_loss: f64,
+}
+
+/// Shared services for one round. Constructed fresh each round by the
+/// run loop in `sim::FlRun`.
+pub struct RoundCtx<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub topo: &'a Topology,
+    pub data: &'a FederatedData,
+    pub tm: &'a TimingModel,
+    pub em: &'a EnergyModel,
+    pub engine: &'a mut dyn Engine,
+    pub rng: &'a mut Rng,
+    /// Device ground truth — private to the simulator; protocols only
+    /// access it through `simulate()`.
+    profiles: &'a [ClientProfile],
+    /// Energy accumulated by `simulate()` for this round.
+    energy_j: f64,
+}
+
+impl<'a> RoundCtx<'a> {
+    pub fn new(
+        cfg: &'a ExperimentConfig,
+        topo: &'a Topology,
+        data: &'a FederatedData,
+        tm: &'a TimingModel,
+        em: &'a EnergyModel,
+        engine: &'a mut dyn Engine,
+        rng: &'a mut Rng,
+        profiles: &'a [ClientProfile],
+    ) -> RoundCtx<'a> {
+        RoundCtx {
+            cfg,
+            topo,
+            data,
+            tm,
+            em,
+            engine,
+            rng,
+            profiles,
+            energy_j: 0.0,
+        }
+    }
+
+    /// Simulate the fates of the selected clients: independent drop-out
+    /// draw per client (dr_k) and completion time from the timing model.
+    /// Energy is charged separately once the protocol has determined the
+    /// round cutoff — see [`Self::charge_energy`].
+    pub fn simulate(&mut self, selected: &[usize]) -> Vec<ClientFate> {
+        selected
+            .iter()
+            .map(|&k| {
+                let p = &self.profiles[k];
+                let dropped = self.rng.bernoulli(p.dropout_p);
+                let psize = self.data.partitions[k].len() as f64;
+                let completion = if dropped {
+                    f64::INFINITY
+                } else {
+                    self.tm.completion(p, psize)
+                };
+                ClientFate {
+                    client: k,
+                    region: self.topo.region_of[k],
+                    dropped,
+                    completion,
+                }
+            })
+            .collect()
+    }
+
+    /// Charge device energy for a round that ended at `cutoff(region)`:
+    ///
+    /// * dropped clients burn half their training energy (abort mid-epoch,
+    ///   no upload);
+    /// * clients finishing before the cutoff burn the full eq. 35;
+    /// * stragglers are *stopped by the round-end signal* (the edge stops
+    ///   waiting and tells them to abandon the round), burning only the
+    ///   `cutoff/completion` fraction — this is precisely where the
+    ///   quota-triggered protocols save device energy relative to the
+    ///   deadline-bound baselines.
+    pub fn charge_energy(
+        &mut self,
+        fates: &[ClientFate],
+        cutoff: impl Fn(usize) -> f64,
+    ) {
+        for f in fates {
+            let p = &self.profiles[f.client];
+            let psize = self.data.partitions[f.client].len() as f64;
+            let spend = if f.dropped {
+                self.em.aborted_round(p, self.tm, psize).total_j()
+            } else {
+                let full = self.em.full_round(p, self.tm, psize).total_j();
+                let cut = cutoff(f.region);
+                if f.completion <= cut {
+                    full
+                } else {
+                    full * (cut / f.completion).clamp(0.0, 1.0)
+                }
+            };
+            self.energy_j += spend;
+        }
+    }
+
+    /// Local training for one client from the given starting model.
+    pub fn train(&mut self, start: &ModelParams, client: usize) -> Result<(ModelParams, f64)> {
+        let out = self.engine.train_local(
+            start,
+            &self.data.partitions[client],
+            self.cfg.local_epochs,
+            self.cfg.lr as f32,
+        )?;
+        Ok((out.params, out.loss))
+    }
+
+    /// Energy spent so far this round (Joules).
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    /// Per-region |X_r| from a fate list (ground-truth bookkeeping for the
+    /// record; computed by the context, not by protocol logic).
+    pub fn count_alive(&self, fates: &[ClientFate]) -> Vec<usize> {
+        let mut alive = vec![0usize; self.topo.n_regions()];
+        for f in fates {
+            if !f.dropped {
+                alive[f.region] += 1;
+            }
+        }
+        alive
+    }
+
+    /// Per-region histogram of a client list (e.g. |U_r| from a selection).
+    pub fn region_counts(&self, clients: &[usize]) -> Vec<usize> {
+        let mut out = vec![0usize; self.topo.n_regions()];
+        for &k in clients {
+            out[self.topo.region_of[k]] += 1;
+        }
+        out
+    }
+
+    /// Per-region count of fates matching a predicate.
+    pub fn count_by_region(
+        &self,
+        fates: &[ClientFate],
+        pred: impl Fn(&ClientFate) -> bool,
+    ) -> Vec<usize> {
+        let mut out = vec![0usize; self.topo.n_regions()];
+        for f in fates {
+            if pred(f) {
+                out[f.region] += 1;
+            }
+        }
+        out
+    }
+}
+
+/// The protocol interface the run loop drives.
+pub trait Protocol {
+    fn kind(&self) -> ProtocolKind;
+
+    /// Execute round `t` (1-based) end to end: selection, simulated
+    /// client fates, local training of the useful survivors, aggregation.
+    fn run_round(&mut self, t: usize, ctx: &mut RoundCtx) -> Result<RoundRecord>;
+
+    /// The model the cloud would currently deploy / evaluate.
+    fn global_model(&self) -> &ModelParams;
+
+    /// HybridFL's per-region slack telemetry (None for the baselines).
+    fn slack_states(&self) -> Option<Vec<SlackState>> {
+        None
+    }
+}
+
+/// Instantiate the configured protocol.
+pub fn build_protocol(
+    cfg: &ExperimentConfig,
+    topo: &Topology,
+    init: ModelParams,
+) -> Box<dyn Protocol> {
+    match cfg.protocol {
+        ProtocolKind::FedAvg => Box::new(FedAvg::new(init)),
+        ProtocolKind::HierFavg => Box::new(HierFavg::new(cfg, topo, init)),
+        ProtocolKind::HybridFl => Box::new(HybridFl::new(cfg, topo, init)),
+    }
+}
+
+/// Shared helper: round a fractional client count to a concrete selection
+/// size in [1, n].
+pub(crate) fn count_from_fraction(fraction: f64, n: usize) -> usize {
+    ((fraction * n as f64).round() as usize).clamp(1, n)
+}

@@ -1,0 +1,106 @@
+//! Padded fixed-shape batch construction.
+//!
+//! The AOT train/eval graphs are static-shaped: capacity-P inputs plus a
+//! {0,1} mask (see DESIGN.md §Key-design-decisions). This module turns a
+//! client's partition (index list into the training corpus) or an eval
+//! chunk into `(x, y, mask)` buffers of exactly the bucket capacity.
+
+use crate::data::Dataset;
+
+/// A padded training/eval batch matching one artifact bucket.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub mask: Vec<f32>,
+    /// The bucket capacity P (rows in x/y/mask).
+    pub capacity: usize,
+    /// Number of real (unmasked) samples.
+    pub n_real: usize,
+}
+
+/// Build a padded batch for `indices` of `data` at `capacity`. If the
+/// partition exceeds the capacity the first `capacity` samples are used
+/// (the bucket picker only lets this happen when the partition exceeds the
+/// largest compiled bucket).
+pub fn build(data: &Dataset, indices: &[usize], capacity: usize) -> Batch {
+    let f = data.feat_len();
+    let n_real = indices.len().min(capacity);
+    let mut x = vec![0.0f32; capacity * f];
+    let mut y = vec![0.0f32; capacity];
+    let mut mask = vec![0.0f32; capacity];
+    for (row, &i) in indices.iter().take(n_real).enumerate() {
+        x[row * f..(row + 1) * f].copy_from_slice(data.row(i));
+        y[row] = data.y[i];
+        mask[row] = 1.0;
+    }
+    Batch {
+        x,
+        y,
+        mask,
+        capacity,
+        n_real,
+    }
+}
+
+/// Iterate a dataset in padded chunks of `capacity` (evaluation path).
+pub fn chunks(data: &Dataset, capacity: usize) -> impl Iterator<Item = Batch> + '_ {
+    let n = data.n;
+    (0..n.div_ceil(capacity)).map(move |c| {
+        let lo = c * capacity;
+        let hi = ((c + 1) * capacity).min(n);
+        let indices: Vec<usize> = (lo..hi).collect();
+        build(data, &indices, capacity)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(n: usize) -> Dataset {
+        Dataset {
+            x: (0..n * 2).map(|v| v as f32).collect(),
+            y: (0..n).map(|v| v as f32 * 10.0).collect(),
+            feature_dims: vec![2],
+            n,
+        }
+    }
+
+    #[test]
+    fn pads_and_masks() {
+        let d = data(3);
+        let b = build(&d, &[2, 0], 4);
+        assert_eq!(b.capacity, 4);
+        assert_eq!(b.n_real, 2);
+        assert_eq!(b.mask, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(&b.x[0..2], &[4.0, 5.0]); // sample 2
+        assert_eq!(&b.x[2..4], &[0.0, 1.0]); // sample 0
+        assert_eq!(&b.x[4..], &[0.0, 0.0, 0.0, 0.0]); // padding zeroed
+        assert_eq!(b.y[0], 20.0);
+        assert_eq!(b.y[2], 0.0);
+    }
+
+    #[test]
+    fn truncates_oversized_partitions() {
+        let d = data(10);
+        let idx: Vec<usize> = (0..10).collect();
+        let b = build(&d, &idx, 4);
+        assert_eq!(b.n_real, 4);
+        assert_eq!(b.mask.iter().sum::<f32>(), 4.0);
+    }
+
+    #[test]
+    fn chunks_cover_dataset() {
+        let d = data(10);
+        let cs: Vec<Batch> = chunks(&d, 4).collect();
+        assert_eq!(cs.len(), 3);
+        assert_eq!(cs[0].n_real, 4);
+        assert_eq!(cs[1].n_real, 4);
+        assert_eq!(cs[2].n_real, 2);
+        let total: f32 = cs.iter().map(|b| b.mask.iter().sum::<f32>()).sum();
+        assert_eq!(total, 10.0);
+        // Last chunk's first row is sample 8.
+        assert_eq!(cs[2].y[0], 80.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Analytic mock engine — protocol dynamics without real training.
+//!
+//! Used by the Fig. 2 experiment (which studies only the slack-factor /
+//! selection dynamics), by property tests that need thousands of rounds,
+//! and by smoke runs. The "model" is a 2-scalar parameter vector:
+//!
+//! * `progress` — accumulated effective training (epochs × data fraction).
+//!   Local training adds to it; aggregation (weighted averaging of
+//!   [`ModelParams`]) mixes it exactly the way real weights mix, so the
+//!   caching/EDC/selection logic is exercised unchanged.
+//! * `noise` — a stand-in weight that drifts, giving `l2_distance` a
+//!   nonzero value for diagnostics.
+//!
+//! Accuracy follows a saturating curve `acc_max · (1 − exp(−progress/k))`,
+//! qualitatively matching an FL loss curve (fast early gains, plateau).
+
+use std::sync::Arc;
+
+use crate::config::{ExperimentConfig, TaskKind};
+use crate::data::FederatedData;
+use crate::model::ModelParams;
+use crate::runtime::{Engine, EvalResult, TrainOutcome};
+use crate::Result;
+
+pub struct MockEngine {
+    data: Arc<FederatedData>,
+    mean_partition: f64,
+    /// Accuracy plateau (task-flavored: ≈0.73 regression score for
+    /// Aerofoil, ≈0.97 classification accuracy for MNIST).
+    acc_max: f64,
+    /// Progress scale of the saturating curve.
+    k: f64,
+    tau_ref: f64,
+}
+
+impl MockEngine {
+    pub fn new(cfg: &ExperimentConfig, data: Arc<FederatedData>) -> MockEngine {
+        MockEngine {
+            data,
+            mean_partition: cfg.mean_partition(),
+            acc_max: match cfg.task {
+                TaskKind::Aerofoil => 0.73,
+                TaskKind::Mnist => 0.97,
+            },
+            k: 25.0,
+            tau_ref: cfg.local_epochs as f64,
+        }
+    }
+
+    fn accuracy(&self, progress: f64) -> f64 {
+        self.acc_max * (1.0 - (-progress.max(0.0) / self.k).exp())
+    }
+}
+
+impl Engine for MockEngine {
+    fn init_params(&self) -> ModelParams {
+        ModelParams::new(vec![vec![0.0, 0.0]], vec![vec![2]])
+    }
+
+    fn train_local(
+        &mut self,
+        start: &ModelParams,
+        indices: &[usize],
+        epochs: usize,
+        lr: f32,
+    ) -> Result<TrainOutcome> {
+        let mut params = start.clone();
+        // Effective work: epochs weighted by how much data the client holds
+        // relative to the fleet average (a big-partition client moves the
+        // model more, mirroring FedAvg weighting intuition).
+        let data_frac = indices.len() as f64 / self.mean_partition.max(1.0);
+        let gain = (epochs as f64 / self.tau_ref) * data_frac * (lr as f64 / lr.max(1e-9) as f64);
+        params.tensors[0][0] += gain as f32;
+        params.tensors[0][1] += 0.01 * gain as f32;
+        let progress = params.tensors[0][0] as f64;
+        let loss = 1.0 / (1.0 + progress); // monotone-decreasing proxy
+        Ok(TrainOutcome { params, loss })
+    }
+
+    fn evaluate(&mut self, params: &ModelParams) -> Result<EvalResult> {
+        let progress = params.tensors[0][0] as f64;
+        let acc = self.accuracy(progress);
+        Ok(EvalResult {
+            loss: 1.0 / (1.0 + progress),
+            accuracy: acc,
+            n: self.data.test.n as f64,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn engine() -> MockEngine {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.dataset_size = 200;
+        cfg.eval_size = 50;
+        cfg.n_clients = 4;
+        let data = Arc::new(crate::data::build(&cfg, &mut Rng::new(1)));
+        MockEngine::new(&cfg, data)
+    }
+
+    #[test]
+    fn training_increases_accuracy_monotonically() {
+        let mut eng = engine();
+        let mut w = eng.init_params();
+        let mut prev = eng.evaluate(&w).unwrap().accuracy;
+        for _ in 0..10 {
+            w = eng.train_local(&w, &(0..100).collect::<Vec<_>>(), 5, 1e-3).unwrap().params;
+            let acc = eng.evaluate(&w).unwrap().accuracy;
+            assert!(acc > prev);
+            prev = acc;
+        }
+    }
+
+    #[test]
+    fn accuracy_saturates_below_max() {
+        let mut eng = engine();
+        let mut w = eng.init_params();
+        w.tensors[0][0] = 1e6;
+        let r = eng.evaluate(&w).unwrap();
+        assert!(r.accuracy <= 0.73 + 1e-9);
+        assert!(r.accuracy > 0.72);
+    }
+
+    #[test]
+    fn aggregation_mixes_progress_like_weights() {
+        let mut eng = engine();
+        let w0 = eng.init_params();
+        let idx: Vec<usize> = (0..100).collect();
+        let fast = eng.train_local(&w0, &idx, 10, 1e-3).unwrap().params;
+        let avg =
+            crate::model::weighted_average(&[(&w0, 0.5), (&fast, 0.5)]).unwrap();
+        let p = avg.tensors[0][0];
+        assert!(p > 0.0 && p < fast.tensors[0][0]);
+    }
+
+    #[test]
+    fn bigger_partitions_move_faster() {
+        let mut eng = engine();
+        let w0 = eng.init_params();
+        let small = eng.train_local(&w0, &[0, 1], 5, 1e-3).unwrap().params;
+        let big = eng.train_local(&w0, &(0..100).collect::<Vec<_>>(), 5, 1e-3).unwrap().params;
+        assert!(big.tensors[0][0] > small.tensors[0][0]);
+    }
+}

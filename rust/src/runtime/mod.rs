@@ -1,0 +1,77 @@
+//! Compute runtime (S10): executes local training and global evaluation.
+//!
+//! Two implementations of the [`Engine`] trait:
+//!
+//! * [`pjrt::PjrtEngine`] — the real thing: loads the AOT HLO-text
+//!   artifacts, compiles them once on the PJRT CPU client, and executes
+//!   train/eval calls from the coordinator hot path. Python is never
+//!   involved.
+//! * [`mock::MockEngine`] — an analytic learning-curve proxy for
+//!   protocol-dynamics experiments (Fig. 2), property tests and fast smoke
+//!   runs. Same trait, no artifacts required.
+
+pub mod batch;
+pub mod mock;
+pub mod pjrt;
+
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::data::FederatedData;
+use crate::model::ModelParams;
+use crate::Result;
+
+/// Global-model evaluation result on the held-out set.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalResult {
+    /// Task loss (MSE for Aerofoil, mean NLL for MNIST).
+    pub loss: f64,
+    /// Task accuracy: classification accuracy for MNIST; the bounded
+    /// regression score `1 − MAE/MAD` for Aerofoil (paper reports Aerofoil
+    /// "accuracy" on the same ~0.73 scale).
+    pub accuracy: f64,
+    /// Number of evaluated samples.
+    pub n: f64,
+}
+
+/// Outcome of one client's local training.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub params: ModelParams,
+    /// Training loss before the final epoch's step (the paper logs local
+    /// loss for diagnostics only).
+    pub loss: f64,
+}
+
+/// The compute interface the coordinator drives. One engine instance per
+/// run; implementations may cache compiled executables and device buffers.
+pub trait Engine {
+    /// Initial global model w(0).
+    fn init_params(&self) -> ModelParams;
+
+    /// Run `epochs` full-batch GD epochs for one client, starting from
+    /// `start`, on the samples `indices` of the training corpus.
+    fn train_local(
+        &mut self,
+        start: &ModelParams,
+        indices: &[usize],
+        epochs: usize,
+        lr: f32,
+    ) -> Result<TrainOutcome>;
+
+    /// Evaluate a model on the held-out test set.
+    fn evaluate(&mut self, params: &ModelParams) -> Result<EvalResult>;
+
+    /// Engine label for logs/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Construct the engine selected by the config. The federated data is
+/// shared with the engine so batches can be built on demand.
+pub fn build_engine(
+    cfg: &ExperimentConfig,
+    data: std::sync::Arc<FederatedData>,
+) -> Result<Box<dyn Engine>> {
+    match cfg.engine {
+        EngineKind::Pjrt => Ok(Box::new(pjrt::PjrtEngine::new(cfg, data)?)),
+        EngineKind::Mock => Ok(Box::new(mock::MockEngine::new(cfg, data))),
+    }
+}

@@ -1,0 +1,44 @@
+//! Client selection (S1, paper §III.A): regional slack factors and the
+//! probabilistic selection-proportion estimator.
+
+pub mod slack;
+
+pub use slack::SlackEstimator;
+
+use crate::rng::Rng;
+
+/// Uniformly select `count` clients (without replacement) from a region's
+/// client list — step 1 of every round, for every protocol.
+pub fn select_clients(region_clients: &[usize], count: usize, rng: &mut Rng) -> Vec<usize> {
+    rng.sample_indices(region_clients.len(), count)
+        .into_iter()
+        .map(|i| region_clients[i])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_from_region_without_replacement() {
+        let clients = vec![10, 11, 12, 13, 14];
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let sel = select_clients(&clients, 3, &mut rng);
+            assert_eq!(sel.len(), 3);
+            let mut s = sel.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 3);
+            assert!(sel.iter().all(|c| clients.contains(c)));
+        }
+    }
+
+    #[test]
+    fn count_capped_at_region_size() {
+        let clients = vec![1, 2, 3];
+        let mut rng = Rng::new(1);
+        assert_eq!(select_clients(&clients, 10, &mut rng).len(), 3);
+    }
+}

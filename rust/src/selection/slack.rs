@@ -1,0 +1,277 @@
+//! Regional slack factor estimation — the paper's core §III.A mechanism.
+//!
+//! Each edge node (region) r keeps one [`SlackEstimator`]. At the start of
+//! round t it yields the selection proportion
+//!
+//! ```text
+//!     C_r(t) = C / θ̂_r(T)                                  (eq. 6)
+//! ```
+//!
+//! where the slack factor θ̂ is fitted by least squares over the history of
+//! *observable* quantities only (eq. 15):
+//!
+//! ```text
+//!     θ̂_r(T) = (1/n_r) · Σᵢ C_r(i)·q_r(i)·|S_r(i)|  /  Σᵢ (C_r(i)·q_r(i))²
+//! ```
+//!
+//! with `q_r(i) = |S_r(i)| / (C·n_r)` (eq. 12). `|S_r(i)|` — how many
+//! models edge r collected in round i — is the **only** client-derived
+//! input; the estimator never sees client identities, drop-out
+//! probabilities, or aliveness, which is exactly the paper's
+//! reliability-agnostic constraint (enforced here by the type signature:
+//! `observe(submissions, quota_censored)`).
+//!
+//! ## Deviation from the literal equations (documented in DESIGN.md)
+//!
+//! Substituting eq. 12 into eq. 14 makes the regression degenerate: every
+//! sample satisfies `y_i/x_i = C/C_r(i)` *identically* (both sides are
+//! proportional to |S_r(i)|), so the LSE returns a weighted mean of the θ̂
+//! values already used and the estimate can never leave its
+//! initialization. The paper's own Fig. 2, however, shows θ̂ converging
+//! near the regions' true reliability. We therefore split q_r by an
+//! *observable* round attribute the cloud's aggregation signal already
+//! carries — whether the round ended by quota or by deadline:
+//!
+//! * **Deadline round** (quota not met): every alive client had the full
+//!   T_lim to submit, so the censoring factor q*_r = 1 by its definition
+//!   (eq. 8) and `|S_r|/(C_r·n_r)` is an unbiased sample of θ_r. We set
+//!   q̂ = 1.
+//! * **Quota round** (censored): we keep eq. 12, clamped to ≤ 1 (q* is a
+//!   fraction by definition).
+//!
+//! The resulting closed loop is self-correcting: an over-estimated θ̂
+//! under-selects, misses the quota, produces deadline rounds whose
+//! unbiased samples pull θ̂ down; over-delivery in quota rounds
+//! (|S_r| > C·n_r) pushes θ̂ up. Equilibrium sits near the region's true
+//! no-abort probability with E[|X_r|] ≈ C·n_r — exactly the paper's
+//! selection target (eq. 1) and its Fig. 2 traces.
+//!
+//! The LSE numerator/denominator are kept as running sums, so each round
+//! costs O(1) regardless of history length.
+
+/// Public per-round snapshot (Fig. 2 traces).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlackState {
+    /// θ̂_r used for this round's selection.
+    pub theta: f64,
+    /// C_r(t) — the selection proportion actually applied.
+    pub c_r: f64,
+    /// q_r(t) observed at the end of the round (eq. 12).
+    pub q_r: f64,
+    /// |S_r(t)| observed at the end of the round.
+    pub submissions: usize,
+}
+
+/// θ̂ is clamped into this range: a zero estimate would explode C_r; above
+/// 1.0 is meaningless (cannot be more reliable than always-alive).
+const THETA_MIN: f64 = 0.05;
+const THETA_MAX: f64 = 1.0;
+
+#[derive(Clone, Debug)]
+pub struct SlackEstimator {
+    /// n_r — region population.
+    n_r: usize,
+    /// C — global desired proportion (set by the cloud).
+    c: f64,
+    /// Running Σ C_r(i)·q_r(i)·|S_r(i)|.
+    num: f64,
+    /// Running Σ (C_r(i)·q_r(i))².
+    den: f64,
+    /// θ̂ in effect for the upcoming round.
+    theta: f64,
+    /// C_r in effect for the upcoming round.
+    c_r: f64,
+    /// Last completed round's snapshot.
+    last: Option<SlackState>,
+    rounds_observed: usize,
+}
+
+impl SlackEstimator {
+    /// `theta_init` seeds round 1 (paper uses 0.5); C_r(1) = C/θ_init.
+    pub fn new(n_r: usize, c: f64, theta_init: f64) -> SlackEstimator {
+        let theta = theta_init.clamp(THETA_MIN, THETA_MAX);
+        SlackEstimator {
+            n_r,
+            c,
+            num: 0.0,
+            den: 0.0,
+            theta,
+            c_r: (c / theta).clamp(c, 1.0),
+            last: None,
+            rounds_observed: 0,
+        }
+    }
+
+    /// C_r(t) for the upcoming round (eq. 6 / eq. 16), clamped into
+    /// [C, 1]: a region can never select more than all of its clients, and
+    /// selecting fewer than C·n_r could not possibly meet its share.
+    pub fn c_r(&self) -> f64 {
+        self.c_r
+    }
+
+    /// Number of clients to select: |U_r(t)| = C_r(t)·n_r, at least one.
+    pub fn selection_count(&self) -> usize {
+        ((self.c_r * self.n_r as f64).round() as usize)
+            .clamp(1, self.n_r)
+    }
+
+    /// θ̂_r currently in effect.
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// End-of-round observation: |S_r(t)| — the number of models edge r
+    /// collected before the cloud's aggregation signal — plus whether the
+    /// round ended by quota (censored) or by deadline (uncensored). Both
+    /// are cloud/edge-observable; no client state is probed. Updates the
+    /// LSE sums and re-derives θ̂ and C_r for the next round.
+    pub fn observe(&mut self, submissions: usize, quota_censored: bool) {
+        let s = submissions as f64;
+        // eq. 12 (clamped) in censored rounds; q* = 1 by definition in
+        // deadline rounds — see the module docs on the degeneracy fix.
+        let q = if quota_censored {
+            (s / (self.c * self.n_r as f64)).min(1.0)
+        } else {
+            1.0
+        };
+        let cq = self.c_r * q;
+        self.num += cq * s;
+        self.den += cq * cq;
+        self.rounds_observed += 1;
+        self.last = Some(SlackState {
+            theta: self.theta,
+            c_r: self.c_r,
+            q_r: q,
+            submissions,
+        });
+        // eq. 15 — refit θ̂ (guard: all-zero history keeps the current θ̂).
+        if self.den > 1e-12 {
+            self.theta = (self.num / (self.n_r as f64 * self.den))
+                .clamp(THETA_MIN, THETA_MAX);
+        }
+        // eq. 6/16 — next round's selection proportion.
+        self.c_r = (self.c / self.theta).clamp(self.c, 1.0);
+    }
+
+    /// Snapshot of the last completed round (None before round 1 ends).
+    pub fn last_state(&self) -> Option<SlackState> {
+        self.last
+    }
+
+    pub fn rounds_observed(&self) -> usize {
+        self.rounds_observed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn round_one_uses_theta_init() {
+        let e = SlackEstimator::new(10, 0.3, 0.5);
+        assert!((e.theta() - 0.5).abs() < 1e-12);
+        assert!((e.c_r() - 0.6).abs() < 1e-12);
+        assert_eq!(e.selection_count(), 6);
+    }
+
+    #[test]
+    fn c_r_clamped_to_region() {
+        // Tiny theta_init would give C_r > 1; must clamp.
+        let e = SlackEstimator::new(10, 0.5, 0.1);
+        assert!(e.c_r() <= 1.0);
+        assert_eq!(e.selection_count(), 10);
+    }
+
+    #[test]
+    fn zero_submission_history_keeps_theta() {
+        let mut e = SlackEstimator::new(10, 0.3, 0.5);
+        for _ in 0..5 {
+            e.observe(0, true);
+        }
+        assert!((e.theta() - 0.5).abs() < 1e-12);
+        assert_eq!(e.last_state().unwrap().q_r, 0.0);
+    }
+
+    /// Simulate the paper's steady-state: clients are alive w.p. p, the
+    /// quota never censors (q* = 1, every alive client submits). θ̂ must
+    /// converge near p so that C_r → C/p and E[|X_r|] → C·n_r — the
+    /// selection target (eq. 1).
+    #[test]
+    fn theta_converges_to_reliability_when_uncensored() {
+        let n_r = 40;
+        let c = 0.3;
+        let p = 0.6; // no-abort probability
+        let mut e = SlackEstimator::new(n_r, c, 0.5);
+        let mut rng = Rng::new(7);
+        let mut alive_sum = 0.0;
+        let rounds = 400;
+        for t in 0..rounds {
+            let selected = e.selection_count();
+            let alive = (0..selected).filter(|_| rng.bernoulli(p)).count();
+            if t >= rounds / 2 {
+                alive_sum += alive as f64;
+            }
+            e.observe(alive, false);
+        }
+        let theta = e.theta();
+        assert!(
+            (theta - p).abs() < 0.08,
+            "theta={theta} should approach reliability p={p}"
+        );
+        // Participation |X_r|/n_r should hover near C.
+        let mean_alive = alive_sum / (rounds / 2) as f64 / n_r as f64;
+        assert!(
+            (mean_alive - c).abs() < 0.05,
+            "mean alive fraction {mean_alive} should be near C={c}"
+        );
+    }
+
+    /// With quota censoring (only a fraction q* of alive clients counted),
+    /// θ̂ settles *below* the true reliability — the paper explicitly notes
+    /// θ is "not necessarily equal to E[P_i]" (Fig. 2 converges to
+    /// 0.46/0.63 for reliabilities 0.43/0.57).
+    #[test]
+    fn theta_reflects_censoring_not_just_reliability() {
+        let n_r = 40;
+        let c = 0.3;
+        let p = 0.8;
+        let q_star = 0.6;
+        let mut uncensored = SlackEstimator::new(n_r, c, 0.5);
+        let mut censored = SlackEstimator::new(n_r, c, 0.5);
+        let mut rng = Rng::new(9);
+        for _ in 0..300 {
+            let s_u = uncensored.selection_count();
+            let alive_u = (0..s_u).filter(|_| rng.bernoulli(p)).count();
+            uncensored.observe(alive_u, false);
+
+            let s_c = censored.selection_count();
+            let alive_c = (0..s_c).filter(|_| rng.bernoulli(p)).count();
+            censored.observe((alive_c as f64 * q_star).round() as usize, true);
+        }
+        assert!(
+            censored.theta() < uncensored.theta(),
+            "censoring must depress theta: {} !< {}",
+            censored.theta(),
+            uncensored.theta()
+        );
+    }
+
+    #[test]
+    fn selection_count_at_least_one() {
+        let e = SlackEstimator::new(3, 0.05, 1.0);
+        assert!(e.selection_count() >= 1);
+    }
+
+    #[test]
+    fn observe_updates_snapshot() {
+        let mut e = SlackEstimator::new(10, 0.3, 0.5);
+        e.observe(3, true);
+        let s = e.last_state().unwrap();
+        assert_eq!(s.submissions, 3);
+        assert!((s.q_r - 1.0).abs() < 1e-12); // 3/(0.3*10)
+        assert!((s.theta - 0.5).abs() < 1e-12);
+        assert_eq!(e.rounds_observed(), 1);
+    }
+}

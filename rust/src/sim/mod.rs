@@ -1,0 +1,8 @@
+//! The FL run engine (S8): assembles topology, fleet, data, timing,
+//! energy, compute engine and protocol, then drives rounds on a virtual
+//! clock, recording everything the experiment harness needs.
+
+mod run;
+pub mod test_support;
+
+pub use run::{FlRun, RoundTrace, RunResult, RunSummary};

@@ -1,0 +1,50 @@
+//! Shared fixtures for protocol unit tests: a fully-assembled set of round
+//! context ingredients over the mock engine. Exposed as a public module so
+//! integration tests and benches can reuse it, but not part of the stable
+//! API surface.
+
+use std::sync::Arc;
+
+use crate::config::{Dist, EngineKind, ExperimentConfig};
+use crate::data::FederatedData;
+use crate::devices::{self, ClientProfile};
+use crate::energy::EnergyModel;
+use crate::rng::Rng;
+use crate::runtime::{build_engine, Engine};
+use crate::timing::TimingModel;
+use crate::topology::Topology;
+
+/// Build every ingredient a `RoundCtx` needs, with a uniform drop-out
+/// probability across the fleet and the mock engine.
+#[allow(clippy::type_complexity)]
+pub fn mock_ctx_parts(
+    dropout: f64,
+    n_clients: usize,
+    n_edges: usize,
+) -> (
+    ExperimentConfig,
+    Topology,
+    Arc<FederatedData>,
+    TimingModel,
+    EnergyModel,
+    Box<dyn Engine>,
+    Vec<ClientProfile>,
+) {
+    let mut cfg = ExperimentConfig::task1_scaled();
+    cfg.engine = EngineKind::Mock;
+    cfg.n_clients = n_clients;
+    cfg.n_edges = n_edges;
+    cfg.dataset_size = (n_clients * 30).max(200);
+    cfg.eval_size = 50;
+    cfg.dropout = Dist::new(dropout, 0.0);
+    cfg.validate().expect("fixture config must validate");
+
+    let mut rng = Rng::new(99);
+    let topo = Topology::build(&cfg, &mut rng.split(1)).unwrap();
+    let data = Arc::new(crate::data::build(&cfg, &mut rng.split(2)));
+    let profiles = devices::sample_fleet(&cfg, &topo, &mut rng.split(3));
+    let tm = TimingModel::new(&cfg);
+    let em = EnergyModel::new(&cfg);
+    let engine = build_engine(&cfg, Arc::clone(&data)).unwrap();
+    (cfg, topo, data, tm, em, engine, profiles)
+}

@@ -1,0 +1,159 @@
+//! Round-timing model (S6): equations (31)–(34) of the paper.
+//!
+//! * Client communication (33): `T_k^comm = 3 · msize / (bw_k · log2(1+SNR))`
+//!   — Shannon-effective bitrate of the shared wireless channel; the 3×
+//!   factor models upload at half the downlink rate (1× down + 2× up).
+//! * Client training (34): `T_k^train = |D_k| · τ · BPS · CPB / s_k`.
+//! * Cloud↔edge (32): `T_c2e2c = 3 · msize · m / BR` (zero for FedAvg,
+//!   which has no edge layer).
+//! * Response limit: `T_lim` is the completion time of an *extreme
+//!   straggler* — a hypothetical client at μ−3σ performance and bandwidth
+//!   holding an average-size partition (§IV.A).
+//!
+//! Units: config carries GHz/MHz/MB/Mbps (paper units); this module
+//! converts to Hz/bits/seconds once at construction.
+
+use crate::config::ExperimentConfig;
+use crate::devices::ClientProfile;
+
+/// Precomputed timing coefficients for one experiment.
+#[derive(Clone, Debug)]
+pub struct TimingModel {
+    /// Model size in bits.
+    msize_bits: f64,
+    /// log2(1 + SNR) — spectral efficiency of the wireless channel.
+    spectral_eff: f64,
+    /// Per-epoch training cycles per sample: BPS · CPB.
+    cycles_per_sample_epoch: f64,
+    /// τ — local epochs per round.
+    tau: f64,
+    /// Cloud-edge round-trip (eq. 32) for the 3-layer protocols.
+    pub t_c2e2c: f64,
+    /// Response time limit (straggler bound).
+    pub t_lim: f64,
+}
+
+impl TimingModel {
+    pub fn new(cfg: &ExperimentConfig) -> TimingModel {
+        let msize_bits = cfg.model_size_bits();
+        let spectral_eff = (1.0 + cfg.snr).log2();
+        let cycles_per_sample_epoch = cfg.bits_per_sample * cfg.cycles_per_bit;
+        let t_c2e2c = 3.0 * msize_bits * cfg.n_edges as f64 / cfg.cloud_edge_bps();
+
+        // Extreme straggler: μ − 3σ perf and bandwidth (floored at a small
+        // positive value — μ−3σ can cross zero), mean partition size.
+        let straggler = ClientProfile {
+            perf_ghz: (cfg.perf_ghz.mean - 3.0 * cfg.perf_ghz.std).max(0.02),
+            bw_mhz: (cfg.bw_mhz.mean - 3.0 * cfg.bw_mhz.std).max(0.02),
+            dropout_p: 0.0,
+        };
+        let mut tm = TimingModel {
+            msize_bits,
+            spectral_eff,
+            cycles_per_sample_epoch,
+            tau: cfg.local_epochs as f64,
+            t_c2e2c,
+            t_lim: 0.0,
+        };
+        tm.t_lim = tm.t_comm(&straggler) + tm.t_train(&straggler, cfg.mean_partition());
+        tm
+    }
+
+    /// Effective wireless bitrate for a client (bits/s): Shannon capacity
+    /// of its `bw_k` MHz channel.
+    pub fn effective_bps(&self, p: &ClientProfile) -> f64 {
+        p.bw_mhz * 1.0e6 * self.spectral_eff
+    }
+
+    /// Eq. (33): download + 2× upload of the model.
+    pub fn t_comm(&self, p: &ClientProfile) -> f64 {
+        3.0 * self.msize_bits / self.effective_bps(p)
+    }
+
+    /// Eq. (34): τ full-batch GD epochs over `|D_k|` samples.
+    pub fn t_train(&self, p: &ClientProfile, partition_size: f64) -> f64 {
+        partition_size * self.tau * self.cycles_per_sample_epoch / (p.perf_ghz * 1.0e9)
+    }
+
+    /// Completion time of a client that does not drop out: communication
+    /// plus local training (measured from round start).
+    pub fn completion(&self, p: &ClientProfile, partition_size: f64) -> f64 {
+        self.t_comm(p) + self.t_train(p, partition_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Dist;
+
+    fn avg_profile(cfg: &ExperimentConfig) -> ClientProfile {
+        ClientProfile {
+            perf_ghz: cfg.perf_ghz.mean,
+            bw_mhz: cfg.bw_mhz.mean,
+            dropout_p: 0.0,
+        }
+    }
+
+    /// Task-1 constants from the paper: an average client (0.5 GHz,
+    /// 0.5 MHz, SNR 100) moves 3×40Mb at 0.5e6·log2(101) ≈ 3.33 Mb/s →
+    /// ~36 s, and trains 100·5·384·300 cycles at 0.5 GHz → ~0.115 s.
+    #[test]
+    fn task1_magnitudes_match_paper() {
+        let cfg = ExperimentConfig::task1_paper();
+        let tm = TimingModel::new(&cfg);
+        let p = avg_profile(&cfg);
+        let tc = tm.t_comm(&p);
+        assert!((tc - 36.0).abs() < 1.0, "t_comm={tc}");
+        let tt = tm.t_train(&p, 100.0);
+        assert!((tt - 0.1152).abs() < 0.001, "t_train={tt}");
+        // T_c2e2c = 3·40e6·3/1e9 = 0.36 s
+        assert!((tm.t_c2e2c - 0.36).abs() < 1e-9);
+        // Straggler: perf 0.2 GHz, bw 0.2 MHz → T_lim ≈ 90.4 s. The paper's
+        // E[dr]=0.6, C=0.5 cell reports ~90.4 s rounds = T_lim + T_c2e2c.
+        assert!((tm.t_lim - 90.4).abs() < 1.0, "t_lim={}", tm.t_lim);
+    }
+
+    /// Task-2: straggler at 0.1 GHz / 0.1 MHz with a 120-sample mean
+    /// partition → T_lim ≈ 375.6 s; paper's FedAvg rounds sit at ~378 s
+    /// (deadline-bound) for 𝓝(1.0, 0.3²) devices and a 10 MB model.
+    #[test]
+    fn task2_deadline_matches_paper_scale() {
+        let cfg = ExperimentConfig::task2_paper();
+        let tm = TimingModel::new(&cfg);
+        assert!(
+            (tm.t_lim - 378.0).abs() < 15.0,
+            "t_lim={} should be near the paper's 378 s rounds",
+            tm.t_lim
+        );
+    }
+
+    #[test]
+    fn faster_devices_finish_sooner() {
+        let cfg = ExperimentConfig::task1_paper();
+        let tm = TimingModel::new(&cfg);
+        let slow = ClientProfile { perf_ghz: 0.3, bw_mhz: 0.3, dropout_p: 0.0 };
+        let fast = ClientProfile { perf_ghz: 0.8, bw_mhz: 0.8, dropout_p: 0.0 };
+        assert!(tm.completion(&fast, 100.0) < tm.completion(&slow, 100.0));
+        assert!(tm.t_train(&fast, 200.0) > tm.t_train(&fast, 100.0));
+    }
+
+    #[test]
+    fn t_lim_floor_when_mu_minus_3sigma_negative() {
+        let mut cfg = ExperimentConfig::task1_paper();
+        cfg.perf_ghz = Dist::new(0.3, 0.2); // μ−3σ = −0.3 → floored
+        cfg.bw_mhz = Dist::new(0.3, 0.2);
+        let tm = TimingModel::new(&cfg);
+        assert!(tm.t_lim.is_finite() && tm.t_lim > 0.0);
+    }
+
+    #[test]
+    fn fedavg_has_no_edge_rtt_by_protocol_not_model() {
+        // The timing model always computes t_c2e2c; protocols decide
+        // whether to charge it (FedAvg doesn't). Just pin the formula.
+        let cfg = ExperimentConfig::task2_paper();
+        let tm = TimingModel::new(&cfg);
+        let expect = 3.0 * cfg.model_size_bits() * 10.0 / 1.0e9;
+        assert!((tm.t_c2e2c - expect).abs() < 1e-9);
+    }
+}

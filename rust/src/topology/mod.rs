@@ -1,0 +1,166 @@
+//! MEC topology (S4): the cloud, `m` edge nodes, and `n` clients grouped
+//! into regions. "We refer to the collection of clients connected to an
+//! edge node as a region"; a client connects to exactly one edge node.
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::rng::Rng;
+
+/// Static system topology. Region `r` corresponds to edge node `r`.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// `regions[r]` = client ids connected to edge node r.
+    pub regions: Vec<Vec<usize>>,
+    /// Inverse map: `region_of[k]` = the region of client k (the paper's
+    /// r(k)).
+    pub region_of: Vec<usize>,
+    /// Per-region drop-out mean override (explicit `RegionSpec`s only).
+    dropout_means: Vec<Option<f64>>,
+}
+
+impl Topology {
+    /// Build from config: explicit `RegionSpec`s if present, otherwise
+    /// region populations n_r ~ 𝓝(region_pop) normalized to n (each region
+    /// keeps at least one client). Client ids are assigned contiguously per
+    /// region, matching the paper's Task-2 client-index ↔ label congruence
+    /// story (ids are just labels; data skew is index-based).
+    pub fn build(cfg: &ExperimentConfig, rng: &mut Rng) -> Result<Topology> {
+        let sizes: Vec<usize>;
+        let mut dropout_means: Vec<Option<f64>> = Vec::new();
+        if !cfg.regions.is_empty() {
+            sizes = cfg.regions.iter().map(|r| r.n_clients).collect();
+            dropout_means = cfg.regions.iter().map(|r| Some(r.dropout_mean)).collect();
+        } else {
+            if cfg.n_edges > cfg.n_clients {
+                bail!(
+                    "more edges ({}) than clients ({})",
+                    cfg.n_edges,
+                    cfg.n_clients
+                );
+            }
+            // Sample raw populations and normalize to exactly n with >= 1.
+            let raw: Vec<f64> = (0..cfg.n_edges)
+                .map(|_| rng.normal(cfg.region_pop.mean, cfg.region_pop.std).max(1.0))
+                .collect();
+            let total: f64 = raw.iter().sum();
+            let mut s: Vec<usize> = raw
+                .iter()
+                .map(|v| ((v / total) * cfg.n_clients as f64).floor().max(1.0) as usize)
+                .collect();
+            let mut assigned: usize = s.iter().sum();
+            // Trim overshoot (possible via the >=1 floor) from the largest.
+            while assigned > cfg.n_clients {
+                let (i, _) = s.iter().enumerate().max_by_key(|(_, &v)| v).unwrap();
+                if s[i] > 1 {
+                    s[i] -= 1;
+                    assigned -= 1;
+                }
+            }
+            let mut i = 0;
+            while assigned < cfg.n_clients {
+                let len = s.len();
+                s[i % len] += 1;
+                assigned += 1;
+                i += 1;
+            }
+            sizes = s;
+            dropout_means.resize(cfg.n_edges, None);
+        }
+
+        let n: usize = sizes.iter().sum();
+        let mut regions = Vec::with_capacity(sizes.len());
+        let mut region_of = vec![0usize; n];
+        let mut next = 0usize;
+        for (r, &sz) in sizes.iter().enumerate() {
+            let ids: Vec<usize> = (next..next + sz).collect();
+            for &k in &ids {
+                region_of[k] = r;
+            }
+            next += sz;
+            regions.push(ids);
+        }
+        Ok(Topology {
+            regions,
+            region_of,
+            dropout_means,
+        })
+    }
+
+    /// m — number of edge nodes.
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// n — number of clients.
+    pub fn n_clients(&self) -> usize {
+        self.region_of.len()
+    }
+
+    /// n_r.
+    pub fn region_size(&self, r: usize) -> usize {
+        self.regions[r].len()
+    }
+
+    /// Explicit per-region drop-out mean, if configured (Fig. 2).
+    pub fn dropout_mean_override(&self, r: usize) -> Option<f64> {
+        self.dropout_means.get(r).copied().flatten()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RegionSpec;
+
+    #[test]
+    fn sampled_topology_partitions_clients() {
+        let cfg = ExperimentConfig::task2_scaled();
+        let topo = Topology::build(&cfg, &mut Rng::new(0)).unwrap();
+        assert_eq!(topo.n_regions(), cfg.n_edges);
+        assert_eq!(topo.n_clients(), cfg.n_clients);
+        let total: usize = topo.regions.iter().map(|r| r.len()).sum();
+        assert_eq!(total, cfg.n_clients);
+        for r in 0..topo.n_regions() {
+            assert!(topo.region_size(r) >= 1);
+            for &k in &topo.regions[r] {
+                assert_eq!(topo.region_of[k], r);
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_regions_honored() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.n_clients = 20;
+        cfg.regions = vec![
+            RegionSpec { n_clients: 11, dropout_mean: 0.57 },
+            RegionSpec { n_clients: 9, dropout_mean: 0.43 },
+        ];
+        let topo = Topology::build(&cfg, &mut Rng::new(1)).unwrap();
+        assert_eq!(topo.region_size(0), 11);
+        assert_eq!(topo.region_size(1), 9);
+        assert_eq!(topo.dropout_mean_override(0), Some(0.57));
+        assert_eq!(topo.dropout_mean_override(1), Some(0.43));
+    }
+
+    #[test]
+    fn rejects_more_edges_than_clients() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.n_clients = 2;
+        cfg.n_edges = 5;
+        cfg.dataset_size = 100;
+        assert!(Topology::build(&cfg, &mut Rng::new(2)).is_err());
+    }
+
+    #[test]
+    fn populations_vary_but_sum_exactly() {
+        let mut cfg = ExperimentConfig::task2_paper();
+        cfg.n_clients = 500;
+        cfg.n_edges = 10;
+        let topo = Topology::build(&cfg, &mut Rng::new(3)).unwrap();
+        let sizes: Vec<usize> = (0..10).map(|r| topo.region_size(r)).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 500);
+        assert!(sizes.iter().max().unwrap() > sizes.iter().min().unwrap());
+    }
+}

@@ -1,0 +1,120 @@
+//! Black-box tests of the `hybridfl` binary (the launcher a user actually
+//! invokes).
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_hybridfl"))
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = bin().output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("commands:"));
+    assert!(text.contains("table3"));
+}
+
+#[test]
+fn unknown_command_fails_loudly() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn config_command_emits_valid_json() {
+    let out = bin()
+        .args(["config", "--preset", "task2-scaled", "--set", "c=0.5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    let json = hybridfl::jsonx::Json::parse(&text).unwrap();
+    assert_eq!(json.get("task").unwrap().as_str().unwrap(), "mnist");
+    assert_eq!(json.get("c_fraction").unwrap().as_f64().unwrap(), 0.5);
+}
+
+#[test]
+fn bad_override_reports_key() {
+    let out = bin()
+        .args(["config", "--set", "nonsense_key=1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("nonsense_key"));
+}
+
+#[test]
+fn run_mock_roundtrip_with_trace() {
+    let dir = std::env::temp_dir().join("hybridfl_cli_test");
+    let _ = std::fs::create_dir_all(&dir);
+    let trace = dir.join("trace.csv");
+    let out = bin()
+        .args([
+            "run",
+            "--preset",
+            "fig2",
+            "--set",
+            "t_max=10",
+            "--out",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("best accuracy"));
+    let csv = std::fs::read_to_string(&trace).unwrap();
+    assert_eq!(csv.lines().count(), 11); // header + 10 rounds
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fig2_command_writes_traces() {
+    let dir = std::env::temp_dir().join("hybridfl_cli_fig2");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = bin()
+        .args(["fig2", "--out", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("theta"));
+    assert!(dir.join("fig2_traces.csv").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn table3_quick_mock_grid() {
+    let dir = std::env::temp_dir().join("hybridfl_cli_table3");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = bin()
+        .args([
+            "table3",
+            "--quick",
+            "--mock",
+            "--target",
+            "0.3",
+            "--out",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Table III"));
+    assert!(text.contains("hybridfl"));
+    assert!(dir.join("table3.txt").exists());
+    assert!(dir.join("sweep_aerofoil.json").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,214 @@
+//! Property-style invariant tests over the protocol/round engine.
+//!
+//! The offline vendor set has no `proptest`, so this module hand-rolls the
+//! same discipline: generate many random configurations (population,
+//! topology, reliability, C, protocol) from a seeded RNG and assert the
+//! coordinator's invariants on every round of every run. ~100 runs ×
+//! dozens of rounds each = thousands of checked rounds per test binary.
+
+use hybridfl::config::{CacheMode, Dist, EngineKind, ExperimentConfig, ProtocolKind};
+use hybridfl::rng::Rng;
+use hybridfl::sim::FlRun;
+
+/// Draw a random (but valid) experiment config on the mock engine.
+fn random_config(rng: &mut Rng) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::task1_scaled();
+    cfg.engine = EngineKind::Mock;
+    cfg.n_clients = 6 + rng.below(60);
+    cfg.n_edges = 1 + rng.below(5.min(cfg.n_clients));
+    cfg.dataset_size = cfg.n_clients * (10 + rng.below(50));
+    cfg.eval_size = 40;
+    cfg.c_fraction = 0.05 + 0.9 * rng.uniform();
+    cfg.dropout = Dist::new(rng.uniform() * 0.9, 0.05);
+    cfg.t_max = 10 + rng.below(30);
+    cfg.local_epochs = 1 + rng.below(8);
+    cfg.protocol = ProtocolKind::ALL[rng.below(3)];
+    cfg.cache_mode = if rng.bernoulli(0.5) {
+        CacheMode::Regional
+    } else {
+        CacheMode::Fresh
+    };
+    cfg.seed = rng.next_u64();
+    cfg
+}
+
+#[test]
+fn rounds_satisfy_structural_invariants() {
+    let mut meta = Rng::new(0xBEEF);
+    for case in 0..60 {
+        let cfg = random_config(&mut meta);
+        let quota = cfg.quota();
+        let n = cfg.n_clients;
+        let label = format!(
+            "case {case}: proto={} n={} m={} C={:.2} dr={:.2}",
+            cfg.protocol.as_str(),
+            n,
+            cfg.n_edges,
+            cfg.c_fraction,
+            cfg.dropout.mean
+        );
+        let result = FlRun::new(cfg.clone()).unwrap().run().unwrap();
+        assert_eq!(result.rounds.len(), cfg.t_max, "{label}");
+
+        let mut prev_time = 0.0;
+        let mut prev_best = f64::MIN;
+        for row in &result.rounds {
+            // Counting chains: submissions ⊆ alive ⊆ selected, per region.
+            for r in 0..cfg.n_edges {
+                assert!(
+                    row.submissions[r] <= row.alive[r],
+                    "{label} t={} region {r}: S > X",
+                    row.t
+                );
+                assert!(
+                    row.alive[r] <= row.selected[r],
+                    "{label} t={} region {r}: X > U",
+                    row.t
+                );
+                assert!(row.selected[r] <= n, "{label}");
+            }
+            let total_sel: usize = row.selected.iter().sum();
+            assert!(total_sel >= 1 && total_sel <= n, "{label}");
+
+            // HybridFL quota semantics: |S(t)| = min(quota-ish, |X(t)|)
+            // (ties at the cutoff can push it slightly above the quota).
+            if cfg.protocol == ProtocolKind::HybridFl {
+                let subs: usize = row.submissions.iter().sum();
+                let alive: usize = row.alive.iter().sum();
+                if !row.deadline_hit {
+                    assert!(subs >= quota, "{label} t={}: quota met but S<q", row.t);
+                }
+                assert!(subs <= alive, "{label}");
+            }
+
+            // Clock and accounting sanity.
+            assert!(row.round_len > 0.0 && row.round_len.is_finite(), "{label}");
+            assert!(row.cum_time > prev_time, "{label}");
+            prev_time = row.cum_time;
+            assert!(row.best_accuracy >= prev_best, "{label}");
+            prev_best = row.best_accuracy;
+            assert!(row.cum_energy_j >= 0.0, "{label}");
+            assert!((0.0..=1.0).contains(&row.accuracy), "{label}");
+        }
+    }
+}
+
+#[test]
+fn round_length_bounded_by_deadline_plus_rtt() {
+    let mut meta = Rng::new(0xCAFE);
+    for _ in 0..30 {
+        let cfg = random_config(&mut meta);
+        let run = FlRun::new(cfg.clone()).unwrap();
+        let bound = run.tm.t_lim + run.tm.t_c2e2c + 1e-9;
+        let result = run.run().unwrap();
+        for row in &result.rounds {
+            assert!(
+                row.round_len <= bound,
+                "{}: round {} len {} exceeds T_lim+RTT {}",
+                cfg.protocol.as_str(),
+                row.t,
+                row.round_len,
+                bound
+            );
+        }
+    }
+}
+
+#[test]
+fn energy_monotone_and_scales_with_selection() {
+    // More selected clients (larger C) must never consume less energy
+    // under identical seeds and reliability.
+    let mut base = ExperimentConfig::task1_scaled();
+    base.engine = EngineKind::Mock;
+    base.n_clients = 30;
+    base.n_edges = 3;
+    base.dataset_size = 900;
+    base.eval_size = 40;
+    base.t_max = 25;
+    base.dropout = Dist::new(0.2, 0.02);
+    base.protocol = ProtocolKind::FedAvg;
+
+    let mut prev = 0.0;
+    for c in [0.1, 0.3, 0.6, 0.9] {
+        let mut cfg = base.clone();
+        cfg.c_fraction = c;
+        let result = FlRun::new(cfg).unwrap().run().unwrap();
+        let wh = result.summary.mean_device_energy_wh;
+        assert!(wh > prev, "energy must grow with C: C={c} wh={wh} prev={prev}");
+        prev = wh;
+    }
+}
+
+#[test]
+fn identical_seeds_reproduce_bitwise_metrics() {
+    let mut meta = Rng::new(0xD00D);
+    for _ in 0..10 {
+        let cfg = random_config(&mut meta);
+        let a = FlRun::new(cfg.clone()).unwrap().run().unwrap();
+        let b = FlRun::new(cfg).unwrap().run().unwrap();
+        assert_eq!(a.summary.best_accuracy, b.summary.best_accuracy);
+        assert_eq!(a.summary.total_time, b.summary.total_time);
+        for (ra, rb) in a.rounds.iter().zip(b.rounds.iter()) {
+            assert_eq!(ra.submissions, rb.submissions);
+            assert_eq!(ra.round_len, rb.round_len);
+            assert_eq!(ra.cum_energy_j, rb.cum_energy_j);
+        }
+    }
+}
+
+#[test]
+fn hybridfl_participation_tracks_c_under_any_reliability() {
+    // The selection target (eq. 1): with slack modulation converged, mean
+    // |X(t)|/n should track C regardless of the (agnostic) drop-out level.
+    for dr in [0.1, 0.4, 0.7] {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.engine = EngineKind::Mock;
+        cfg.n_clients = 60;
+        cfg.n_edges = 3;
+        cfg.dataset_size = 1800;
+        cfg.eval_size = 40;
+        cfg.c_fraction = 0.3;
+        cfg.dropout = Dist::new(dr, 0.05);
+        cfg.t_max = 150;
+        cfg.protocol = ProtocolKind::HybridFl;
+        let result = FlRun::new(cfg).unwrap().run().unwrap();
+        let tail = &result.rounds[75..];
+        let mean_alive: f64 = tail
+            .iter()
+            .map(|r| r.alive.iter().sum::<usize>() as f64 / 60.0)
+            .sum::<f64>()
+            / tail.len() as f64;
+        assert!(
+            (mean_alive - 0.3).abs() < 0.13,
+            "dr={dr}: participation {mean_alive} should track C=0.3"
+        );
+    }
+}
+
+#[test]
+fn extreme_configs_do_not_panic() {
+    // Degenerate corners: single edge, tiny C, near-total drop-out, one
+    // local epoch, single-client regions.
+    let corners = [
+        (1usize, 0.05, 0.0),
+        (1, 1.0, 0.95),
+        (5, 0.05, 0.95),
+        (5, 1.0, 0.0),
+    ];
+    for (m, c, dr) in corners {
+        for proto in ProtocolKind::ALL {
+            let mut cfg = ExperimentConfig::task1_scaled();
+            cfg.engine = EngineKind::Mock;
+            cfg.n_clients = 8;
+            cfg.n_edges = m;
+            cfg.dataset_size = 240;
+            cfg.eval_size = 40;
+            cfg.c_fraction = c;
+            cfg.dropout = Dist::new(dr, 0.01);
+            cfg.t_max = 8;
+            cfg.protocol = proto;
+            let result = FlRun::new(cfg).unwrap().run().unwrap();
+            assert_eq!(result.rounds.len(), 8);
+        }
+    }
+}

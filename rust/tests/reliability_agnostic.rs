@@ -1,0 +1,100 @@
+//! The paper's core constraint: client reliability is *agnostic* — no
+//! protocol decision may depend on anything but observable submission
+//! counts and round outcomes. These tests pin that boundary.
+
+use hybridfl::config::{Dist, EngineKind, ExperimentConfig, ProtocolKind, RegionSpec};
+use hybridfl::selection::SlackEstimator;
+use hybridfl::sim::FlRun;
+
+/// Two "worlds" with completely different client reliability that happen
+/// to produce the same observable submission-count sequence must drive the
+/// estimator to identical decisions — the estimator cannot possibly be
+/// using anything else (its API admits nothing else).
+#[test]
+fn slack_decisions_depend_only_on_observables() {
+    let seq: &[(usize, bool)] = &[
+        (3, true),
+        (2, true),
+        (4, false),
+        (3, true),
+        (0, false),
+        (5, true),
+        (3, true),
+    ];
+    let mut world_a = SlackEstimator::new(12, 0.3, 0.5);
+    let mut world_b = SlackEstimator::new(12, 0.3, 0.5);
+    for &(subs, censored) in seq {
+        assert_eq!(world_a.c_r(), world_b.c_r());
+        assert_eq!(world_a.selection_count(), world_b.selection_count());
+        world_a.observe(subs, censored);
+        world_b.observe(subs, censored);
+    }
+    assert_eq!(world_a.theta(), world_b.theta());
+}
+
+/// Estimation works without ever identifying clients: two regions with the
+/// same aggregate reliability but totally different per-client profiles
+/// (uniform vs bimodal) steer to similar selection proportions.
+#[test]
+fn distribution_free_within_same_mean() {
+    // Uniform region: everyone drops at 0.5. Bimodal region: half the
+    // clients at 0.1, half at 0.9 (same mean 0.5).
+    let run = |regions: Vec<RegionSpec>, std: f64| {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.engine = EngineKind::Mock;
+        cfg.n_clients = regions.iter().map(|r| r.n_clients).sum();
+        cfg.n_edges = regions.len();
+        cfg.regions = regions;
+        cfg.dropout = Dist::new(0.5, std);
+        cfg.dataset_size = 2000;
+        cfg.eval_size = 40;
+        cfg.t_max = 200;
+        cfg.protocol = ProtocolKind::HybridFl;
+        let result = FlRun::new(cfg).unwrap().run().unwrap();
+        let tail = &result.rounds[100..];
+        tail.iter()
+            .map(|r| r.slack.as_ref().unwrap()[0].c_r)
+            .sum::<f64>()
+            / tail.len() as f64
+    };
+    let uniform = run(vec![RegionSpec { n_clients: 40, dropout_mean: 0.5 }], 0.0);
+    // Bimodal via huge sigma: 𝓝(0.5, 0.45²) clamped — mass piles near the
+    // 0/0.99 edges, same mean.
+    let bimodal = run(vec![RegionSpec { n_clients: 40, dropout_mean: 0.5 }], 0.45);
+    assert!(
+        (uniform - bimodal).abs() < 0.22,
+        "C_r should depend on aggregate reliability, not its shape: \
+         uniform={uniform:.3} bimodal={bimodal:.3}"
+    );
+}
+
+/// End-to-end: HybridFL adapts selection to unreliability it was never
+/// told about — higher drop-out must yield a strictly higher converged
+/// selection proportion.
+#[test]
+fn selection_proportion_rises_with_hidden_dropout() {
+    let mut cs = Vec::new();
+    for dr in [0.1, 0.5, 0.8] {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.engine = EngineKind::Mock;
+        cfg.n_clients = 40;
+        cfg.n_edges = 2;
+        cfg.dataset_size = 1200;
+        cfg.eval_size = 40;
+        cfg.dropout = Dist::new(dr, 0.03);
+        cfg.t_max = 150;
+        cfg.protocol = ProtocolKind::HybridFl;
+        let result = FlRun::new(cfg).unwrap().run().unwrap();
+        let tail = &result.rounds[75..];
+        let mean_sel: f64 = tail
+            .iter()
+            .map(|r| r.selected.iter().sum::<usize>() as f64 / 40.0)
+            .sum::<f64>()
+            / tail.len() as f64;
+        cs.push(mean_sel);
+    }
+    assert!(
+        cs[0] < cs[1] && cs[1] < cs[2],
+        "selection must rise with drop-out: {cs:?}"
+    );
+}
