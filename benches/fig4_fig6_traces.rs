@@ -22,7 +22,7 @@ fn spark(series: &[f64]) -> String {
 
 fn main() -> hybridfl::Result<()> {
     let args = BenchArgs::from_env();
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
+    if !hybridfl::runtime::pjrt_available() {
         eprintln!("traces bench requires `make artifacts`; skipping");
         return Ok(());
     }

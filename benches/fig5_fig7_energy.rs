@@ -12,7 +12,7 @@ use hybridfl::sim::FlRun;
 
 fn main() -> hybridfl::Result<()> {
     let args = BenchArgs::from_env();
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
+    if !hybridfl::runtime::pjrt_available() {
         eprintln!("energy bench requires `make artifacts`; skipping");
         return Ok(());
     }

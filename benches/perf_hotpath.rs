@@ -89,7 +89,7 @@ fn main() {
     );
 
     // PJRT train/eval latency (L1+L2 compute the coordinator schedules).
-    if std::path::Path::new("artifacts/manifest.json").exists() {
+    if hybridfl::runtime::pjrt_available() {
         println!("\n=== L1/L2 via PJRT (real compute) ===");
         use hybridfl::runtime::{build_engine, Engine};
         use std::sync::Arc;

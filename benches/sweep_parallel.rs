@@ -1,0 +1,82 @@
+//! Bench: serial vs parallel execution of the Table-III quick grid
+//! (mock engine), verifying byte-identical artifacts and recording the
+//! wall-clock speedup of the scoped-thread sweep in `BENCH_sweep.json`.
+//!
+//! Run: `cargo bench --bench sweep_parallel` (`--full` for the full
+//! 27-cell paper grid on the mock engine).
+
+use std::time::Instant;
+
+use hybridfl::benchkit::BenchArgs;
+use hybridfl::config::TaskKind;
+use hybridfl::harness::sweep::{render_energy, render_table};
+use hybridfl::harness::{run_task_sweep, SweepOpts};
+use hybridfl::jsonx::Json;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let root = std::env::temp_dir().join("hybridfl_sweep_parallel_bench");
+    let _ = std::fs::remove_dir_all(&root);
+
+    let base = SweepOpts {
+        quick: !args.full,
+        mock: true,
+        target: Some(0.3),
+        // Inflate the per-cell cost a little so thread-pool overhead is
+        // amortized and the speedup is measurable on the mock engine.
+        t_max: Some(if args.quick { 400 } else { 1500 }),
+        ..Default::default()
+    };
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    let t0 = Instant::now();
+    let serial = run_task_sweep(
+        TaskKind::Aerofoil,
+        &SweepOpts { parallel: false, ..base.clone() },
+        &root.join("serial"),
+    )
+    .unwrap();
+    let t_serial = t0.elapsed();
+
+    let t1 = Instant::now();
+    let parallel = run_task_sweep(
+        TaskKind::Aerofoil,
+        &SweepOpts { parallel: true, ..base },
+        &root.join("parallel"),
+    )
+    .unwrap();
+    let t_parallel = t1.elapsed();
+
+    // Correctness gate: the parallel schedule must be invisible in the
+    // results.
+    assert_eq!(
+        render_table(&serial),
+        render_table(&parallel),
+        "parallel sweep must render identical tables"
+    );
+    assert_eq!(render_energy(&serial), render_energy(&parallel));
+
+    let cells = serial.cells.len();
+    let speedup = t_serial.as_secs_f64() / t_parallel.as_secs_f64().max(1e-9);
+    println!("sweep cells          : {cells}");
+    println!("worker threads       : {workers}");
+    println!("serial wall          : {t_serial:.2?}");
+    println!("parallel wall        : {t_parallel:.2?}");
+    println!("speedup              : {speedup:.2}x");
+
+    let report = Json::obj()
+        .set("bench", "sweep_parallel")
+        .set("task", "aerofoil")
+        .set("cells", cells)
+        .set("worker_threads", workers)
+        .set("serial_seconds", t_serial.as_secs_f64())
+        .set("parallel_seconds", t_parallel.as_secs_f64())
+        .set("speedup", speedup)
+        .set("byte_identical", true);
+    std::fs::write("BENCH_sweep.json", report.pretty()).unwrap();
+    println!("report -> BENCH_sweep.json");
+
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -15,7 +15,7 @@ use hybridfl::harness::{run_task_sweep, SweepOpts, SweepResult};
 
 fn main() {
     let args = BenchArgs::from_env();
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
+    if !hybridfl::runtime::pjrt_available() {
         eprintln!("table3 bench requires `make artifacts`; skipping");
         return;
     }

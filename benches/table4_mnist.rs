@@ -19,7 +19,7 @@ use hybridfl::harness::{run_task_sweep, SweepOpts};
 
 fn main() {
     let args = BenchArgs::from_env();
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
+    if !hybridfl::runtime::pjrt_available() {
         eprintln!("table4 bench requires `make artifacts`; skipping");
         return;
     }

@@ -1,22 +1,26 @@
 //! Device-energy report (the Figs. 5/7 story): how much battery does each
 //! protocol burn to reach the same model quality on unreliable clients?
 //!
-//! Runs all three protocols on the Aerofoil task at E[dr] = 0.6 with real
-//! PJRT training, then reports mean on-device Wh at the accuracy-target
-//! crossing — the metric the paper argues decides whether device owners
-//! keep participating.
+//! Runs all three protocols on the Aerofoil task at E[dr] = 0.6, then
+//! reports mean on-device Wh at the accuracy-target crossing — the metric
+//! the paper argues decides whether device owners keep participating.
+//! Real PJRT training when the artifacts are present, mock otherwise.
 //!
 //! ```bash
-//! make artifacts
+//! make artifacts            # optional, for real training
 //! cargo run --release --example energy_report
 //! ```
 
-use hybridfl::config::{ExperimentConfig, ProtocolKind};
-use hybridfl::sim::FlRun;
+use hybridfl::config::ProtocolKind;
+use hybridfl::scenario::Scenario;
 
 const TARGET: f64 = 0.65;
 
 fn main() -> hybridfl::Result<()> {
+    let have_pjrt = hybridfl::runtime::pjrt_available();
+    if !have_pjrt {
+        eprintln!("(PJRT unavailable — missing artifacts or the `pjrt` feature; using the mock engine)");
+    }
     println!("energy to reach accuracy {TARGET} — Aerofoil, E[dr]=0.6, C=0.3\n");
     println!(
         "{:<10} {:>9} {:>9} {:>12} {:>13} {:>12}",
@@ -25,10 +29,12 @@ fn main() -> hybridfl::Result<()> {
 
     let mut rows: Vec<(String, f64, Option<usize>, Option<f64>, f64)> = Vec::new();
     for proto in ProtocolKind::ALL {
-        let mut cfg = ExperimentConfig::task1_scaled();
-        cfg.protocol = proto;
-        cfg.dropout.mean = 0.6;
-        let result = FlRun::new(cfg)?.run()?;
+        let mut sc = Scenario::task1().protocol(proto).dropout(0.6);
+        if !have_pjrt {
+            sc = sc.mock();
+        }
+        let n_clients = sc.config().n_clients as f64;
+        let result = sc.run()?;
 
         // Energy at the target crossing (end of run if never crossed).
         let crossing = result.rounds.iter().find(|r| r.best_accuracy >= TARGET);
@@ -45,7 +51,7 @@ fn main() -> hybridfl::Result<()> {
             result.summary.best_accuracy,
             rounds,
             time,
-            energy_j / 3600.0 / 15.0, // per device over 15 clients
+            energy_j / 3600.0 / n_clients,
         ));
     }
 

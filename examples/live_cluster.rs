@@ -2,46 +2,53 @@
 //! system — 1 cloud thread + 4 edge threads + 40 client threads over mpsc
 //! channels, quota-vs-deadline arbitration in wall-clock time.
 //!
+//! Exactly the same protocol implementation that runs on the virtual
+//! clock: only `.backend(Backend::Live)` changes.
+//!
 //! ```bash
 //! cargo run --release --example live_cluster
 //! ```
 
-use hybridfl::config::{Dist, ExperimentConfig};
-use hybridfl::live::{LiveCluster, LiveOpts};
+use hybridfl::config::Dist;
+use hybridfl::scenario::{Backend, Scenario};
 
 fn main() -> hybridfl::Result<()> {
-    let mut cfg = ExperimentConfig::task1_scaled();
-    cfg.n_clients = 40;
-    cfg.n_edges = 4;
-    cfg.dataset_size = 2000;
-    cfg.dropout = Dist::new(0.3, 0.05);
+    let sc = Scenario::task1()
+        .mock()
+        .clients(40)
+        .edges(4)
+        .dataset_size(2000)
+        .tune(|cfg| cfg.dropout = Dist::new(0.3, 0.05))
+        .rounds(12)
+        .backend(Backend::Live)
+        .time_scale(1e-4);
 
+    let cfg = sc.config();
     println!(
         "spawning live cluster: 1 cloud + {} edges + {} clients (threads)",
         cfg.n_edges, cfg.n_clients
     );
     println!("virtual time scaled 1e-4 (a ~90 s round plays out in ~9 ms)\n");
 
-    let cluster = LiveCluster::new(cfg)?;
-    let stats = cluster.run(&LiveOpts { rounds: 12, time_scale: 1e-4 })?;
+    let result = sc.run()?;
 
-    println!("round |   wall   | per-region submissions | quota met | progress");
-    for s in &stats {
+    println!("round | round len (s) | per-region submissions | quota met | accuracy");
+    for s in &result.rounds {
         println!(
-            "{:>5} | {:>8.1?} | {:>23} | {:>9} | {:>8.2}",
+            "{:>5} | {:>13.1} | {:>22} | {:>9} | {:>8.3}",
             s.t,
-            s.wall,
+            s.round_len,
             format!("{:?}", s.submissions),
-            s.quota_met,
-            s.global_progress
+            !s.deadline_hit,
+            s.accuracy
         );
     }
 
-    let met = stats.iter().filter(|s| s.quota_met).count();
+    let met = result.rounds.iter().filter(|s| !s.deadline_hit).count();
     println!(
         "\n{met}/{} rounds ended by quota (rest by deadline); \
          global model advanced every round the quota flowed.",
-        stats.len()
+        result.rounds.len()
     );
     Ok(())
 }

@@ -1,40 +1,44 @@
 //! End-to-end driver (the repo's full-stack validation run): federated
-//! LeNet-5 training on the non-IID synthetic MNIST corpus, real PJRT
-//! execution of the AOT JAX/Pallas artifacts, all three protocols
-//! compared under identical seeds.
+//! LeNet-5 training on the non-IID synthetic MNIST corpus, all three
+//! protocols compared under identical seeds. Real PJRT execution of the
+//! AOT JAX/Pallas artifacts when available, mock dynamics otherwise.
 //!
-//! This exercises every layer at once: L1 Pallas kernels (inside the
-//! lowered HLO), L2 LeNet train/eval graphs, L3 coordinator (slack
-//! selection, quota trigger, EDC aggregation), the MEC timing/energy
-//! simulator, and the metrics stack. The loss/accuracy curves land in
-//! `reports/e2e_mnist_<protocol>.csv`; the run is recorded in
-//! EXPERIMENTS.md §End-to-end.
+//! With artifacts this exercises every layer at once: L1 Pallas kernels
+//! (inside the lowered HLO), L2 LeNet train/eval graphs, L3 coordinator
+//! (slack selection, quota trigger, EDC aggregation), the MEC
+//! timing/energy simulator, and the metrics stack. The loss/accuracy
+//! curves land in `reports/e2e_mnist_<protocol>.csv`; the run is recorded
+//! in EXPERIMENTS.md §End-to-end.
 //!
 //! ```bash
 //! make artifacts
 //! cargo run --release --example mnist_noniid_e2e          # ~4 min on 1 core
 //! ```
 
-use hybridfl::config::{ExperimentConfig, ProtocolKind};
+use hybridfl::config::ProtocolKind;
 use hybridfl::metrics;
-use hybridfl::sim::FlRun;
+use hybridfl::scenario::Scenario;
 
 fn main() -> hybridfl::Result<()> {
     let out_dir = std::path::Path::new("reports");
     std::fs::create_dir_all(out_dir)?;
+    let have_pjrt = hybridfl::runtime::pjrt_available();
+    if !have_pjrt {
+        eprintln!("(PJRT unavailable — missing artifacts or the `pjrt` feature; using the mock engine)");
+    }
 
     println!("=== E2E: federated LeNet-5 on non-IID synthetic MNIST ===");
     println!("50 clients / 5 edges / 2.5k samples (0.75 label skew), E[dr]=0.3\n");
 
     let mut wins: Vec<(String, f64, f64, f64)> = Vec::new();
     for proto in ProtocolKind::ALL {
-        let mut cfg = ExperimentConfig::task2_scaled();
-        cfg.protocol = proto;
-        cfg.t_max = 50;
-        cfg.dropout.mean = 0.3;
+        let mut sc = Scenario::task2().protocol(proto).rounds(50).dropout(0.3);
+        if !have_pjrt {
+            sc = sc.mock();
+        }
 
         eprintln!("[{}] training...", proto.as_str());
-        let result = FlRun::new(cfg)?.run()?;
+        let result = sc.run()?;
 
         println!("--- {} ---", proto.as_str());
         println!(" round |   loss   | accuracy | cum time (s)");

@@ -1,38 +1,41 @@
-//! Quickstart: run HybridFL on the Aerofoil task for 60 rounds with real
-//! PJRT training and print what happened.
+//! Quickstart: run HybridFL on the Aerofoil task for 60 rounds and print
+//! what happened. Uses real PJRT training when the AOT artifacts are
+//! present (`make artifacts` + `--features pjrt`), otherwise falls back to
+//! the analytic mock engine so the demo always runs.
 //!
 //! ```bash
-//! make artifacts            # once: AOT-compile the JAX/Pallas models
 //! cargo run --release --example quickstart
 //! ```
 
-use hybridfl::config::ExperimentConfig;
-use hybridfl::sim::FlRun;
+use hybridfl::scenario::Scenario;
 
 fn main() -> hybridfl::Result<()> {
-    // Start from the scaled Task-1 preset (15 clients, 3 edge nodes) and
-    // dial in a short demo run under moderate unreliability.
-    let mut cfg = ExperimentConfig::task1_scaled();
-    cfg.t_max = 60;
-    cfg.dropout.mean = 0.3; // 30% of clients drop out of any given round
-    cfg.c_fraction = 0.3; //   the cloud wants models from 30% per round
+    // Scaled Task-1 preset (15 clients, 3 edge nodes), dialed to a short
+    // demo run under moderate unreliability.
+    let mut sc = Scenario::task1()
+        .rounds(60)
+        .dropout(0.3) // 30% of clients drop out of any given round
+        .c_fraction(0.3); // the cloud wants models from 30% per round
 
+    if !hybridfl::runtime::pjrt_available() {
+        eprintln!("(PJRT unavailable — missing artifacts or the `pjrt` feature; using the mock engine)");
+        sc = sc.mock();
+    }
+
+    let cfg = sc.config();
     println!(
         "HybridFL quickstart: {} clients / {} edges, E[dr]={}, C={}",
         cfg.n_clients, cfg.n_edges, cfg.dropout.mean, cfg.c_fraction
     );
 
-    let result = FlRun::new(cfg)?.run()?;
+    let result = sc.run()?;
 
     // Accuracy trace, ten-round granularity.
     println!("\n round | accuracy | round len (s) | submissions");
     for row in result.rounds.iter().filter(|r| r.t % 10 == 0) {
         println!(
             " {:>5} | {:>8.3} | {:>13.1} | {:?}",
-            row.t,
-            row.accuracy,
-            row.round_len,
-            row.submissions
+            row.t, row.accuracy, row.round_len, row.submissions
         );
     }
 

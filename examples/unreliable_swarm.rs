@@ -9,29 +9,34 @@
 //! cargo run --release --example unreliable_swarm     # mock engine, instant
 //! ```
 
-use hybridfl::config::{Dist, EngineKind, ExperimentConfig, RegionSpec};
-use hybridfl::sim::FlRun;
+use hybridfl::config::{Dist, RegionSpec};
+use hybridfl::scenario::Scenario;
 
 fn main() -> hybridfl::Result<()> {
-    let mut cfg = ExperimentConfig::task1_scaled();
-    cfg.name = "unreliable-swarm".into();
-    cfg.engine = EngineKind::Mock; // protocol dynamics; no artifacts needed
-    cfg.n_clients = 60;
-    cfg.n_edges = 3;
-    cfg.regions = vec![
-        RegionSpec { n_clients: 20, dropout_mean: 0.2 },
-        RegionSpec { n_clients: 20, dropout_mean: 0.5 },
-        RegionSpec { n_clients: 20, dropout_mean: 0.8 },
-    ];
-    cfg.dropout = Dist::new(0.5, 0.05);
-    cfg.dataset_size = 3000;
-    cfg.c_fraction = 0.3;
-    cfg.t_max = 120;
+    let sc = Scenario::task1()
+        .mock() // protocol dynamics; no artifacts needed
+        .clients(60)
+        .edges(3)
+        .dataset_size(3000)
+        .c_fraction(0.3)
+        .rounds(120)
+        .tune(|cfg| {
+            cfg.name = "unreliable-swarm".into();
+            cfg.regions = vec![
+                RegionSpec { n_clients: 20, dropout_mean: 0.2 },
+                RegionSpec { n_clients: 20, dropout_mean: 0.5 },
+                RegionSpec { n_clients: 20, dropout_mean: 0.8 },
+            ];
+            cfg.dropout = Dist::new(0.5, 0.05);
+        });
 
     println!("three regions, drop-out means 0.2 / 0.5 / 0.8 — reliability agnostic");
-    println!("cloud target: C = {} of the fleet submitting each round\n", cfg.c_fraction);
+    println!(
+        "cloud target: C = {} of the fleet submitting each round\n",
+        sc.config().c_fraction
+    );
 
-    let result = FlRun::new(cfg)?.run()?;
+    let result = sc.run()?;
 
     println!("round |        theta_r        |         C_r          |   |X_r|/n_r");
     for row in result.rounds.iter().filter(|r| r.t % 12 == 0 || r.t == 1) {

@@ -1,8 +1,10 @@
 //! Minimal CLI argument parser (clap is not in the offline vendor set).
 //!
 //! Grammar: `hybridfl <command> [positional...] [--key value|--key=value]
-//! [--switch]`. Unknown keys are the caller's concern; `Args` just
-//! tokenizes.
+//! [--switch]`. The option vocabulary is closed: a `--key` that is neither
+//! a known value option nor a known switch is an error — previously an
+//! unknown `--key value` silently became a switch plus a stray positional,
+//! which made typos like `--portocol hybridfl` vanish into thin air.
 
 use std::collections::BTreeMap;
 
@@ -15,12 +17,14 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-/// Option keys that take a value; everything else starting with `--` is a
-/// boolean switch.
+/// Option keys that take a value; `--key value` and `--key=value` both work.
 const VALUE_KEYS: &[&str] = &[
     "set", "preset", "config", "out", "seed", "protocol", "rounds", "c", "e-dr",
-    "scale", "target",
+    "scale", "target", "backend",
 ];
+
+/// Boolean switches (no value).
+const SWITCH_KEYS: &[&str] = &["full", "quick", "mock", "serial"];
 
 impl Args {
     pub fn parse(raw: impl Iterator<Item = String>) -> Result<Args> {
@@ -29,6 +33,13 @@ impl Args {
         while let Some(tok) = raw.next() {
             if let Some(stripped) = tok.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
+                    if !VALUE_KEYS.contains(&k) {
+                        bail!(
+                            "unknown option '--{k}' (value options: {}; switches: {})",
+                            VALUE_KEYS.join(", "),
+                            SWITCH_KEYS.join(", ")
+                        );
+                    }
                     args.options.entry(k.to_string()).or_default().push(v.to_string());
                 } else if VALUE_KEYS.contains(&stripped) {
                     match raw.next() {
@@ -39,8 +50,25 @@ impl Args {
                             .push(v),
                         None => bail!("--{stripped} expects a value"),
                     }
-                } else {
+                } else if SWITCH_KEYS.contains(&stripped) {
                     args.switches.push(stripped.to_string());
+                } else {
+                    // Unknown key. If the next token looks like a value it
+                    // would previously have been swallowed as a stray
+                    // positional — refuse loudly instead.
+                    match raw.peek() {
+                        Some(v) if !v.starts_with("--") => bail!(
+                            "unknown option '--{stripped}' (followed by '{v}'); \
+                             value options: {}; switches: {}",
+                            VALUE_KEYS.join(", "),
+                            SWITCH_KEYS.join(", ")
+                        ),
+                        _ => bail!(
+                            "unknown option '--{stripped}'; value options: {}; switches: {}",
+                            VALUE_KEYS.join(", "),
+                            SWITCH_KEYS.join(", ")
+                        ),
+                    }
                 }
             } else {
                 args.positional.push(tok);
@@ -94,6 +122,12 @@ mod tests {
         Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
     }
 
+    fn parse_err(toks: &[&str]) -> String {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+            .unwrap_err()
+            .to_string()
+    }
+
     #[test]
     fn parses_commands_options_switches() {
         let a = parse(&[
@@ -117,5 +151,29 @@ mod tests {
         assert_eq!(a.get_parsed::<usize>("rounds").unwrap(), Some(42));
         let bad = parse(&["run", "--rounds", "xyz"]);
         assert!(bad.get_parsed::<usize>("rounds").is_err());
+    }
+
+    #[test]
+    fn unknown_key_with_value_errors_helpfully() {
+        // Previously: '--portocol' became a switch and 'hybridfl' a stray
+        // positional. Now it errors, naming both the key and the value it
+        // would have swallowed.
+        let msg = parse_err(&["run", "--portocol", "hybridfl"]);
+        assert!(msg.contains("--portocol"), "{msg}");
+        assert!(msg.contains("hybridfl"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_switch_errors() {
+        let msg = parse_err(&["run", "--bogus"]);
+        assert!(msg.contains("--bogus"), "{msg}");
+        let msg = parse_err(&["run", "--bogus=1"]);
+        assert!(msg.contains("--bogus"), "{msg}");
+    }
+
+    #[test]
+    fn backend_is_a_value_key() {
+        let a = parse(&["run", "--backend", "live"]);
+        assert_eq!(a.get("backend"), Some("live"));
     }
 }

@@ -1,0 +1,221 @@
+//! [`LiveClusterEnv`] — the live threaded cloud/edge/client cluster as an
+//! [`FlEnvironment`] backend.
+//!
+//! The same seeded draws that parameterize the virtual-clock backend
+//! (which clients drop, how long each survivor takes) parameterize the
+//! world here too — but the round itself is *enacted*: every client is an
+//! OS thread behind an mpsc channel, edges relay jobs down and submissions
+//! up, and the cloud (the caller's thread, inside `run_round`) arbitrates
+//! quota vs deadline from real message arrivals in wall-clock time scaled
+//! by `time_scale`. Out-of-order arrivals, racing edges and straggler
+//! stop-signals are therefore real concurrency, not bookkeeping.
+//!
+//! Client compute uses the mock engine regardless of `cfg.engine`: the
+//! PJRT client is not `Send` (Rc-based FFI handles), and the live backend
+//! exists to prove *coordination*, not numerics — the virtual-clock
+//! backend carries real training. Because both backends share the fate
+//! draws and the mock training math, a live run reproduces a sim run's
+//! per-round selection counts and quota behavior whenever wall-clock
+//! jitter is small against the scaled completion-time gaps (use a
+//! generous `time_scale`; see `tests/live_runtime.rs`).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::env::{
+    charge_energy, draw_fates, draw_selection, region_histogram, resolve_cutoff, Arrival,
+    CutPlan, CutoffPolicy, FlEnvironment, RoundOutcome, Selection, Starts, World,
+};
+use crate::live::cluster::ClusterFabric;
+use crate::live::messages::RoundJob;
+use crate::model::ModelParams;
+use crate::runtime::{build_engine, Engine, EvalResult};
+use crate::Result;
+
+pub struct LiveClusterEnv {
+    world: World,
+    fabric: ClusterFabric,
+    /// Cloud-side evaluation engine (mock — see module docs).
+    eval_engine: Box<dyn Engine>,
+    region_data: Vec<f64>,
+    time_scale: f64,
+}
+
+impl LiveClusterEnv {
+    /// Build the world and spawn the thread fabric (1 edge thread per
+    /// region + 1 thread per client). `time_scale` is wall-clock seconds
+    /// per virtual second (e.g. `1e-4` ⇒ a 90 s virtual deadline becomes
+    /// 9 ms).
+    pub fn new(cfg: ExperimentConfig, time_scale: f64) -> Result<LiveClusterEnv> {
+        anyhow::ensure!(
+            time_scale > 0.0 && time_scale.is_finite(),
+            "time_scale must be positive and finite, got {time_scale}"
+        );
+        let mut cfg = cfg;
+        // Live numerics are always mock (PJRT handles are not Send).
+        cfg.engine = EngineKind::Mock;
+        let world = World::build(cfg)?;
+        let fabric = ClusterFabric::spawn(&world, time_scale)?;
+        let eval_engine = build_engine(&world.cfg, Arc::clone(&world.data))?;
+        let region_data = world.region_data_sizes();
+        Ok(LiveClusterEnv {
+            world,
+            fabric,
+            eval_engine,
+            region_data,
+            time_scale,
+        })
+    }
+}
+
+impl FlEnvironment for LiveClusterEnv {
+    fn cfg(&self) -> &ExperimentConfig {
+        &self.world.cfg
+    }
+
+    fn n_regions(&self) -> usize {
+        self.world.topo.n_regions()
+    }
+
+    fn n_clients(&self) -> usize {
+        self.world.topo.n_clients()
+    }
+
+    fn region_size(&self, r: usize) -> usize {
+        self.world.topo.region_size(r)
+    }
+
+    fn region_data_size(&self, r: usize) -> f64 {
+        self.region_data[r]
+    }
+
+    fn t_c2e2c(&self) -> f64 {
+        self.world.tm.t_c2e2c
+    }
+
+    fn init_model(&self) -> ModelParams {
+        self.eval_engine.init_params()
+    }
+
+    fn run_round(
+        &mut self,
+        t: usize,
+        selection: Selection,
+        starts: Starts<'_>,
+        policy: CutoffPolicy,
+    ) -> Result<RoundOutcome> {
+        let m = self.world.topo.n_regions();
+        let mut rng = self.world.rng.split(t as u64);
+
+        // Same world derivation as the virtual clock backend.
+        let selected = draw_selection(&self.world.topo, &selection, &mut rng);
+        let fates = draw_fates(&self.world, &selected, &mut rng);
+
+        // Fan the jobs out to the edges (who relay to their clients).
+        let mut jobs: Vec<Vec<RoundJob>> = vec![Vec::new(); m];
+        for f in &fates {
+            jobs[f.region].push(RoundJob {
+                client: f.client,
+                dropped: f.dropped,
+                completion: f.completion,
+            });
+        }
+        let start_arcs: Vec<Arc<ModelParams>> = match starts {
+            Starts::Global(mdl) => {
+                let a = Arc::new(mdl.clone());
+                (0..m).map(|_| Arc::clone(&a)).collect()
+            }
+            Starts::PerRegion(ms) => ms.iter().map(|mdl| Arc::new(mdl.clone())).collect(),
+        };
+        // How many arrivals end the collection loop early. For the
+        // wait-all policies the cut point is already fully determined by
+        // the fates (deadline, or last completion), so the environment —
+        // which drew those fates — counts only the submissions that can
+        // actually arrive; waiting out the full scaled deadline for
+        // clients it knows dropped would change nothing but wall-clock.
+        let target = match policy {
+            CutoffPolicy::Quota(q) => q,
+            CutoffPolicy::AllSelected | CutoffPolicy::AllPerRegion => fates
+                .iter()
+                .filter(|f| !f.dropped && f.completion <= self.world.tm.t_lim)
+                .count(),
+        };
+        let deadline = Duration::from_secs_f64(self.world.tm.t_lim * self.time_scale);
+
+        // The cloud leader loop: collect real arrivals until the target
+        // count or the wall-clock deadline, then broadcast the round-end
+        // signal that stops straggling clients.
+        let mut subs = self.fabric.round(t, &start_arcs, jobs, target, deadline)?;
+
+        // Reorder wall-clock arrivals into selection order so aggregation
+        // consumes them exactly as the virtual-clock backend does.
+        let order: HashMap<usize, usize> = fates
+            .iter()
+            .enumerate()
+            .map(|(i, f)| (f.client, i))
+            .collect();
+        subs.sort_by_key(|s| order.get(&s.client).copied().unwrap_or(usize::MAX));
+
+        // Accounting: for the wait-all policies the cut point is fully
+        // determined by the fates; for the quota policy it is whatever the
+        // wall clock actually delivered.
+        let plan = match policy {
+            CutoffPolicy::Quota(q) => {
+                if subs.len() >= q {
+                    let completion_of: HashMap<usize, f64> =
+                        fates.iter().map(|f| (f.client, f.completion)).collect();
+                    let cut = subs
+                        .iter()
+                        .filter_map(|s| completion_of.get(&s.client).copied())
+                        .fold(0.0f64, f64::max)
+                        .min(self.world.tm.t_lim);
+                    CutPlan {
+                        cuts: vec![cut; m],
+                        round_len: cut,
+                        deadline_hit: false,
+                    }
+                } else {
+                    CutPlan {
+                        cuts: vec![self.world.tm.t_lim; m],
+                        round_len: self.world.tm.t_lim,
+                        deadline_hit: true,
+                    }
+                }
+            }
+            CutoffPolicy::AllSelected | CutoffPolicy::AllPerRegion => {
+                resolve_cutoff(&self.world.tm, m, &fates, policy)
+            }
+        };
+        let energy_j = charge_energy(&self.world, &fates, &plan.cuts);
+
+        let selected_h = region_histogram(m, fates.iter().map(|f| f.region));
+        let alive = region_histogram(m, fates.iter().filter(|f| !f.dropped).map(|f| f.region));
+        let submissions = region_histogram(m, subs.iter().map(|s| s.region));
+        let arrivals: Vec<Arrival> = subs
+            .into_iter()
+            .map(|s| Arrival {
+                client: s.client,
+                region: s.region,
+                model: s.model,
+                data_size: s.data_size,
+                loss: s.loss,
+            })
+            .collect();
+
+        Ok(RoundOutcome {
+            selected: selected_h,
+            alive,
+            submissions,
+            arrivals,
+            round_len: plan.round_len,
+            deadline_hit: plan.deadline_hit,
+            energy_j,
+        })
+    }
+
+    fn evaluate(&mut self, model: &ModelParams) -> Result<EvalResult> {
+        self.eval_engine.evaluate(model)
+    }
+}

@@ -1,0 +1,520 @@
+//! Execution environments — one protocol implementation, every backend.
+//!
+//! [`FlEnvironment`] is the backend contract of the whole stack: a federated
+//! round, as seen by a *protocol*, is "select so-many clients, have each
+//! train from a start model, collect what comes back before the cutoff
+//! policy fires". Everything below that line — whether client fates are
+//! drawn on a virtual clock or played out by real threads over channels —
+//! is an environment concern. The three protocols (`FedAvg`, `HierFAVG`,
+//! `HybridFL`) are each written **once** against this trait and run
+//! unchanged on every backend.
+//!
+//! Two implementations ship:
+//!
+//! * [`VirtualClockEnv`] — the deterministic MEC simulator (absorbs the old
+//!   `sim::FlRun` round loop). Fates are drawn from the seeded RNG, time is
+//!   arithmetic, training runs inline on the configured engine.
+//! * [`LiveClusterEnv`] — the live threaded cluster: one edge thread per
+//!   region, one client thread per device, mpsc channels as the network.
+//!   The same seeded draws parameterize the world (who drops, how long a
+//!   client takes), but the round cut — quota vs deadline — is arbitrated
+//!   by the cloud in *wall-clock* time from real message arrivals, scaled
+//!   by `time_scale`.
+//!
+//! # The backend contract
+//!
+//! A conforming environment must guarantee, for every `run_round` call:
+//!
+//! 1. **Reliability-agnosticism.** Protocols never see a `ClientProfile`,
+//!    a drop-out probability, or a completion time. The only client-derived
+//!    facts that cross the trait are the [`RoundOutcome`] observables: the
+//!    per-region selection/submission counts and the submitted models
+//!    (with their data sizes and local losses). `RoundOutcome::alive` is
+//!    simulator ground truth recorded *by the environment* for the metrics
+//!    layer; protocol decision logic must not read it (and the shipped
+//!    protocols do not).
+//! 2. **Selection is uniform.** The protocol chooses *how many* clients to
+//!    select ([`Selection`]); the environment samples *which* ones,
+//!    uniformly without replacement. No environment may bias selection by
+//!    hidden device state.
+//! 3. **Cutoff semantics.** [`CutoffPolicy::Quota`] ends the round the
+//!    moment the given number of submissions arrived globally (or at
+//!    `T_lim`); the `All*` policies wait for every selected client, capped
+//!    at `T_lim`. Submissions arriving after the cut are not reported.
+//! 4. **Accounting.** `round_len` is the virtual core round length
+//!    (protocols add cloud↔edge RTT per their own rules), and `energy_j`
+//!    charges every selected client per eq. 35: dropped clients burn half
+//!    their training energy, in-time finishers the full round, stragglers
+//!    the `cutoff/completion` fraction.
+//!
+//! Drive a protocol to completion over any environment with
+//! [`run_to_completion`], or use the [`crate::scenario::Scenario`] builder
+//! which wraps environment construction, protocol construction and the
+//! driver behind one fluent entry point.
+
+pub mod live;
+pub mod virtual_clock;
+
+pub use live::LiveClusterEnv;
+pub use virtual_clock::VirtualClockEnv;
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::data::FederatedData;
+use crate::devices::{self, ClientProfile};
+use crate::energy::EnergyModel;
+use crate::model::ModelParams;
+use crate::protocols::Protocol;
+use crate::rng::Rng;
+use crate::runtime::EvalResult;
+use crate::selection::select_clients;
+use crate::timing::TimingModel;
+use crate::topology::Topology;
+use crate::Result;
+
+/// How many clients the protocol wants selected this round.
+#[derive(Clone, Debug)]
+pub enum Selection {
+    /// `counts[r]` clients, uniformly without replacement within region r
+    /// (HierFAVG, HybridFL).
+    PerRegion(Vec<usize>),
+    /// `count` clients uniformly across the whole fleet (FedAvg — no edge
+    /// layer in the selection step).
+    Uniform(usize),
+}
+
+/// Which model each selected client trains from.
+#[derive(Clone, Copy)]
+pub enum Starts<'a> {
+    /// Every region trains from the same global model (FedAvg, HybridFL).
+    Global(&'a ModelParams),
+    /// Region r trains from `models[r]` (HierFAVG's regional models).
+    PerRegion(&'a [ModelParams]),
+}
+
+impl<'a> Starts<'a> {
+    pub fn for_region(&self, r: usize) -> &'a ModelParams {
+        match *self {
+            Starts::Global(m) => m,
+            Starts::PerRegion(ms) => &ms[r],
+        }
+    }
+}
+
+/// When the environment ends the round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CutoffPolicy {
+    /// End when this many submissions arrived globally, else at `T_lim`
+    /// (HybridFL's quota trigger).
+    Quota(usize),
+    /// Wait for every selected client; a drop-out stalls the round to
+    /// `T_lim` (FedAvg). One global cutoff.
+    AllSelected,
+    /// Each region waits for all of its selected clients, capped at
+    /// `T_lim`; the round ends when the slowest region is done (HierFAVG).
+    AllPerRegion,
+}
+
+/// One in-time submission: a locally trained model plus the observables the
+/// aggregation rules need. `client` is an opaque id (stable within a run);
+/// nothing here identifies reliability.
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    pub client: usize,
+    pub region: usize,
+    pub model: ModelParams,
+    /// |D_k| — carried by the update envelope for weighted aggregation.
+    pub data_size: f64,
+    /// Local training loss (diagnostic).
+    pub loss: f64,
+}
+
+/// Everything a protocol observes from one executed round.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    /// |U_r(t)| per region.
+    pub selected: Vec<usize>,
+    /// |X_r(t)| per region — environment-side ground truth for the metrics
+    /// layer; protocol logic must not consult it.
+    pub alive: Vec<usize>,
+    /// |S_r(t)| per region — submissions collected before the cut.
+    pub submissions: Vec<usize>,
+    /// The in-time submissions, in selection order.
+    pub arrivals: Vec<Arrival>,
+    /// Core round length in virtual seconds (no cloud↔edge RTT).
+    pub round_len: f64,
+    /// True when the cutoff policy was *not* satisfied before `T_lim`.
+    pub deadline_hit: bool,
+    /// Device energy charged to the fleet this round (Joules).
+    pub energy_j: f64,
+}
+
+/// The backend trait: capabilities for selection fan-out, client-fate
+/// observation, local training, submission collection and round-cutoff /
+/// energy accounting. See the module docs for the conformance contract.
+pub trait FlEnvironment {
+    fn cfg(&self) -> &ExperimentConfig;
+    fn n_regions(&self) -> usize;
+    fn n_clients(&self) -> usize;
+    fn region_size(&self, r: usize) -> usize;
+    /// |D^r| — total samples held by region r's clients.
+    fn region_data_size(&self, r: usize) -> f64;
+    /// Cloud↔edge round-trip time (eq. 32). Protocols with an edge layer
+    /// add it to `round_len` per their own schedule.
+    fn t_c2e2c(&self) -> f64;
+    /// Initial global model w(0).
+    fn init_model(&self) -> ModelParams;
+    /// Execute one full round: select, fan out training, collect until the
+    /// cutoff policy fires, account time and energy.
+    fn run_round(
+        &mut self,
+        t: usize,
+        selection: Selection,
+        starts: Starts<'_>,
+        policy: CutoffPolicy,
+    ) -> Result<RoundOutcome>;
+    /// Cloud-side evaluation of a model on the held-out set.
+    fn evaluate(&mut self, model: &ModelParams) -> Result<EvalResult>;
+}
+
+/// A selected client's fate in one round — drop-out draw plus completion
+/// time. Environment-internal ground truth: this type never crosses the
+/// [`FlEnvironment`] trait into protocol code.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientFate {
+    pub client: usize,
+    pub region: usize,
+    /// True if the client dropped/opted out this round (never responds).
+    pub dropped: bool,
+    /// Completion time from round start (comm + training) when not
+    /// dropped; `f64::INFINITY` when dropped.
+    pub completion: f64,
+}
+
+/// The shared simulated world both backends are parameterized by:
+/// topology, corpus, device fleet, timing/energy models, and the RNG stream
+/// rounds draw from. Built identically (same split discipline) so a sim
+/// and a live run with the same config inhabit the same random world.
+pub(crate) struct World {
+    pub cfg: ExperimentConfig,
+    pub topo: Topology,
+    pub data: Arc<FederatedData>,
+    pub profiles: Vec<ClientProfile>,
+    pub tm: TimingModel,
+    pub em: EnergyModel,
+    /// Base stream for per-round draws (`split(t)` per round).
+    pub rng: Rng,
+}
+
+impl World {
+    pub fn build(cfg: ExperimentConfig) -> Result<World> {
+        cfg.validate()?;
+        let rng = Rng::new(cfg.seed);
+        let topo = Topology::build(&cfg, &mut rng.split(1))?;
+        let data = Arc::new(crate::data::build(&cfg, &mut rng.split(2)));
+        let profiles = devices::sample_fleet(&cfg, &topo, &mut rng.split(3));
+        let tm = TimingModel::new(&cfg);
+        let em = EnergyModel::new(&cfg);
+        let round_rng = rng.split(4);
+        Ok(World {
+            cfg,
+            topo,
+            data,
+            profiles,
+            tm,
+            em,
+            rng: round_rng,
+        })
+    }
+
+    /// |D^r| per region.
+    pub fn region_data_sizes(&self) -> Vec<f64> {
+        self.topo
+            .regions
+            .iter()
+            .map(|cs| self.data.region_data_size(cs) as f64)
+            .collect()
+    }
+}
+
+/// Uniform selection per the [`Selection`] spec. Both backends call this
+/// with the round's RNG so the sampled sets are identical across backends.
+pub(crate) fn draw_selection(topo: &Topology, selection: &Selection, rng: &mut Rng) -> Vec<usize> {
+    match selection {
+        Selection::PerRegion(counts) => {
+            let mut out = Vec::new();
+            for (r, &want) in counts.iter().enumerate() {
+                out.extend(select_clients(&topo.regions[r], want, rng));
+            }
+            out
+        }
+        Selection::Uniform(count) => {
+            let all: Vec<usize> = (0..topo.n_clients()).collect();
+            select_clients(&all, *count, rng)
+        }
+    }
+}
+
+/// Draw each selected client's fate: independent drop-out draw (dr_k) plus
+/// deterministic completion time from the timing model.
+pub(crate) fn draw_fates(world: &World, selected: &[usize], rng: &mut Rng) -> Vec<ClientFate> {
+    selected
+        .iter()
+        .map(|&k| {
+            let p = &world.profiles[k];
+            let dropped = rng.bernoulli(p.dropout_p);
+            let psize = world.data.partitions[k].len() as f64;
+            let completion = if dropped {
+                f64::INFINITY
+            } else {
+                world.tm.completion(p, psize)
+            };
+            ClientFate {
+                client: k,
+                region: world.topo.region_of[k],
+                dropped,
+                completion,
+            }
+        })
+        .collect()
+}
+
+/// A resolved round cut: per-region cutoff times plus the round length and
+/// whether the policy degraded to the deadline.
+pub(crate) struct CutPlan {
+    pub cuts: Vec<f64>,
+    pub round_len: f64,
+    pub deadline_hit: bool,
+}
+
+/// Resolve a cutoff policy analytically from the fates (virtual clock; the
+/// live backend uses it for the `All*` policies whose cut point is fully
+/// determined by the fates).
+pub(crate) fn resolve_cutoff(
+    tm: &TimingModel,
+    m: usize,
+    fates: &[ClientFate],
+    policy: CutoffPolicy,
+) -> CutPlan {
+    match policy {
+        CutoffPolicy::Quota(q) => {
+            let mut completions: Vec<f64> = fates
+                .iter()
+                .filter(|f| !f.dropped)
+                .map(|f| f.completion)
+                .collect();
+            completions.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let (cut, met) = if completions.len() >= q && completions[q - 1] <= tm.t_lim {
+                (completions[q - 1], true)
+            } else {
+                (tm.t_lim, false)
+            };
+            CutPlan {
+                cuts: vec![cut; m],
+                round_len: cut,
+                deadline_hit: !met,
+            }
+        }
+        CutoffPolicy::AllSelected => {
+            let max_c = fates.iter().map(|f| f.completion).fold(0.0f64, f64::max);
+            let cut = max_c.min(tm.t_lim);
+            CutPlan {
+                cuts: vec![cut; m],
+                round_len: cut,
+                deadline_hit: max_c > tm.t_lim,
+            }
+        }
+        CutoffPolicy::AllPerRegion => {
+            let mut cuts = vec![0.0f64; m];
+            for f in fates {
+                cuts[f.region] = cuts[f.region].max(f.completion);
+            }
+            for c in cuts.iter_mut() {
+                *c = c.min(tm.t_lim);
+            }
+            let round_len = cuts.iter().copied().fold(0.0f64, f64::max);
+            let deadline_hit = fates.iter().any(|f| f.completion > tm.t_lim);
+            CutPlan {
+                cuts,
+                round_len,
+                deadline_hit,
+            }
+        }
+    }
+}
+
+/// Charge device energy for a round that ended at `cuts[region]`:
+///
+/// * dropped clients burn half their training energy (abort mid-epoch, no
+///   upload);
+/// * clients finishing before the cutoff burn the full eq. 35;
+/// * stragglers are stopped by the round-end signal, burning only the
+///   `cutoff/completion` fraction — precisely where the quota-triggered
+///   protocols save device energy relative to deadline-bound baselines.
+pub(crate) fn charge_energy(world: &World, fates: &[ClientFate], cuts: &[f64]) -> f64 {
+    let mut total = 0.0;
+    for f in fates {
+        let p = &world.profiles[f.client];
+        let psize = world.data.partitions[f.client].len() as f64;
+        let spend = if f.dropped {
+            world.em.aborted_round(p, &world.tm, psize).total_j()
+        } else {
+            let full = world.em.full_round(p, &world.tm, psize).total_j();
+            let cut = cuts[f.region];
+            if f.completion <= cut {
+                full
+            } else {
+                full * (cut / f.completion).clamp(0.0, 1.0)
+            }
+        };
+        total += spend;
+    }
+    total
+}
+
+/// Per-region histogram of region indices.
+pub(crate) fn region_histogram(m: usize, regions: impl Iterator<Item = usize>) -> Vec<usize> {
+    let mut out = vec![0usize; m];
+    for r in regions {
+        out[r] += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Run traces and the generic driver (formerly the body of `sim::FlRun::run`).
+// ---------------------------------------------------------------------------
+
+use crate::selection::slack::SlackState;
+
+/// Per-round trace row — one per executed round. This is the substrate for
+/// every figure: accuracy traces (Figs. 4/6), slack traces (Fig. 2), energy
+/// accumulation (Figs. 5/7).
+#[derive(Clone, Debug)]
+pub struct RoundTrace {
+    pub t: usize,
+    pub round_len: f64,
+    /// Virtual time at the end of this round.
+    pub cum_time: f64,
+    /// Global-model accuracy after this round (evaluated every
+    /// `eval_every` rounds; in between, carries the last measured value).
+    pub accuracy: f64,
+    /// Best accuracy seen so far ("the cloud always keeps the best global
+    /// model").
+    pub best_accuracy: f64,
+    pub eval_loss: f64,
+    pub selected: Vec<usize>,
+    pub alive: Vec<usize>,
+    pub submissions: Vec<usize>,
+    /// Cumulative device energy, Joules, across the fleet.
+    pub cum_energy_j: f64,
+    pub deadline_hit: bool,
+    pub cloud_aggregated: bool,
+    /// HybridFL slack telemetry (θ̂_r, C_r, q_r per region).
+    pub slack: Option<Vec<SlackState>>,
+}
+
+/// End-of-run aggregates — the numbers the paper's tables report.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub protocol: String,
+    pub rounds_run: usize,
+    /// Best global-model accuracy over the run ("Best Accuracy").
+    pub best_accuracy: f64,
+    /// Mean T_round ("Round length (sec)").
+    pub avg_round_len: f64,
+    /// Rounds needed to reach `target_accuracy` ("Rounds needed"), if hit.
+    pub rounds_to_target: Option<usize>,
+    /// Virtual time to reach the target ("Total time (sec)"), if hit.
+    pub time_to_target: Option<f64>,
+    /// Mean per-device energy in Wh over the whole run (Figs. 5/7).
+    pub mean_device_energy_wh: f64,
+    /// Total virtual time of the run.
+    pub total_time: f64,
+    pub final_loss: f64,
+}
+
+/// A complete run: summary plus the full per-round trace. Identical shape
+/// for every backend — this is what [`crate::scenario::Scenario::run`]
+/// returns whether the rounds played out on the virtual clock or on the
+/// live threaded cluster.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub summary: RunSummary,
+    pub rounds: Vec<RoundTrace>,
+}
+
+/// Drive a protocol for `t_max` rounds (or until `target_accuracy`) over
+/// any backend, recording the full trace. This is the single round loop
+/// shared by sim runs, live runs and the sweep harness.
+pub fn run_to_completion(
+    env: &mut dyn FlEnvironment,
+    protocol: &mut dyn Protocol,
+) -> Result<RunResult> {
+    let t_max = env.cfg().t_max;
+    let eval_every = env.cfg().eval_every;
+    let target_accuracy = env.cfg().target_accuracy;
+    let n_clients = env.cfg().n_clients;
+    let protocol_name = env.cfg().protocol.as_str().to_string();
+
+    let mut rounds: Vec<RoundTrace> = Vec::with_capacity(t_max);
+    let mut cum_time = 0.0f64;
+    let mut cum_energy = 0.0f64;
+    let mut best_acc = f64::MIN;
+    let mut last_acc = 0.0f64;
+    let mut last_loss = f64::NAN;
+    let mut rounds_to_target = None;
+    let mut time_to_target = None;
+
+    for t in 1..=t_max {
+        let rec = protocol.run_round(t, env)?;
+        cum_time += rec.round_len;
+        cum_energy += rec.energy_j;
+
+        if t % eval_every == 0 || t == t_max {
+            let ev = env.evaluate(protocol.global_model())?;
+            last_acc = ev.accuracy;
+            last_loss = ev.loss;
+        }
+        best_acc = best_acc.max(last_acc);
+
+        rounds.push(RoundTrace {
+            t,
+            round_len: rec.round_len,
+            cum_time,
+            accuracy: last_acc,
+            best_accuracy: best_acc,
+            eval_loss: last_loss,
+            selected: rec.selected,
+            alive: rec.alive,
+            submissions: rec.submissions,
+            cum_energy_j: cum_energy,
+            deadline_hit: rec.deadline_hit,
+            cloud_aggregated: rec.cloud_aggregated,
+            slack: protocol.slack_states(),
+        });
+
+        if let Some(target) = target_accuracy {
+            if best_acc >= target && rounds_to_target.is_none() {
+                rounds_to_target = Some(t);
+                time_to_target = Some(cum_time);
+                break; // "Stop @Acc" mode
+            }
+        }
+    }
+
+    let n_rounds = rounds.len().max(1);
+    let summary = RunSummary {
+        protocol: protocol_name,
+        rounds_run: rounds.len(),
+        best_accuracy: best_acc.max(0.0),
+        avg_round_len: cum_time / n_rounds as f64,
+        rounds_to_target,
+        time_to_target,
+        mean_device_energy_wh: cum_energy / 3600.0 / n_clients as f64,
+        total_time: cum_time,
+        final_loss: last_loss,
+    };
+    Ok(RunResult { summary, rounds })
+}

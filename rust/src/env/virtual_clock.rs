@@ -1,0 +1,137 @@
+//! [`VirtualClockEnv`] — the deterministic MEC simulator as an
+//! [`FlEnvironment`] backend.
+//!
+//! This absorbs the round mechanics that used to live inside
+//! `sim::FlRun` + `protocols::RoundCtx`: selection sampling, fate draws,
+//! cutoff resolution, energy charging, and inline local training on the
+//! configured compute engine. Rounds are pure arithmetic on a virtual
+//! clock; every draw comes from the seeded per-round RNG stream, so runs
+//! are bitwise reproducible per seed.
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::env::{
+    charge_energy, draw_fates, draw_selection, region_histogram, resolve_cutoff, Arrival,
+    CutoffPolicy, FlEnvironment, RoundOutcome, Selection, Starts, World,
+};
+use crate::model::ModelParams;
+use crate::runtime::{build_engine, Engine, EvalResult};
+use crate::timing::TimingModel;
+use crate::Result;
+
+pub struct VirtualClockEnv {
+    world: World,
+    engine: Box<dyn Engine>,
+    region_data: Vec<f64>,
+}
+
+impl VirtualClockEnv {
+    /// Build the full simulated world from a config (deterministic in
+    /// `cfg.seed`).
+    pub fn new(cfg: ExperimentConfig) -> Result<VirtualClockEnv> {
+        let world = World::build(cfg)?;
+        let engine = build_engine(&world.cfg, Arc::clone(&world.data))?;
+        let region_data = world.region_data_sizes();
+        Ok(VirtualClockEnv {
+            world,
+            engine,
+            region_data,
+        })
+    }
+
+    /// The timing model in effect (deadline `t_lim`, RTT, completions).
+    pub fn timing(&self) -> &TimingModel {
+        &self.world.tm
+    }
+}
+
+impl FlEnvironment for VirtualClockEnv {
+    fn cfg(&self) -> &ExperimentConfig {
+        &self.world.cfg
+    }
+
+    fn n_regions(&self) -> usize {
+        self.world.topo.n_regions()
+    }
+
+    fn n_clients(&self) -> usize {
+        self.world.topo.n_clients()
+    }
+
+    fn region_size(&self, r: usize) -> usize {
+        self.world.topo.region_size(r)
+    }
+
+    fn region_data_size(&self, r: usize) -> f64 {
+        self.region_data[r]
+    }
+
+    fn t_c2e2c(&self) -> f64 {
+        self.world.tm.t_c2e2c
+    }
+
+    fn init_model(&self) -> ModelParams {
+        self.engine.init_params()
+    }
+
+    fn run_round(
+        &mut self,
+        t: usize,
+        selection: Selection,
+        starts: Starts<'_>,
+        policy: CutoffPolicy,
+    ) -> Result<RoundOutcome> {
+        let m = self.world.topo.n_regions();
+        let mut rng = self.world.rng.split(t as u64);
+
+        // Selection fan-out, then per-client fates — same RNG order as the
+        // live backend so both inhabit the same random world.
+        let selected = draw_selection(&self.world.topo, &selection, &mut rng);
+        let fates = draw_fates(&self.world, &selected, &mut rng);
+
+        // Round cut per policy, then energy accounting against it.
+        let plan = resolve_cutoff(&self.world.tm, m, &fates, policy);
+        let energy_j = charge_energy(&self.world, &fates, &plan.cuts);
+
+        // Train the in-time survivors, in selection order.
+        let mut arrivals = Vec::new();
+        for f in &fates {
+            if f.dropped || f.completion > plan.cuts[f.region] {
+                continue;
+            }
+            let start = starts.for_region(f.region);
+            let out = self.engine.train_local(
+                start,
+                &self.world.data.partitions[f.client],
+                self.world.cfg.local_epochs,
+                self.world.cfg.lr as f32,
+            )?;
+            arrivals.push(Arrival {
+                client: f.client,
+                region: f.region,
+                model: out.params,
+                data_size: self.world.data.partitions[f.client].len() as f64,
+                loss: out.loss,
+            });
+        }
+
+        let selected_h = region_histogram(m, fates.iter().map(|f| f.region));
+        let alive = region_histogram(m, fates.iter().filter(|f| !f.dropped).map(|f| f.region));
+        let submissions = region_histogram(m, arrivals.iter().map(|a| a.region));
+
+        Ok(RoundOutcome {
+            selected: selected_h,
+            alive,
+            submissions,
+            arrivals,
+            round_len: plan.round_len,
+            deadline_hit: plan.deadline_hit,
+            energy_j,
+        })
+    }
+
+    fn evaluate(&mut self, model: &ModelParams) -> Result<EvalResult> {
+        self.engine.evaluate(model)
+    }
+}

@@ -9,13 +9,21 @@
 //! * **Figs. 4/6** — per-round accuracy traces, one CSV per
 //!   (protocol, C, E[dr]) cell.
 //! * **Figs. 5/7** — mean on-device energy (Wh) to reach the target.
+//!
+//! Grid cells share nothing but their config, so by default they execute
+//! concurrently on scoped worker threads (one run per cell, each with its
+//! own engine/world). Cell order, table rendering and every emitted
+//! artifact are independent of the execution schedule: a parallel sweep is
+//! byte-identical to `parallel: false`.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::config::{EngineKind, ExperimentConfig, ProtocolKind, TaskKind};
 use crate::jsonx::Json;
 use crate::metrics::{self, opt_cell, Table};
-use crate::sim::{FlRun, RunResult};
+use crate::scenario::Scenario;
+use crate::sim::RunResult;
 use crate::Result;
 
 /// Scale/grid options for a sweep.
@@ -32,11 +40,22 @@ pub struct SweepOpts {
     /// Override t_max (budget control for the heavy LeNet sweeps).
     pub t_max: Option<usize>,
     pub seed: u64,
+    /// Execute grid cells on scoped worker threads (results are identical
+    /// to the serial schedule; only wall-clock changes).
+    pub parallel: bool,
 }
 
 impl Default for SweepOpts {
     fn default() -> Self {
-        SweepOpts { full: false, quick: false, mock: false, target: None, t_max: None, seed: 42 }
+        SweepOpts {
+            full: false,
+            quick: false,
+            mock: false,
+            target: None,
+            t_max: None,
+            seed: 42,
+            parallel: true,
+        }
     }
 }
 
@@ -97,19 +116,12 @@ fn default_target(task: TaskKind, full: bool) -> f64 {
     }
 }
 
-/// Run the full sweep for one task. Emits per-cell trace CSVs (Figs. 4/6),
-/// the rendered table (Tables III/IV), the energy table (Figs. 5/7), and
-/// a machine-readable JSON, all under `out_dir`.
-pub fn run_task_sweep(
-    task: TaskKind,
-    opts: &SweepOpts,
-    out_dir: &Path,
-) -> Result<SweepResult> {
+/// The fixed cell enumeration (outer E[dr], then C, then protocol). Table
+/// rendering and artifact emission follow this order regardless of the
+/// execution schedule.
+fn cell_configs(task: TaskKind, opts: &SweepOpts) -> Vec<ExperimentConfig> {
     let (drs, cs) = grid(opts.quick);
-    let target = opts.target.unwrap_or_else(|| default_target(task, opts.full));
-    std::fs::create_dir_all(out_dir)?;
-
-    let mut cells = Vec::new();
+    let mut cfgs = Vec::new();
     for &e_dr in &drs {
         for &c in &cs {
             for proto in ProtocolKind::ALL {
@@ -125,45 +137,108 @@ pub fn run_task_sweep(
                     e_dr,
                     c
                 );
-                eprintln!("[sweep] running {}", cfg.name);
-                let name = cfg.name.clone();
-                let result = FlRun::new(cfg)?.run()?;
-
-                // Derive the "Stop @Acc" columns from the trace.
-                let crossing = result
-                    .rounds
-                    .iter()
-                    .find(|r| r.best_accuracy >= target);
-                let (rt, tt, energy_j) = match crossing {
-                    Some(row) => (
-                        Some(row.t),
-                        Some(row.cum_time),
-                        row.cum_energy_j,
-                    ),
-                    None => (
-                        None,
-                        None,
-                        result.rounds.last().map_or(0.0, |r| r.cum_energy_j),
-                    ),
-                };
-                let n_clients = base_config(task, opts).n_clients as f64;
-                metrics::write_csv(
-                    &out_dir.join(format!("trace_{name}.csv")),
-                    &result.rounds,
-                )?;
-                cells.push(CellResult {
-                    protocol: proto,
-                    e_dr,
-                    c,
-                    best_accuracy: result.summary.best_accuracy,
-                    avg_round_len: result.summary.avg_round_len,
-                    rounds_to_target: rt,
-                    time_to_target: tt,
-                    energy_to_target_wh: energy_j / 3600.0 / n_clients,
-                    result,
-                });
+                cfgs.push(cfg);
             }
         }
+    }
+    cfgs
+}
+
+/// Execute every cell (independent runs), optionally on scoped worker
+/// threads. Results come back in cell order either way.
+fn run_cells(cfgs: &[ExperimentConfig], parallel: bool) -> Result<Vec<RunResult>> {
+    let workers = if parallel {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(cfgs.len())
+            .max(1)
+    } else {
+        1
+    };
+    if workers <= 1 {
+        return cfgs
+            .iter()
+            .map(|cfg| {
+                eprintln!("[sweep] running {}", cfg.name);
+                Scenario::from_config(cfg.clone()).run()
+            })
+            .collect();
+    }
+
+    let mut slots: Vec<Option<Result<RunResult>>> = Vec::with_capacity(cfgs.len());
+    slots.resize_with(cfgs.len(), || None);
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let next = &next;
+        let (tx, rx) = std::sync::mpsc::channel();
+        for _ in 0..workers {
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cfgs.len() {
+                    break;
+                }
+                eprintln!("[sweep] running {}", cfgs[i].name);
+                let r = Scenario::from_config(cfgs[i].clone()).run();
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.expect("every sweep cell delivers a result"))
+        .collect()
+}
+
+/// Run the full sweep for one task. Emits per-cell trace CSVs (Figs. 4/6),
+/// the rendered table (Tables III/IV), the energy table (Figs. 5/7), and
+/// a machine-readable JSON, all under `out_dir`.
+pub fn run_task_sweep(
+    task: TaskKind,
+    opts: &SweepOpts,
+    out_dir: &Path,
+) -> Result<SweepResult> {
+    let target = opts.target.unwrap_or_else(|| default_target(task, opts.full));
+    std::fs::create_dir_all(out_dir)?;
+
+    let cfgs = cell_configs(task, opts);
+    let results = run_cells(&cfgs, opts.parallel)?;
+
+    let n_clients = base_config(task, opts).n_clients as f64;
+    let mut cells = Vec::with_capacity(cfgs.len());
+    for (cfg, result) in cfgs.iter().zip(results.into_iter()) {
+        // Derive the "Stop @Acc" columns from the trace.
+        let crossing = result.rounds.iter().find(|r| r.best_accuracy >= target);
+        let (rt, tt, energy_j) = match crossing {
+            Some(row) => (Some(row.t), Some(row.cum_time), row.cum_energy_j),
+            None => (
+                None,
+                None,
+                result.rounds.last().map_or(0.0, |r| r.cum_energy_j),
+            ),
+        };
+        metrics::write_csv(
+            &out_dir.join(format!("trace_{}.csv", cfg.name)),
+            &result.rounds,
+        )?;
+        cells.push(CellResult {
+            protocol: cfg.protocol,
+            e_dr: cfg.dropout.mean,
+            c: cfg.c_fraction,
+            best_accuracy: result.summary.best_accuracy,
+            avg_round_len: result.summary.avg_round_len,
+            rounds_to_target: rt,
+            time_to_target: tt,
+            energy_to_target_wh: energy_j / 3600.0 / n_clients,
+            result,
+        });
     }
 
     let sweep = SweepResult { task, target_accuracy: target, cells };
@@ -356,5 +431,16 @@ mod tests {
         let (drs, cs) = grid(false);
         assert_eq!(drs, vec![0.1, 0.3, 0.6]);
         assert_eq!(cs, vec![0.1, 0.3, 0.5]);
+    }
+
+    #[test]
+    fn cell_order_is_schedule_independent() {
+        let opts = SweepOpts { quick: true, mock: true, ..Default::default() };
+        let cfgs = cell_configs(TaskKind::Aerofoil, &opts);
+        assert_eq!(cfgs.len(), 6);
+        // protocol cycles fastest, then C, then E[dr].
+        assert_eq!(cfgs[0].protocol, ProtocolKind::FedAvg);
+        assert_eq!(cfgs[2].protocol, ProtocolKind::HybridFl);
+        assert!(cfgs[0].c_fraction < cfgs[3].c_fraction);
     }
 }

@@ -25,16 +25,46 @@
 //!
 //! ## Quick tour
 //!
-//! ```no_run
-//! use hybridfl::config::ExperimentConfig;
-//! use hybridfl::sim::FlRun;
+//! Experiments are described by a [`scenario::Scenario`] — what to run —
+//! and a [`scenario::Backend`] — where to run it. The same protocol
+//! implementation executes on every backend; only the substrate changes.
 //!
-//! // Scaled-down Task 1 (Aerofoil) preset, HybridFL protocol.
-//! let mut cfg = ExperimentConfig::task1_scaled();
-//! cfg.protocol = hybridfl::config::ProtocolKind::HybridFl;
-//! let result = FlRun::new(cfg).unwrap().run().unwrap();
+//! ```no_run
+//! use hybridfl::config::ProtocolKind;
+//! use hybridfl::scenario::{Backend, Scenario};
+//!
+//! // Scaled-down Task 1 (Aerofoil), HybridFL, 30% drop-out, on the
+//! // deterministic virtual clock:
+//! let result = Scenario::task1()
+//!     .protocol(ProtocolKind::HybridFl)
+//!     .dropout(0.3)
+//!     .seed(42)
+//!     .run()
+//!     .unwrap();
 //! println!("best accuracy: {:.3}", result.summary.best_accuracy);
+//!
+//! // The identical protocol on the live threaded cloud/edge/client
+//! // cluster (mock numerics, real concurrency) — same RunResult shape:
+//! let live = Scenario::task1()
+//!     .protocol(ProtocolKind::HybridFl)
+//!     .dropout(0.3)
+//!     .seed(42)
+//!     .rounds(10)
+//!     .backend(Backend::Live)
+//!     .run()
+//!     .unwrap();
+//! println!("live best accuracy: {:.3}", live.summary.best_accuracy);
 //! ```
+//!
+//! The layering underneath, for code that needs more control:
+//!
+//! * [`env`] — the [`env::FlEnvironment`] backend trait and its two
+//!   implementations ([`env::VirtualClockEnv`], [`env::LiveClusterEnv`]),
+//!   plus the generic [`env::run_to_completion`] driver.
+//! * [`protocols`] — FedAvg / HierFAVG / HybridFL, each written once
+//!   against the trait.
+//! * [`harness`] — the paper's tables and figures; the Table III/IV sweep
+//!   runs its independent grid cells on scoped worker threads.
 
 pub mod aggregation;
 pub mod benchkit;
@@ -43,6 +73,7 @@ pub mod config;
 pub mod data;
 pub mod devices;
 pub mod energy;
+pub mod env;
 pub mod harness;
 pub mod jsonx;
 pub mod live;
@@ -51,6 +82,7 @@ pub mod model;
 pub mod protocols;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod selection;
 pub mod sim;
 pub mod timing;

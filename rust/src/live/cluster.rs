@@ -1,351 +1,30 @@
-//! The live cluster: cloud leader + edge workers + client actors as OS
-//! threads over mpsc channels, executing HybridFL in wall-clock time.
+//! The live cluster fabric: edge workers + client actors as OS threads
+//! over mpsc channels, driven round-by-round by the cloud leader (the
+//! thread inside [`crate::env::LiveClusterEnv::run_round`]).
+//!
+//! This module is *pure transport and enactment*. It contains no protocol
+//! logic: no selection policy, no slack estimation, no aggregation — those
+//! live in `protocols/` above the [`crate::env::FlEnvironment`] trait and
+//! run identically on the virtual-clock backend. What the fabric provides
+//! is real concurrency: clients sleep their scaled completion times and
+//! train on their own threads, edges relay jobs down and submissions up,
+//! and the caller observes genuine out-of-order arrival, quota/deadline
+//! racing and straggler stop-signals.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
-use crate::aggregation;
-use crate::config::ExperimentConfig;
-use crate::devices::{self, ClientProfile};
-use crate::live::messages::{CloudToEdge, EdgeToClient, EdgeToCloud, Submission};
+use crate::env::World;
+use crate::live::messages::{CloudToEdge, EdgeToClient, RoundJob, Submission};
 use crate::model::ModelParams;
-use crate::rng::Rng;
-use crate::selection::{select_clients, SlackEstimator};
-use crate::timing::TimingModel;
-use crate::topology::Topology;
+use crate::runtime::mock::MockEngine;
+use crate::runtime::Engine;
 use crate::Result;
-
-/// Knobs for a live run.
-#[derive(Clone, Debug)]
-pub struct LiveOpts {
-    /// Number of federated rounds to drive.
-    pub rounds: usize,
-    /// Wall-clock seconds per virtual second (e.g. 1e-4 ⇒ a 90 s virtual
-    /// deadline becomes 9 ms).
-    pub time_scale: f64,
-}
-
-impl Default for LiveOpts {
-    fn default() -> Self {
-        LiveOpts { rounds: 10, time_scale: 1e-4 }
-    }
-}
-
-/// Per-round observability from the cloud's vantage point.
-#[derive(Clone, Debug)]
-pub struct LiveRoundStats {
-    pub t: usize,
-    pub wall: Duration,
-    pub submissions: Vec<usize>,
-    pub quota_met: bool,
-    /// Mock-progress scalar of the global model (monotone ⇒ training
-    /// flowed through the full distributed path).
-    pub global_progress: f64,
-}
-
-/// Everything needed to run a live cluster for one config.
-pub struct LiveCluster {
-    cfg: ExperimentConfig,
-    topo: Topology,
-    profiles: Vec<ClientProfile>,
-    partition_sizes: Vec<usize>,
-    tm: TimingModel,
-}
-
-/// Mock local training (see module docs): progress grows with epochs and
-/// the client's share of data, exactly like `runtime::mock::MockEngine`.
-fn mock_train(
-    start: &ModelParams,
-    epochs: usize,
-    tau_ref: f64,
-    data_frac: f64,
-) -> ModelParams {
-    let mut p = start.clone();
-    let gain = (epochs as f64 / tau_ref) * data_frac;
-    p.tensors[0][0] += gain as f32;
-    p.tensors[0][1] += 0.01 * gain as f32;
-    p
-}
-
-impl LiveCluster {
-    pub fn new(cfg: ExperimentConfig) -> Result<LiveCluster> {
-        cfg.validate()?;
-        let mut rng = Rng::new(cfg.seed);
-        let topo = Topology::build(&cfg, &mut rng.split(1))?;
-        // Partition sizes are simulated directly (no corpus needed for the
-        // coordination path): Gaussian-ish around |D|/n.
-        let mean = cfg.mean_partition();
-        let mut prng = rng.split(2);
-        let partition_sizes: Vec<usize> = (0..cfg.n_clients)
-            .map(|_| prng.normal_clamped(mean, mean * 0.3, 5.0, mean * 3.0) as usize)
-            .collect();
-        let profiles = devices::sample_fleet(&cfg, &topo, &mut rng.split(3));
-        let tm = TimingModel::new(&cfg);
-        Ok(LiveCluster { cfg, topo, profiles, partition_sizes, tm })
-    }
-
-    /// Run the cluster: spawns 1 + m + n threads, drives `opts.rounds`
-    /// rounds, tears everything down, returns per-round stats.
-    pub fn run(&self, opts: &LiveOpts) -> Result<Vec<LiveRoundStats>> {
-        let m = self.topo.n_regions();
-        let scale = opts.time_scale;
-        let tau = self.cfg.local_epochs;
-        let lr = self.cfg.lr as f32;
-        let mean_part = self.cfg.mean_partition();
-
-        // Channel fabric.
-        let (cloud_tx, cloud_rx) = channel::<EdgeToCloud>();
-        let mut edge_txs: Vec<Sender<EdgeInbox>> = Vec::with_capacity(m);
-        let mut edge_handles: Vec<JoinHandle<()>> = Vec::with_capacity(m);
-        let mut client_handles: Vec<JoinHandle<()>> = Vec::new();
-        let mut client_txs: Vec<Option<Sender<EdgeToClient>>> =
-            (0..self.cfg.n_clients).map(|_| None).collect();
-
-        // --- client command channels (senders shared with edges) ----------------
-        let mut client_rxs: Vec<Receiver<EdgeToClient>> = Vec::with_capacity(self.cfg.n_clients);
-        for k in 0..self.cfg.n_clients {
-            let (tx, rx) = channel::<EdgeToClient>();
-            client_txs[k] = Some(tx);
-            client_rxs.push(rx);
-        }
-
-        // --- edge inboxes -----------------------------------------------------
-        let mut edge_inbox_txs: Vec<Sender<EdgeInbox>> = Vec::with_capacity(m);
-        let mut edge_inbox_rxs: Vec<Receiver<EdgeInbox>> = Vec::with_capacity(m);
-        for _ in 0..m {
-            let (tx, rx) = channel::<EdgeInbox>();
-            edge_inbox_txs.push(tx);
-            edge_inbox_rxs.push(rx);
-        }
-
-        // --- spawn clients ----------------------------------------------------
-        for (k, rx) in client_rxs.into_iter().enumerate() {
-            let profile = self.profiles[k];
-            let psize = self.partition_sizes[k] as f64;
-            let completion = self.tm.completion(&profile, psize);
-            let region = self.topo.region_of[k];
-            let edge_tx = edge_inbox_txs[region].clone();
-            let seed = self.cfg.seed ^ (0xC11E57 + k as u64);
-            let tau_ref = tau as f64;
-            let data_frac = psize / mean_part.max(1.0);
-            client_handles.push(std::thread::spawn(move || {
-                let mut rng = Rng::new(seed);
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        EdgeToClient::Train { t, model, epochs, lr: _ } => {
-                            if rng.bernoulli(profile.dropout_p) {
-                                continue; // dropped out: never responds
-                            }
-                            std::thread::sleep(Duration::from_secs_f64(
-                                completion * scale,
-                            ));
-                            let trained = mock_train(&model, epochs, tau_ref, data_frac);
-                            let _ = edge_tx.send(EdgeInbox::Sub(Submission {
-                                t,
-                                data_size: psize,
-                                model: trained,
-                            }));
-                        }
-                        EdgeToClient::Shutdown => break,
-                    }
-                }
-            }));
-        }
-
-        // --- spawn edges --------------------------------------------------------
-        for (r, rx) in edge_inbox_rxs.into_iter().enumerate() {
-            let clients = self.topo.regions[r].clone();
-            let my_client_txs: Vec<(usize, Sender<EdgeToClient>)> = clients
-                .iter()
-                .map(|&k| (k, client_txs[k].as_ref().unwrap().clone()))
-                .collect();
-            let cloud_tx = cloud_tx.clone();
-            let region_data: f64 = clients
-                .iter()
-                .map(|&k| self.partition_sizes[k] as f64)
-                .sum();
-            let mut slack = SlackEstimator::new(
-                clients.len(),
-                self.cfg.c_fraction,
-                self.cfg.theta_init,
-            );
-            let seed = self.cfg.seed ^ (0xED6E + r as u64);
-            let tau_ = tau;
-            let lr_ = lr;
-            edge_txs.push(edge_inbox_txs[r].clone());
-            edge_handles.push(std::thread::spawn(move || {
-                let mut rng = Rng::new(seed);
-                let mut regional: Option<ModelParams> = None;
-                'rounds: loop {
-                    // Await StartRound (ignore stale submissions).
-                    let (t, global) = loop {
-                        match rx.recv() {
-                            Ok(EdgeInbox::Cmd(CloudToEdge::StartRound { t, global })) => {
-                                break (t, global)
-                            }
-                            Ok(EdgeInbox::Cmd(CloudToEdge::Shutdown)) | Err(_) => {
-                                break 'rounds
-                            }
-                            Ok(_) => continue, // stale submission / signal
-                        }
-                    };
-                    if regional.is_none() {
-                        regional = Some(global.clone());
-                    }
-                    // Step 1: slack-modulated selection; dispatch training.
-                    let want = slack.selection_count();
-                    let chosen = select_clients(
-                        &(0..my_client_txs.len()).collect::<Vec<_>>(),
-                        want,
-                        &mut rng,
-                    );
-                    for &i in &chosen {
-                        let _ = my_client_txs[i].1.send(EdgeToClient::Train {
-                            t,
-                            model: global.clone(),
-                            epochs: tau_,
-                            lr: lr_,
-                        });
-                    }
-                    // Collect submissions until the aggregation signal.
-                    let mut collected: Vec<Submission> = Vec::new();
-                    let quota_met = loop {
-                        match rx.recv() {
-                            Ok(EdgeInbox::Sub(s)) if s.t == t => {
-                                collected.push(s);
-                                let _ = cloud_tx.send(EdgeToCloud::Progress {
-                                    region: r,
-                                    t,
-                                    submissions: collected.len(),
-                                });
-                            }
-                            Ok(EdgeInbox::Sub(_)) => {} // straggler from old round
-                            Ok(EdgeInbox::Cmd(CloudToEdge::AggregationSignal {
-                                t: st,
-                                quota_met,
-                            })) if st == t => break quota_met,
-                            Ok(EdgeInbox::Cmd(CloudToEdge::Shutdown)) | Err(_) => {
-                                break 'rounds
-                            }
-                            Ok(_) => {}
-                        }
-                    };
-                    // Regional aggregation with the cache rule (eq. 17).
-                    let refs: Vec<(&ModelParams, f64)> = collected
-                        .iter()
-                        .map(|s| (&s.model, s.data_size))
-                        .collect();
-                    let prev = regional.as_ref().unwrap();
-                    let w_r = aggregation::regional_with_cache(&refs, region_data, prev);
-                    let edc: f64 = collected.iter().map(|s| s.data_size).sum();
-                    let n_sub = collected.len();
-                    slack.observe(n_sub, quota_met);
-                    regional = Some(w_r.clone());
-                    let _ = cloud_tx.send(EdgeToCloud::Regional {
-                        region: r,
-                        t,
-                        model: w_r,
-                        edc,
-                        submissions: n_sub,
-                    });
-                }
-            }));
-        }
-        drop(cloud_tx); // cloud keeps only the receiver
-
-        // --- cloud leader (this thread) -----------------------------------------
-        let mut global = ModelParams::new(vec![vec![0.0, 0.0]], vec![vec![2]]);
-        let quota = self.cfg.quota();
-        let deadline = Duration::from_secs_f64(self.tm.t_lim * scale);
-        let mut stats = Vec::with_capacity(opts.rounds);
-
-        for t in 1..=opts.rounds {
-            let started = Instant::now();
-            for tx in &edge_txs {
-                tx.send(EdgeInbox::Cmd(CloudToEdge::StartRound {
-                    t,
-                    global: global.clone(),
-                }))
-                .ok()
-                .context("edge hung up")?;
-            }
-            // Monitor progress until quota or deadline.
-            let mut counts = vec![0usize; m];
-            let quota_met = loop {
-                let left = deadline.saturating_sub(started.elapsed());
-                if left.is_zero() {
-                    break false;
-                }
-                match cloud_rx.recv_timeout(left) {
-                    Ok(EdgeToCloud::Progress { region, t: pt, submissions })
-                        if pt == t =>
-                    {
-                        counts[region] = submissions;
-                        if counts.iter().sum::<usize>() >= quota {
-                            break true;
-                        }
-                    }
-                    Ok(_) => {}
-                    Err(RecvTimeoutError::Timeout) => break false,
-                    Err(RecvTimeoutError::Disconnected) => {
-                        anyhow::bail!("all edges disconnected")
-                    }
-                }
-            };
-            // Signal aggregation; collect the m regional models.
-            for tx in &edge_txs {
-                let _ = tx.send(EdgeInbox::Cmd(CloudToEdge::AggregationSignal {
-                    t,
-                    quota_met,
-                }));
-            }
-            let mut regionals: Vec<(ModelParams, f64)> = Vec::with_capacity(m);
-            let mut submissions = vec![0usize; m];
-            while regionals.len() < m {
-                match cloud_rx.recv().context("edge hung up mid-aggregation")? {
-                    EdgeToCloud::Regional { region, t: rt, model, edc, submissions: s }
-                        if rt == t =>
-                    {
-                        submissions[region] = s;
-                        regionals.push((model, edc));
-                    }
-                    _ => {}
-                }
-            }
-            // Immediate EDC-weighted cloud aggregation (eq. 20).
-            let refs: Vec<(&ModelParams, f64)> =
-                regionals.iter().map(|(w, e)| (w, *e)).collect();
-            if let Some(w) = aggregation::edc_cloud(&refs) {
-                global = w;
-            }
-            stats.push(LiveRoundStats {
-                t,
-                wall: started.elapsed(),
-                submissions,
-                quota_met,
-                global_progress: global.tensors[0][0] as f64,
-            });
-        }
-
-        // --- teardown ------------------------------------------------------------
-        for tx in &edge_txs {
-            let _ = tx.send(EdgeInbox::Cmd(CloudToEdge::Shutdown));
-        }
-        for tx in client_txs.iter().flatten() {
-            let _ = tx.send(EdgeToClient::Shutdown);
-        }
-        for h in edge_handles {
-            let _ = h.join();
-        }
-        for h in client_handles {
-            let _ = h.join();
-        }
-        Ok(stats)
-    }
-}
 
 /// Edge inbox fan-in: commands from the cloud and submissions from clients
 /// arrive on one channel so the edge thread can block on a single recv.
@@ -354,66 +33,249 @@ enum EdgeInbox {
     Sub(Submission),
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::Dist;
+/// A spawned cloud/edge/client thread fabric, reusable across rounds.
+/// Tear-down is automatic on drop.
+pub struct ClusterFabric {
+    edge_txs: Vec<Sender<EdgeInbox>>,
+    cloud_rx: Receiver<Submission>,
+    edge_handles: Vec<JoinHandle<()>>,
+    client_handles: Vec<JoinHandle<()>>,
+}
 
-    fn live_cfg(dropout: f64) -> ExperimentConfig {
-        let mut cfg = ExperimentConfig::task1_scaled();
-        cfg.n_clients = 20;
-        cfg.n_edges = 2;
-        cfg.dataset_size = 600;
-        cfg.eval_size = 50;
-        cfg.dropout = Dist::new(dropout, 0.02);
-        cfg
+impl ClusterFabric {
+    /// Spawn one edge thread per region and one client thread per device.
+    pub(crate) fn spawn(world: &World, time_scale: f64) -> Result<ClusterFabric> {
+        let m = world.topo.n_regions();
+        let n = world.topo.n_clients();
+
+        let (cloud_tx, cloud_rx) = channel::<Submission>();
+
+        // Per-client command channels (senders held by the edges).
+        let mut client_txs: Vec<Sender<EdgeToClient>> = Vec::with_capacity(n);
+        let mut client_rxs: Vec<Receiver<EdgeToClient>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<EdgeToClient>();
+            client_txs.push(tx);
+            client_rxs.push(rx);
+        }
+
+        // Per-edge inboxes (cloud commands + client submissions fan in).
+        let mut edge_txs: Vec<Sender<EdgeInbox>> = Vec::with_capacity(m);
+        let mut edge_rxs: Vec<Receiver<EdgeInbox>> = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (tx, rx) = channel::<EdgeInbox>();
+            edge_txs.push(tx);
+            edge_rxs.push(rx);
+        }
+
+        // Client actors.
+        let mut client_handles = Vec::with_capacity(n);
+        for (k, rx) in client_rxs.into_iter().enumerate() {
+            let region = world.topo.region_of[k];
+            let edge_tx = edge_txs[region].clone();
+            let indices = world.data.partitions[k].clone();
+            let engine = MockEngine::new(&world.cfg, Arc::clone(&world.data));
+            let epochs = world.cfg.local_epochs;
+            let lr = world.cfg.lr as f32;
+            client_handles.push(std::thread::spawn(move || {
+                client_loop(rx, edge_tx, k, region, indices, engine, epochs, lr, time_scale);
+            }));
+        }
+
+        // Edge relays.
+        let mut edge_handles = Vec::with_capacity(m);
+        for (r, rx) in edge_rxs.into_iter().enumerate() {
+            let my_clients: HashMap<usize, Sender<EdgeToClient>> = world.topo.regions[r]
+                .iter()
+                .map(|&k| (k, client_txs[k].clone()))
+                .collect();
+            let cloud_tx = cloud_tx.clone();
+            edge_handles.push(std::thread::spawn(move || {
+                edge_loop(rx, cloud_tx, my_clients);
+            }));
+        }
+        drop(cloud_tx); // the cloud keeps only the receiver
+        drop(client_txs); // clients are reachable through their edges only
+
+        Ok(ClusterFabric {
+            edge_txs,
+            cloud_rx,
+            edge_handles,
+            client_handles,
+        })
     }
 
-    #[test]
-    fn live_cluster_runs_rounds_and_learns() {
-        let cluster = LiveCluster::new(live_cfg(0.1)).unwrap();
-        let stats = cluster
-            .run(&LiveOpts { rounds: 6, time_scale: 2e-5 })
-            .unwrap();
-        assert_eq!(stats.len(), 6);
-        // Reliable fleet: the quota should be met in most rounds.
-        let met = stats.iter().filter(|s| s.quota_met).count();
-        assert!(met >= 4, "quota met only {met}/6 rounds");
-        // Global progress strictly increases when submissions flowed.
-        assert!(stats.last().unwrap().global_progress > 0.0);
-        for w in stats.windows(2) {
-            assert!(w[1].global_progress >= w[0].global_progress);
+    /// Drive one round: dispatch per-region job batches, collect real
+    /// submissions until `target` of them arrived or `deadline` elapsed,
+    /// then broadcast the round-end signal. Returns the in-time
+    /// submissions in arrival order.
+    pub(crate) fn round(
+        &mut self,
+        t: usize,
+        starts: &[Arc<ModelParams>],
+        jobs: Vec<Vec<RoundJob>>,
+        target: usize,
+        deadline: Duration,
+    ) -> Result<Vec<Submission>> {
+        for (r, js) in jobs.into_iter().enumerate() {
+            self.edge_txs[r]
+                .send(EdgeInbox::Cmd(CloudToEdge::StartRound {
+                    t,
+                    start: Arc::clone(&starts[r]),
+                    jobs: js,
+                }))
+                .ok()
+                .context("edge hung up")?;
+        }
+
+        let started = Instant::now();
+        let mut got: Vec<Submission> = Vec::new();
+        while got.len() < target {
+            let left = deadline.saturating_sub(started.elapsed());
+            if left.is_zero() {
+                break;
+            }
+            match self.cloud_rx.recv_timeout(left) {
+                Ok(s) if s.t == t => got.push(s),
+                Ok(_) => {} // straggler from an earlier round
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all edges disconnected")
+                }
+            }
+        }
+
+        // Round-end signal: edges relay it to every client, stopping
+        // stragglers (the quota trigger's energy saving).
+        for tx in &self.edge_txs {
+            let _ = tx.send(EdgeInbox::Cmd(CloudToEdge::EndRound { t }));
+        }
+        Ok(got)
+    }
+
+    fn shutdown(&mut self) {
+        for tx in &self.edge_txs {
+            let _ = tx.send(EdgeInbox::Cmd(CloudToEdge::Shutdown));
+        }
+        for h in self.edge_handles.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.client_handles.drain(..) {
+            let _ = h.join();
         }
     }
+}
 
-    #[test]
-    fn live_cluster_survives_heavy_dropout() {
-        let cluster = LiveCluster::new(live_cfg(0.9)).unwrap();
-        let stats = cluster
-            .run(&LiveOpts { rounds: 4, time_scale: 2e-5 })
-            .unwrap();
-        assert_eq!(stats.len(), 4);
-        // Rounds end (deadline) even when almost nobody responds, and the
-        // system does not deadlock.
-        assert!(stats.iter().any(|s| !s.quota_met));
+impl Drop for ClusterFabric {
+    fn drop(&mut self) {
+        self.shutdown();
     }
+}
 
-    #[test]
-    fn quota_rounds_finish_before_deadline_wallclock() {
-        let cluster = LiveCluster::new(live_cfg(0.0)).unwrap();
-        let scale = 2e-5;
-        let stats = cluster.run(&LiveOpts { rounds: 4, time_scale: scale }).unwrap();
-        let deadline = Duration::from_secs_f64(cluster.tm.t_lim * scale);
-        for s in &stats {
-            if s.quota_met {
-                assert!(
-                    s.wall < deadline,
-                    "round {} took {:?} >= deadline {:?}",
-                    s.t,
-                    s.wall,
-                    deadline
-                );
+/// Edge worker: relay jobs to this region's clients, submissions to the
+/// cloud, and control signals both ways.
+fn edge_loop(
+    rx: Receiver<EdgeInbox>,
+    cloud_tx: Sender<Submission>,
+    my_clients: HashMap<usize, Sender<EdgeToClient>>,
+) {
+    loop {
+        match rx.recv() {
+            Ok(EdgeInbox::Cmd(CloudToEdge::StartRound { t, start, jobs })) => {
+                for job in jobs {
+                    if let Some(tx) = my_clients.get(&job.client) {
+                        let _ = tx.send(EdgeToClient::Train {
+                            t,
+                            start: Arc::clone(&start),
+                            dropped: job.dropped,
+                            completion: job.completion,
+                        });
+                    }
+                }
             }
+            Ok(EdgeInbox::Cmd(CloudToEdge::EndRound { t })) => {
+                for tx in my_clients.values() {
+                    let _ = tx.send(EdgeToClient::EndRound { t });
+                }
+            }
+            Ok(EdgeInbox::Cmd(CloudToEdge::Shutdown)) | Err(_) => {
+                for tx in my_clients.values() {
+                    let _ = tx.send(EdgeToClient::Shutdown);
+                }
+                break;
+            }
+            Ok(EdgeInbox::Sub(s)) => {
+                let _ = cloud_tx.send(s);
+            }
+        }
+    }
+}
+
+/// Client actor: on a training job, either drop silently, or sleep the
+/// scaled completion time (interruptible by the round-end signal), train
+/// locally on the mock engine and submit through the edge.
+#[allow(clippy::too_many_arguments)]
+fn client_loop(
+    rx: Receiver<EdgeToClient>,
+    edge_tx: Sender<EdgeInbox>,
+    client: usize,
+    region: usize,
+    indices: Vec<usize>,
+    mut engine: MockEngine,
+    epochs: usize,
+    lr: f32,
+    time_scale: f64,
+) {
+    let psize = indices.len() as f64;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            EdgeToClient::Train {
+                t,
+                start,
+                dropped,
+                completion,
+            } => {
+                if dropped {
+                    continue; // opted out: never responds
+                }
+                let wake = Instant::now() + Duration::from_secs_f64(completion * time_scale);
+                let mut abandoned = false;
+                loop {
+                    let now = Instant::now();
+                    if now >= wake {
+                        break;
+                    }
+                    match rx.recv_timeout(wake - now) {
+                        Ok(EdgeToClient::EndRound { t: et }) if et >= t => {
+                            abandoned = true; // stopped by the round-end signal
+                            break;
+                        }
+                        Ok(EdgeToClient::EndRound { .. }) => {}
+                        Ok(EdgeToClient::Shutdown) => return,
+                        // A new Train cannot arrive before our round's
+                        // EndRound (the cloud broadcasts EndRound first,
+                        // and per-channel order is FIFO); drop defensively.
+                        Ok(EdgeToClient::Train { .. }) => {}
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => return,
+                    }
+                }
+                if abandoned {
+                    continue;
+                }
+                if let Ok(out) = engine.train_local(&start, &indices, epochs, lr) {
+                    let _ = edge_tx.send(EdgeInbox::Sub(Submission {
+                        t,
+                        client,
+                        region,
+                        data_size: psize,
+                        loss: out.loss,
+                        model: out.params,
+                    }));
+                }
+            }
+            EdgeToClient::EndRound { .. } => {}
+            EdgeToClient::Shutdown => return,
         }
     }
 }

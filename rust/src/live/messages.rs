@@ -2,51 +2,70 @@
 //! (edge↔cloud over Ethernet, client↔edge over the wireless link); here
 //! they are mpsc payloads with exactly the information each party is
 //! allowed to see — the privacy boundary is the message schema itself:
-//! nothing in `Submission` or `EdgeReport` identifies client reliability,
-//! and the cloud never learns which clients participated.
+//! nothing in a [`Submission`] identifies client reliability, and no
+//! protocol-level state (slack estimates, aggregation rules, quotas)
+//! appears on the wire. Protocol logic lives entirely above the
+//! [`crate::env::FlEnvironment`] trait; the fabric only moves jobs down
+//! and models up.
+
+use std::sync::Arc;
 
 use crate::model::ModelParams;
+
+/// One client's training job for a round. `dropped` and `completion` are
+/// the simulated-world parameters the client *enacts* (drop silently /
+/// finish after the scaled completion time) — they stand in for the real
+/// device's autonomous behavior and are never observable to the protocol.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundJob {
+    pub client: usize,
+    pub dropped: bool,
+    /// Virtual completion time; `f64::INFINITY` when dropped.
+    pub completion: f64,
+}
 
 /// Cloud → edge.
 #[derive(Debug)]
 pub enum CloudToEdge {
-    /// Start round `t`: distribute the global model, select clients.
-    StartRound { t: usize, global: ModelParams },
-    /// Quota reached (or deadline): stop collecting, aggregate, reply.
-    AggregationSignal { t: usize, quota_met: bool },
+    /// Start round `t`: relay the start model and per-client jobs.
+    StartRound {
+        t: usize,
+        start: Arc<ModelParams>,
+        jobs: Vec<RoundJob>,
+    },
+    /// The round is over (quota reached or deadline): stop straggling
+    /// clients; late submissions will be discarded.
+    EndRound { t: usize },
     /// Training is over; tear down.
     Shutdown,
-}
-
-/// Edge → cloud.
-#[derive(Debug)]
-pub enum EdgeToCloud {
-    /// Live submission-count update ("keeps reporting update count").
-    Progress { region: usize, t: usize, submissions: usize },
-    /// Post-aggregation regional model + effective data coverage.
-    Regional {
-        region: usize,
-        t: usize,
-        model: ModelParams,
-        edc: f64,
-        submissions: usize,
-    },
 }
 
 /// Edge → client.
 #[derive(Debug)]
 pub enum EdgeToClient {
-    /// Train `epochs` local epochs from `model` and submit.
-    Train { t: usize, model: ModelParams, epochs: usize, lr: f32 },
+    /// Train locally from `start` and submit when done.
+    Train {
+        t: usize,
+        start: Arc<ModelParams>,
+        dropped: bool,
+        completion: f64,
+    },
+    /// Round-end signal: abandon round `t` if still working on it.
+    EndRound { t: usize },
     Shutdown,
 }
 
-/// Client → edge.
+/// Client → edge → cloud: a completed local update.
 #[derive(Debug)]
 pub struct Submission {
     pub t: usize,
-    /// Data volume |D_k| — carried by the model update envelope (needed
-    /// for weighted aggregation), not an identity.
+    /// Opaque client id (routing only; carries no reliability info).
+    pub client: usize,
+    pub region: usize,
+    /// Data volume |D_k| — carried by the update envelope (needed for
+    /// weighted aggregation), not an identity.
     pub data_size: f64,
+    /// Local training loss (diagnostic).
+    pub loss: f64,
     pub model: ModelParams,
 }

@@ -1,21 +1,32 @@
-//! Live threaded runtime (S9): the HybridFL coordination running as a
-//! *real concurrent system* — one cloud leader thread, one thread per edge
-//! node, one thread per client, communicating over mpsc channels.
+//! Live threaded runtime (S9): the cloud/edge/client coordination as a
+//! *real concurrent system* — one thread per edge node, one per client,
+//! communicating over mpsc channels.
 //!
-//! The DES in `sim::` is the experiment vehicle (deterministic, virtual
-//! clock); this module is the deployment-shaped proof that the same
-//! protocol state machines (slack estimation, quota trigger, cache rule,
-//! EDC aggregation) compose under actual asynchrony: out-of-order
-//! submissions, racing edges, a cloud that must arbitrate quota vs.
-//! deadline in wall-clock time.
+//! Since the `FlEnvironment` redesign this module holds only the
+//! **fabric**: spawn/teardown of the thread topology, message relay, and
+//! the cloud leader's arrival-collection loop
+//! ([`cluster::ClusterFabric`]). All protocol logic — selection policy,
+//! slack estimation, quota configuration, the cache rule, EDC aggregation
+//! — lives in `protocols/` and reaches this fabric only through
+//! [`crate::env::LiveClusterEnv`], the live implementation of
+//! [`crate::env::FlEnvironment`]. The same protocol code therefore runs
+//! bit-for-bit on the deterministic simulator and, coordination-wise, on
+//! this fabric.
 //!
-//! Client compute uses the mock progress model (`runtime::mock` math)
-//! because the PJRT client is not `Send` (Rc-based FFI handles) — the live
-//! runtime demonstrates *coordination*, the PJRT path carries the real
-//! numerics in the DES. Virtual durations (eqs. 31–34) are scaled to
-//! wall-clock by `time_scale`.
+//! Run it via [`crate::scenario::Scenario`]:
+//!
+//! ```no_run
+//! use hybridfl::scenario::{Backend, Scenario};
+//! let result = Scenario::task1()
+//!     .mock()
+//!     .rounds(10)
+//!     .backend(Backend::Live)
+//!     .run()
+//!     .unwrap();
+//! println!("live best accuracy: {:.3}", result.summary.best_accuracy);
+//! ```
 
 pub mod cluster;
 pub mod messages;
 
-pub use cluster::{LiveCluster, LiveOpts, LiveRoundStats};
+pub use cluster::ClusterFabric;

@@ -1,17 +1,19 @@
 //! `hybridfl` — the coordinator CLI / experiment launcher.
 //!
 //! ```text
-//! hybridfl run    [--preset P] [--config f.json] [--set k=v]... [--out trace.csv]
+//! hybridfl run    [--preset P] [--config f.json] [--set k=v]...
+//!                 [--backend sim|live] [--scale S] [--out trace.csv]
 //! hybridfl fig2   [--out dir] [--seed N]
-//! hybridfl table3 [--full|--quick] [--mock] [--target A] [--out dir]
-//! hybridfl table4 [--full|--quick] [--mock] [--target A] [--out dir]
-//! hybridfl live   [--rounds N] [--set k=v]...
+//! hybridfl table3 [--full|--quick] [--mock] [--serial] [--target A] [--out dir]
+//! hybridfl table4 [--full|--quick] [--mock] [--serial] [--target A] [--out dir]
+//! hybridfl live   [--rounds N] [--scale S] [--set k=v]...
 //! hybridfl config [--preset P] [--set k=v]...      # print resolved JSON
 //! ```
 //!
 //! `table3`/`table4` regenerate the paper's tables **and** the trace CSVs
 //! behind Figs. 4/6 and the energy tables of Figs. 5/7 (one sweep produces
-//! all three artifacts — see `harness::sweep`).
+//! all three artifacts — see `harness::sweep`; grid cells run on worker
+//! threads unless `--serial`).
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -19,9 +21,9 @@ use std::process::ExitCode;
 use hybridfl::cli::Args;
 use hybridfl::config::{ExperimentConfig, TaskKind};
 use hybridfl::harness::{self, run_fig2, run_task_sweep, SweepOpts};
-use hybridfl::live::{LiveCluster, LiveOpts};
 use hybridfl::metrics;
-use hybridfl::sim::FlRun;
+use hybridfl::scenario::{Backend, Scenario};
+use hybridfl::sim::RunResult;
 
 fn main() -> ExitCode {
     match real_main() {
@@ -55,15 +57,18 @@ const USAGE: &str = "\
 hybridfl — federated learning over reliability-agnostic clients in MEC
 commands:
   run     one FL run (--preset task1|task1-scaled|task2|task2-scaled|fig2,
-          --config cfg.json, --set key=value ..., --out trace.csv)
+          --config cfg.json, --set key=value ..., --backend sim|live,
+          --scale S wall-clock seconds per virtual second for live,
+          --out trace.csv)
   fig2    slack-factor traces (paper Fig. 2) -> reports/fig2_traces.csv
   table3  Task-1 sweep: Table III + Fig. 4 traces + Fig. 5 energy
   table4  Task-2 sweep: Table IV + Fig. 6 traces + Fig. 7 energy
           (--full paper scale, --quick smoke grid, --mock no-PJRT,
-           --target A, --out dir)
+           --serial disable the threaded sweep, --target A, --out dir)
   ablation cache-rule / theta_init / kappa2 / slack-contribution sweeps
           (--mock for dynamics-only; default real PJRT)
-  live    threaded cloud/edge/client cluster demo (--rounds N)
+  live    threaded cloud/edge/client cluster run (--rounds N, --scale S);
+          shorthand for run --backend live
   config  print the resolved config as JSON";
 
 /// Resolve a config from --preset / --config plus --set overrides.
@@ -81,15 +86,21 @@ fn resolve_config(args: &Args) -> hybridfl::Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-fn cmd_run(args: &Args) -> hybridfl::Result<()> {
+/// Build a Scenario from the CLI flags shared by `run` and `live`.
+fn resolve_scenario(args: &Args, default_backend: Backend) -> hybridfl::Result<Scenario> {
     let cfg = resolve_config(args)?;
-    println!(
-        "running {} ({} / {})",
-        cfg.name,
-        cfg.protocol.as_str(),
-        cfg.engine.as_str()
-    );
-    let result = FlRun::new(cfg)?.run()?;
+    let backend = match args.get("backend") {
+        Some(s) => Backend::parse(s)?,
+        None => default_backend,
+    };
+    let mut sc = Scenario::from_config(cfg).backend(backend);
+    if let Some(scale) = args.get_parsed::<f64>("scale")? {
+        sc = sc.time_scale(scale);
+    }
+    Ok(sc)
+}
+
+fn print_summary(result: &RunResult) {
     let s = &result.summary;
     println!("rounds run          : {}", s.rounds_run);
     println!("best accuracy       : {:.4}", s.best_accuracy);
@@ -103,6 +114,20 @@ fn cmd_run(args: &Args) -> hybridfl::Result<()> {
             s.time_to_target.unwrap_or(f64::NAN)
         );
     }
+}
+
+fn cmd_run(args: &Args) -> hybridfl::Result<()> {
+    let sc = resolve_scenario(args, Backend::Sim)?;
+    let cfg = sc.config();
+    println!(
+        "running {} ({} / {} / backend {})",
+        cfg.name,
+        cfg.protocol.as_str(),
+        cfg.engine.as_str(),
+        args.get("backend").unwrap_or("sim"),
+    );
+    let result = sc.run()?;
+    print_summary(&result);
     if let Some(out) = args.get("out") {
         metrics::write_csv(std::path::Path::new(out), &result.rounds)?;
         println!("trace written to {out}");
@@ -128,6 +153,7 @@ fn cmd_table(task: TaskKind, args: &Args) -> hybridfl::Result<()> {
         target: args.get_parsed::<f64>("target")?,
         t_max: args.get_parsed::<usize>("rounds")?,
         seed: args.get_parsed::<u64>("seed")?.unwrap_or(42),
+        parallel: !args.has("serial"),
     };
     let sweep = run_task_sweep(task, &opts, &out)?;
     print!("{}", harness::sweep::render_table(&sweep));
@@ -147,20 +173,35 @@ fn cmd_ablation(args: &Args) -> hybridfl::Result<()> {
 }
 
 fn cmd_live(args: &Args) -> hybridfl::Result<()> {
-    let cfg = resolve_config(args)?;
-    let rounds = args.get_parsed::<usize>("rounds")?.unwrap_or(10);
+    let mut sc = resolve_scenario(args, Backend::Live)?;
+    let t_max_overridden = args
+        .all("set")
+        .iter()
+        .any(|kv| kv.trim_start().starts_with("t_max"));
+    if let Some(rounds) = args.get_parsed::<usize>("rounds")? {
+        sc = sc.rounds(rounds);
+    } else if !t_max_overridden {
+        // Presets carry hundreds of rounds; a live demo defaults to 10
+        // unless the user asked for more via --rounds or --set t_max=N.
+        sc = sc.rounds(10);
+    }
+    let cfg = sc.config();
     println!(
-        "live cluster: {} clients / {} edges, {} rounds (time scale 1e-4)",
-        cfg.n_clients, cfg.n_edges, rounds
+        "live cluster: {} clients / {} edges, {} rounds",
+        cfg.n_clients, cfg.n_edges, cfg.t_max
     );
-    let cluster = LiveCluster::new(cfg)?;
-    let stats = cluster.run(&LiveOpts { rounds, time_scale: 1e-4 })?;
-    for s in &stats {
+    let result = sc.run()?;
+    for row in &result.rounds {
         println!(
-            "round {:>3}  wall {:>8.1?}  submissions {:?}  quota_met {}  progress {:.2}",
-            s.t, s.wall, s.submissions, s.quota_met, s.global_progress
+            "round {:>3}  len {:>8.1}s  submissions {:?}  quota_met {}  acc {:.3}",
+            row.t,
+            row.round_len,
+            row.submissions,
+            !row.deadline_hit,
+            row.accuracy
         );
     }
+    print_summary(&result);
     Ok(())
 }
 

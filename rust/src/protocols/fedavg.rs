@@ -8,9 +8,9 @@
 //! protocols).
 
 use crate::config::ProtocolKind;
+use crate::env::{CutoffPolicy, FlEnvironment, Selection, Starts};
 use crate::model::ModelParams;
-use crate::protocols::{count_from_fraction, Protocol, RoundCtx, RoundRecord};
-use crate::selection::select_clients;
+use crate::protocols::{count_from_fraction, mean_loss, Protocol, RoundRecord};
 use crate::Result;
 
 pub struct FedAvg {
@@ -28,65 +28,38 @@ impl Protocol for FedAvg {
         ProtocolKind::FedAvg
     }
 
-    fn run_round(&mut self, t: usize, ctx: &mut RoundCtx) -> Result<RoundRecord> {
-        // --- selection: C·n clients uniformly over the fleet -----------------
-        let n = ctx.topo.n_clients();
-        let want = count_from_fraction(ctx.cfg.c_fraction, n);
-        let all: Vec<usize> = (0..n).collect();
-        let selected = select_clients(&all, want, ctx.rng);
-        let sel_by_region = ctx.region_counts(&selected);
-
-        // --- simulate fates ---------------------------------------------------
-        let fates = ctx.simulate(&selected);
-        let alive = ctx.count_alive(&fates);
-
-        // Round ends when every selected client responded, or at T_lim
-        // (dropped clients have completion = ∞, so one drop ⇒ T_lim).
-        let max_completion = fates
-            .iter()
-            .map(|f| f.completion)
-            .fold(0.0f64, f64::max);
-        let cutoff = max_completion.min(ctx.tm.t_lim);
-        let deadline_hit = max_completion > ctx.tm.t_lim;
-        ctx.charge_energy(&fates, |_| cutoff);
+    fn run_round(&mut self, t: usize, env: &mut dyn FlEnvironment) -> Result<RoundRecord> {
+        // --- selection: C·n clients uniformly over the fleet; wait for all.
+        let want = count_from_fraction(env.cfg().c_fraction, env.n_clients());
+        let out = env.run_round(
+            t,
+            Selection::Uniform(want),
+            Starts::Global(&self.global),
+            CutoffPolicy::AllSelected,
+        )?;
 
         // --- aggregate what arrived in time ----------------------------------
-        let arrived: Vec<_> = fates
+        let refs: Vec<(&ModelParams, f64)> = out
+            .arrivals
             .iter()
-            .filter(|f| !f.dropped && f.completion <= cutoff)
+            .map(|a| (&a.model, a.data_size))
             .collect();
-        let submissions = ctx.count_by_region(&fates, |f| {
-            !f.dropped && f.completion <= cutoff
-        });
-
-        let mut models: Vec<(ModelParams, f64)> = Vec::with_capacity(arrived.len());
-        let mut loss_sum = 0.0;
-        for f in &arrived {
-            let (m, loss) = ctx.train(&self.global, f.client)?;
-            loss_sum += loss;
-            models.push((m, ctx.data.partitions[f.client].len() as f64));
-        }
-        let refs: Vec<(&ModelParams, f64)> =
-            models.iter().map(|(m, d)| (m, *d)).collect();
         if let Some(w) = crate::aggregation::fedavg(&refs) {
             self.global = w;
         }
+        let mean_local_loss = mean_loss(&out);
 
         Ok(RoundRecord {
             t,
             // Two-layer: no edge RTT term.
-            round_len: cutoff,
-            selected: sel_by_region,
-            alive,
-            submissions,
-            energy_j: ctx.energy_j(),
-            deadline_hit,
+            round_len: out.round_len,
+            selected: out.selected,
+            alive: out.alive,
+            submissions: out.submissions,
+            energy_j: out.energy_j,
+            deadline_hit: out.deadline_hit,
             cloud_aggregated: true,
-            mean_local_loss: if arrived.is_empty() {
-                f64::NAN
-            } else {
-                loss_sum / arrived.len() as f64
-            },
+            mean_local_loss,
         })
     }
 
@@ -98,37 +71,30 @@ impl Protocol for FedAvg {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::test_support::mock_ctx_parts;
+    use crate::env::FlEnvironment as _;
+    use crate::sim::test_support::mock_env;
 
     #[test]
     fn aggregates_only_survivors_and_waits_tlim_on_dropout() {
-        let (cfg, topo, data, tm, em, mut engine, profiles) =
-            mock_ctx_parts(0.9 /*dropout*/, 12, 3);
-        let mut rng = crate::rng::Rng::new(5);
-        let mut proto = FedAvg::new(engine.init_params());
-        let mut ctx = RoundCtx::new(
-            &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
-        );
-        let rec = proto.run_round(1, &mut ctx).unwrap();
+        let mut env = mock_env(0.9 /*dropout*/, 12, 3);
+        let t_lim = env.timing().t_lim;
+        let mut proto = FedAvg::new(env.init_model());
+        let rec = proto.run_round(1, &mut env).unwrap();
         // With 90% drop-out a selected set almost surely loses someone ⇒
         // the round runs to the deadline.
         assert!(rec.deadline_hit);
-        assert!((rec.round_len - tm.t_lim).abs() < 1e-9);
+        assert!((rec.round_len - t_lim).abs() < 1e-9);
         assert!(rec.energy_j > 0.0);
     }
 
     #[test]
     fn reliable_fleet_finishes_before_deadline() {
-        let (cfg, topo, data, tm, em, mut engine, profiles) =
-            mock_ctx_parts(0.0, 12, 3);
-        let mut rng = crate::rng::Rng::new(6);
-        let mut proto = FedAvg::new(engine.init_params());
-        let mut ctx = RoundCtx::new(
-            &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
-        );
-        let rec = proto.run_round(1, &mut ctx).unwrap();
+        let mut env = mock_env(0.0, 12, 3);
+        let t_lim = env.timing().t_lim;
+        let mut proto = FedAvg::new(env.init_model());
+        let rec = proto.run_round(1, &mut env).unwrap();
         assert!(!rec.deadline_hit);
-        assert!(rec.round_len < tm.t_lim);
+        assert!(rec.round_len < t_lim);
         let total_sel: usize = rec.selected.iter().sum();
         let total_sub: usize = rec.submissions.iter().sum();
         assert_eq!(total_sel, total_sub); // nobody dropped

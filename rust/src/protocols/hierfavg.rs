@@ -9,10 +9,9 @@
 //! current model.
 
 use crate::config::{ExperimentConfig, ProtocolKind};
+use crate::env::{CutoffPolicy, FlEnvironment, Selection, Starts};
 use crate::model::ModelParams;
-use crate::protocols::{count_from_fraction, Protocol, RoundCtx, RoundRecord};
-use crate::selection::select_clients;
-use crate::topology::Topology;
+use crate::protocols::{count_from_fraction, mean_loss, Protocol, RoundRecord};
 use crate::Result;
 
 pub struct HierFavg {
@@ -27,23 +26,12 @@ pub struct HierFavg {
 }
 
 impl HierFavg {
-    pub fn new(cfg: &ExperimentConfig, topo: &Topology, init: ModelParams) -> HierFavg {
+    pub fn new(cfg: &ExperimentConfig, n_regions: usize, init: ModelParams) -> HierFavg {
         HierFavg {
-            regionals: vec![init.clone(); topo.n_regions()],
+            regionals: vec![init.clone(); n_regions],
             global: init,
             region_data: Vec::new(), // filled lazily on first round
             kappa2: cfg.hier_kappa2,
-        }
-    }
-
-    fn ensure_region_data(&mut self, ctx: &RoundCtx) {
-        if self.region_data.is_empty() {
-            self.region_data = ctx
-                .topo
-                .regions
-                .iter()
-                .map(|cs| ctx.data.region_data_size(cs) as f64)
-                .collect();
         }
     }
 }
@@ -53,65 +41,35 @@ impl Protocol for HierFavg {
         ProtocolKind::HierFavg
     }
 
-    fn run_round(&mut self, t: usize, ctx: &mut RoundCtx) -> Result<RoundRecord> {
-        self.ensure_region_data(ctx);
-        let m = ctx.topo.n_regions();
+    fn run_round(&mut self, t: usize, env: &mut dyn FlEnvironment) -> Result<RoundRecord> {
+        let m = env.n_regions();
+        if self.region_data.is_empty() {
+            self.region_data = (0..m).map(|r| env.region_data_size(r)).collect();
+        }
 
-        // --- per-region selection --------------------------------------------
-        let mut selected: Vec<usize> = Vec::new();
+        // --- per-region selection; every edge waits for all its clients ------
+        let counts: Vec<usize> = (0..m)
+            .map(|r| count_from_fraction(env.cfg().c_fraction, env.region_size(r)))
+            .collect();
+        let out = env.run_round(
+            t,
+            Selection::PerRegion(counts),
+            Starts::PerRegion(&self.regionals),
+            CutoffPolicy::AllPerRegion,
+        )?;
+
+        // --- edge aggregation from the in-time submissions -------------------
         for r in 0..m {
-            let region = &ctx.topo.regions[r];
-            let want = count_from_fraction(ctx.cfg.c_fraction, region.len());
-            selected.extend(select_clients(region, want, ctx.rng));
-        }
-        let sel_by_region = ctx.region_counts(&selected);
-
-        // --- fates; every edge waits for all its selected clients -------------
-        let fates = ctx.simulate(&selected);
-        let alive = ctx.count_alive(&fates);
-
-        // Synchronous global round: ends when the slowest region is done.
-        let mut cutoff_r = vec![0.0f64; m];
-        for f in &fates {
-            cutoff_r[f.region] = cutoff_r[f.region].max(f.completion);
-        }
-        for c in cutoff_r.iter_mut() {
-            *c = c.min(ctx.tm.t_lim);
-        }
-        let core = cutoff_r.iter().copied().fold(0.0f64, f64::max);
-        let deadline_hit = fates.iter().any(|f| f.completion > ctx.tm.t_lim);
-        {
-            let cr = cutoff_r.clone();
-            ctx.charge_energy(&fates, move |r| cr[r]);
-        }
-
-        // --- train survivors from their regional model; edge aggregation ------
-        let submissions = ctx.count_by_region(&fates, |f| {
-            !f.dropped && f.completion <= cutoff_r[f.region]
-        });
-        let mut loss_sum = 0.0;
-        let mut n_trained = 0usize;
-        for r in 0..m {
-            let members: Vec<_> = fates
+            let models: Vec<(&ModelParams, f64)> = out
+                .arrivals
                 .iter()
-                .filter(|f| {
-                    f.region == r && !f.dropped && f.completion <= cutoff_r[r]
-                })
+                .filter(|a| a.region == r)
+                .map(|a| (&a.model, a.data_size))
                 .collect();
-            if members.is_empty() {
+            if models.is_empty() {
                 continue; // region keeps its previous model
             }
-            let start = self.regionals[r].clone();
-            let mut models: Vec<(ModelParams, f64)> = Vec::with_capacity(members.len());
-            for f in members {
-                let (w, loss) = ctx.train(&start, f.client)?;
-                loss_sum += loss;
-                n_trained += 1;
-                models.push((w, ctx.data.partitions[f.client].len() as f64));
-            }
-            let refs: Vec<(&ModelParams, f64)> =
-                models.iter().map(|(w, d)| (w, *d)).collect();
-            if let Some(w) = crate::aggregation::fedavg(&refs) {
+            if let Some(w) = crate::aggregation::fedavg(&models) {
                 self.regionals[r] = w;
             }
         }
@@ -133,23 +91,20 @@ impl Protocol for HierFavg {
                 self.regionals[r] = self.global.clone();
             }
         }
+        let mean_local_loss = mean_loss(&out);
 
         Ok(RoundRecord {
             t,
             // Edge RTT charged on cloud rounds only (model up+down between
             // cloud and edges); client comm is inside the completions.
-            round_len: core + if cloud_round { ctx.tm.t_c2e2c } else { 0.0 },
-            selected: sel_by_region,
-            alive,
-            submissions,
-            energy_j: ctx.energy_j(),
-            deadline_hit,
+            round_len: out.round_len + if cloud_round { env.t_c2e2c() } else { 0.0 },
+            selected: out.selected,
+            alive: out.alive,
+            submissions: out.submissions,
+            energy_j: out.energy_j,
+            deadline_hit: out.deadline_hit,
             cloud_aggregated: cloud_round,
-            mean_local_loss: if n_trained == 0 {
-                f64::NAN
-            } else {
-                loss_sum / n_trained as f64
-            },
+            mean_local_loss,
         })
     }
 
@@ -161,21 +116,18 @@ impl Protocol for HierFavg {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::test_support::mock_ctx_parts;
+    use crate::env::{FlEnvironment as _, VirtualClockEnv};
+    use crate::sim::test_support::{mock_cfg, mock_env};
 
     #[test]
     fn cloud_aggregates_only_every_kappa2_rounds() {
-        let (mut cfg, topo, data, tm, em, mut engine, profiles) =
-            mock_ctx_parts(0.0, 12, 3);
+        let mut cfg = mock_cfg(0.0, 12, 3);
         cfg.hier_kappa2 = 3;
-        let mut rng = crate::rng::Rng::new(1);
-        let mut proto = HierFavg::new(&cfg, &topo, engine.init_params());
+        let mut env = VirtualClockEnv::new(cfg.clone()).unwrap();
+        let mut proto = HierFavg::new(&cfg, 3, env.init_model());
         let mut cloud_rounds = Vec::new();
         for t in 1..=6 {
-            let mut ctx = RoundCtx::new(
-                &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
-            );
-            let rec = proto.run_round(t, &mut ctx).unwrap();
+            let rec = proto.run_round(t, &mut env).unwrap();
             if rec.cloud_aggregated {
                 cloud_rounds.push(t);
             }
@@ -185,17 +137,13 @@ mod tests {
 
     #[test]
     fn global_frozen_between_cloud_rounds_but_regionals_move() {
-        let (mut cfg, topo, data, tm, em, mut engine, profiles) =
-            mock_ctx_parts(0.0, 12, 3);
+        let mut cfg = mock_cfg(0.0, 12, 3);
         cfg.hier_kappa2 = 10;
-        let mut rng = crate::rng::Rng::new(2);
-        let mut proto = HierFavg::new(&cfg, &topo, engine.init_params());
+        let mut env = VirtualClockEnv::new(cfg.clone()).unwrap();
+        let mut proto = HierFavg::new(&cfg, 3, env.init_model());
         let g0 = proto.global_model().clone();
         for t in 1..=3 {
-            let mut ctx = RoundCtx::new(
-                &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
-            );
-            proto.run_round(t, &mut ctx).unwrap();
+            proto.run_round(t, &mut env).unwrap();
         }
         // Global untouched before round 10 …
         assert!(proto.global_model().l2_distance(&g0) < 1e-9);
@@ -205,15 +153,12 @@ mod tests {
 
     #[test]
     fn dropouts_stall_regions_to_deadline() {
-        let (cfg, topo, data, tm, em, mut engine, profiles) =
-            mock_ctx_parts(0.95, 12, 3);
-        let mut rng = crate::rng::Rng::new(3);
-        let mut proto = HierFavg::new(&cfg, &topo, engine.init_params());
-        let mut ctx = RoundCtx::new(
-            &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
-        );
-        let rec = proto.run_round(1, &mut ctx).unwrap();
+        let mut env = mock_env(0.95, 12, 3);
+        let t_lim = env.timing().t_lim;
+        let cfg = env.cfg().clone();
+        let mut proto = HierFavg::new(&cfg, 3, env.init_model());
+        let rec = proto.run_round(1, &mut env).unwrap();
         assert!(rec.deadline_hit);
-        assert!(rec.round_len >= tm.t_lim);
+        assert!(rec.round_len >= t_lim);
     }
 }

@@ -8,29 +8,31 @@
 //!    LSE-estimated regional slack factor over observable submission
 //!    counts only ([`SlackEstimator`]).
 //! 2. **Local training**: survivors train τ GD epochs from the global
-//!    model w(t−1).
-//! 3. **Quota-triggered regional aggregation** (§III.B): the cloud ends
-//!    the round the moment C·n models have arrived *globally* (or at
-//!    T_lim), then each edge aggregates with the model-cache rule
-//!    (eq. 17) so stale clients contribute the previous regional model.
+//!    model w(t−1) (the environment fans this out — inline on the virtual
+//!    clock, on client threads in the live cluster).
+//! 3. **Quota-triggered regional aggregation** (§III.B): the round ends
+//!    the moment C·n models have arrived *globally* (or at T_lim) —
+//!    [`CutoffPolicy::Quota`] — then each region aggregates with the
+//!    model-cache rule (eq. 17) so stale clients contribute the previous
+//!    regional model.
 //! 4. **Immediate EDC-weighted cloud aggregation** (eqs. 18–20): regional
 //!    models are combined the same round, weighted by effective data
 //!    coverage.
 
 use crate::config::{CacheMode, ExperimentConfig, ProtocolKind};
+use crate::env::{CutoffPolicy, FlEnvironment, Selection, Starts};
 use crate::model::ModelParams;
-use crate::protocols::{Protocol, RoundCtx, RoundRecord};
+use crate::protocols::{mean_loss, Protocol, RoundRecord};
 use crate::selection::slack::{SlackEstimator, SlackState};
-use crate::selection::select_clients;
-use crate::topology::Topology;
 use crate::Result;
 
 pub struct HybridFl {
     global: ModelParams,
     /// w^r(t−1) — previous regional models (the cache substrate, eq. 17).
     regionals: Vec<ModelParams>,
-    /// One slack estimator per region (edge-resident state in the real
-    /// deployment; see `live::edge`).
+    /// One slack estimator per region (edge-resident state in a real
+    /// deployment; here cloud-side protocol state driven purely by
+    /// observable submission counts).
     slack: Vec<SlackEstimator>,
     /// |D^r| per region.
     region_data: Vec<f64>,
@@ -38,29 +40,17 @@ pub struct HybridFl {
 }
 
 impl HybridFl {
-    pub fn new(cfg: &ExperimentConfig, topo: &Topology, init: ModelParams) -> HybridFl {
-        let slack = (0..topo.n_regions())
-            .map(|r| {
-                SlackEstimator::new(topo.region_size(r), cfg.c_fraction, cfg.theta_init)
-            })
+    pub fn new(cfg: &ExperimentConfig, region_sizes: &[usize], init: ModelParams) -> HybridFl {
+        let slack = region_sizes
+            .iter()
+            .map(|&n_r| SlackEstimator::new(n_r, cfg.c_fraction, cfg.theta_init))
             .collect();
         HybridFl {
-            regionals: vec![init.clone(); topo.n_regions()],
+            regionals: vec![init.clone(); region_sizes.len()],
             global: init,
             slack,
             region_data: Vec::new(),
             cache_mode: cfg.cache_mode,
-        }
-    }
-
-    fn ensure_region_data(&mut self, ctx: &RoundCtx) {
-        if self.region_data.is_empty() {
-            self.region_data = ctx
-                .topo
-                .regions
-                .iter()
-                .map(|cs| ctx.data.region_data_size(cs) as f64)
-                .collect();
         }
     }
 }
@@ -70,75 +60,44 @@ impl Protocol for HybridFl {
         ProtocolKind::HybridFl
     }
 
-    fn run_round(&mut self, t: usize, ctx: &mut RoundCtx) -> Result<RoundRecord> {
-        self.ensure_region_data(ctx);
-        let m = ctx.topo.n_regions();
+    fn run_round(&mut self, t: usize, env: &mut dyn FlEnvironment) -> Result<RoundRecord> {
+        let m = env.n_regions();
+        if self.region_data.is_empty() {
+            self.region_data = (0..m).map(|r| env.region_data_size(r)).collect();
+        }
 
         // --- step 1: slack-modulated regional selection ------------------------
-        let mut selected: Vec<usize> = Vec::new();
-        for r in 0..m {
-            let want = self.slack[r].selection_count();
-            selected.extend(select_clients(&ctx.topo.regions[r], want, ctx.rng));
-        }
-        let sel_by_region = ctx.region_counts(&selected);
+        let counts: Vec<usize> = self.slack.iter().map(|s| s.selection_count()).collect();
 
-        // --- simulate fates ----------------------------------------------------
-        let fates = ctx.simulate(&selected);
-        let alive = ctx.count_alive(&fates);
+        // --- steps 2–3: fan out training; the round ends when C·n models
+        // arrived globally (or at T_lim).
+        let quota = env.cfg().quota();
+        let out = env.run_round(
+            t,
+            Selection::PerRegion(counts),
+            Starts::Global(&self.global),
+            CutoffPolicy::Quota(quota),
+        )?;
+        let quota_met = !out.deadline_hit;
 
-        // --- quota trigger: the round ends when C·n models arrived globally ----
-        let quota = ctx.cfg.quota();
-        let mut completions: Vec<f64> = fates
-            .iter()
-            .filter(|f| !f.dropped)
-            .map(|f| f.completion)
-            .collect();
-        completions.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let (cutoff, quota_met) = if completions.len() >= quota
-            && completions[quota - 1] <= ctx.tm.t_lim
-        {
-            (completions[quota - 1], true)
-        } else {
-            (ctx.tm.t_lim, false)
-        };
-        // The aggregation signal stops straggling clients at the cutoff —
-        // the quota trigger's energy saving (see RoundCtx::charge_energy).
-        ctx.charge_energy(&fates, |_| cutoff);
-
-        // --- train the in-time survivors from the global model -----------------
-        // S_r(t): alive with completion ≤ cutoff.
-        let submissions = ctx.count_by_region(&fates, |f| {
-            !f.dropped && f.completion <= cutoff
-        });
-        let mut loss_sum = 0.0;
-        let mut n_trained = 0usize;
+        // --- regional aggregation: eq. 17 cache rule, or the fresh-only
+        // ablation (see CacheMode docs).
         let mut regional_models: Vec<(ModelParams, f64)> = Vec::with_capacity(m);
         for r in 0..m {
-            let members: Vec<_> = fates
+            let models: Vec<(&ModelParams, f64)> = out
+                .arrivals
                 .iter()
-                .filter(|f| f.region == r && !f.dropped && f.completion <= cutoff)
+                .filter(|a| a.region == r)
+                .map(|a| (&a.model, a.data_size))
                 .collect();
-            let mut models: Vec<(ModelParams, f64)> = Vec::with_capacity(members.len());
-            let mut edc_r = 0.0f64;
-            for f in &members {
-                let (w, loss) = ctx.train(&self.global, f.client)?;
-                loss_sum += loss;
-                n_trained += 1;
-                let d = ctx.data.partitions[f.client].len() as f64;
-                edc_r += d;
-                models.push((w, d));
-            }
-            // Regional aggregation: eq. 17 cache rule, or the fresh-only
-            // ablation (see CacheMode docs).
-            let refs: Vec<(&ModelParams, f64)> =
-                models.iter().map(|(w, d)| (w, *d)).collect();
+            let edc_r: f64 = models.iter().map(|(_, d)| *d).sum();
             let w_r = match self.cache_mode {
                 CacheMode::Regional => crate::aggregation::regional_with_cache(
-                    &refs,
+                    &models,
                     self.region_data[r],
                     &self.regionals[r],
                 ),
-                CacheMode::Fresh => crate::aggregation::fedavg(&refs)
+                CacheMode::Fresh => crate::aggregation::fedavg(&models)
                     .unwrap_or_else(|| self.regionals[r].clone()),
             };
             regional_models.push((w_r, edc_r));
@@ -160,24 +119,21 @@ impl Protocol for HybridFl {
 
         // --- slack update from the observable submission counts ---------------
         for r in 0..m {
-            self.slack[r].observe(submissions[r], quota_met);
+            self.slack[r].observe(out.submissions[r], quota_met);
         }
+        let mean_local_loss = mean_loss(&out);
 
         Ok(RoundRecord {
             t,
             // Three-layer: edge↔cloud exchange happens every round.
-            round_len: cutoff + ctx.tm.t_c2e2c,
-            selected: sel_by_region,
-            alive,
-            submissions,
-            energy_j: ctx.energy_j(),
-            deadline_hit: !quota_met,
+            round_len: out.round_len + env.t_c2e2c(),
+            selected: out.selected,
+            alive: out.alive,
+            submissions: out.submissions,
+            energy_j: out.energy_j,
+            deadline_hit: out.deadline_hit,
             cloud_aggregated: true,
-            mean_local_loss: if n_trained == 0 {
-                f64::NAN
-            } else {
-                loss_sum / n_trained as f64
-            },
+            mean_local_loss,
         })
     }
 
@@ -205,7 +161,8 @@ impl Protocol for HybridFl {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::test_support::mock_ctx_parts;
+    use crate::env::{FlEnvironment as _, VirtualClockEnv};
+    use crate::sim::test_support::mock_cfg;
 
     fn run_rounds(
         dropout: f64,
@@ -214,16 +171,14 @@ mod tests {
         rounds: usize,
         seed: u64,
     ) -> (HybridFl, Vec<RoundRecord>) {
-        let (cfg, topo, data, tm, em, mut engine, profiles) =
-            mock_ctx_parts(dropout, n, m);
-        let mut rng = crate::rng::Rng::new(seed);
-        let mut proto = HybridFl::new(&cfg, &topo, engine.init_params());
+        let mut cfg = mock_cfg(dropout, n, m);
+        cfg.seed = seed;
+        let mut env = VirtualClockEnv::new(cfg.clone()).unwrap();
+        let sizes: Vec<usize> = (0..m).map(|r| env.region_size(r)).collect();
+        let mut proto = HybridFl::new(&cfg, &sizes, env.init_model());
         let mut recs = Vec::new();
         for t in 1..=rounds {
-            let mut ctx = RoundCtx::new(
-                &cfg, &topo, &data, &tm, &em, engine.as_mut(), &mut rng, &profiles,
-            );
-            recs.push(proto.run_round(t, &mut ctx).unwrap());
+            recs.push(proto.run_round(t, &mut env).unwrap());
         }
         (proto, recs)
     }

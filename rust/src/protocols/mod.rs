@@ -1,19 +1,23 @@
 //! FL control protocols (S1–S3): the paper's HybridFL and the two
 //! baselines it is evaluated against.
 //!
-//! Protocols orchestrate a federated round through a [`RoundCtx`], which
-//! exposes exactly two capabilities:
+//! Each protocol is written **once** against the
+//! [`crate::env::FlEnvironment`] backend trait and runs unchanged on both
+//! the virtual-clock simulator and the live threaded cluster. A round from
+//! the protocol's side is three moves:
 //!
-//! * `simulate(selected)` — the MEC simulator decides each selected
-//!   client's fate (drop-out draw + completion time). Protocols receive
-//!   [`ClientFate`]s — *who finished when* — never the underlying device
-//!   profiles, mirroring the paper's reliability-agnostic constraint.
-//! * `train(start, client)` — run the client's local GD epochs on the
-//!   compute engine and get the updated model.
+//! 1. decide a [`crate::env::Selection`] (how many clients per region) and
+//!    which model each region trains from ([`crate::env::Starts`]);
+//! 2. hand the environment a [`crate::env::CutoffPolicy`] and receive a
+//!    [`crate::env::RoundOutcome`] — who submitted (counts per region) and
+//!    the submitted models themselves;
+//! 3. aggregate and update protocol state (slack estimators, regional
+//!    caches, the global model).
 //!
-//! The returned [`RoundRecord`] carries everything the metrics layer and
-//! the experiment harness need (round length, per-region submission and
-//! aliveness counts, energy).
+//! Protocols receive only observables — submission counts and model
+//! envelopes — never device profiles or fates, mirroring the paper's
+//! reliability-agnostic constraint. The returned [`RoundRecord`] carries
+//! everything the metrics layer and the experiment harness need.
 
 pub mod fedavg;
 pub mod hierfavg;
@@ -24,28 +28,10 @@ pub use hierfavg::HierFavg;
 pub use hybridfl::HybridFl;
 
 use crate::config::{ExperimentConfig, ProtocolKind};
-use crate::data::FederatedData;
-use crate::devices::ClientProfile;
-use crate::energy::EnergyModel;
+use crate::env::{FlEnvironment, RoundOutcome};
 use crate::model::ModelParams;
-use crate::rng::Rng;
-use crate::runtime::Engine;
 use crate::selection::slack::SlackState;
-use crate::timing::TimingModel;
-use crate::topology::Topology;
 use crate::Result;
-
-/// A selected client's simulated fate in one round.
-#[derive(Clone, Copy, Debug)]
-pub struct ClientFate {
-    pub client: usize,
-    pub region: usize,
-    /// True if the client dropped/opted out this round (never responds).
-    pub dropped: bool,
-    /// Completion time from round start (comm + training) when not
-    /// dropped; `f64::INFINITY` when dropped.
-    pub completion: f64,
-}
 
 /// What a protocol reports after running one round.
 #[derive(Clone, Debug)]
@@ -56,8 +42,8 @@ pub struct RoundRecord {
     /// |U_r(t)| — clients selected, per region.
     pub selected: Vec<usize>,
     /// |X_r(t)| — selected clients that did not drop out, per region
-    /// (simulator ground truth; protocols never see this, it is recorded
-    /// by the context during `simulate`).
+    /// (environment ground truth; protocols never act on this, it is
+    /// recorded by the backend for the metrics layer).
     pub alive: Vec<usize>,
     /// |S_r(t)| — models collected in time, per region.
     pub submissions: Vec<usize>,
@@ -72,166 +58,13 @@ pub struct RoundRecord {
     pub mean_local_loss: f64,
 }
 
-/// Shared services for one round. Constructed fresh each round by the
-/// run loop in `sim::FlRun`.
-pub struct RoundCtx<'a> {
-    pub cfg: &'a ExperimentConfig,
-    pub topo: &'a Topology,
-    pub data: &'a FederatedData,
-    pub tm: &'a TimingModel,
-    pub em: &'a EnergyModel,
-    pub engine: &'a mut dyn Engine,
-    pub rng: &'a mut Rng,
-    /// Device ground truth — private to the simulator; protocols only
-    /// access it through `simulate()`.
-    profiles: &'a [ClientProfile],
-    /// Energy accumulated by `simulate()` for this round.
-    energy_j: f64,
-}
-
-impl<'a> RoundCtx<'a> {
-    pub fn new(
-        cfg: &'a ExperimentConfig,
-        topo: &'a Topology,
-        data: &'a FederatedData,
-        tm: &'a TimingModel,
-        em: &'a EnergyModel,
-        engine: &'a mut dyn Engine,
-        rng: &'a mut Rng,
-        profiles: &'a [ClientProfile],
-    ) -> RoundCtx<'a> {
-        RoundCtx {
-            cfg,
-            topo,
-            data,
-            tm,
-            em,
-            engine,
-            rng,
-            profiles,
-            energy_j: 0.0,
-        }
-    }
-
-    /// Simulate the fates of the selected clients: independent drop-out
-    /// draw per client (dr_k) and completion time from the timing model.
-    /// Energy is charged separately once the protocol has determined the
-    /// round cutoff — see [`Self::charge_energy`].
-    pub fn simulate(&mut self, selected: &[usize]) -> Vec<ClientFate> {
-        selected
-            .iter()
-            .map(|&k| {
-                let p = &self.profiles[k];
-                let dropped = self.rng.bernoulli(p.dropout_p);
-                let psize = self.data.partitions[k].len() as f64;
-                let completion = if dropped {
-                    f64::INFINITY
-                } else {
-                    self.tm.completion(p, psize)
-                };
-                ClientFate {
-                    client: k,
-                    region: self.topo.region_of[k],
-                    dropped,
-                    completion,
-                }
-            })
-            .collect()
-    }
-
-    /// Charge device energy for a round that ended at `cutoff(region)`:
-    ///
-    /// * dropped clients burn half their training energy (abort mid-epoch,
-    ///   no upload);
-    /// * clients finishing before the cutoff burn the full eq. 35;
-    /// * stragglers are *stopped by the round-end signal* (the edge stops
-    ///   waiting and tells them to abandon the round), burning only the
-    ///   `cutoff/completion` fraction — this is precisely where the
-    ///   quota-triggered protocols save device energy relative to the
-    ///   deadline-bound baselines.
-    pub fn charge_energy(
-        &mut self,
-        fates: &[ClientFate],
-        cutoff: impl Fn(usize) -> f64,
-    ) {
-        for f in fates {
-            let p = &self.profiles[f.client];
-            let psize = self.data.partitions[f.client].len() as f64;
-            let spend = if f.dropped {
-                self.em.aborted_round(p, self.tm, psize).total_j()
-            } else {
-                let full = self.em.full_round(p, self.tm, psize).total_j();
-                let cut = cutoff(f.region);
-                if f.completion <= cut {
-                    full
-                } else {
-                    full * (cut / f.completion).clamp(0.0, 1.0)
-                }
-            };
-            self.energy_j += spend;
-        }
-    }
-
-    /// Local training for one client from the given starting model.
-    pub fn train(&mut self, start: &ModelParams, client: usize) -> Result<(ModelParams, f64)> {
-        let out = self.engine.train_local(
-            start,
-            &self.data.partitions[client],
-            self.cfg.local_epochs,
-            self.cfg.lr as f32,
-        )?;
-        Ok((out.params, out.loss))
-    }
-
-    /// Energy spent so far this round (Joules).
-    pub fn energy_j(&self) -> f64 {
-        self.energy_j
-    }
-
-    /// Per-region |X_r| from a fate list (ground-truth bookkeeping for the
-    /// record; computed by the context, not by protocol logic).
-    pub fn count_alive(&self, fates: &[ClientFate]) -> Vec<usize> {
-        let mut alive = vec![0usize; self.topo.n_regions()];
-        for f in fates {
-            if !f.dropped {
-                alive[f.region] += 1;
-            }
-        }
-        alive
-    }
-
-    /// Per-region histogram of a client list (e.g. |U_r| from a selection).
-    pub fn region_counts(&self, clients: &[usize]) -> Vec<usize> {
-        let mut out = vec![0usize; self.topo.n_regions()];
-        for &k in clients {
-            out[self.topo.region_of[k]] += 1;
-        }
-        out
-    }
-
-    /// Per-region count of fates matching a predicate.
-    pub fn count_by_region(
-        &self,
-        fates: &[ClientFate],
-        pred: impl Fn(&ClientFate) -> bool,
-    ) -> Vec<usize> {
-        let mut out = vec![0usize; self.topo.n_regions()];
-        for f in fates {
-            if pred(f) {
-                out[f.region] += 1;
-            }
-        }
-        out
-    }
-}
-
 /// The protocol interface the run loop drives.
 pub trait Protocol {
     fn kind(&self) -> ProtocolKind;
 
-    /// Execute round `t` (1-based) end to end: selection, simulated
-    /// client fates, local training of the useful survivors, aggregation.
-    fn run_round(&mut self, t: usize, ctx: &mut RoundCtx) -> Result<RoundRecord>;
+    /// Execute round `t` (1-based) end to end against the backend:
+    /// selection, training fan-out, collection, aggregation.
+    fn run_round(&mut self, t: usize, env: &mut dyn FlEnvironment) -> Result<RoundRecord>;
 
     /// The model the cloud would currently deploy / evaluate.
     fn global_model(&self) -> &ModelParams;
@@ -242,21 +75,37 @@ pub trait Protocol {
     }
 }
 
-/// Instantiate the configured protocol.
+/// Instantiate the configured protocol for a topology with the given
+/// per-region populations.
 pub fn build_protocol(
     cfg: &ExperimentConfig,
-    topo: &Topology,
+    region_sizes: &[usize],
     init: ModelParams,
 ) -> Box<dyn Protocol> {
     match cfg.protocol {
         ProtocolKind::FedAvg => Box::new(FedAvg::new(init)),
-        ProtocolKind::HierFavg => Box::new(HierFavg::new(cfg, topo, init)),
-        ProtocolKind::HybridFl => Box::new(HybridFl::new(cfg, topo, init)),
+        ProtocolKind::HierFavg => Box::new(HierFavg::new(cfg, region_sizes.len(), init)),
+        ProtocolKind::HybridFl => Box::new(HybridFl::new(cfg, region_sizes, init)),
     }
+}
+
+/// Instantiate the protocol an environment's config asks for.
+pub fn protocol_for(env: &dyn FlEnvironment) -> Box<dyn Protocol> {
+    let sizes: Vec<usize> = (0..env.n_regions()).map(|r| env.region_size(r)).collect();
+    build_protocol(env.cfg(), &sizes, env.init_model())
 }
 
 /// Shared helper: round a fractional client count to a concrete selection
 /// size in [1, n].
 pub(crate) fn count_from_fraction(fraction: f64, n: usize) -> usize {
     ((fraction * n as f64).round() as usize).clamp(1, n)
+}
+
+/// Mean local loss across arrivals (NaN when nothing arrived).
+pub(crate) fn mean_loss(outcome: &RoundOutcome) -> f64 {
+    if outcome.arrivals.is_empty() {
+        f64::NAN
+    } else {
+        outcome.arrivals.iter().map(|a| a.loss).sum::<f64>() / outcome.arrivals.len() as f64
+    }
 }

@@ -12,6 +12,7 @@
 
 pub mod batch;
 pub mod mock;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 use crate::config::{EngineKind, ExperimentConfig};
@@ -64,14 +65,46 @@ pub trait Engine {
     fn name(&self) -> &'static str;
 }
 
+/// True when the real-training PJRT path can actually run: the crate was
+/// built with the `pjrt` feature *and* the AOT artifacts are on disk.
+/// Examples, benches and the e2e tests use this to decide between real
+/// training and the mock fallback / skip.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt") && std::path::Path::new("artifacts/manifest.json").exists()
+}
+
 /// Construct the engine selected by the config. The federated data is
 /// shared with the engine so batches can be built on demand.
+///
+/// The PJRT path requires the `pjrt` cargo feature (vendored `xla`
+/// bindings); without it, selecting `EngineKind::Pjrt` is a runtime error
+/// so the rest of the stack builds against the minimal offline dependency
+/// set.
 pub fn build_engine(
     cfg: &ExperimentConfig,
     data: std::sync::Arc<FederatedData>,
 ) -> Result<Box<dyn Engine>> {
     match cfg.engine {
-        EngineKind::Pjrt => Ok(Box::new(pjrt::PjrtEngine::new(cfg, data)?)),
+        EngineKind::Pjrt => build_pjrt_engine(cfg, data),
         EngineKind::Mock => Ok(Box::new(mock::MockEngine::new(cfg, data))),
     }
+}
+
+#[cfg(feature = "pjrt")]
+fn build_pjrt_engine(
+    cfg: &ExperimentConfig,
+    data: std::sync::Arc<FederatedData>,
+) -> Result<Box<dyn Engine>> {
+    Ok(Box::new(pjrt::PjrtEngine::new(cfg, data)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_pjrt_engine(
+    _cfg: &ExperimentConfig,
+    _data: std::sync::Arc<FederatedData>,
+) -> Result<Box<dyn Engine>> {
+    anyhow::bail!(
+        "engine 'pjrt' requires building with `--features pjrt` (vendored xla \
+         bindings); use engine=mock, or rebuild with the feature enabled"
+    )
 }

@@ -1,0 +1,268 @@
+//! `Scenario` — the fluent entry point for running experiments on any
+//! backend.
+//!
+//! One protocol, every backend: a scenario describes *what* to run (task,
+//! protocol, reliability, scale) and *where* to run it ([`Backend::Sim`]
+//! on the virtual clock, [`Backend::Live`] on the threaded cluster), and
+//! returns the same [`RunResult`] either way.
+//!
+//! ```no_run
+//! use hybridfl::config::ProtocolKind;
+//! use hybridfl::scenario::{Backend, Scenario};
+//!
+//! let result = Scenario::task1()
+//!     .protocol(ProtocolKind::HybridFl)
+//!     .dropout(0.3)
+//!     .backend(Backend::Live)
+//!     .seed(42)
+//!     .run()?;
+//! println!("best accuracy: {:.3}", result.summary.best_accuracy);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use crate::config::{CacheMode, EngineKind, ExperimentConfig, ProtocolKind};
+use crate::env::{run_to_completion, LiveClusterEnv, RunResult, VirtualClockEnv};
+use crate::protocols::protocol_for;
+use crate::Result;
+
+/// Which [`crate::env::FlEnvironment`] implementation executes the rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Deterministic MEC simulator on the virtual clock (default).
+    Sim,
+    /// Live threaded cloud/edge/client cluster (mock numerics, real
+    /// concurrency; virtual durations scaled by
+    /// [`Scenario::time_scale`]).
+    Live,
+}
+
+impl Backend {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Backend::Sim => "sim",
+            Backend::Live => "live",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "sim" => Ok(Backend::Sim),
+            "live" => Ok(Backend::Live),
+            _ => anyhow::bail!("unknown backend '{s}' (sim|live)"),
+        }
+    }
+}
+
+/// Builder for one experiment run. Start from a preset, chain overrides,
+/// pick a backend, `run()`.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    cfg: ExperimentConfig,
+    backend: Backend,
+    time_scale: f64,
+}
+
+impl Scenario {
+    /// Default wall-clock seconds per virtual second for the live backend
+    /// (a ~90 s virtual deadline plays out in ~9 ms).
+    pub const DEFAULT_TIME_SCALE: f64 = 1e-4;
+
+    /// Wrap an existing config (the escape hatch for fully custom setups).
+    pub fn from_config(cfg: ExperimentConfig) -> Scenario {
+        Scenario {
+            cfg,
+            backend: Backend::Sim,
+            time_scale: Self::DEFAULT_TIME_SCALE,
+        }
+    }
+
+    /// Task 1 (Aerofoil) at laptop scale.
+    pub fn task1() -> Scenario {
+        Self::from_config(ExperimentConfig::task1_scaled())
+    }
+
+    /// Task 1 (Aerofoil) at exact Table II scale.
+    pub fn task1_paper() -> Scenario {
+        Self::from_config(ExperimentConfig::task1_paper())
+    }
+
+    /// Task 2 (MNIST) at laptop scale.
+    pub fn task2() -> Scenario {
+        Self::from_config(ExperimentConfig::task2_scaled())
+    }
+
+    /// Task 2 (MNIST) at exact Table II scale.
+    pub fn task2_paper() -> Scenario {
+        Self::from_config(ExperimentConfig::task2_paper())
+    }
+
+    /// The Fig. 2 slack-trace experiment (mock engine, two regions).
+    pub fn fig2() -> Scenario {
+        Self::from_config(ExperimentConfig::fig2())
+    }
+
+    /// Any named preset (`task1|task1-scaled|task2|task2-scaled|fig2`).
+    pub fn preset(name: &str) -> Result<Scenario> {
+        Ok(Self::from_config(ExperimentConfig::preset(name)?))
+    }
+
+    // --- config overrides ---------------------------------------------------
+
+    pub fn protocol(mut self, p: ProtocolKind) -> Scenario {
+        self.cfg.protocol = p;
+        self
+    }
+
+    pub fn engine(mut self, e: EngineKind) -> Scenario {
+        self.cfg.engine = e;
+        self
+    }
+
+    /// Shorthand for the analytic mock engine (no artifacts needed).
+    pub fn mock(self) -> Scenario {
+        self.engine(EngineKind::Mock)
+    }
+
+    /// E[dr] — mean per-round drop-out probability of the fleet.
+    pub fn dropout(mut self, mean: f64) -> Scenario {
+        self.cfg.dropout.mean = mean;
+        self
+    }
+
+    /// C — desired proportion of clients with successful submissions.
+    pub fn c_fraction(mut self, c: f64) -> Scenario {
+        self.cfg.c_fraction = c;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Scenario {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// t_max — number of federated rounds to run.
+    pub fn rounds(mut self, t_max: usize) -> Scenario {
+        self.cfg.t_max = t_max;
+        self
+    }
+
+    pub fn clients(mut self, n: usize) -> Scenario {
+        self.cfg.n_clients = n;
+        self
+    }
+
+    pub fn edges(mut self, m: usize) -> Scenario {
+        self.cfg.n_edges = m;
+        self
+    }
+
+    pub fn dataset_size(mut self, n: usize) -> Scenario {
+        self.cfg.dataset_size = n;
+        self
+    }
+
+    pub fn local_epochs(mut self, tau: usize) -> Scenario {
+        self.cfg.local_epochs = tau;
+        self
+    }
+
+    pub fn theta_init(mut self, theta: f64) -> Scenario {
+        self.cfg.theta_init = theta;
+        self
+    }
+
+    pub fn cache_mode(mut self, mode: CacheMode) -> Scenario {
+        self.cfg.cache_mode = mode;
+        self
+    }
+
+    /// Stop early once the global model reaches this accuracy.
+    pub fn target_accuracy(mut self, acc: f64) -> Scenario {
+        self.cfg.target_accuracy = Some(acc);
+        self
+    }
+
+    /// Arbitrary config surgery for knobs without a dedicated method.
+    pub fn tune(mut self, f: impl FnOnce(&mut ExperimentConfig)) -> Scenario {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// Apply CLI-style `key=value` overrides (see `config::apply_overrides`).
+    pub fn apply_sets(mut self, overrides: &[String]) -> Result<Scenario> {
+        crate::config::apply_overrides(&mut self.cfg, overrides)?;
+        Ok(self)
+    }
+
+    // --- execution ----------------------------------------------------------
+
+    pub fn backend(mut self, backend: Backend) -> Scenario {
+        self.backend = backend;
+        self
+    }
+
+    /// Wall-clock seconds per virtual second for [`Backend::Live`].
+    pub fn time_scale(mut self, scale: f64) -> Scenario {
+        self.time_scale = scale;
+        self
+    }
+
+    /// The resolved config (inspection / serialization).
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Validate the config, build the backend and the protocol, and drive
+    /// the run to completion. Identical [`RunResult`] shape on every
+    /// backend.
+    pub fn run(self) -> Result<RunResult> {
+        self.cfg.validate()?;
+        match self.backend {
+            Backend::Sim => {
+                let mut env = VirtualClockEnv::new(self.cfg)?;
+                let mut protocol = protocol_for(&env);
+                run_to_completion(&mut env, protocol.as_mut())
+            }
+            Backend::Live => {
+                let mut env = LiveClusterEnv::new(self.cfg, self.time_scale)?;
+                let mut protocol = protocol_for(&env);
+                run_to_completion(&mut env, protocol.as_mut())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains_and_exposes_config() {
+        let sc = Scenario::task1()
+            .mock()
+            .protocol(ProtocolKind::FedAvg)
+            .dropout(0.4)
+            .c_fraction(0.2)
+            .seed(7)
+            .rounds(12);
+        assert_eq!(sc.config().protocol, ProtocolKind::FedAvg);
+        assert_eq!(sc.config().engine, EngineKind::Mock);
+        assert_eq!(sc.config().dropout.mean, 0.4);
+        assert_eq!(sc.config().c_fraction, 0.2);
+        assert_eq!(sc.config().seed, 7);
+        assert_eq!(sc.config().t_max, 12);
+    }
+
+    // Validation rejection cases live in tests/scenario_api.rs
+    // (builder_rejects_invalid_fraction_and_quota_combos).
+
+    #[test]
+    fn sim_run_matches_flrun() {
+        let sc = Scenario::task1().mock().rounds(8).clients(16).edges(2);
+        let cfg = sc.config().clone();
+        let a = sc.run().unwrap();
+        let b = crate::sim::FlRun::new(cfg).unwrap().run().unwrap();
+        assert_eq!(a.summary.best_accuracy, b.summary.best_accuracy);
+        assert_eq!(a.summary.total_time, b.summary.total_time);
+    }
+}

@@ -1,8 +1,12 @@
-//! The FL run engine (S8): assembles topology, fleet, data, timing,
-//! energy, compute engine and protocol, then drives rounds on a virtual
-//! clock, recording everything the experiment harness needs.
+//! The virtual-clock FL run engine (S8), now a convenience layer over the
+//! [`crate::env::VirtualClockEnv`] backend: assembles topology, fleet,
+//! data, timing, energy, compute engine and protocol, then drives rounds
+//! on the virtual clock, recording everything the experiment harness
+//! needs. The trace/summary types are re-exported from `crate::env`, where
+//! they are shared by every backend.
 
 mod run;
 pub mod test_support;
 
-pub use run::{FlRun, RoundTrace, RunResult, RunSummary};
+pub use crate::env::{RoundTrace, RunResult, RunSummary};
+pub use run::FlRun;

@@ -1,184 +1,45 @@
-//! `FlRun` — one complete federated-learning experiment on a virtual clock.
-
-use std::sync::Arc;
+//! `FlRun` — one complete federated-learning experiment on the virtual
+//! clock.
+//!
+//! Since the `FlEnvironment` redesign this is a thin convenience wrapper:
+//! it builds a [`VirtualClockEnv`], instantiates the configured protocol
+//! and drives [`run_to_completion`]. New code should prefer the
+//! [`crate::scenario::Scenario`] builder, which offers the same run over
+//! either backend; `FlRun` stays for the harness and the existing tests.
 
 use crate::config::ExperimentConfig;
-use crate::data::FederatedData;
-use crate::devices::{self, ClientProfile};
-use crate::energy::EnergyModel;
-use crate::protocols::{build_protocol, Protocol, RoundCtx};
-use crate::rng::Rng;
-use crate::runtime::{build_engine, Engine};
-use crate::selection::slack::SlackState;
+use crate::env::{run_to_completion, FlEnvironment as _, RunResult, VirtualClockEnv};
+use crate::protocols::{protocol_for, Protocol};
 use crate::timing::TimingModel;
-use crate::topology::Topology;
 use crate::Result;
 
-/// Per-round trace row — one per executed round. This is the substrate for
-/// every figure: accuracy traces (Figs. 4/6), slack traces (Fig. 2), energy
-/// accumulation (Figs. 5/7).
-#[derive(Clone, Debug)]
-pub struct RoundTrace {
-    pub t: usize,
-    pub round_len: f64,
-    /// Virtual time at the end of this round.
-    pub cum_time: f64,
-    /// Global-model accuracy after this round (evaluated every
-    /// `eval_every` rounds; in between, carries the last measured value).
-    pub accuracy: f64,
-    /// Best accuracy seen so far ("the cloud always keeps the best global
-    /// model").
-    pub best_accuracy: f64,
-    pub eval_loss: f64,
-    pub selected: Vec<usize>,
-    pub alive: Vec<usize>,
-    pub submissions: Vec<usize>,
-    /// Cumulative device energy, Joules, across the fleet.
-    pub cum_energy_j: f64,
-    pub deadline_hit: bool,
-    pub cloud_aggregated: bool,
-    /// HybridFL slack telemetry (θ̂_r, C_r, q_r per region).
-    pub slack: Option<Vec<SlackState>>,
-}
-
-/// End-of-run aggregates — the numbers the paper's tables report.
-#[derive(Clone, Debug)]
-pub struct RunSummary {
-    pub protocol: String,
-    pub rounds_run: usize,
-    /// Best global-model accuracy over the run ("Best Accuracy").
-    pub best_accuracy: f64,
-    /// Mean T_round ("Round length (sec)").
-    pub avg_round_len: f64,
-    /// Rounds needed to reach `target_accuracy` ("Rounds needed"), if hit.
-    pub rounds_to_target: Option<usize>,
-    /// Virtual time to reach the target ("Total time (sec)"), if hit.
-    pub time_to_target: Option<f64>,
-    /// Mean per-device energy in Wh over the whole run (Figs. 5/7).
-    pub mean_device_energy_wh: f64,
-    /// Total virtual time of the run.
-    pub total_time: f64,
-    pub final_loss: f64,
-}
-
-#[derive(Clone, Debug)]
-pub struct RunResult {
-    pub summary: RunSummary,
-    pub rounds: Vec<RoundTrace>,
-}
-
-/// A fully-assembled experiment, ready to run.
+/// A fully-assembled virtual-clock experiment, ready to run.
 pub struct FlRun {
     pub cfg: ExperimentConfig,
-    pub topo: Topology,
-    pub data: Arc<FederatedData>,
-    pub profiles: Vec<ClientProfile>,
+    /// The timing model in effect (exposed for bound checks in tests).
     pub tm: TimingModel,
-    pub em: EnergyModel,
-    engine: Box<dyn Engine>,
+    env: VirtualClockEnv,
     protocol: Box<dyn Protocol>,
-    rng: Rng,
 }
 
 impl FlRun {
     /// Build everything from a config (deterministic in `cfg.seed`).
     pub fn new(cfg: ExperimentConfig) -> Result<FlRun> {
-        cfg.validate()?;
-        let mut rng = Rng::new(cfg.seed);
-        let topo = Topology::build(&cfg, &mut rng.split(1))?;
-        let data = Arc::new(crate::data::build(&cfg, &mut rng.split(2)));
-        let profiles = devices::sample_fleet(&cfg, &topo, &mut rng.split(3));
-        let tm = TimingModel::new(&cfg);
-        let em = EnergyModel::new(&cfg);
-        let engine = build_engine(&cfg, Arc::clone(&data))?;
-        let protocol = build_protocol(&cfg, &topo, engine.init_params());
+        let env = VirtualClockEnv::new(cfg)?;
+        let cfg = env.cfg().clone();
+        let tm = env.timing().clone();
+        let protocol = protocol_for(&env);
         Ok(FlRun {
             cfg,
-            topo,
-            data,
-            profiles,
             tm,
-            em,
-            engine,
+            env,
             protocol,
-            rng: rng.split(4),
         })
     }
 
     /// Run to `t_max` rounds or until `target_accuracy` is reached.
     pub fn run(mut self) -> Result<RunResult> {
-        let mut rounds: Vec<RoundTrace> = Vec::with_capacity(self.cfg.t_max);
-        let mut cum_time = 0.0f64;
-        let mut cum_energy = 0.0f64;
-        let mut best_acc = f64::MIN;
-        let mut last_acc = 0.0f64;
-        let mut last_loss = f64::NAN;
-        let mut rounds_to_target = None;
-        let mut time_to_target = None;
-
-        for t in 1..=self.cfg.t_max {
-            let mut round_rng = self.rng.split(t as u64);
-            let rec = {
-                let mut ctx = RoundCtx::new(
-                    &self.cfg,
-                    &self.topo,
-                    &self.data,
-                    &self.tm,
-                    &self.em,
-                    self.engine.as_mut(),
-                    &mut round_rng,
-                    &self.profiles,
-                );
-                self.protocol.run_round(t, &mut ctx)?
-            };
-            cum_time += rec.round_len;
-            cum_energy += rec.energy_j;
-
-            if t % self.cfg.eval_every == 0 || t == self.cfg.t_max {
-                let ev = self.engine.evaluate(self.protocol.global_model())?;
-                last_acc = ev.accuracy;
-                last_loss = ev.loss;
-            }
-            best_acc = best_acc.max(last_acc);
-
-            rounds.push(RoundTrace {
-                t,
-                round_len: rec.round_len,
-                cum_time,
-                accuracy: last_acc,
-                best_accuracy: best_acc,
-                eval_loss: last_loss,
-                selected: rec.selected,
-                alive: rec.alive,
-                submissions: rec.submissions,
-                cum_energy_j: cum_energy,
-                deadline_hit: rec.deadline_hit,
-                cloud_aggregated: rec.cloud_aggregated,
-                slack: self.protocol.slack_states(),
-            });
-
-            if let Some(target) = self.cfg.target_accuracy {
-                if best_acc >= target && rounds_to_target.is_none() {
-                    rounds_to_target = Some(t);
-                    time_to_target = Some(cum_time);
-                    break; // "Stop @Acc" mode
-                }
-            }
-        }
-
-        let n_rounds = rounds.len().max(1);
-        let summary = RunSummary {
-            protocol: self.cfg.protocol.as_str().to_string(),
-            rounds_run: rounds.len(),
-            best_accuracy: best_acc.max(0.0),
-            avg_round_len: cum_time / n_rounds as f64,
-            rounds_to_target,
-            time_to_target,
-            mean_device_energy_wh: cum_energy / 3600.0 / self.cfg.n_clients as f64,
-            total_time: cum_time,
-            final_loss: last_loss,
-        };
-        Ok(RunResult { summary, rounds })
+        run_to_completion(&mut self.env, self.protocol.as_mut())
     }
 }
 

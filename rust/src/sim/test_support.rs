@@ -1,35 +1,14 @@
-//! Shared fixtures for protocol unit tests: a fully-assembled set of round
-//! context ingredients over the mock engine. Exposed as a public module so
+//! Shared fixtures for protocol unit tests: a fully-assembled
+//! [`VirtualClockEnv`] over the mock engine. Exposed as a public module so
 //! integration tests and benches can reuse it, but not part of the stable
 //! API surface.
 
-use std::sync::Arc;
-
 use crate::config::{Dist, EngineKind, ExperimentConfig};
-use crate::data::FederatedData;
-use crate::devices::{self, ClientProfile};
-use crate::energy::EnergyModel;
-use crate::rng::Rng;
-use crate::runtime::{build_engine, Engine};
-use crate::timing::TimingModel;
-use crate::topology::Topology;
+use crate::env::VirtualClockEnv;
 
-/// Build every ingredient a `RoundCtx` needs, with a uniform drop-out
-/// probability across the fleet and the mock engine.
-#[allow(clippy::type_complexity)]
-pub fn mock_ctx_parts(
-    dropout: f64,
-    n_clients: usize,
-    n_edges: usize,
-) -> (
-    ExperimentConfig,
-    Topology,
-    Arc<FederatedData>,
-    TimingModel,
-    EnergyModel,
-    Box<dyn Engine>,
-    Vec<ClientProfile>,
-) {
+/// A small mock-engine config with a uniform drop-out probability across
+/// the fleet (fixed world seed 99 unless the caller overrides `seed`).
+pub fn mock_cfg(dropout: f64, n_clients: usize, n_edges: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::task1_scaled();
     cfg.engine = EngineKind::Mock;
     cfg.n_clients = n_clients;
@@ -37,14 +16,13 @@ pub fn mock_ctx_parts(
     cfg.dataset_size = (n_clients * 30).max(200);
     cfg.eval_size = 50;
     cfg.dropout = Dist::new(dropout, 0.0);
+    cfg.seed = 99;
     cfg.validate().expect("fixture config must validate");
+    cfg
+}
 
-    let mut rng = Rng::new(99);
-    let topo = Topology::build(&cfg, &mut rng.split(1)).unwrap();
-    let data = Arc::new(crate::data::build(&cfg, &mut rng.split(2)));
-    let profiles = devices::sample_fleet(&cfg, &topo, &mut rng.split(3));
-    let tm = TimingModel::new(&cfg);
-    let em = EnergyModel::new(&cfg);
-    let engine = build_engine(&cfg, Arc::clone(&data)).unwrap();
-    (cfg, topo, data, tm, em, engine, profiles)
+/// Build a ready-to-drive virtual-clock environment over [`mock_cfg`].
+pub fn mock_env(dropout: f64, n_clients: usize, n_edges: usize) -> VirtualClockEnv {
+    VirtualClockEnv::new(mock_cfg(dropout, n_clients, n_edges))
+        .expect("fixture environment must build")
 }

@@ -37,6 +37,44 @@ fn config_command_emits_valid_json() {
 }
 
 #[test]
+fn unknown_option_is_rejected_with_its_value() {
+    // '--portocol hybridfl' must not silently become a switch plus a stray
+    // positional (the old Args footgun).
+    let out = bin()
+        .args(["run", "--portocol", "hybridfl"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown option"), "{err}");
+    assert!(err.contains("--portocol"), "{err}");
+}
+
+#[test]
+fn run_live_backend_smoke() {
+    let out = bin()
+        .args([
+            "run",
+            "--preset",
+            "fig2",
+            "--set",
+            "t_max=4",
+            "--backend",
+            "live",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("best accuracy"));
+    assert!(text.contains("backend live"));
+}
+
+#[test]
 fn bad_override_reports_key() {
     let out = bin()
         .args(["config", "--set", "nonsense_key=1"])

@@ -7,7 +7,7 @@ use hybridfl::config::{ExperimentConfig, ProtocolKind};
 use hybridfl::sim::FlRun;
 
 fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
+    hybridfl::runtime::pjrt_available()
 }
 
 #[test]

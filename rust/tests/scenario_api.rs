@@ -1,0 +1,121 @@
+//! The unified execution API end to end: `Scenario` builder validation,
+//! cross-backend result shape, and determinism of the threaded sweep.
+
+use hybridfl::config::{ProtocolKind, TaskKind};
+use hybridfl::harness::sweep::{render_energy, render_table};
+use hybridfl::harness::{run_task_sweep, SweepOpts};
+use hybridfl::scenario::{Backend, Scenario};
+
+#[test]
+fn builder_rejects_invalid_fraction_and_quota_combos() {
+    // cfg.validate() fires before any backend is built.
+    assert!(Scenario::task1().mock().c_fraction(0.0).run().is_err());
+    assert!(Scenario::task1().mock().c_fraction(1.5).run().is_err());
+    assert!(Scenario::task1().mock().dropout(1.0).run().is_err());
+    assert!(Scenario::task1().mock().rounds(0).run().is_err());
+    assert!(Scenario::task1().mock().theta_init(0.0).run().is_err());
+    // Explicit regions must sum to n_clients.
+    let bad = Scenario::task1().mock().tune(|cfg| {
+        cfg.regions = vec![hybridfl::config::RegionSpec {
+            n_clients: 3,
+            dropout_mean: 0.1,
+        }];
+    });
+    assert!(bad.run().is_err());
+}
+
+#[test]
+fn every_protocol_runs_on_both_backends() {
+    for proto in ProtocolKind::ALL {
+        for backend in [Backend::Sim, Backend::Live] {
+            let result = Scenario::task1()
+                .mock()
+                .protocol(proto)
+                .clients(16)
+                .edges(2)
+                .dataset_size(640)
+                .rounds(3)
+                .backend(backend)
+                .run()
+                .unwrap_or_else(|e| panic!("{proto:?} on {backend:?}: {e}"));
+            assert_eq!(result.rounds.len(), 3, "{proto:?} on {backend:?}");
+            assert_eq!(result.summary.protocol, proto.as_str());
+            for row in &result.rounds {
+                let sel: usize = row.selected.iter().sum();
+                let sub: usize = row.submissions.iter().sum();
+                assert!(sel >= 1 && sub <= sel, "{proto:?} on {backend:?}");
+                assert!(row.round_len > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn scenario_is_deterministic_per_seed() {
+    let run = || {
+        Scenario::task1()
+            .mock()
+            .dropout(0.3)
+            .seed(11)
+            .rounds(15)
+            .run()
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.summary.best_accuracy, b.summary.best_accuracy);
+    assert_eq!(a.summary.total_time, b.summary.total_time);
+}
+
+/// The tentpole perf claim: a parallel sweep must produce cell-for-cell,
+/// byte-for-byte identical artifacts to the serial schedule.
+#[test]
+fn parallel_sweep_matches_serial_byte_for_byte() {
+    let root = std::env::temp_dir().join("hybridfl_scenario_api_sweep");
+    let _ = std::fs::remove_dir_all(&root);
+    let serial_dir = root.join("serial");
+    let parallel_dir = root.join("parallel");
+
+    let base = SweepOpts {
+        quick: true,
+        mock: true,
+        target: Some(0.3),
+        ..Default::default()
+    };
+    let serial = run_task_sweep(
+        TaskKind::Aerofoil,
+        &SweepOpts { parallel: false, ..base.clone() },
+        &serial_dir,
+    )
+    .unwrap();
+    let parallel = run_task_sweep(
+        TaskKind::Aerofoil,
+        &SweepOpts { parallel: true, ..base },
+        &parallel_dir,
+    )
+    .unwrap();
+
+    // Rendered tables identical.
+    assert_eq!(render_table(&serial), render_table(&parallel));
+    assert_eq!(render_energy(&serial), render_energy(&parallel));
+
+    // Emitted artifacts identical byte for byte.
+    for name in ["table3.txt", "fig5_energy.txt", "sweep_aerofoil.json"] {
+        let a = std::fs::read(serial_dir.join(name)).unwrap();
+        let b = std::fs::read(parallel_dir.join(name)).unwrap();
+        assert_eq!(a, b, "{name} differs between serial and parallel sweeps");
+    }
+    // Including every per-cell trace CSV.
+    for cell in &serial.cells {
+        let name = format!(
+            "trace_aerofoil-{}-dr{:.1}-c{:.1}.csv",
+            cell.protocol.as_str(),
+            cell.e_dr,
+            cell.c
+        );
+        let a = std::fs::read(serial_dir.join(&name)).unwrap();
+        let b = std::fs::read(parallel_dir.join(&name)).unwrap();
+        assert_eq!(a, b, "{name} differs");
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
