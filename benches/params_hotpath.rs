@@ -1,0 +1,230 @@
+//! Bench: the contiguous-arena `ModelParams` data plane against the
+//! pre-refactor nested-`Vec<Vec<f32>>` layout, and streaming edge
+//! aggregation against the old buffer-then-aggregate round. Emits
+//! `BENCH_params.json` (the params-trajectory seed) via `jsonx`.
+//!
+//! Two questions, matching the acceptance criteria of the refactor:
+//!
+//! 1. **Hot path** — does the flat chunked `axpy` at least match the
+//!    nested scalar loops on `weighted_average` over LeNet-sized models?
+//! 2. **Round shape** — does streaming (fold each submission on arrival,
+//!    drop it) beat buffering all submissions before aggregating, and
+//!    does it eliminate the O(submissions) resident-model peak? Peaks are
+//!    measured with the arena instrumentation in `hybridfl::model`.
+//!
+//! Run: `cargo bench --bench params_hotpath` (`--quick` for CI smoke).
+
+use hybridfl::aggregation::{edc_cloud, regional_with_cache, StreamingAggregator};
+use hybridfl::benchkit::{bench, black_box, BenchArgs, Stats};
+use hybridfl::jsonx::Json;
+use hybridfl::model::{self, weighted_average, ModelParams};
+use hybridfl::rng::Rng;
+
+/// The pre-refactor parameter layout — one heap `Vec<f32>` per tensor,
+/// scalar accumulate loops — kept here as the baseline under test.
+struct NestedParams {
+    tensors: Vec<Vec<f32>>,
+}
+
+impl NestedParams {
+    fn zeros_like(&self) -> NestedParams {
+        NestedParams {
+            tensors: self.tensors.iter().map(|t| vec![0.0; t.len()]).collect(),
+        }
+    }
+
+    fn axpy(&mut self, a: f32, x: &NestedParams) {
+        for (dst, src) in self.tensors.iter_mut().zip(x.tensors.iter()) {
+            for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                *d += a * s;
+            }
+        }
+    }
+}
+
+fn nested_weighted_average(models: &[(&NestedParams, f64)]) -> Option<NestedParams> {
+    let total: f64 = models.iter().map(|(_, w)| *w).sum();
+    if models.is_empty() || total <= f64::EPSILON {
+        return None;
+    }
+    let mut out = models[0].0.zeros_like();
+    for (m, w) in models {
+        out.axpy((*w / total) as f32, m);
+    }
+    Some(out)
+}
+
+/// 44,426 params in LeNet's tensor layout.
+fn lenet_shapes() -> Vec<Vec<usize>> {
+    vec![
+        vec![25, 6],
+        vec![6],
+        vec![150, 16],
+        vec![16],
+        vec![256, 120],
+        vec![120],
+        vec![120, 84],
+        vec![84],
+        vec![84, 10],
+        vec![10],
+    ]
+}
+
+fn random_tensors(seed: u64, shapes: &[Vec<usize>]) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    shapes
+        .iter()
+        .map(|s| {
+            (0..s.iter().product::<usize>())
+                .map(|_| rng.normal(0.0, 0.1) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let iters = if args.quick { 10 } else { 100 };
+    let shapes = lenet_shapes();
+    let n_values: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    let n_models = 50usize;
+
+    println!("=== arena vs nested: weighted_average of {n_models} x {n_values}-param models ===");
+
+    let arena_models: Vec<ModelParams> = (0..n_models as u64)
+        .map(|i| ModelParams::new(random_tensors(i, &shapes), shapes.clone()))
+        .collect();
+    let arena_weighted: Vec<(&ModelParams, f64)> =
+        arena_models.iter().map(|m| (m, 100.0)).collect();
+    let arena_stats = bench(3, iters, || {
+        black_box(weighted_average(&arena_weighted).unwrap());
+    });
+    arena_stats.report("arena axpy (flat chunked)");
+
+    let nested_models: Vec<NestedParams> = (0..n_models as u64)
+        .map(|i| NestedParams {
+            tensors: random_tensors(i, &shapes),
+        })
+        .collect();
+    let nested_weighted: Vec<(&NestedParams, f64)> =
+        nested_models.iter().map(|m| (m, 100.0)).collect();
+    let nested_stats = bench(3, iters, || {
+        black_box(nested_weighted_average(&nested_weighted).unwrap());
+    });
+    nested_stats.report("nested axpy (per-tensor scalar)");
+
+    let gbs = |s: &Stats| n_models as f64 * n_values as f64 * 4.0 / s.mean.as_secs_f64() / 1e9;
+    println!(
+        "  -> arena {:.2} GB/s, nested {:.2} GB/s, speedup {:.2}x",
+        gbs(&arena_stats),
+        gbs(&nested_stats),
+        nested_stats.mean.as_secs_f64() / arena_stats.mean.as_secs_f64().max(1e-12)
+    );
+
+    // --- streaming vs buffered round aggregation ---------------------------
+    // One quota round: `subs` submissions spread over `m` regions. The
+    // buffered arm reproduces the old data plane (materialize every
+    // arrival, then regional_with_cache + edc_cloud); the streaming arm
+    // folds each submission on arrival and never buffers.
+    println!("\n=== streaming vs buffered round aggregation ===");
+    let m = 8usize;
+    let subs = if args.quick { 64 } else { 256 };
+    let round_iters = if args.quick { 5 } else { 30 };
+    let template = arena_models[0].zeros_like();
+    let prevs: Vec<ModelParams> = (0..m as u64)
+        .map(|r| ModelParams::new(random_tensors(1000 + r, &shapes), shapes.clone()))
+        .collect();
+    let d_k = 100.0f64;
+    // Half coverage: every region holds twice the data its submitters carry.
+    let region_data: Vec<f64> = (0..m)
+        .map(|r| {
+            let in_region = (subs + m - 1 - r) / m; // ceil split of subs over m
+            (in_region as f64 * d_k * 2.0).max(d_k)
+        })
+        .collect();
+    // Stand-in for one client's training output (COW copy of the start).
+    let make_model = |i: usize| -> ModelParams {
+        let mut w = arena_models[i % n_models].clone();
+        w.values_mut()[i % n_values] += 1e-3 * i as f32;
+        w
+    };
+
+    let buffered_round = || {
+        let mut arrivals: Vec<(usize, ModelParams, f64)> = Vec::with_capacity(subs);
+        for i in 0..subs {
+            arrivals.push((i % m, make_model(i), d_k));
+        }
+        let mut regionals: Vec<(ModelParams, f64)> = Vec::with_capacity(m);
+        for r in 0..m {
+            let models: Vec<(&ModelParams, f64)> = arrivals
+                .iter()
+                .filter(|(rr, _, _)| *rr == r)
+                .map(|(_, w, d)| (w, *d))
+                .collect();
+            let edc: f64 = models.iter().map(|(_, d)| *d).sum();
+            let w = regional_with_cache(&models, region_data[r], &prevs[r]).unwrap();
+            regionals.push((w, edc));
+        }
+        let refs: Vec<(&ModelParams, f64)> = regionals.iter().map(|(w, e)| (w, *e)).collect();
+        edc_cloud(&refs).unwrap()
+    };
+    let streaming_round = || {
+        let mut agg = StreamingAggregator::for_regions(&region_data, &template);
+        for i in 0..subs {
+            let w = make_model(i);
+            agg.fold(i % m, &w, d_k, 0.5);
+        }
+        agg.cloud_with_cache(&prevs).unwrap().unwrap()
+    };
+
+    // Peak resident-arena measurement: one representative run per arm.
+    model::reset_arena_peak();
+    let baseline = model::arena_count();
+    black_box(buffered_round());
+    let peak_buffered = model::arena_peak() - baseline;
+    model::reset_arena_peak();
+    black_box(streaming_round());
+    let peak_streaming = model::arena_peak() - baseline;
+
+    let buffered_stats = bench(2, round_iters, || {
+        black_box(buffered_round());
+    });
+    buffered_stats.report(&format!("buffered round ({subs} subs, {m} regions)"));
+    let streaming_stats = bench(2, round_iters, || {
+        black_box(streaming_round());
+    });
+    streaming_stats.report(&format!("streaming round ({subs} subs, {m} regions)"));
+    println!(
+        "  -> peak resident models: buffered {peak_buffered}, streaming {peak_streaming} \
+         (submissions per round: {subs})"
+    );
+    assert!(
+        peak_streaming < peak_buffered,
+        "streaming must not buffer per-submission models"
+    );
+
+    let report = Json::obj()
+        .set("bench", "params_hotpath")
+        .set("model_values", n_values)
+        .set("models", n_models)
+        .set("arena_axpy_mean_s", arena_stats.mean.as_secs_f64())
+        .set("nested_axpy_mean_s", nested_stats.mean.as_secs_f64())
+        .set(
+            "axpy_speedup",
+            nested_stats.mean.as_secs_f64() / arena_stats.mean.as_secs_f64().max(1e-12),
+        )
+        .set("arena_bandwidth_gbs", gbs(&arena_stats))
+        .set("nested_bandwidth_gbs", gbs(&nested_stats))
+        .set("round_submissions", subs)
+        .set("round_regions", m)
+        .set("buffered_round_mean_s", buffered_stats.mean.as_secs_f64())
+        .set("streaming_round_mean_s", streaming_stats.mean.as_secs_f64())
+        .set(
+            "round_speedup",
+            buffered_stats.mean.as_secs_f64() / streaming_stats.mean.as_secs_f64().max(1e-12),
+        )
+        .set("peak_models_buffered", peak_buffered)
+        .set("peak_models_streaming", peak_streaming);
+    std::fs::write("BENCH_params.json", report.pretty()).unwrap();
+    println!("report -> BENCH_params.json");
+}

@@ -1,13 +1,47 @@
 //! Model aggregation (S1, paper §III.B): FedAvg weighted averaging,
 //! regional aggregation with model caching (eq. 17), Effective Data
 //! Coverage (eqs. 18–19) and EDC-weighted cloud aggregation (eq. 20).
+//!
+//! Two forms of the same math live here:
+//!
+//! * **Batch** functions ([`fedavg`], [`regional_with_cache`],
+//!   [`edc_cloud`]) over slices of already-materialized models — used by
+//!   protocol-level recombination (m regional models at the cloud) and as
+//!   the reference implementation in property tests.
+//! * **Streaming** state ([`RegionAccumulator`], [`StreamingAggregator`])
+//!   that folds each submitted model into a per-region partial sum *as it
+//!   arrives*, so a round never holds more than O(regions) models
+//!   resident — the data plane both [`crate::env::FlEnvironment`]
+//!   backends run on. The fold is the Σ term of eq. 17; [`edc`] tracking
+//!   (eq. 18) and the cache/EDC finishers (eqs. 17/20) complete the
+//!   round from the accumulated state alone.
+//!
+//! [`edc`]: RegionAccumulator::edc
 
 use crate::model::{weighted_average, ModelParams};
+use crate::Result;
 
 /// Plain FedAvg: `w = Σ (|D_k|/Σ|D|) · w_k` over the received models.
 /// Returns `None` if nothing was received (callers keep the old model).
 pub fn fedavg(models: &[(&ModelParams, f64)]) -> Option<ModelParams> {
     weighted_average(models)
+}
+
+/// Coverage = covered / region_data, validated: submitted data exceeding
+/// the region's total is an inconsistency in the caller's bookkeeping and
+/// is reported as an error instead of being silently clamped away.
+fn checked_coverage(covered: f64, region_data: f64) -> Result<f64> {
+    anyhow::ensure!(
+        region_data > 0.0,
+        "region_data must be positive, got {region_data}"
+    );
+    let coverage = covered / region_data;
+    anyhow::ensure!(
+        coverage <= 1.0 + 1e-6,
+        "covered data {covered} exceeds region total {region_data}: \
+         inconsistent |D_k| vs |D^r| bookkeeping"
+    );
+    Ok(coverage.min(1.0))
 }
 
 /// Regional aggregation with the paper's cache rule (eq. 17).
@@ -21,20 +55,22 @@ pub fn fedavg(models: &[(&ModelParams, f64)]) -> Option<ModelParams> {
 /// ```
 ///
 /// with `coverage_r = Σ_{k∈S_r} |D_k| / |D^r|` — which is what we compute
-/// (exactly equivalent, touches |S_r| models instead of n_r).
+/// (exactly equivalent, touches |S_r| models instead of n_r). Errors when
+/// the submitted data sizes sum to more than `region_data` (beyond f64
+/// rounding): that can only mean inconsistent data-size bookkeeping.
 pub fn regional_with_cache(
     submitted: &[(&ModelParams, f64)],
     region_data: f64,
     prev_regional: &ModelParams,
-) -> ModelParams {
-    debug_assert!(region_data > 0.0);
+) -> Result<ModelParams> {
     let covered: f64 = submitted.iter().map(|(_, d)| *d).sum();
+    let coverage = checked_coverage(covered, region_data)?;
     let mut out = prev_regional.zeros_like();
     for (m, d) in submitted {
         out.axpy((*d / region_data) as f32, m);
     }
-    out.axpy((1.0 - covered / region_data).max(0.0) as f32, prev_regional);
-    out
+    out.axpy((1.0 - coverage) as f32, prev_regional);
+    Ok(out)
 }
 
 /// EDC_r(t) — effective data coverage of a region (eq. 18): total samples
@@ -50,6 +86,194 @@ pub fn edc_cloud(regionals: &[(&ModelParams, f64)]) -> Option<ModelParams> {
     weighted_average(regionals)
 }
 
+/// Online per-region fold of eq. 17's Σ term: `Σ (|D_k|/|D^r|)·w_k` over
+/// the in-time submissions, accumulated one model at a time. This is the
+/// state an edge (or the virtual clock standing in for one) keeps during
+/// a round — O(1) models per region, regardless of how many clients
+/// submit.
+#[derive(Clone, Debug)]
+pub struct RegionAccumulator {
+    region: usize,
+    /// |D^r| — total samples held by the region's clients.
+    region_data: f64,
+    /// The partial weighted sum (zeros until the first fold).
+    acc: ModelParams,
+    /// Σ |D_k| over folded submissions = EDC_r(t) (eq. 18).
+    covered: f64,
+    /// |S_r(t)|.
+    count: usize,
+    /// Σ local losses (diagnostics).
+    loss_sum: f64,
+}
+
+impl RegionAccumulator {
+    /// Fresh accumulator for one region; `template` only provides the
+    /// parameter structure (a zeros arena is allocated from it).
+    pub fn new(region: usize, region_data: f64, template: &ModelParams) -> RegionAccumulator {
+        debug_assert!(region_data > 0.0);
+        RegionAccumulator {
+            region,
+            region_data,
+            acc: template.zeros_like(),
+            covered: 0.0,
+            count: 0,
+            loss_sum: 0.0,
+        }
+    }
+
+    /// Fold one in-time submission into the partial sum. The caller can
+    /// (and should) drop `model` right after — nothing is buffered.
+    pub fn fold(&mut self, model: &ModelParams, data_size: f64, loss: f64) {
+        debug_assert!(data_size >= 0.0);
+        self.acc.axpy((data_size / self.region_data) as f32, model);
+        self.covered += data_size;
+        self.count += 1;
+        self.loss_sum += loss;
+    }
+
+    pub fn region(&self) -> usize {
+        self.region
+    }
+
+    pub fn region_data(&self) -> f64 {
+        self.region_data
+    }
+
+    /// |S_r(t)| — submissions folded so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn loss_sum(&self) -> f64 {
+        self.loss_sum
+    }
+
+    /// EDC_r(t) (eq. 18).
+    pub fn edc(&self) -> f64 {
+        self.covered
+    }
+
+    /// Fraction of the region's data covered by the folded submissions.
+    pub fn coverage(&self) -> f64 {
+        self.covered / self.region_data
+    }
+
+    /// The partial weighted sum `Σ (|D_k|/|D^r|)·w_k` accumulated so far.
+    pub fn weighted_sum(&self) -> &ModelParams {
+        &self.acc
+    }
+
+    /// Complete eq. 17 from the streamed state: partial sum plus the
+    /// cached previous regional model weighted by the uncovered fraction.
+    /// Errors (like [`regional_with_cache`]) when the folded data sizes
+    /// exceed `region_data`.
+    pub fn finish_cached(&self, prev_regional: &ModelParams) -> Result<ModelParams> {
+        let coverage = checked_coverage(self.covered, self.region_data)?;
+        let mut out = self.acc.clone();
+        out.axpy((1.0 - coverage) as f32, prev_regional);
+        Ok(out)
+    }
+
+    /// Plain FedAvg over the folded submissions only (the fresh-model
+    /// ablation, and HierFAVG's edge aggregation): rescales the partial
+    /// sum by `|D^r| / Σ|D_k|`. `None` when nothing was folded.
+    pub fn fedavg(&self) -> Option<ModelParams> {
+        if self.count == 0 || self.covered <= f64::EPSILON {
+            return None;
+        }
+        let mut out = self.acc.clone();
+        out.scale((self.region_data / self.covered) as f32);
+        Some(out)
+    }
+}
+
+/// All-regions streaming state for one round: eq. 17's Σ term per region,
+/// folded in arrival order, plus the EDC weights eq. 20 needs. Peak
+/// resident model state is O(regions) however many clients submit.
+#[derive(Clone, Debug)]
+pub struct StreamingAggregator {
+    regions: Vec<RegionAccumulator>,
+}
+
+impl StreamingAggregator {
+    pub fn new(regions: Vec<RegionAccumulator>) -> StreamingAggregator {
+        debug_assert!(regions.iter().enumerate().all(|(i, r)| r.region() == i));
+        StreamingAggregator { regions }
+    }
+
+    /// Convenience constructor: one accumulator per region with the given
+    /// data sizes, all sharing one zero template structure.
+    pub fn for_regions(region_data: &[f64], template: &ModelParams) -> StreamingAggregator {
+        StreamingAggregator::new(
+            region_data
+                .iter()
+                .enumerate()
+                .map(|(r, &d)| RegionAccumulator::new(r, d, template))
+                .collect(),
+        )
+    }
+
+    /// Fold one in-time submission into its region.
+    pub fn fold(&mut self, region: usize, model: &ModelParams, data_size: f64, loss: f64) {
+        self.regions[region].fold(model, data_size, loss);
+    }
+
+    pub fn regions(&self) -> &[RegionAccumulator] {
+        &self.regions
+    }
+
+    pub fn into_regions(self) -> Vec<RegionAccumulator> {
+        self.regions
+    }
+
+    /// |S_r(t)| per region.
+    pub fn counts(&self) -> Vec<usize> {
+        self.regions.iter().map(|r| r.count()).collect()
+    }
+
+    /// Total submissions folded this round.
+    pub fn total_count(&self) -> usize {
+        self.regions.iter().map(|r| r.count()).sum()
+    }
+
+    /// HybridFL's full two-level aggregation (eqs. 17–20) from streamed
+    /// state: finish each region with the cache rule against its previous
+    /// regional model, then EDC-weight the regional results at the cloud.
+    /// `Ok(None)` when total EDC is 0 (the cloud keeps w(t−1)).
+    pub fn cloud_with_cache(
+        &self,
+        prev_regionals: &[ModelParams],
+    ) -> Result<Option<ModelParams>> {
+        debug_assert_eq!(prev_regionals.len(), self.regions.len());
+        let mut regionals = Vec::with_capacity(self.regions.len());
+        for (acc, prev) in self.regions.iter().zip(prev_regionals.iter()) {
+            regionals.push((acc.finish_cached(prev)?, acc.edc()));
+        }
+        let refs: Vec<(&ModelParams, f64)> = regionals.iter().map(|(w, e)| (w, *e)).collect();
+        Ok(edc_cloud(&refs))
+    }
+}
+
+/// Global FedAvg recombined from per-region streamed partial sums:
+/// `Σ_k |D_k|·w_k / Σ_k |D_k| = Σ_r |D^r|·sum_r / Σ_r EDC_r` where
+/// `sum_r` is the accumulator's normalized partial sum. This lets FedAvg —
+/// which has no edge layer in its aggregation rule — consume the same
+/// streamed per-region state as the hierarchical protocols. `None` when
+/// nothing was submitted anywhere.
+pub fn fedavg_from_regions(regions: &[RegionAccumulator]) -> Option<ModelParams> {
+    let total: f64 = regions.iter().map(|r| r.edc()).sum();
+    if regions.is_empty() || total <= f64::EPSILON {
+        return None;
+    }
+    let mut out = regions[0].weighted_sum().zeros_like();
+    for r in regions {
+        if r.count() > 0 {
+            out.axpy((r.region_data() / total) as f32, r.weighted_sum());
+        }
+    }
+    Some(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,7 +287,7 @@ mod tests {
         let a = p(&[1.0]);
         let b = p(&[4.0]);
         let w = fedavg(&[(&a, 100.0), (&b, 300.0)]).unwrap();
-        assert!((w.tensors[0][0] - 3.25).abs() < 1e-6);
+        assert!((w.values()[0] - 3.25).abs() < 1e-6);
         assert!(fedavg(&[]).is_none());
     }
 
@@ -75,7 +299,7 @@ mod tests {
         let w1 = p(&[1.0, 1.0]); // client with |D|=30 submitted
         let w2 = p(&[5.0, 3.0]); // client with |D|=20 submitted
         // Region has 4 clients with |D| = 30, 20, 25, 25 (total 100).
-        let out = regional_with_cache(&[(&w1, 30.0), (&w2, 20.0)], 100.0, &prev);
+        let out = regional_with_cache(&[(&w1, 30.0), (&w2, 20.0)], 100.0, &prev).unwrap();
         // Literal eq. 17: 0.3·w1 + 0.2·w2 + 0.25·prev + 0.25·prev
         let mut lit = prev.zeros_like();
         lit.axpy(0.3, &w1);
@@ -88,7 +312,7 @@ mod tests {
     #[test]
     fn empty_submissions_keep_previous_regional() {
         let prev = p(&[3.0, 4.0]);
-        let out = regional_with_cache(&[], 50.0, &prev);
+        let out = regional_with_cache(&[], 50.0, &prev).unwrap();
         assert!(out.l2_distance(&prev) < 1e-7);
     }
 
@@ -96,8 +320,20 @@ mod tests {
     fn full_coverage_ignores_previous() {
         let prev = p(&[100.0]);
         let w1 = p(&[2.0]);
-        let out = regional_with_cache(&[(&w1, 50.0)], 50.0, &prev);
-        assert!((out.tensors[0][0] - 2.0).abs() < 1e-5);
+        let out = regional_with_cache(&[(&w1, 50.0)], 50.0, &prev).unwrap();
+        assert!((out.values()[0] - 2.0).abs() < 1e-5);
+    }
+
+    /// Satellite fix: submitted data sizes summing past |D^r| is an error,
+    /// not a silent clamp.
+    #[test]
+    fn overcoverage_is_an_error_not_a_clamp() {
+        let prev = p(&[1.0]);
+        let w1 = p(&[2.0]);
+        assert!(regional_with_cache(&[(&w1, 120.0)], 100.0, &prev).is_err());
+        let mut acc = RegionAccumulator::new(0, 100.0, &prev);
+        acc.fold(&w1, 120.0, 0.0);
+        assert!(acc.finish_cached(&prev).is_err());
     }
 
     #[test]
@@ -107,7 +343,7 @@ mod tests {
         let a = p(&[0.0]);
         let b = p(&[6.0]);
         let w = edc_cloud(&[(&a, 100.0), (&b, 200.0)]).unwrap();
-        assert!((w.tensors[0][0] - 4.0).abs() < 1e-6);
+        assert!((w.values()[0] - 4.0).abs() < 1e-6);
         assert!(edc_cloud(&[(&a, 0.0), (&b, 0.0)]).is_none());
     }
 
@@ -118,10 +354,59 @@ mod tests {
         let w1 = p(&[1.0]);
         let w2 = p(&[1.0]);
         let prev1 = p(&[1.0]);
-        let r1 = regional_with_cache(&[(&w1, 60.0)], 100.0, &prev1);
-        let r2 = regional_with_cache(&[(&w2, 30.0)], 80.0, &prev1);
+        let r1 = regional_with_cache(&[(&w1, 60.0)], 100.0, &prev1).unwrap();
+        let r2 = regional_with_cache(&[(&w2, 30.0)], 80.0, &prev1).unwrap();
         let cloud = edc_cloud(&[(&r1, 60.0), (&r2, 30.0)]).unwrap();
         // Every contributing model is all-ones → any convex combination is 1.
-        assert!((cloud.tensors[0][0] - 1.0).abs() < 1e-6);
+        assert!((cloud.values()[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn streaming_fold_matches_batch_cache_rule() {
+        let prev = p(&[10.0, -2.0]);
+        let w1 = p(&[1.0, 1.0]);
+        let w2 = p(&[5.0, 3.0]);
+        let batch = regional_with_cache(&[(&w1, 30.0), (&w2, 20.0)], 100.0, &prev).unwrap();
+        let mut acc = RegionAccumulator::new(0, 100.0, &prev);
+        acc.fold(&w1, 30.0, 0.1);
+        acc.fold(&w2, 20.0, 0.3);
+        assert_eq!(acc.count(), 2);
+        assert_eq!(acc.edc(), 50.0);
+        assert!((acc.loss_sum() - 0.4).abs() < 1e-12);
+        let streamed = acc.finish_cached(&prev).unwrap();
+        assert!(streamed.l2_distance(&batch) < 1e-6);
+    }
+
+    #[test]
+    fn accumulator_fedavg_matches_batch_fedavg() {
+        let w1 = p(&[1.0]);
+        let w2 = p(&[4.0]);
+        let batch = fedavg(&[(&w1, 100.0), (&w2, 300.0)]).unwrap();
+        let mut acc = RegionAccumulator::new(0, 1000.0, &w1);
+        acc.fold(&w1, 100.0, 0.0);
+        acc.fold(&w2, 300.0, 0.0);
+        let streamed = acc.fedavg().unwrap();
+        assert!(streamed.l2_distance(&batch) < 1e-6);
+        let empty = RegionAccumulator::new(0, 1000.0, &w1);
+        assert!(empty.fedavg().is_none());
+    }
+
+    #[test]
+    fn fedavg_from_regions_recombines_globally() {
+        // Clients: (w=1, d=100) in region 0; (w=4, d=300) in region 1.
+        // Global FedAvg = (100·1 + 300·4) / 400 = 3.25.
+        let w1 = p(&[1.0]);
+        let w2 = p(&[4.0]);
+        let template = w1.zeros_like();
+        let mut agg = StreamingAggregator::for_regions(&[500.0, 800.0], &template);
+        agg.fold(0, &w1, 100.0, 0.0);
+        agg.fold(1, &w2, 300.0, 0.0);
+        let global = fedavg_from_regions(agg.regions()).unwrap();
+        assert!((global.values()[0] - 3.25).abs() < 1e-5);
+        assert_eq!(agg.counts(), vec![1, 1]);
+        assert_eq!(agg.total_count(), 2);
+        // Nothing submitted anywhere → None.
+        let empty = StreamingAggregator::for_regions(&[500.0, 800.0], &template);
+        assert!(fedavg_from_regions(empty.regions()).is_none());
     }
 }

@@ -4,11 +4,14 @@
 //! The same seeded draws that parameterize the virtual-clock backend
 //! (which clients drop, how long each survivor takes) parameterize the
 //! world here too — but the round itself is *enacted*: every client is an
-//! OS thread behind an mpsc channel, edges relay jobs down and submissions
-//! up, and the cloud (the caller's thread, inside `run_round`) arbitrates
-//! quota vs deadline from real message arrivals in wall-clock time scaled
-//! by `time_scale`. Out-of-order arrivals, racing edges and straggler
-//! stop-signals are therefore real concurrency, not bookkeeping.
+//! OS thread behind an mpsc channel, edges fold arriving models into
+//! their region's accumulator and relay model-free notices up, and the
+//! cloud (the caller's thread, inside `run_round`) arbitrates quota vs
+//! deadline from real notice arrivals in wall-clock time scaled by
+//! `time_scale`. Out-of-order arrivals, racing edges and straggler
+//! stop-signals are therefore real concurrency, not bookkeeping — and no
+//! full model ever crosses the edge→cloud link during a round, only the
+//! O(regions) end-of-round aggregates.
 //!
 //! Client compute uses the mock engine regardless of `cfg.engine`: the
 //! PJRT client is not `Send` (Rc-based FFI handles), and the live backend
@@ -25,8 +28,8 @@ use std::time::Duration;
 
 use crate::config::{EngineKind, ExperimentConfig};
 use crate::env::{
-    charge_energy, draw_fates, draw_selection, region_histogram, resolve_cutoff, Arrival,
-    CutPlan, CutoffPolicy, FlEnvironment, RoundOutcome, Selection, Starts, World,
+    charge_energy, draw_fates, draw_selection, region_histogram, resolve_cutoff, CutPlan,
+    CutoffPolicy, FlEnvironment, RoundOutcome, Selection, Starts, World,
 };
 use crate::live::cluster::ClusterFabric;
 use crate::live::messages::RoundJob;
@@ -122,6 +125,8 @@ impl FlEnvironment for LiveClusterEnv {
                 completion: f.completion,
             });
         }
+        // The broadcast model: `ModelParams::clone` is an Arc bump over
+        // the shared arena, so the fan-out ships references, not copies.
         let start_arcs: Vec<Arc<ModelParams>> = match starts {
             Starts::Global(mdl) => {
                 let a = Arc::new(mdl.clone());
@@ -129,10 +134,10 @@ impl FlEnvironment for LiveClusterEnv {
             }
             Starts::PerRegion(ms) => ms.iter().map(|mdl| Arc::new(mdl.clone())).collect(),
         };
-        // How many arrivals end the collection loop early. For the
-        // wait-all policies the cut point is already fully determined by
-        // the fates (deadline, or last completion), so the environment —
-        // which drew those fates — counts only the submissions that can
+        // How many submission notices end the collection loop early. For
+        // the wait-all policies the cut point is already fully determined
+        // by the fates (deadline, or last completion), so the environment
+        // — which drew those fates — counts only the submissions that can
         // actually arrive; waiting out the full scaled deadline for
         // clients it knows dropped would change nothing but wall-clock.
         let target = match policy {
@@ -144,31 +149,30 @@ impl FlEnvironment for LiveClusterEnv {
         };
         let deadline = Duration::from_secs_f64(self.world.tm.t_lim * self.time_scale);
 
-        // The cloud leader loop: collect real arrivals until the target
-        // count or the wall-clock deadline, then broadcast the round-end
-        // signal that stops straggling clients.
-        let mut subs = self.fabric.round(t, &start_arcs, jobs, target, deadline)?;
-
-        // Reorder wall-clock arrivals into selection order so aggregation
-        // consumes them exactly as the virtual-clock backend does.
-        let order: HashMap<usize, usize> = fates
-            .iter()
-            .enumerate()
-            .map(|(i, f)| (f.client, i))
-            .collect();
-        subs.sort_by_key(|s| order.get(&s.client).copied().unwrap_or(usize::MAX));
+        // The cloud leader loop: count model-free notices until the
+        // target or the wall-clock deadline, broadcast the round-end
+        // signal that stops straggling clients, then collect the folded
+        // per-region reports. Models were folded at the edges in arrival
+        // order; none were buffered. The reports are authoritative: what
+        // each edge folded before the round-end signal reached it *is*
+        // the round's submission set, so counts, cut time and energy are
+        // all derived from the same set and cannot diverge.
+        let reports = self.fabric.round(t, &start_arcs, jobs, target, deadline)?;
 
         // Accounting: for the wait-all policies the cut point is fully
-        // determined by the fates; for the quota policy it is whatever the
-        // wall clock actually delivered.
+        // determined by the fates; for the quota policy it is whatever
+        // the wall clock actually delivered — the folded clients' maximum
+        // completion time (looked up via the reports' opaque ids).
         let plan = match policy {
             CutoffPolicy::Quota(q) => {
-                if subs.len() >= q {
+                let folded: usize = reports.iter().map(|r| r.agg.count()).sum();
+                if folded >= q {
                     let completion_of: HashMap<usize, f64> =
                         fates.iter().map(|f| (f.client, f.completion)).collect();
-                    let cut = subs
+                    let cut = reports
                         .iter()
-                        .filter_map(|s| completion_of.get(&s.client).copied())
+                        .flat_map(|r| r.clients.iter())
+                        .filter_map(|c| completion_of.get(c).copied())
                         .fold(0.0f64, f64::max)
                         .min(self.world.tm.t_lim);
                     CutPlan {
@@ -192,23 +196,14 @@ impl FlEnvironment for LiveClusterEnv {
 
         let selected_h = region_histogram(m, fates.iter().map(|f| f.region));
         let alive = region_histogram(m, fates.iter().filter(|f| !f.dropped).map(|f| f.region));
-        let submissions = region_histogram(m, subs.iter().map(|s| s.region));
-        let arrivals: Vec<Arrival> = subs
-            .into_iter()
-            .map(|s| Arrival {
-                client: s.client,
-                region: s.region,
-                model: s.model,
-                data_size: s.data_size,
-                loss: s.loss,
-            })
-            .collect();
+        let regional: Vec<_> = reports.into_iter().map(|r| r.agg).collect();
+        let submissions: Vec<usize> = regional.iter().map(|r| r.count()).collect();
 
         Ok(RoundOutcome {
             selected: selected_h,
             alive,
             submissions,
-            arrivals,
+            regional,
             round_len: plan.round_len,
             deadline_hit: plan.deadline_hit,
             energy_j,

@@ -28,11 +28,11 @@
 //! 1. **Reliability-agnosticism.** Protocols never see a `ClientProfile`,
 //!    a drop-out probability, or a completion time. The only client-derived
 //!    facts that cross the trait are the [`RoundOutcome`] observables: the
-//!    per-region selection/submission counts and the submitted models
-//!    (with their data sizes and local losses). `RoundOutcome::alive` is
-//!    simulator ground truth recorded *by the environment* for the metrics
-//!    layer; protocol decision logic must not read it (and the shipped
-//!    protocols do not).
+//!    per-region selection/submission counts and the streamed per-region
+//!    aggregates (partial eq. 17 sums with their EDC weights and summed
+//!    local losses). `RoundOutcome::alive` is simulator ground truth
+//!    recorded *by the environment* for the metrics layer; protocol
+//!    decision logic must not read it (and the shipped protocols do not).
 //! 2. **Selection is uniform.** The protocol chooses *how many* clients to
 //!    select ([`Selection`]); the environment samples *which* ones,
 //!    uniformly without replacement. No environment may bias selection by
@@ -40,8 +40,23 @@
 //! 3. **Cutoff semantics.** [`CutoffPolicy::Quota`] ends the round the
 //!    moment the given number of submissions arrived globally (or at
 //!    `T_lim`); the `All*` policies wait for every selected client, capped
-//!    at `T_lim`. Submissions arriving after the cut are not reported.
-//! 4. **Accounting.** `round_len` is the virtual core round length
+//!    at `T_lim`. Submissions arriving after the cut are neither folded
+//!    nor reported — on the virtual clock the cut is resolved
+//!    analytically, on the live cluster it is *enacted* at each edge by
+//!    the round-end signal, and the set folded before that signal is the
+//!    authoritative submission set for counts, cut time and energy alike.
+//! 4. **Streaming aggregation.** Environments never buffer submitted
+//!    models: each in-time submission is folded into its region's
+//!    [`RegionAccumulator`] *as it arrives* — true arrival order at the
+//!    live edge threads; completion-time order with a stable client-id
+//!    tie-break on the virtual clock, which is that order's deterministic
+//!    image — and the trained model is dropped immediately after the
+//!    fold. Peak resident model state per round is therefore O(regions),
+//!    not O(selected clients). [`RoundOutcome::regional`] reports the
+//!    accumulators (eq. 17 partial sums + eq. 18 EDC weights); protocols
+//!    finish eq. 17's cache term and eq. 20's EDC weighting from that
+//!    state alone.
+//! 5. **Accounting.** `round_len` is the virtual core round length
 //!    (protocols add cloud↔edge RTT per their own rules), and `energy_j`
 //!    charges every selected client per eq. 35: dropped clients burn half
 //!    their training energy, in-time finishers the full round, stragglers
@@ -60,6 +75,7 @@ pub use virtual_clock::VirtualClockEnv;
 
 use std::sync::Arc;
 
+use crate::aggregation::RegionAccumulator;
 use crate::config::ExperimentConfig;
 use crate::data::FederatedData;
 use crate::devices::{self, ClientProfile};
@@ -116,20 +132,6 @@ pub enum CutoffPolicy {
     AllPerRegion,
 }
 
-/// One in-time submission: a locally trained model plus the observables the
-/// aggregation rules need. `client` is an opaque id (stable within a run);
-/// nothing here identifies reliability.
-#[derive(Clone, Debug)]
-pub struct Arrival {
-    pub client: usize,
-    pub region: usize,
-    pub model: ModelParams,
-    /// |D_k| — carried by the update envelope for weighted aggregation.
-    pub data_size: f64,
-    /// Local training loss (diagnostic).
-    pub loss: f64,
-}
-
 /// Everything a protocol observes from one executed round.
 #[derive(Clone, Debug)]
 pub struct RoundOutcome {
@@ -138,10 +140,15 @@ pub struct RoundOutcome {
     /// |X_r(t)| per region — environment-side ground truth for the metrics
     /// layer; protocol logic must not consult it.
     pub alive: Vec<usize>,
-    /// |S_r(t)| per region — submissions collected before the cut.
+    /// |S_r(t)| per region — submissions folded before the cut
+    /// (`regional[r].count()`, denormalized for the metrics layer).
     pub submissions: Vec<usize>,
-    /// The in-time submissions, in selection order.
-    pub arrivals: Vec<Arrival>,
+    /// The streamed per-region aggregates, indexed by region: eq. 17
+    /// partial sums with EDC weights (eq. 18) and summed local losses.
+    /// This replaces the old per-submission `arrivals` buffer — the
+    /// environment folded every in-time model as it arrived, so no
+    /// submitted model is resident here.
+    pub regional: Vec<RegionAccumulator>,
     /// Core round length in virtual seconds (no cloud↔edge RTT).
     pub round_len: f64,
     /// True when the cutoff policy was *not* satisfied before `T_lim`.

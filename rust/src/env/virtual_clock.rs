@@ -7,12 +7,19 @@
 //! configured compute engine. Rounds are pure arithmetic on a virtual
 //! clock; every draw comes from the seeded per-round RNG stream, so runs
 //! are bitwise reproducible per seed.
+//!
+//! Aggregation is streamed: in-time survivors are trained and folded into
+//! per-region [`RegionAccumulator`]s one at a time, in completion-time
+//! order with a stable client-id tie-break — the deterministic image of
+//! the live backend's arrival order. At no point does the environment
+//! hold more than one trained model plus the O(regions) accumulators.
 
 use std::sync::Arc;
 
+use crate::aggregation::StreamingAggregator;
 use crate::config::ExperimentConfig;
 use crate::env::{
-    charge_energy, draw_fates, draw_selection, region_histogram, resolve_cutoff, Arrival,
+    charge_energy, draw_fates, draw_selection, region_histogram, resolve_cutoff, ClientFate,
     CutoffPolicy, FlEnvironment, RoundOutcome, Selection, Starts, World,
 };
 use crate::model::ModelParams;
@@ -94,37 +101,46 @@ impl FlEnvironment for VirtualClockEnv {
         let plan = resolve_cutoff(&self.world.tm, m, &fates, policy);
         let energy_j = charge_energy(&self.world, &fates, &plan.cuts);
 
-        // Train the in-time survivors, in selection order.
-        let mut arrivals = Vec::new();
-        for f in &fates {
-            if f.dropped || f.completion > plan.cuts[f.region] {
-                continue;
-            }
-            let start = starts.for_region(f.region);
+        // Stream the in-time survivors: train each and fold it into its
+        // region's accumulator immediately, in completion-time order with
+        // a stable client-id tie-break (the deterministic stand-in for
+        // the live backend's arrival order). The trained model is dropped
+        // right after the fold — peak resident models stay O(regions).
+        let mut survivors: Vec<&ClientFate> = fates
+            .iter()
+            .filter(|f| !f.dropped && f.completion <= plan.cuts[f.region])
+            .collect();
+        survivors.sort_by(|a, b| {
+            a.completion
+                .partial_cmp(&b.completion)
+                .expect("survivor completion times are finite")
+                .then(a.client.cmp(&b.client))
+        });
+
+        // All regions run the same architecture, so region 0's start
+        // model provides the zeros template for every accumulator.
+        let mut agg = StreamingAggregator::for_regions(&self.region_data, starts.for_region(0));
+        for f in survivors {
+            let indices = &self.world.data.partitions[f.client];
             let out = self.engine.train_local(
-                start,
-                &self.world.data.partitions[f.client],
+                starts.for_region(f.region),
+                indices,
                 self.world.cfg.local_epochs,
                 self.world.cfg.lr as f32,
             )?;
-            arrivals.push(Arrival {
-                client: f.client,
-                region: f.region,
-                model: out.params,
-                data_size: self.world.data.partitions[f.client].len() as f64,
-                loss: out.loss,
-            });
+            agg.fold(f.region, &out.params, indices.len() as f64, out.loss);
         }
 
         let selected_h = region_histogram(m, fates.iter().map(|f| f.region));
         let alive = region_histogram(m, fates.iter().filter(|f| !f.dropped).map(|f| f.region));
-        let submissions = region_histogram(m, arrivals.iter().map(|a| a.region));
+        let regional = agg.into_regions();
+        let submissions: Vec<usize> = regional.iter().map(|r| r.count()).collect();
 
         Ok(RoundOutcome {
             selected: selected_h,
             alive,
             submissions,
-            arrivals,
+            regional,
             round_len: plan.round_len,
             deadline_hit: plan.deadline_hit,
             energy_j,

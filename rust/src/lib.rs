@@ -65,6 +65,20 @@
 //!   against the trait.
 //! * [`harness`] — the paper's tables and figures; the Table III/IV sweep
 //!   runs its independent grid cells on scoped worker threads.
+//!
+//! ## The data plane, in one paragraph
+//!
+//! [`model::ModelParams`] stores every tensor in one contiguous f32 arena
+//! (offset table per tensor, `Arc`-shared with copy-on-write, so a
+//! broadcast clone is two refcount bumps), and the aggregation hot loops
+//! are chunked flat-slice kernels over that arena. Rounds **stream**:
+//! both backends fold each in-time submission into its region's
+//! [`aggregation::RegionAccumulator`] the moment it arrives — at the edge
+//! threads on the live cluster, in completion-time order on the virtual
+//! clock — so peak resident model state per round is O(regions), not
+//! O(selected clients), and a 10⁵-client round costs the same model
+//! memory as a 10²-client one (see `tests/large_fleet.rs` and
+//! `benches/params_hotpath.rs`).
 
 pub mod aggregation;
 pub mod benchkit;

@@ -3,13 +3,17 @@
 //! thread inside [`crate::env::LiveClusterEnv::run_round`]).
 //!
 //! This module is *pure transport and enactment*. It contains no protocol
-//! logic: no selection policy, no slack estimation, no aggregation — those
-//! live in `protocols/` above the [`crate::env::FlEnvironment`] trait and
-//! run identically on the virtual-clock backend. What the fabric provides
-//! is real concurrency: clients sleep their scaled completion times and
-//! train on their own threads, edges relay jobs down and submissions up,
-//! and the caller observes genuine out-of-order arrival, quota/deadline
-//! racing and straggler stop-signals.
+//! logic: no selection policy, no slack estimation, no aggregation rules —
+//! those live in `protocols/` above the [`crate::env::FlEnvironment`]
+//! trait and run identically on the virtual-clock backend. What the
+//! fabric provides is real concurrency: clients sleep their scaled
+//! completion times and train on their own threads, edges fold each
+//! arriving model into their region's [`RegionAccumulator`] in true
+//! arrival order (the mechanical Σ of eq. 17 — a transport-level fold,
+//! not a protocol decision) and relay model-free notices up, and the
+//! caller observes genuine out-of-order arrival, quota/deadline racing
+//! and straggler stop-signals. Full models cross the edge→cloud link only
+//! as one end-of-round [`RegionalReport`] per region.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -19,12 +23,22 @@ use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
+use crate::aggregation::RegionAccumulator;
 use crate::env::World;
-use crate::live::messages::{CloudToEdge, EdgeToClient, RoundJob, Submission};
+use crate::live::messages::{
+    CloudToEdge, EdgeToClient, EdgeToCloud, RegionalReport, RoundJob, Submission,
+    SubmissionNotice,
+};
 use crate::model::ModelParams;
 use crate::runtime::mock::MockEngine;
 use crate::runtime::Engine;
 use crate::Result;
+
+/// How long the cloud waits for the end-of-round regional reports after
+/// broadcasting `EndRound`. Edges answer immediately (the report is the
+/// next message they produce), so this only guards against a crashed edge
+/// thread turning into a hang.
+const REPORT_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Edge inbox fan-in: commands from the cloud and submissions from clients
 /// arrive on one channel so the edge thread can block on a single recv.
@@ -37,7 +51,7 @@ enum EdgeInbox {
 /// Tear-down is automatic on drop.
 pub struct ClusterFabric {
     edge_txs: Vec<Sender<EdgeInbox>>,
-    cloud_rx: Receiver<Submission>,
+    cloud_rx: Receiver<EdgeToCloud>,
     edge_handles: Vec<JoinHandle<()>>,
     client_handles: Vec<JoinHandle<()>>,
 }
@@ -47,8 +61,9 @@ impl ClusterFabric {
     pub(crate) fn spawn(world: &World, time_scale: f64) -> Result<ClusterFabric> {
         let m = world.topo.n_regions();
         let n = world.topo.n_clients();
+        let region_data = world.region_data_sizes();
 
-        let (cloud_tx, cloud_rx) = channel::<Submission>();
+        let (cloud_tx, cloud_rx) = channel::<EdgeToCloud>();
 
         // Per-client command channels (senders held by the edges).
         let mut client_txs: Vec<Sender<EdgeToClient>> = Vec::with_capacity(n);
@@ -82,7 +97,7 @@ impl ClusterFabric {
             }));
         }
 
-        // Edge relays.
+        // Edge relays (each owns its region's streaming accumulator).
         let mut edge_handles = Vec::with_capacity(m);
         for (r, rx) in edge_rxs.into_iter().enumerate() {
             let my_clients: HashMap<usize, Sender<EdgeToClient>> = world.topo.regions[r]
@@ -90,8 +105,9 @@ impl ClusterFabric {
                 .map(|&k| (k, client_txs[k].clone()))
                 .collect();
             let cloud_tx = cloud_tx.clone();
+            let d_r = region_data[r];
             edge_handles.push(std::thread::spawn(move || {
-                edge_loop(rx, cloud_tx, my_clients);
+                edge_loop(rx, cloud_tx, my_clients, r, d_r);
             }));
         }
         drop(cloud_tx); // the cloud keeps only the receiver
@@ -105,10 +121,13 @@ impl ClusterFabric {
         })
     }
 
-    /// Drive one round: dispatch per-region job batches, collect real
-    /// submissions until `target` of them arrived or `deadline` elapsed,
-    /// then broadcast the round-end signal. Returns the in-time
-    /// submissions in arrival order.
+    /// Drive one round: dispatch per-region job batches, count model-free
+    /// submission notices until `target` of them arrived or `deadline`
+    /// elapsed, broadcast the round-end signal, then collect every edge's
+    /// folded [`RegionalReport`]. The reports (indexed by region) are the
+    /// authoritative record of the round: the notices only decide *when*
+    /// the cut is broadcast; what each edge folded before the signal
+    /// reached it is what the round aggregated, counted and accounts.
     pub(crate) fn round(
         &mut self,
         t: usize,
@@ -116,7 +135,7 @@ impl ClusterFabric {
         jobs: Vec<Vec<RoundJob>>,
         target: usize,
         deadline: Duration,
-    ) -> Result<Vec<Submission>> {
+    ) -> Result<Vec<RegionalReport>> {
         for (r, js) in jobs.into_iter().enumerate() {
             self.edge_txs[r]
                 .send(EdgeInbox::Cmd(CloudToEdge::StartRound {
@@ -129,15 +148,15 @@ impl ClusterFabric {
         }
 
         let started = Instant::now();
-        let mut got: Vec<Submission> = Vec::new();
-        while got.len() < target {
+        let mut noticed = 0usize;
+        while noticed < target {
             let left = deadline.saturating_sub(started.elapsed());
             if left.is_zero() {
                 break;
             }
             match self.cloud_rx.recv_timeout(left) {
-                Ok(s) if s.t == t => got.push(s),
-                Ok(_) => {} // straggler from an earlier round
+                Ok(EdgeToCloud::Notice(n)) if n.t == t => noticed += 1,
+                Ok(_) => {} // stale traffic from an earlier round
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
                     anyhow::bail!("all edges disconnected")
@@ -145,12 +164,44 @@ impl ClusterFabric {
             }
         }
 
-        // Round-end signal: edges relay it to every client, stopping
-        // stragglers (the quota trigger's energy saving).
+        // Round-end signal: edges relay it to every client (stopping
+        // stragglers — the quota trigger's energy saving), close their
+        // accumulators and report them.
         for tx in &self.edge_txs {
             let _ = tx.send(EdgeInbox::Cmd(CloudToEdge::EndRound { t }));
         }
-        Ok(got)
+
+        let m = self.edge_txs.len();
+        let mut reports: Vec<Option<RegionalReport>> = (0..m).map(|_| None).collect();
+        let mut have = 0usize;
+        let t0 = Instant::now();
+        while have < m {
+            let left = REPORT_TIMEOUT.saturating_sub(t0.elapsed());
+            anyhow::ensure!(!left.is_zero(), "timed out waiting for edge reports");
+            match self.cloud_rx.recv_timeout(left) {
+                Ok(EdgeToCloud::Report(rep)) if rep.t == t => {
+                    let r = rep.region;
+                    if reports[r].is_none() {
+                        have += 1;
+                    }
+                    reports[r] = Some(rep);
+                }
+                // Notices that lost the race against the cut (and any
+                // other stale traffic) carry no information the reports
+                // don't already hold; discard them.
+                Ok(_) => {}
+                Err(RecvTimeoutError::Timeout) => {
+                    anyhow::bail!("timed out waiting for edge reports")
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all edges disconnected")
+                }
+            }
+        }
+        Ok(reports
+            .into_iter()
+            .map(|r| r.expect("all regions reported"))
+            .collect())
     }
 
     fn shutdown(&mut self) {
@@ -172,16 +223,26 @@ impl Drop for ClusterFabric {
     }
 }
 
-/// Edge worker: relay jobs to this region's clients, submissions to the
-/// cloud, and control signals both ways.
+/// Edge worker: relay jobs to this region's clients and control signals
+/// both ways; fold each in-time submission into the region's accumulator
+/// the moment it arrives (sending a model-free notice up), and ship the
+/// folded aggregate to the cloud at round end.
 fn edge_loop(
     rx: Receiver<EdgeInbox>,
-    cloud_tx: Sender<Submission>,
+    cloud_tx: Sender<EdgeToCloud>,
     my_clients: HashMap<usize, Sender<EdgeToClient>>,
+    region: usize,
+    region_data: f64,
 ) {
+    let mut cur_t = 0usize;
+    let mut acc: Option<RegionAccumulator> = None;
+    let mut folded: Vec<usize> = Vec::new();
     loop {
         match rx.recv() {
             Ok(EdgeInbox::Cmd(CloudToEdge::StartRound { t, start, jobs })) => {
+                cur_t = t;
+                acc = Some(RegionAccumulator::new(region, region_data, &start));
+                folded.clear();
                 for job in jobs {
                     if let Some(tx) = my_clients.get(&job.client) {
                         let _ = tx.send(EdgeToClient::Train {
@@ -197,6 +258,16 @@ fn edge_loop(
                 for tx in my_clients.values() {
                     let _ = tx.send(EdgeToClient::EndRound { t });
                 }
+                if t == cur_t {
+                    if let Some(agg) = acc.take() {
+                        let _ = cloud_tx.send(EdgeToCloud::Report(RegionalReport {
+                            t,
+                            region,
+                            agg,
+                            clients: std::mem::take(&mut folded),
+                        }));
+                    }
+                }
             }
             Ok(EdgeInbox::Cmd(CloudToEdge::Shutdown)) | Err(_) => {
                 for tx in my_clients.values() {
@@ -205,7 +276,21 @@ fn edge_loop(
                 break;
             }
             Ok(EdgeInbox::Sub(s)) => {
-                let _ = cloud_tx.send(s);
+                // Fold in arrival order; the model is dropped here. The
+                // round-end signal closes the accumulator, so a
+                // submission reaching the edge after it — or one from a
+                // stale round — is discarded, never folded.
+                if s.t == cur_t {
+                    if let Some(a) = acc.as_mut() {
+                        a.fold(&s.model, s.data_size, s.loss);
+                        folded.push(s.client);
+                        let _ = cloud_tx.send(EdgeToCloud::Notice(SubmissionNotice {
+                            t: s.t,
+                            client: s.client,
+                            region: s.region,
+                        }));
+                    }
+                }
             }
         }
     }

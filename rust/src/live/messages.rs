@@ -5,11 +5,21 @@
 //! nothing in a [`Submission`] identifies client reliability, and no
 //! protocol-level state (slack estimates, aggregation rules, quotas)
 //! appears on the wire. Protocol logic lives entirely above the
-//! [`crate::env::FlEnvironment`] trait; the fabric only moves jobs down
-//! and models up.
+//! [`crate::env::FlEnvironment`] trait; the fabric only moves jobs down,
+//! folds models at the edge, and sends aggregates up.
+//!
+//! Transport economics after the streaming refactor: full model payloads
+//! cross a channel in exactly two shapes — the round-start broadcast
+//! (`Arc<ModelParams>`, one refcount bump per hop, no clone on fan-out)
+//! and the client's own trained [`Submission`] (moved, never copied,
+//! folded at the edge and dropped). The edge→cloud path carries only
+//! model-free [`SubmissionNotice`]s during the round plus one
+//! [`RegionalReport`] with the folded [`RegionAccumulator`] at round end
+//! — per-round edge→cloud model traffic is O(regions), not O(selected).
 
 use std::sync::Arc;
 
+use crate::aggregation::RegionAccumulator;
 use crate::model::ModelParams;
 
 /// One client's training job for a round. `dropped` and `completion` are
@@ -27,14 +37,16 @@ pub struct RoundJob {
 /// Cloud → edge.
 #[derive(Debug)]
 pub enum CloudToEdge {
-    /// Start round `t`: relay the start model and per-client jobs.
+    /// Start round `t`: relay the start model and per-client jobs, and
+    /// open a fresh regional accumulator for arrival-order folding.
     StartRound {
         t: usize,
         start: Arc<ModelParams>,
         jobs: Vec<RoundJob>,
     },
     /// The round is over (quota reached or deadline): stop straggling
-    /// clients; late submissions will be discarded.
+    /// clients, close the accumulator and report it; late submissions
+    /// will be discarded.
     EndRound { t: usize },
     /// Training is over; tear down.
     Shutdown,
@@ -55,7 +67,9 @@ pub enum EdgeToClient {
     Shutdown,
 }
 
-/// Client → edge → cloud: a completed local update.
+/// Client → edge: a completed local update. The model is *moved* into the
+/// envelope and folded into the edge's accumulator on receipt — it never
+/// travels further up nor gets cloned.
 #[derive(Debug)]
 pub struct Submission {
     pub t: usize,
@@ -68,4 +82,37 @@ pub struct Submission {
     /// Local training loss (diagnostic).
     pub loss: f64,
     pub model: ModelParams,
+}
+
+/// Edge → cloud, per folded submission: the model-free receipt the cloud
+/// counts to decide *when* to broadcast the round-end signal. Accounting
+/// (counts, cut time, energy) comes from the [`RegionalReport`]s instead;
+/// the opaque `client`/`region` here are telemetry.
+#[derive(Clone, Copy, Debug)]
+pub struct SubmissionNotice {
+    pub t: usize,
+    pub client: usize,
+    pub region: usize,
+}
+
+/// Edge → cloud, at round end: the region's folded aggregate — the only
+/// model-bearing payload on the edge→cloud path, one per region per round.
+/// The folded set is authoritative: the cloud derives the submission
+/// counts, the quota decision and the round-cut time from these reports,
+/// so what was aggregated and what is accounted can never diverge.
+#[derive(Debug)]
+pub struct RegionalReport {
+    pub t: usize,
+    pub region: usize,
+    pub agg: RegionAccumulator,
+    /// Opaque ids of the clients folded into `agg`, in arrival order
+    /// (time accounting only — no model payload, no reliability info).
+    pub clients: Vec<usize>,
+}
+
+/// Edge → cloud fan-in.
+#[derive(Debug)]
+pub enum EdgeToCloud {
+    Notice(SubmissionNotice),
+    Report(RegionalReport),
 }

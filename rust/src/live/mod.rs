@@ -3,15 +3,21 @@
 //! communicating over mpsc channels.
 //!
 //! Since the `FlEnvironment` redesign this module holds only the
-//! **fabric**: spawn/teardown of the thread topology, message relay, and
-//! the cloud leader's arrival-collection loop
-//! ([`cluster::ClusterFabric`]). All protocol logic — selection policy,
-//! slack estimation, quota configuration, the cache rule, EDC aggregation
-//! — lives in `protocols/` and reaches this fabric only through
-//! [`crate::env::LiveClusterEnv`], the live implementation of
-//! [`crate::env::FlEnvironment`]. The same protocol code therefore runs
-//! bit-for-bit on the deterministic simulator and, coordination-wise, on
-//! this fabric.
+//! **fabric**: spawn/teardown of the thread topology, message relay, the
+//! edges' arrival-order streaming fold, and the cloud leader's
+//! notice-counting loop ([`cluster::ClusterFabric`]). All protocol logic —
+//! selection policy, slack estimation, quota configuration, the cache
+//! rule, EDC aggregation — lives in `protocols/` and reaches this fabric
+//! only through [`crate::env::LiveClusterEnv`], the live implementation
+//! of [`crate::env::FlEnvironment`]. The same protocol code therefore
+//! runs bit-for-bit on the deterministic simulator and,
+//! coordination-wise, on this fabric.
+//!
+//! Model traffic is O(regions) per round on the edge→cloud link: clients
+//! move (never copy) their trained model one hop to their edge, the edge
+//! folds it into the region's accumulator immediately, and only the
+//! folded aggregate travels up at round end. The round-start broadcast
+//! shares one `Arc<ModelParams>` across all hops.
 //!
 //! Run it via [`crate::scenario::Scenario`]:
 //!

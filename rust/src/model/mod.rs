@@ -4,4 +4,6 @@ pub mod manifest;
 pub mod params;
 
 pub use manifest::{ParamSpec, TaskManifest};
-pub use params::{weighted_average, ModelParams};
+pub use params::{
+    arena_count, arena_peak, reset_arena_peak, weighted_average, ModelParams,
+};

@@ -1,64 +1,225 @@
-//! Flat model parameter store (S11).
+//! Flat model parameter store (S11) — contiguous-arena edition.
 //!
 //! All FL aggregation math — FedAvg weighted averaging (eq. 17), EDC
-//! weighting (eq. 20), model caching — operates on [`ModelParams`]: an
-//! ordered list of f32 tensors matching the AOT artifact's parameter
-//! order. The hot loop is `axpy` (scaled accumulate), which the
-//! aggregators call once per contributing model.
+//! weighting (eq. 20), model caching — operates on [`ModelParams`]. Since
+//! the data-plane refactor the store is a **single contiguous `Vec<f32>`
+//! arena** with an offset table per tensor:
+//!
+//! ```text
+//!   data:    [ t0 .......... | t1 .... | t2 ........... ]   one allocation
+//!   offsets: [ 0, len(t0), len(t0)+len(t1), n_values ]      n_tensors + 1
+//!   shapes:  [ [..], [..], [..] ]                           logical dims
+//! ```
+//!
+//! Tensor `i` is the slice `data[offsets[i]..offsets[i+1]]`; logical
+//! shapes are kept alongside for artifact I/O and sanity checks. The hot
+//! kernels (`axpy`, `scale`, `l2_distance`) are chunked flat-slice loops
+//! over the whole arena — one stream, no per-tensor pointer chasing — so
+//! they auto-vectorize.
+//!
+//! Storage is behind an `Arc` with copy-on-write semantics: `clone()` is
+//! two reference-count bumps (what the live backend's broadcast fan-out
+//! relies on), and the arena is copied only when a shared instance is
+//! first mutated. The arena/layout split means `zeros_like` and clones
+//! share one layout allocation per model architecture.
+//!
+//! The module also counts live arenas (allocations, not `ModelParams`
+//! handles) through [`arena_count`] / [`arena_peak`] — the instrumentation
+//! the large-fleet smoke test and `params_hotpath` bench use to prove the
+//! streaming round keeps O(regions) models resident.
 
-/// An ordered set of named f32 tensors.
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Chunk width of the flat kernels. Eight f32 lanes = one AVX2 register;
+/// the compiler unrolls/vectorizes the fixed-size inner loop.
+const LANES: usize = 8;
+
+static ACTIVE_ARENAS: AtomicUsize = AtomicUsize::new(0);
+static PEAK_ARENAS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of parameter arenas currently allocated process-wide (cheap
+/// `ModelParams` clones share one arena and count once).
+pub fn arena_count() -> usize {
+    ACTIVE_ARENAS.load(Ordering::Relaxed)
+}
+
+/// High-water mark of [`arena_count`] since process start or the last
+/// [`reset_arena_peak`].
+pub fn arena_peak() -> usize {
+    PEAK_ARENAS.load(Ordering::Relaxed)
+}
+
+/// Reset the high-water mark to the current live count.
+pub fn reset_arena_peak() {
+    PEAK_ARENAS.store(ACTIVE_ARENAS.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// The contiguous value storage, instrumented for live/peak accounting.
+#[derive(Debug)]
+struct Arena(Vec<f32>);
+
+impl Arena {
+    fn new(values: Vec<f32>) -> Arena {
+        let now = ACTIVE_ARENAS.fetch_add(1, Ordering::Relaxed) + 1;
+        PEAK_ARENAS.fetch_max(now, Ordering::Relaxed);
+        Arena(values)
+    }
+}
+
+impl Clone for Arena {
+    fn clone(&self) -> Arena {
+        // A deep copy is a new allocation — count it.
+        Arena::new(self.0.clone())
+    }
+}
+
+impl Drop for Arena {
+    fn drop(&mut self) {
+        ACTIVE_ARENAS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Offset table + logical shapes, shared by every clone and `zeros_like`
+/// of a model architecture.
 #[derive(Clone, Debug, PartialEq)]
+struct Layout {
+    /// `offsets[i]..offsets[i+1]` is tensor `i`; `len == n_tensors + 1`.
+    offsets: Vec<usize>,
+    shapes: Vec<Vec<usize>>,
+}
+
+/// An ordered set of named f32 tensors backed by one contiguous arena.
+#[derive(Clone, Debug)]
 pub struct ModelParams {
-    /// Tensor payloads, artifact order.
-    pub tensors: Vec<Vec<f32>>,
-    /// Logical shapes (same order). Kept for literal construction and
-    /// sanity checks; `tensors[i].len() == shapes[i].iter().product()`.
-    pub shapes: Vec<Vec<usize>>,
+    data: Arc<Arena>,
+    layout: Arc<Layout>,
+}
+
+impl PartialEq for ModelParams {
+    fn eq(&self, other: &ModelParams) -> bool {
+        self.layout.shapes == other.layout.shapes && self.data.0 == other.data.0
+    }
 }
 
 impl ModelParams {
+    /// Build from per-tensor payloads (artifact order), flattening into
+    /// one arena.
     pub fn new(tensors: Vec<Vec<f32>>, shapes: Vec<Vec<usize>>) -> ModelParams {
         debug_assert_eq!(tensors.len(), shapes.len());
+        let total: usize = tensors.iter().map(|t| t.len()).sum();
+        let mut offsets = Vec::with_capacity(tensors.len() + 1);
+        let mut data = Vec::with_capacity(total);
+        offsets.push(0);
         for (t, s) in tensors.iter().zip(shapes.iter()) {
             debug_assert_eq!(t.len(), s.iter().product::<usize>());
+            data.extend_from_slice(t);
+            offsets.push(data.len());
         }
-        ModelParams { tensors, shapes }
+        ModelParams {
+            data: Arc::new(Arena::new(data)),
+            layout: Arc::new(Layout { offsets, shapes }),
+        }
     }
 
-    /// All-zero parameters with the same structure.
+    /// Build directly from a flat arena (`data.len()` must equal the total
+    /// of the shape products).
+    pub fn from_flat(data: Vec<f32>, shapes: Vec<Vec<usize>>) -> ModelParams {
+        let mut offsets = Vec::with_capacity(shapes.len() + 1);
+        offsets.push(0);
+        let mut total = 0usize;
+        for s in &shapes {
+            total += s.iter().product::<usize>();
+            offsets.push(total);
+        }
+        assert_eq!(data.len(), total, "flat arena does not match shapes");
+        ModelParams {
+            data: Arc::new(Arena::new(data)),
+            layout: Arc::new(Layout { offsets, shapes }),
+        }
+    }
+
+    /// All-zero parameters with the same structure (shares the layout
+    /// allocation; new arena).
     pub fn zeros_like(&self) -> ModelParams {
         ModelParams {
-            tensors: self.tensors.iter().map(|t| vec![0.0; t.len()]).collect(),
-            shapes: self.shapes.clone(),
+            data: Arc::new(Arena::new(vec![0.0; self.n_values()])),
+            layout: Arc::clone(&self.layout),
         }
     }
 
     pub fn n_tensors(&self) -> usize {
-        self.tensors.len()
+        self.layout.shapes.len()
     }
 
-    /// Total scalar count.
+    /// Total scalar count (O(1): arena length).
     pub fn n_values(&self) -> usize {
-        self.tensors.iter().map(|t| t.len()).sum()
+        self.data.0.len()
     }
 
-    /// `self += a * x` — the aggregation hot loop.
+    /// Logical shapes, artifact order.
+    pub fn shapes(&self) -> &[Vec<usize>] {
+        &self.layout.shapes
+    }
+
+    /// Tensor `i` as a slice view into the arena.
+    pub fn tensor(&self, i: usize) -> &[f32] {
+        &self.data.0[self.layout.offsets[i]..self.layout.offsets[i + 1]]
+    }
+
+    /// Mutable view of tensor `i` (copy-on-write if the arena is shared).
+    pub fn tensor_mut(&mut self, i: usize) -> &mut [f32] {
+        let (lo, hi) = (self.layout.offsets[i], self.layout.offsets[i + 1]);
+        &mut Arc::make_mut(&mut self.data).0[lo..hi]
+    }
+
+    /// Slice views of all tensors, artifact order.
+    pub fn tensors(&self) -> impl Iterator<Item = &[f32]> + '_ {
+        self.layout
+            .offsets
+            .windows(2)
+            .map(move |w| &self.data.0[w[0]..w[1]])
+    }
+
+    /// The whole arena as one flat slice.
+    pub fn values(&self) -> &[f32] {
+        &self.data.0
+    }
+
+    /// Mutable flat arena (copy-on-write if shared).
+    pub fn values_mut(&mut self) -> &mut [f32] {
+        &mut Arc::make_mut(&mut self.data).0
+    }
+
+    /// True when both handles share one arena allocation (cheap-clone /
+    /// COW diagnostics).
+    pub fn shares_arena(&self, other: &ModelParams) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+
+    /// `self += a * x` — the aggregation hot loop, one chunked pass over
+    /// the flat arena.
     pub fn axpy(&mut self, a: f32, x: &ModelParams) {
-        debug_assert_eq!(self.n_tensors(), x.n_tensors());
-        for (dst, src) in self.tensors.iter_mut().zip(x.tensors.iter()) {
-            debug_assert_eq!(dst.len(), src.len());
-            for (d, &s) in dst.iter_mut().zip(src.iter()) {
-                *d += a * s;
+        debug_assert_eq!(self.layout.offsets, x.layout.offsets);
+        let dst = self.values_mut();
+        let src = x.values();
+        assert_eq!(dst.len(), src.len(), "axpy over mismatched arenas");
+        let mut d = dst.chunks_exact_mut(LANES);
+        let mut s = src.chunks_exact(LANES);
+        for (dc, sc) in (&mut d).zip(&mut s) {
+            for j in 0..LANES {
+                dc[j] += a * sc[j];
             }
+        }
+        for (dv, sv) in d.into_remainder().iter_mut().zip(s.remainder()) {
+            *dv += a * *sv;
         }
     }
 
     /// `self *= a`.
     pub fn scale(&mut self, a: f32) {
-        for t in self.tensors.iter_mut() {
-            for v in t.iter_mut() {
-                *v *= a;
-            }
+        for v in self.values_mut() {
+            *v *= a;
         }
     }
 
@@ -66,25 +227,20 @@ impl ModelParams {
     /// convergence probes).
     pub fn l2_distance(&self, other: &ModelParams) -> f64 {
         let mut acc = 0.0f64;
-        for (a, b) in self.tensors.iter().zip(other.tensors.iter()) {
-            for (&x, &y) in a.iter().zip(b.iter()) {
-                let d = (x - y) as f64;
-                acc += d * d;
-            }
+        for (&x, &y) in self.values().iter().zip(other.values().iter()) {
+            let d = (x - y) as f64;
+            acc += d * d;
         }
         acc.sqrt()
     }
 
-    /// Max |value| across all tensors (NaN/blow-up guard in tests).
+    /// Max |value| across the arena (NaN/blow-up guard in tests).
     pub fn max_abs(&self) -> f32 {
-        self.tensors
-            .iter()
-            .flat_map(|t| t.iter())
-            .fold(0.0f32, |m, &v| m.max(v.abs()))
+        self.values().iter().fold(0.0f32, |m, &v| m.max(v.abs()))
     }
 
     pub fn is_finite(&self) -> bool {
-        self.tensors.iter().all(|t| t.iter().all(|v| v.is_finite()))
+        self.values().iter().all(|v| v.is_finite())
     }
 }
 
@@ -116,9 +272,24 @@ mod tests {
         let mut a = p(&[1.0, 2.0]);
         let b = p(&[10.0, 20.0]);
         a.axpy(0.5, &b);
-        assert_eq!(a.tensors[0], vec![6.0, 12.0]);
+        assert_eq!(a.tensor(0), &[6.0, 12.0][..]);
         a.scale(2.0);
-        assert_eq!(a.tensors[0], vec![12.0, 24.0]);
+        assert_eq!(a.tensor(0), &[12.0, 24.0][..]);
+    }
+
+    /// The chunked kernel must agree with the scalar definition across the
+    /// remainder boundary (lengths not divisible by the lane width).
+    #[test]
+    fn axpy_handles_remainder_lengths() {
+        for n in [1usize, 7, 8, 9, 16, 19] {
+            let xs: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let mut a = p(&vec![1.0; n]);
+            let b = p(&xs);
+            a.axpy(2.0, &b);
+            for (i, &v) in a.tensor(0).iter().enumerate() {
+                assert_eq!(v, 1.0 + 2.0 * i as f32, "n={n} i={i}");
+            }
+        }
     }
 
     #[test]
@@ -126,7 +297,7 @@ mod tests {
         let a = p(&[0.0, 0.0]);
         let b = p(&[4.0, 8.0]);
         let avg = weighted_average(&[(&a, 1.0), (&b, 3.0)]).unwrap();
-        assert_eq!(avg.tensors[0], vec![3.0, 6.0]);
+        assert_eq!(avg.tensor(0), &[3.0, 6.0][..]);
     }
 
     #[test]
@@ -140,7 +311,7 @@ mod tests {
     fn weighted_average_identity_for_single_model() {
         let a = p(&[1.5, -2.5, 3.0]);
         let avg = weighted_average(&[(&a, 0.123)]).unwrap();
-        for (x, y) in avg.tensors[0].iter().zip(a.tensors[0].iter()) {
+        for (x, y) in avg.tensor(0).iter().zip(a.tensor(0).iter()) {
             assert!((x - y).abs() < 1e-6);
         }
     }
@@ -165,7 +336,76 @@ mod tests {
         let z = a.zeros_like();
         assert_eq!(z.n_tensors(), 2);
         assert_eq!(z.n_values(), 9);
-        assert!(z.tensors.iter().flatten().all(|&v| v == 0.0));
-        assert_eq!(z.shapes, a.shapes);
+        assert!(z.values().iter().all(|&v| v == 0.0));
+        assert_eq!(z.shapes(), a.shapes());
+    }
+
+    #[test]
+    fn arena_is_contiguous_with_offset_views() {
+        let a = ModelParams::new(
+            vec![vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![7.0, 8.0, 9.0]],
+            vec![vec![2, 3], vec![3]],
+        );
+        // The flat arena is the tensors concatenated in artifact order …
+        assert_eq!(
+            a.values(),
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0][..]
+        );
+        // … and per-tensor views are windows into it.
+        assert_eq!(a.tensor(0), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0][..]);
+        assert_eq!(a.tensor(1), &[7.0, 8.0, 9.0][..]);
+        assert_eq!(a.tensors().count(), 2);
+    }
+
+    #[test]
+    fn from_flat_matches_new() {
+        let shapes = vec![vec![2, 2], vec![3]];
+        let a = ModelParams::from_flat(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], shapes.clone());
+        let b = ModelParams::new(
+            vec![vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0]],
+            shapes,
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "flat arena does not match shapes")]
+    fn from_flat_rejects_size_mismatch() {
+        ModelParams::from_flat(vec![0.0; 5], vec![vec![2, 2]]);
+    }
+
+    /// Broadcast economics: clone is an Arc bump (shared arena); mutation
+    /// copies on write, leaving the original untouched.
+    #[test]
+    fn clone_is_shared_until_mutated() {
+        let a = p(&[1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        assert!(a.shares_arena(&b));
+        b.values_mut()[0] = 9.0;
+        assert!(!a.shares_arena(&b));
+        assert_eq!(a.tensor(0), &[1.0, 2.0, 3.0][..]);
+        assert_eq!(b.tensor(0), &[9.0, 2.0, 3.0][..]);
+    }
+
+    /// Arena accounting counts allocations, not handles. Other tests run
+    /// concurrently and move the global counters too, so the assertions
+    /// use a large batch with generous slack instead of exact equality.
+    #[test]
+    fn arena_accounting_tracks_allocations_not_handles() {
+        const N: usize = 4096;
+        const SLACK: usize = 512;
+        let a = p(&[1.0; 16]);
+        let before = arena_count();
+        let deep: Vec<ModelParams> = (0..N).map(|_| a.zeros_like()).collect();
+        let shared: Vec<ModelParams> = (0..N).map(|_| a.clone()).collect();
+        let held = arena_count();
+        // N new arenas from zeros_like; the N cheap clones add none.
+        assert!(held + SLACK >= before + N, "held={held} before={before}");
+        assert!(held <= before + N + SLACK, "held={held} before={before}");
+        assert!(arena_peak() >= held);
+        drop(deep);
+        drop(shared);
+        let after = arena_count();
+        assert!(after <= held - N + SLACK, "after={after} held={held}");
     }
 }

@@ -39,12 +39,10 @@ impl Protocol for FedAvg {
         )?;
 
         // --- aggregate what arrived in time ----------------------------------
-        let refs: Vec<(&ModelParams, f64)> = out
-            .arrivals
-            .iter()
-            .map(|a| (&a.model, a.data_size))
-            .collect();
-        if let Some(w) = crate::aggregation::fedavg(&refs) {
+        // The environment folded each in-time model into per-region
+        // partial sums as it arrived; recombining them with |D^r|/EDC
+        // weights is exactly global FedAvg (no edge layer in the math).
+        if let Some(w) = crate::aggregation::fedavg_from_regions(&out.regional) {
             self.global = w;
         }
         let mean_local_loss = mean_loss(&out);
@@ -99,6 +97,6 @@ mod tests {
         let total_sub: usize = rec.submissions.iter().sum();
         assert_eq!(total_sel, total_sub); // nobody dropped
         // Model moved (training happened).
-        assert!(proto.global_model().tensors[0][0] > 0.0);
+        assert!(proto.global_model().values()[0] > 0.0);
     }
 }

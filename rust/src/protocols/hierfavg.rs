@@ -58,19 +58,13 @@ impl Protocol for HierFavg {
             CutoffPolicy::AllPerRegion,
         )?;
 
-        // --- edge aggregation from the in-time submissions -------------------
-        for r in 0..m {
-            let models: Vec<(&ModelParams, f64)> = out
-                .arrivals
-                .iter()
-                .filter(|a| a.region == r)
-                .map(|a| (&a.model, a.data_size))
-                .collect();
-            if models.is_empty() {
-                continue; // region keeps its previous model
-            }
-            if let Some(w) = crate::aggregation::fedavg(&models) {
-                self.regionals[r] = w;
+        // --- edge aggregation from the streamed per-region folds -------------
+        // Each accumulator already holds its region's weighted partial
+        // sum; `fedavg()` rescales it to the plain weighted average. An
+        // empty region returns None and keeps its previous model.
+        for agg in &out.regional {
+            if let Some(w) = agg.fedavg() {
+                self.regionals[agg.region()] = w;
             }
         }
 

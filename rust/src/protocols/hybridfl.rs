@@ -34,8 +34,6 @@ pub struct HybridFl {
     /// deployment; here cloud-side protocol state driven purely by
     /// observable submission counts).
     slack: Vec<SlackEstimator>,
-    /// |D^r| per region.
-    region_data: Vec<f64>,
     cache_mode: CacheMode,
 }
 
@@ -49,7 +47,6 @@ impl HybridFl {
             regionals: vec![init.clone(); region_sizes.len()],
             global: init,
             slack,
-            region_data: Vec::new(),
             cache_mode: cfg.cache_mode,
         }
     }
@@ -62,9 +59,6 @@ impl Protocol for HybridFl {
 
     fn run_round(&mut self, t: usize, env: &mut dyn FlEnvironment) -> Result<RoundRecord> {
         let m = env.n_regions();
-        if self.region_data.is_empty() {
-            self.region_data = (0..m).map(|r| env.region_data_size(r)).collect();
-        }
 
         // --- step 1: slack-modulated regional selection ------------------------
         let counts: Vec<usize> = self.slack.iter().map(|s| s.selection_count()).collect();
@@ -81,23 +75,17 @@ impl Protocol for HybridFl {
         let quota_met = !out.deadline_hit;
 
         // --- regional aggregation: eq. 17 cache rule, or the fresh-only
-        // ablation (see CacheMode docs).
+        // ablation (see CacheMode docs). The environment already streamed
+        // each in-time model into its region's accumulator (the Σ term of
+        // eq. 17); only the cache/rescale finisher runs here.
         let mut regional_models: Vec<(ModelParams, f64)> = Vec::with_capacity(m);
-        for r in 0..m {
-            let models: Vec<(&ModelParams, f64)> = out
-                .arrivals
-                .iter()
-                .filter(|a| a.region == r)
-                .map(|a| (&a.model, a.data_size))
-                .collect();
-            let edc_r: f64 = models.iter().map(|(_, d)| *d).sum();
+        for agg in &out.regional {
+            let r = agg.region();
+            let edc_r = agg.edc();
             let w_r = match self.cache_mode {
-                CacheMode::Regional => crate::aggregation::regional_with_cache(
-                    &models,
-                    self.region_data[r],
-                    &self.regionals[r],
-                ),
-                CacheMode::Fresh => crate::aggregation::fedavg(&models)
+                CacheMode::Regional => agg.finish_cached(&self.regionals[r])?,
+                CacheMode::Fresh => agg
+                    .fedavg()
                     .unwrap_or_else(|| self.regionals[r].clone()),
             };
             regional_models.push((w_r, edc_r));
@@ -231,7 +219,7 @@ mod tests {
     fn global_model_advances_every_round() {
         let (proto, recs) = run_rounds(0.2, 20, 2, 10, 4);
         assert!(recs.iter().all(|r| r.cloud_aggregated));
-        assert!(proto.global_model().tensors[0][0] > 0.0);
+        assert!(proto.global_model().values()[0] > 0.0);
     }
 
     #[test]

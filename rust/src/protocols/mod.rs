@@ -10,12 +10,15 @@
 //!    which model each region trains from ([`crate::env::Starts`]);
 //! 2. hand the environment a [`crate::env::CutoffPolicy`] and receive a
 //!    [`crate::env::RoundOutcome`] — who submitted (counts per region) and
-//!    the submitted models themselves;
-//! 3. aggregate and update protocol state (slack estimators, regional
-//!    caches, the global model).
+//!    the *streamed* per-region aggregates: the environment folded every
+//!    in-time model into a [`crate::aggregation::RegionAccumulator`] as
+//!    it arrived, so no per-submission model buffer ever exists;
+//! 3. finish aggregation from that state (the eq. 17 cache term, eq. 20's
+//!    EDC weighting, or plain FedAvg recombination) and update protocol
+//!    state (slack estimators, regional caches, the global model).
 //!
-//! Protocols receive only observables — submission counts and model
-//! envelopes — never device profiles or fates, mirroring the paper's
+//! Protocols receive only observables — submission counts and folded
+//! aggregates — never device profiles or fates, mirroring the paper's
 //! reliability-agnostic constraint. The returned [`RoundRecord`] carries
 //! everything the metrics layer and the experiment harness need.
 
@@ -101,11 +104,13 @@ pub(crate) fn count_from_fraction(fraction: f64, n: usize) -> usize {
     ((fraction * n as f64).round() as usize).clamp(1, n)
 }
 
-/// Mean local loss across arrivals (NaN when nothing arrived).
+/// Mean local loss across the folded submissions (NaN when nothing
+/// arrived) — recovered from the accumulators' running loss sums.
 pub(crate) fn mean_loss(outcome: &RoundOutcome) -> f64 {
-    if outcome.arrivals.is_empty() {
+    let n: usize = outcome.regional.iter().map(|r| r.count()).sum();
+    if n == 0 {
         f64::NAN
     } else {
-        outcome.arrivals.iter().map(|a| a.loss).sum::<f64>() / outcome.arrivals.len() as f64
+        outcome.regional.iter().map(|r| r.loss_sum()).sum::<f64>() / n as f64
     }
 }

@@ -70,15 +70,16 @@ impl Engine for MockEngine {
         // model more, mirroring FedAvg weighting intuition).
         let data_frac = indices.len() as f64 / self.mean_partition.max(1.0);
         let gain = (epochs as f64 / self.tau_ref) * data_frac * (lr as f64 / lr.max(1e-9) as f64);
-        params.tensors[0][0] += gain as f32;
-        params.tensors[0][1] += 0.01 * gain as f32;
-        let progress = params.tensors[0][0] as f64;
+        let v = params.values_mut();
+        v[0] += gain as f32;
+        v[1] += 0.01 * gain as f32;
+        let progress = v[0] as f64;
         let loss = 1.0 / (1.0 + progress); // monotone-decreasing proxy
         Ok(TrainOutcome { params, loss })
     }
 
     fn evaluate(&mut self, params: &ModelParams) -> Result<EvalResult> {
-        let progress = params.tensors[0][0] as f64;
+        let progress = params.values()[0] as f64;
         let acc = self.accuracy(progress);
         Ok(EvalResult {
             loss: 1.0 / (1.0 + progress),
@@ -123,7 +124,7 @@ mod tests {
     fn accuracy_saturates_below_max() {
         let mut eng = engine();
         let mut w = eng.init_params();
-        w.tensors[0][0] = 1e6;
+        w.values_mut()[0] = 1e6;
         let r = eng.evaluate(&w).unwrap();
         assert!(r.accuracy <= 0.73 + 1e-9);
         assert!(r.accuracy > 0.72);
@@ -137,8 +138,8 @@ mod tests {
         let fast = eng.train_local(&w0, &idx, 10, 1e-3).unwrap().params;
         let avg =
             crate::model::weighted_average(&[(&w0, 0.5), (&fast, 0.5)]).unwrap();
-        let p = avg.tensors[0][0];
-        assert!(p > 0.0 && p < fast.tensors[0][0]);
+        let p = avg.values()[0];
+        assert!(p > 0.0 && p < fast.values()[0]);
     }
 
     #[test]
@@ -147,6 +148,6 @@ mod tests {
         let w0 = eng.init_params();
         let small = eng.train_local(&w0, &[0, 1], 5, 1e-3).unwrap().params;
         let big = eng.train_local(&w0, &(0..100).collect::<Vec<_>>(), 5, 1e-3).unwrap().params;
-        assert!(big.tensors[0][0] > small.tensors[0][0]);
+        assert!(big.values()[0] > small.values()[0]);
     }
 }

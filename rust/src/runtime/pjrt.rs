@@ -79,9 +79,8 @@ impl PjrtEngine {
 
     fn params_to_literals(&self, params: &ModelParams) -> Result<Vec<Literal>> {
         params
-            .tensors
-            .iter()
-            .zip(params.shapes.iter())
+            .tensors()
+            .zip(params.shapes().iter())
             .map(|(t, s)| literal_f32(t, s))
             .collect()
     }
@@ -200,7 +199,7 @@ impl Engine for PjrtEngine {
             tensors.push(p.to_vec::<f32>()?);
         }
         Ok(TrainOutcome {
-            params: ModelParams::new(tensors, start.shapes.clone()),
+            params: ModelParams::new(tensors, start.shapes().to_vec()),
             loss,
         })
     }

@@ -1,0 +1,192 @@
+//! Property tests pinning the streaming aggregator to the batch math: for
+//! random models, weights and region layouts, `StreamingAggregator` must
+//! match `regional_with_cache` + `edc_cloud` within 1e-5 *regardless of
+//! fold order*, including the empty-region and zero-EDC
+//! keep-previous-model edges. The offline vendor set has no `proptest`,
+//! so this hand-rolls the discipline with the seeded `Rng`.
+
+use hybridfl::aggregation::{
+    edc_cloud, fedavg, fedavg_from_regions, regional_with_cache, RegionAccumulator,
+    StreamingAggregator,
+};
+use hybridfl::model::ModelParams;
+use hybridfl::rng::Rng;
+
+fn shapes() -> Vec<Vec<usize>> {
+    vec![vec![4, 3], vec![3], vec![7]]
+}
+
+fn rand_model(rng: &mut Rng) -> ModelParams {
+    let shapes = shapes();
+    let tensors = shapes
+        .iter()
+        .map(|s| {
+            (0..s.iter().product::<usize>())
+                .map(|_| rng.normal(0.0, 1.0) as f32)
+                .collect()
+        })
+        .collect();
+    ModelParams::new(tensors, shapes)
+}
+
+/// One random round: submissions per region (region 0 forced empty on odd
+/// cases), region data sizes strictly above coverage, random previous
+/// regional models.
+struct Case {
+    m: usize,
+    submissions: Vec<(usize, ModelParams, f64)>,
+    region_data: Vec<f64>,
+    prevs: Vec<ModelParams>,
+}
+
+fn random_case(rng: &mut Rng, case: usize) -> Case {
+    let m = 1 + rng.below(4);
+    let mut submissions = Vec::new();
+    let mut region_data = vec![0.0f64; m];
+    let prevs: Vec<ModelParams> = (0..m).map(|_| rand_model(rng)).collect();
+    for r in 0..m {
+        let k = if case % 2 == 1 && r == 0 { 0 } else { rng.below(7) };
+        let mut covered = 0.0;
+        for _ in 0..k {
+            let d = (1 + rng.below(50)) as f64;
+            covered += d;
+            submissions.push((r, rand_model(rng), d));
+        }
+        region_data[r] = covered + (1 + rng.below(100)) as f64;
+    }
+    Case {
+        m,
+        submissions,
+        region_data,
+        prevs,
+    }
+}
+
+/// Batch reference: regional cache rule per region + EDC cloud weighting.
+fn batch_reference(c: &Case) -> (Vec<(ModelParams, f64)>, Option<ModelParams>) {
+    let mut regionals = Vec::with_capacity(c.m);
+    for r in 0..c.m {
+        let models: Vec<(&ModelParams, f64)> = c
+            .submissions
+            .iter()
+            .filter(|(rr, _, _)| *rr == r)
+            .map(|(_, w, d)| (w, *d))
+            .collect();
+        let edc: f64 = models.iter().map(|(_, d)| *d).sum();
+        let w = regional_with_cache(&models, c.region_data[r], &c.prevs[r]).unwrap();
+        regionals.push((w, edc));
+    }
+    let refs: Vec<(&ModelParams, f64)> = regionals.iter().map(|(w, e)| (w, *e)).collect();
+    let cloud = edc_cloud(&refs);
+    (regionals, cloud)
+}
+
+fn streamed_in_order(c: &Case, order: &[usize]) -> StreamingAggregator {
+    let template = c.prevs[0].zeros_like();
+    let mut agg = StreamingAggregator::for_regions(&c.region_data, &template);
+    for &i in order {
+        let (r, w, d) = &c.submissions[i];
+        agg.fold(*r, w, *d, 0.0);
+    }
+    agg
+}
+
+#[test]
+fn streaming_matches_batch_regardless_of_fold_order() {
+    let mut rng = Rng::new(0x5EED_CA5E);
+    for case in 0..40 {
+        let c = random_case(&mut rng, case);
+        let (batch_regionals, batch_cloud) = batch_reference(&c);
+
+        // Three fold orders per case: forward, reverse, shuffled.
+        let n = c.submissions.len();
+        let forward: Vec<usize> = (0..n).collect();
+        let reverse: Vec<usize> = (0..n).rev().collect();
+        let mut shuffled: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut shuffled);
+
+        for order in [&forward, &reverse, &shuffled] {
+            let agg = streamed_in_order(&c, order);
+            // Per-region: finished cache rule and EDC must match batch.
+            for (r, acc) in agg.regions().iter().enumerate() {
+                let w = acc.finish_cached(&c.prevs[r]).unwrap();
+                let dist = w.l2_distance(&batch_regionals[r].0);
+                assert!(
+                    dist < 1e-5,
+                    "case {case} region {r}: streamed vs batch regional l2={dist}"
+                );
+                assert!((acc.edc() - batch_regionals[r].1).abs() < 1e-9, "case {case}");
+            }
+            // Cloud: same model (or both keep-previous).
+            let stream_cloud = agg.cloud_with_cache(&c.prevs).unwrap();
+            match (&stream_cloud, &batch_cloud) {
+                (Some(s), Some(b)) => {
+                    let dist = s.l2_distance(b);
+                    assert!(dist < 1e-5, "case {case}: cloud l2={dist}");
+                }
+                (None, None) => {}
+                _ => panic!("case {case}: cloud keep-previous decision diverged"),
+            }
+        }
+    }
+}
+
+/// Streamed global FedAvg (per-region partial sums recombined) must match
+/// the one-shot weighted average over all submissions.
+#[test]
+fn fedavg_recombination_matches_flat_fedavg() {
+    let mut rng = Rng::new(0xFEDA_0001);
+    for case in 0..25 {
+        let c = random_case(&mut rng, case);
+        let flat: Vec<(&ModelParams, f64)> =
+            c.submissions.iter().map(|(_, w, d)| (w, *d)).collect();
+        let batch = fedavg(&flat);
+        let mut shuffled: Vec<usize> = (0..c.submissions.len()).collect();
+        rng.shuffle(&mut shuffled);
+        let agg = streamed_in_order(&c, &shuffled);
+        let streamed = fedavg_from_regions(agg.regions());
+        match (&streamed, &batch) {
+            (Some(s), Some(b)) => {
+                let dist = s.l2_distance(b);
+                assert!(dist < 1e-5, "case {case}: fedavg l2={dist}");
+            }
+            (None, None) => {}
+            _ => panic!("case {case}: fedavg emptiness diverged"),
+        }
+    }
+}
+
+/// Zero-EDC edges: with no submissions anywhere, every region's finished
+/// model is exactly its previous model and the cloud keeps w(t−1) (None).
+#[test]
+fn zero_edc_keeps_previous_models() {
+    let mut rng = Rng::new(7);
+    let prevs: Vec<ModelParams> = (0..3).map(|_| rand_model(&mut rng)).collect();
+    let template = prevs[0].zeros_like();
+    let agg = StreamingAggregator::for_regions(&[100.0; 3], &template);
+    for (r, acc) in agg.regions().iter().enumerate() {
+        assert_eq!(acc.count(), 0);
+        assert_eq!(acc.edc(), 0.0);
+        let w = acc.finish_cached(&prevs[r]).unwrap();
+        assert!(w.l2_distance(&prevs[r]) < 1e-6);
+        assert!(acc.fedavg().is_none());
+    }
+    assert!(agg.cloud_with_cache(&prevs).unwrap().is_none());
+    assert!(fedavg_from_regions(agg.regions()).is_none());
+}
+
+/// The satellite clamp fix: folded data sizes exceeding |D^r| must be an
+/// error from both the batch function and the streamed finisher — not a
+/// silent `.max(0.0)`.
+#[test]
+fn overcoverage_errors_in_both_forms() {
+    let mut rng = Rng::new(11);
+    let prev = rand_model(&mut rng);
+    let w = rand_model(&mut rng);
+    assert!(regional_with_cache(&[(&w, 150.0)], 100.0, &prev).is_err());
+    let mut acc = RegionAccumulator::new(0, 100.0, &prev);
+    acc.fold(&w, 150.0, 0.0);
+    assert!(acc.finish_cached(&prev).is_err());
+    // Exact full coverage stays fine.
+    assert!(regional_with_cache(&[(&w, 100.0)], 100.0, &prev).is_ok());
+}
