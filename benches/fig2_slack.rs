@@ -4,8 +4,9 @@
 //! Run: `cargo bench --bench fig2_slack` (`--full` for 10 repetitions with
 //! distinct seeds, reporting trace variance).
 
-use hybridfl::benchkit::{bench, black_box, BenchArgs};
+use hybridfl::benchkit::{bench, black_box, write_report, BenchArgs};
 use hybridfl::harness::{fig2, run_fig2};
+use hybridfl::jsonx::Json;
 
 fn main() {
     let args = BenchArgs::from_env();
@@ -13,6 +14,8 @@ fn main() {
 
     println!("=== Fig. 2 — regional slack factor traces ===");
     let seeds: Vec<u64> = if args.full { (40..50).collect() } else { vec![42] };
+    let mut deadline_rounds = 0usize;
+    let mut total_rounds = 0usize;
     for seed in &seeds {
         let (result, stats) = run_fig2(&out, *seed).unwrap();
         println!("seed {seed}:");
@@ -22,6 +25,8 @@ fn main() {
             result.rounds.len(),
             result.rounds.iter().filter(|r| r.deadline_hit).count()
         );
+        total_rounds += result.rounds.len();
+        deadline_rounds += result.rounds.iter().filter(|r| r.deadline_hit).count();
     }
 
     // Engine throughput: the 100-round protocol-only run.
@@ -30,4 +35,13 @@ fn main() {
         black_box(run_fig2(&dir, 42).unwrap());
     });
     stats.report("fig2: 100-round HybridFL run (mock engine)");
+
+    let report = Json::obj()
+        .set("bench", "fig2_slack")
+        .set("seeds", seeds.len())
+        .set("total_rounds", total_rounds)
+        .set("deadline_rounds", deadline_rounds)
+        .set("run_mean_s", stats.mean.as_secs_f64())
+        .set("run_p50_s", stats.p50.as_secs_f64());
+    write_report("fig2_slack", &report);
 }

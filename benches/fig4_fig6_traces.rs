@@ -6,7 +6,7 @@
 //!
 //! Task 1 runs real PJRT training; Task 2 uses a reduced round budget.
 
-use hybridfl::benchkit::BenchArgs;
+use hybridfl::benchkit::{write_report, BenchArgs};
 use hybridfl::config::{ExperimentConfig, ProtocolKind, TaskKind};
 use hybridfl::metrics;
 use hybridfl::sim::FlRun;
@@ -24,6 +24,11 @@ fn main() -> hybridfl::Result<()> {
     let args = BenchArgs::from_env();
     if !hybridfl::runtime::pjrt_available() {
         eprintln!("traces bench requires `make artifacts`; skipping");
+        let report = hybridfl::jsonx::Json::obj()
+            .set("bench", "fig4_fig6_traces")
+            .set("skipped", true)
+            .set("reason", "pjrt artifacts unavailable");
+        write_report("fig4_fig6_traces", &report);
         return Ok(());
     }
     let out = std::path::PathBuf::from("reports");
@@ -76,5 +81,10 @@ fn main() -> hybridfl::Result<()> {
         }
     }
     println!("CSV series -> reports/fig4_*.csv, reports/fig6_*.csv");
+    let report = hybridfl::jsonx::Json::obj()
+        .set("bench", "fig4_fig6_traces")
+        .set("skipped", false)
+        .set("quick", args.quick);
+    write_report("fig4_fig6_traces", &report);
     Ok(())
 }

@@ -5,7 +5,7 @@
 //! Task 1 runs real PJRT training on the full grid; Task 2 runs the two
 //! most telling columns (C = 0.1, 0.3) at a reduced round budget.
 
-use hybridfl::benchkit::BenchArgs;
+use hybridfl::benchkit::{write_report, BenchArgs};
 use hybridfl::config::{ExperimentConfig, ProtocolKind, TaskKind};
 use hybridfl::metrics::Table;
 use hybridfl::sim::FlRun;
@@ -14,6 +14,11 @@ fn main() -> hybridfl::Result<()> {
     let args = BenchArgs::from_env();
     if !hybridfl::runtime::pjrt_available() {
         eprintln!("energy bench requires `make artifacts`; skipping");
+        let report = hybridfl::jsonx::Json::obj()
+            .set("bench", "fig5_fig7_energy")
+            .set("skipped", true)
+            .set("reason", "pjrt artifacts unavailable");
+        write_report("fig5_fig7_energy", &report);
         return Ok(());
     }
 
@@ -71,5 +76,10 @@ fn main() -> hybridfl::Result<()> {
         print!("{}", table.render());
         println!("(* = target not reached; energy at t_max)\n");
     }
+    let report = hybridfl::jsonx::Json::obj()
+        .set("bench", "fig5_fig7_energy")
+        .set("skipped", false)
+        .set("quick", args.quick);
+    write_report("fig5_fig7_energy", &report);
     Ok(())
 }

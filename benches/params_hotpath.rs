@@ -15,7 +15,7 @@
 //! Run: `cargo bench --bench params_hotpath` (`--quick` for CI smoke).
 
 use hybridfl::aggregation::{edc_cloud, regional_with_cache, StreamingAggregator};
-use hybridfl::benchkit::{bench, black_box, BenchArgs, Stats};
+use hybridfl::benchkit::{bench, black_box, write_report, BenchArgs, Stats};
 use hybridfl::jsonx::Json;
 use hybridfl::model::{self, weighted_average, ModelParams};
 use hybridfl::rng::Rng;
@@ -225,6 +225,5 @@ fn main() {
         )
         .set("peak_models_buffered", peak_buffered)
         .set("peak_models_streaming", peak_streaming);
-    std::fs::write("BENCH_params.json", report.pretty()).unwrap();
-    println!("report -> BENCH_params.json");
+    write_report("params", &report);
 }

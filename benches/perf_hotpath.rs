@@ -8,8 +8,9 @@
 
 use std::time::Duration;
 
-use hybridfl::benchkit::{bench, bench_for, black_box, BenchArgs};
+use hybridfl::benchkit::{bench, bench_for, black_box, write_report, BenchArgs};
 use hybridfl::config::{EngineKind, ExperimentConfig, ProtocolKind};
+use hybridfl::jsonx::Json;
 use hybridfl::model::{weighted_average, ModelParams};
 use hybridfl::rng::Rng;
 use hybridfl::selection::SlackEstimator;
@@ -36,6 +37,7 @@ fn lenet_sized_params(seed: u64) -> ModelParams {
 fn main() {
     let args = BenchArgs::from_env();
     let iters = if args.quick { 20 } else { 200 };
+    let mut report = Json::obj().set("bench", "perf_hotpath").set("quick", args.quick);
 
     println!("=== L3 coordinator hot paths ===");
 
@@ -52,6 +54,9 @@ fn main() {
         "  -> {:.2} GB/s effective read bandwidth",
         bytes / stats.mean.as_secs_f64() / 1e9
     );
+    report = report
+        .set("aggregate_mean_s", stats.mean.as_secs_f64())
+        .set("aggregate_gbs", bytes / stats.mean.as_secs_f64() / 1e9);
 
     // Slack estimator: O(1) per round by design.
     let stats = bench(10, iters, || {
@@ -62,6 +67,7 @@ fn main() {
         black_box(est.theta());
     });
     stats.report("slack estimator: 1000 observe() updates");
+    report = report.set("slack_1000_updates_mean_s", stats.mean.as_secs_f64());
 
     // Selection: partial Fisher-Yates over a 500-client region.
     let mut rng = Rng::new(7);
@@ -69,6 +75,7 @@ fn main() {
         black_box(rng.sample_indices(500, 150));
     });
     stats.report("select 150 of 500 clients");
+    report = report.set("select_150_of_500_mean_s", stats.mean.as_secs_f64());
 
     // Full protocol round, mock engine: pure coordinator overhead.
     let mut cfg = ExperimentConfig::task2_scaled();
@@ -87,6 +94,12 @@ fn main() {
         "  -> {:.1} us/client-round of coordinator overhead",
         stats.mean.as_secs_f64() * 1e6 / (50.0 * 150.0)
     );
+    report = report
+        .set("full_stack_50r_mean_s", stats.mean.as_secs_f64())
+        .set(
+            "coordinator_us_per_client_round",
+            stats.mean.as_secs_f64() * 1e6 / (50.0 * 150.0),
+        );
 
     // PJRT train/eval latency (L1+L2 compute the coordinator schedules).
     if hybridfl::runtime::pjrt_available() {
@@ -117,7 +130,11 @@ fn main() {
             });
             stats.report("  matching eval (256 samples)");
         }
+        report = report.set("pjrt", true);
     } else {
         eprintln!("(skipping PJRT section: run `make artifacts`)");
+        report = report.set("pjrt", false);
     }
+
+    write_report("perf_hotpath", &report);
 }

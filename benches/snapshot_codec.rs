@@ -1,0 +1,158 @@
+//! Bench: the checkpoint/replay codecs on a realistic snapshot — a
+//! HybridFL run over LeNet-sized models (global + 8 regional arenas of
+//! ~44k f32 each) with 100 rounds of trace history. Measures encode /
+//! decode latency and effective bandwidth for the binary and JSON codecs
+//! and the size ratio between them; emits `BENCH_snapshot.json`.
+//!
+//! Run: `cargo bench --bench snapshot_codec` (`--quick` for CI smoke).
+
+use hybridfl::benchkit::{bench, black_box, write_report, BenchArgs, Stats};
+use hybridfl::config::ExperimentConfig;
+use hybridfl::env::{DriverState, RoundTrace};
+use hybridfl::jsonx::Json;
+use hybridfl::model::ModelParams;
+use hybridfl::protocols::ProtocolState;
+use hybridfl::rng::Rng;
+use hybridfl::selection::SlackEstimator;
+use hybridfl::snapshot::{fnv1a64, BinaryCodec, JsonCodec, RunSnapshot, SnapshotCodec};
+
+fn lenet_sized_params(seed: u64) -> ModelParams {
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![25, 6],
+        vec![6],
+        vec![150, 16],
+        vec![16],
+        vec![256, 120],
+        vec![120],
+        vec![120, 84],
+        vec![84],
+        vec![84, 10],
+        vec![10],
+    ];
+    let mut rng = Rng::new(seed);
+    let tensors = shapes
+        .iter()
+        .map(|s| {
+            (0..s.iter().product::<usize>())
+                .map(|_| rng.normal(0.0, 0.1) as f32)
+                .collect()
+        })
+        .collect();
+    ModelParams::new(tensors, shapes)
+}
+
+fn representative_snapshot(regions: usize, rounds: usize) -> RunSnapshot {
+    let mut rng = Rng::new(7);
+    let mut slack = Vec::with_capacity(regions);
+    for _ in 0..regions {
+        let mut est = SlackEstimator::new(60, 0.3, 0.5);
+        for t in 0..rounds {
+            est.observe(rng.below(20), t % 3 != 0);
+        }
+        slack.push(est.snapshot());
+    }
+    let mut driver = DriverState::fresh();
+    for t in 1..=rounds {
+        driver.cum_time += 40.0 + rng.uniform() * 20.0;
+        driver.cum_energy += 500.0 + rng.uniform() * 100.0;
+        driver.last_acc = 0.7 * (1.0 - (-(t as f64) / 25.0).exp());
+        driver.best_acc = driver.best_acc.max(driver.last_acc);
+        driver.last_loss = 1.0 / (1.0 + t as f64);
+        driver.rounds.push(RoundTrace {
+            t,
+            round_len: 40.0,
+            cum_time: driver.cum_time,
+            accuracy: driver.last_acc,
+            best_accuracy: driver.best_acc,
+            eval_loss: driver.last_loss,
+            selected: vec![20; regions],
+            alive: vec![16; regions],
+            submissions: vec![12; regions],
+            cum_energy_j: driver.cum_energy,
+            deadline_hit: t % 5 == 0,
+            cloud_aggregated: true,
+            slack: None,
+        });
+        driver.rounds_done = t;
+    }
+    let config_json = ExperimentConfig::task2_scaled().to_json().dump();
+    RunSnapshot {
+        backend: "sim".into(),
+        fingerprint: fnv1a64(config_json.as_bytes()),
+        config_json,
+        rng: Rng::new(99).state(),
+        protocol: ProtocolState::HybridFl {
+            global: lenet_sized_params(0),
+            regionals: (1..=regions as u64).map(lenet_sized_params).collect(),
+            slack,
+        },
+        driver,
+    }
+}
+
+fn report_codec(
+    name: &str,
+    codec: &dyn SnapshotCodec,
+    snap: &RunSnapshot,
+    iters: usize,
+) -> (usize, Stats, Stats) {
+    let bytes = codec.encode(snap);
+    let size = bytes.len();
+    let enc = bench(2, iters, || {
+        black_box(codec.encode(snap));
+    });
+    enc.report(&format!("{name}: encode ({size} B)"));
+    let dec = bench(2, iters, || {
+        black_box(codec.decode(&bytes).unwrap());
+    });
+    dec.report(&format!("{name}: decode"));
+    println!(
+        "  -> encode {:.1} MB/s, decode {:.1} MB/s",
+        size as f64 / enc.mean.as_secs_f64() / 1e6,
+        size as f64 / dec.mean.as_secs_f64() / 1e6
+    );
+    (size, enc, dec)
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let iters = if args.quick { 10 } else { 100 };
+    let (regions, rounds) = if args.full { (16, 400) } else { (8, 100) };
+
+    println!("=== snapshot codecs: {regions}-region HybridFL, {rounds}-round trace ===");
+    let snap = representative_snapshot(regions, rounds);
+
+    let (bin_size, bin_enc, bin_dec) = report_codec("binary", &BinaryCodec, &snap, iters);
+    let (json_size, json_enc, json_dec) = report_codec("json", &JsonCodec, &snap, iters);
+    println!(
+        "  -> json/binary size ratio {:.2}x",
+        json_size as f64 / bin_size as f64
+    );
+
+    // Replay correctness gate: decode(encode(s)) must re-encode to the
+    // identical bytes (the determinism the resume tests rely on).
+    let bytes = BinaryCodec.encode(&snap);
+    let back = BinaryCodec.decode(&bytes).unwrap();
+    assert_eq!(bytes, BinaryCodec.encode(&back), "binary codec must be idempotent");
+
+    let report = Json::obj()
+        .set("bench", "snapshot_codec")
+        .set("regions", regions)
+        .set("trace_rounds", rounds)
+        .set("binary_bytes", bin_size)
+        .set("json_bytes", json_size)
+        .set("json_to_binary_ratio", json_size as f64 / bin_size as f64)
+        .set("binary_encode_mean_s", bin_enc.mean.as_secs_f64())
+        .set("binary_decode_mean_s", bin_dec.mean.as_secs_f64())
+        .set("json_encode_mean_s", json_enc.mean.as_secs_f64())
+        .set("json_decode_mean_s", json_dec.mean.as_secs_f64())
+        .set(
+            "binary_encode_mbs",
+            bin_size as f64 / bin_enc.mean.as_secs_f64() / 1e6,
+        )
+        .set(
+            "binary_decode_mbs",
+            bin_size as f64 / bin_dec.mean.as_secs_f64() / 1e6,
+        );
+    write_report("snapshot", &report);
+}

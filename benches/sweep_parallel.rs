@@ -7,7 +7,7 @@
 
 use std::time::Instant;
 
-use hybridfl::benchkit::BenchArgs;
+use hybridfl::benchkit::{write_report, BenchArgs};
 use hybridfl::config::TaskKind;
 use hybridfl::harness::sweep::{render_energy, render_table};
 use hybridfl::harness::{run_task_sweep, SweepOpts};
@@ -75,8 +75,7 @@ fn main() {
         .set("parallel_seconds", t_parallel.as_secs_f64())
         .set("speedup", speedup)
         .set("byte_identical", true);
-    std::fs::write("BENCH_sweep.json", report.pretty()).unwrap();
-    println!("report -> BENCH_sweep.json");
+    write_report("sweep", &report);
 
     let _ = std::fs::remove_dir_all(&root);
 }

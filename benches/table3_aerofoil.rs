@@ -8,7 +8,7 @@
 
 use std::time::Instant;
 
-use hybridfl::benchkit::BenchArgs;
+use hybridfl::benchkit::{write_report, BenchArgs};
 use hybridfl::config::{ProtocolKind, TaskKind};
 use hybridfl::harness::sweep::{render_energy, render_table};
 use hybridfl::harness::{run_task_sweep, SweepOpts, SweepResult};
@@ -17,6 +17,11 @@ fn main() {
     let args = BenchArgs::from_env();
     if !hybridfl::runtime::pjrt_available() {
         eprintln!("table3 bench requires `make artifacts`; skipping");
+        let report = hybridfl::jsonx::Json::obj()
+            .set("bench", "table3_aerofoil")
+            .set("skipped", true)
+            .set("reason", "pjrt artifacts unavailable");
+        write_report("table3_aerofoil", &report);
         return;
     }
     let opts = SweepOpts {
@@ -39,6 +44,12 @@ fn main() {
     );
     println!("paper shape checks:");
     shape_checks(&sweep);
+    let report = hybridfl::jsonx::Json::obj()
+        .set("bench", "table3_aerofoil")
+        .set("skipped", false)
+        .set("cells", sweep.cells.len())
+        .set("wall_s", wall.as_secs_f64());
+    write_report("table3_aerofoil", &report);
 }
 
 /// The qualitative claims Table III makes, scored on the regenerated data.

@@ -12,7 +12,7 @@
 
 use std::time::Instant;
 
-use hybridfl::benchkit::BenchArgs;
+use hybridfl::benchkit::{write_report, BenchArgs};
 use hybridfl::config::TaskKind;
 use hybridfl::harness::sweep::{render_energy, render_table};
 use hybridfl::harness::{run_task_sweep, SweepOpts};
@@ -21,6 +21,11 @@ fn main() {
     let args = BenchArgs::from_env();
     if !hybridfl::runtime::pjrt_available() {
         eprintln!("table4 bench requires `make artifacts`; skipping");
+        let report = hybridfl::jsonx::Json::obj()
+            .set("bench", "table4_mnist")
+            .set("skipped", true)
+            .set("reason", "pjrt artifacts unavailable");
+        write_report("table4_mnist", &report);
         return;
     }
     let opts = SweepOpts {
@@ -64,4 +69,11 @@ fn main() {
          ({:.1}x, paper reports up to ~10x at E[dr]=0.6, C=0.1)",
         fedavg_worst / hybrid_best
     );
+    let report = hybridfl::jsonx::Json::obj()
+        .set("bench", "table4_mnist")
+        .set("skipped", false)
+        .set("cells", sweep.cells.len())
+        .set("wall_s", wall.as_secs_f64())
+        .set("round_len_spread", fedavg_worst / hybrid_best);
+    write_report("table4_mnist", &report);
 }

@@ -1,10 +1,13 @@
 //! Tiny benchmark harness (criterion is not in the offline vendor set).
 //!
 //! Used by the `benches/` targets (`harness = false`): warmup + timed
-//! iterations with mean / stddev / min / p50 reporting, plus a
-//! `black_box` to defeat const-folding.
+//! iterations with mean / stddev / min / p50 reporting, a `black_box` to
+//! defeat const-folding, and the shared [`write_report`] emitter behind
+//! the `BENCH_*.json` artifacts CI collects from every bench.
 
 use std::time::{Duration, Instant};
+
+use crate::jsonx::Json;
 
 /// Prevent the optimizer from eliding a computed value.
 #[inline]
@@ -82,6 +85,16 @@ fn stats(samples: &mut [Duration]) -> Stats {
         min: samples.first().copied().unwrap_or_default(),
         p50: samples[n / 2.min(n - 1)],
     }
+}
+
+/// Write a bench's machine-readable report to `BENCH_<stem>.json` in the
+/// working directory — the artifact contract of the CI `bench · smoke`
+/// job (its check list must name every stem benches pass here).
+pub fn write_report(stem: &str, report: &Json) {
+    let path = format!("BENCH_{stem}.json");
+    std::fs::write(&path, report.pretty())
+        .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("report -> {path}");
 }
 
 /// Parse common bench CLI flags: `--full` (paper scale) and

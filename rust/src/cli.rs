@@ -20,7 +20,7 @@ pub struct Args {
 /// Option keys that take a value; `--key value` and `--key=value` both work.
 const VALUE_KEYS: &[&str] = &[
     "set", "preset", "config", "out", "seed", "protocol", "rounds", "c", "e-dr",
-    "scale", "target", "backend",
+    "scale", "target", "backend", "checkpoint-dir", "checkpoint-every", "resume",
 ];
 
 /// Boolean switches (no value).
@@ -175,5 +175,24 @@ mod tests {
     fn backend_is_a_value_key() {
         let a = parse(&["run", "--backend", "live"]);
         assert_eq!(a.get("backend"), Some("live"));
+    }
+
+    #[test]
+    fn checkpoint_and_resume_are_value_keys() {
+        let a = parse(&[
+            "run",
+            "--checkpoint-dir",
+            "ckpts",
+            "--checkpoint-every",
+            "5",
+            "--resume",
+            "ckpts/snapshot_round_000010.hflsnap",
+        ]);
+        assert_eq!(a.get("checkpoint-dir"), Some("ckpts"));
+        assert_eq!(a.get_parsed::<usize>("checkpoint-every").unwrap(), Some(5));
+        assert_eq!(
+            a.get("resume"),
+            Some("ckpts/snapshot_round_000010.hflsnap")
+        );
     }
 }

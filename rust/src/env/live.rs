@@ -34,6 +34,7 @@ use crate::env::{
 use crate::live::cluster::ClusterFabric;
 use crate::live::messages::RoundJob;
 use crate::model::ModelParams;
+use crate::rng::{Rng, RngState};
 use crate::runtime::{build_engine, Engine, EvalResult};
 use crate::Result;
 
@@ -212,5 +213,13 @@ impl FlEnvironment for LiveClusterEnv {
 
     fn evaluate(&mut self, model: &ModelParams) -> Result<EvalResult> {
         self.eval_engine.evaluate(model)
+    }
+
+    fn rng_state(&self) -> RngState {
+        self.world.rng.state()
+    }
+
+    fn restore_rng_state(&mut self, state: RngState) {
+        self.world.rng = Rng::from_state(state);
     }
 }

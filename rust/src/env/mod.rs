@@ -82,7 +82,7 @@ use crate::devices::{self, ClientProfile};
 use crate::energy::EnergyModel;
 use crate::model::ModelParams;
 use crate::protocols::Protocol;
-use crate::rng::Rng;
+use crate::rng::{Rng, RngState};
 use crate::runtime::EvalResult;
 use crate::selection::select_clients;
 use crate::timing::TimingModel;
@@ -183,6 +183,14 @@ pub trait FlEnvironment {
     ) -> Result<RoundOutcome>;
     /// Cloud-side evaluation of a model on the held-out set.
     fn evaluate(&mut self, model: &ModelParams) -> Result<EvalResult>;
+    /// The round-stream RNG state, captured at a round boundary for a
+    /// [`crate::snapshot::RunSnapshot`]. Both backends derive every
+    /// per-round draw from this stream, so it is the only RNG state a
+    /// resumed run needs.
+    fn rng_state(&self) -> RngState;
+    /// Restore a round-stream RNG captured by [`Self::rng_state`]
+    /// (resume path).
+    fn restore_rng_state(&mut self, state: RngState);
 }
 
 /// A selected client's fate in one round — drop-out draw plus completion
@@ -452,6 +460,49 @@ pub struct RunResult {
     pub rounds: Vec<RoundTrace>,
 }
 
+/// The driver's mid-run accumulators — the part of a run that lives
+/// *outside* the environment and the protocol, and must therefore travel
+/// with them in a [`crate::snapshot::RunSnapshot`] for a resumed run to
+/// reproduce the uninterrupted run bit for bit: virtual-clock and energy
+/// sums, the evaluation carry (accuracy between `eval_every` boundaries),
+/// the best-model watermark, and the full per-round trace so far.
+#[derive(Clone, Debug)]
+pub struct DriverState {
+    /// Rounds completed; the next round executed is `rounds_done + 1`.
+    pub rounds_done: usize,
+    pub cum_time: f64,
+    pub cum_energy: f64,
+    /// Best accuracy watermark (`f64::MIN` before the first evaluation).
+    pub best_acc: f64,
+    /// Last measured accuracy (carried between `eval_every` boundaries).
+    pub last_acc: f64,
+    /// Last measured eval loss (NaN before the first evaluation).
+    pub last_loss: f64,
+    /// Trace rows of every completed round.
+    pub rounds: Vec<RoundTrace>,
+}
+
+impl DriverState {
+    /// The state a run starts from when not resuming.
+    pub fn fresh() -> DriverState {
+        DriverState {
+            rounds_done: 0,
+            cum_time: 0.0,
+            cum_energy: 0.0,
+            best_acc: f64::MIN,
+            last_acc: 0.0,
+            last_loss: f64::NAN,
+            rounds: Vec::new(),
+        }
+    }
+}
+
+/// Round-boundary hook signature for [`run_resumable`]: observes the
+/// environment, the protocol and the driver state after each completed
+/// round (the checkpoint point of the run loop).
+pub type RoundHook<'a> =
+    dyn FnMut(&mut dyn FlEnvironment, &dyn Protocol, &DriverState) -> Result<()> + 'a;
+
 /// Drive a protocol for `t_max` rounds (or until `target_accuracy`) over
 /// any backend, recording the full trace. This is the single round loop
 /// shared by sim runs, live runs and the sweep harness.
@@ -459,69 +510,109 @@ pub fn run_to_completion(
     env: &mut dyn FlEnvironment,
     protocol: &mut dyn Protocol,
 ) -> Result<RunResult> {
+    run_resumable(env, protocol, DriverState::fresh(), &mut |_, _, _| Ok(()))
+}
+
+/// [`run_to_completion`] with an explicit starting [`DriverState`] (fresh
+/// or restored from a snapshot) and a hook invoked after every completed
+/// round. On the live backend the hook runs on the cloud leader thread,
+/// between the round-end reports and the next round's fan-out, so the
+/// fabric is quiescent while state is captured. A hook error aborts the
+/// run.
+pub fn run_resumable(
+    env: &mut dyn FlEnvironment,
+    protocol: &mut dyn Protocol,
+    mut st: DriverState,
+    after_round: &mut RoundHook<'_>,
+) -> Result<RunResult> {
     let t_max = env.cfg().t_max;
     let eval_every = env.cfg().eval_every;
     let target_accuracy = env.cfg().target_accuracy;
     let n_clients = env.cfg().n_clients;
     let protocol_name = env.cfg().protocol.as_str().to_string();
 
-    let mut rounds: Vec<RoundTrace> = Vec::with_capacity(t_max);
-    let mut cum_time = 0.0f64;
-    let mut cum_energy = 0.0f64;
-    let mut best_acc = f64::MIN;
-    let mut last_acc = 0.0f64;
-    let mut last_loss = f64::NAN;
+    anyhow::ensure!(
+        st.rounds_done <= t_max,
+        "driver state is {} rounds in but t_max is {t_max}",
+        st.rounds_done
+    );
+    anyhow::ensure!(
+        st.rounds.len() == st.rounds_done,
+        "driver state carries {} trace rows for {} completed rounds",
+        st.rounds.len(),
+        st.rounds_done
+    );
+
+    // Recover target-crossing state from a restored trace: if the
+    // interrupted run had already reached `target_accuracy`, the run was
+    // over — replay its summary instead of executing extra rounds.
     let mut rounds_to_target = None;
     let mut time_to_target = None;
+    if let Some(target) = target_accuracy {
+        if let Some(row) = st.rounds.iter().find(|r| r.best_accuracy >= target) {
+            rounds_to_target = Some(row.t);
+            time_to_target = Some(row.cum_time);
+        }
+    }
 
-    for t in 1..=t_max {
+    let start = if rounds_to_target.is_none() {
+        st.rounds_done + 1
+    } else {
+        t_max + 1 // run already complete; skip the loop
+    };
+    for t in start..=t_max {
         let rec = protocol.run_round(t, env)?;
-        cum_time += rec.round_len;
-        cum_energy += rec.energy_j;
+        st.cum_time += rec.round_len;
+        st.cum_energy += rec.energy_j;
 
         if t % eval_every == 0 || t == t_max {
             let ev = env.evaluate(protocol.global_model())?;
-            last_acc = ev.accuracy;
-            last_loss = ev.loss;
+            st.last_acc = ev.accuracy;
+            st.last_loss = ev.loss;
         }
-        best_acc = best_acc.max(last_acc);
+        st.best_acc = st.best_acc.max(st.last_acc);
 
-        rounds.push(RoundTrace {
+        st.rounds.push(RoundTrace {
             t,
             round_len: rec.round_len,
-            cum_time,
-            accuracy: last_acc,
-            best_accuracy: best_acc,
-            eval_loss: last_loss,
+            cum_time: st.cum_time,
+            accuracy: st.last_acc,
+            best_accuracy: st.best_acc,
+            eval_loss: st.last_loss,
             selected: rec.selected,
             alive: rec.alive,
             submissions: rec.submissions,
-            cum_energy_j: cum_energy,
+            cum_energy_j: st.cum_energy,
             deadline_hit: rec.deadline_hit,
             cloud_aggregated: rec.cloud_aggregated,
             slack: protocol.slack_states(),
         });
+        st.rounds_done = t;
+        after_round(env, protocol, &st)?;
 
         if let Some(target) = target_accuracy {
-            if best_acc >= target && rounds_to_target.is_none() {
+            if st.best_acc >= target && rounds_to_target.is_none() {
                 rounds_to_target = Some(t);
-                time_to_target = Some(cum_time);
+                time_to_target = Some(st.cum_time);
                 break; // "Stop @Acc" mode
             }
         }
     }
 
-    let n_rounds = rounds.len().max(1);
+    let n_rounds = st.rounds.len().max(1);
     let summary = RunSummary {
         protocol: protocol_name,
-        rounds_run: rounds.len(),
-        best_accuracy: best_acc.max(0.0),
-        avg_round_len: cum_time / n_rounds as f64,
+        rounds_run: st.rounds.len(),
+        best_accuracy: st.best_acc.max(0.0),
+        avg_round_len: st.cum_time / n_rounds as f64,
         rounds_to_target,
         time_to_target,
-        mean_device_energy_wh: cum_energy / 3600.0 / n_clients as f64,
-        total_time: cum_time,
-        final_loss: last_loss,
+        mean_device_energy_wh: st.cum_energy / 3600.0 / n_clients as f64,
+        total_time: st.cum_time,
+        final_loss: st.last_loss,
     };
-    Ok(RunResult { summary, rounds })
+    Ok(RunResult {
+        summary,
+        rounds: st.rounds,
+    })
 }

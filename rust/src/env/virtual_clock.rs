@@ -23,6 +23,7 @@ use crate::env::{
     CutoffPolicy, FlEnvironment, RoundOutcome, Selection, Starts, World,
 };
 use crate::model::ModelParams;
+use crate::rng::{Rng, RngState};
 use crate::runtime::{build_engine, Engine, EvalResult};
 use crate::timing::TimingModel;
 use crate::Result;
@@ -149,5 +150,13 @@ impl FlEnvironment for VirtualClockEnv {
 
     fn evaluate(&mut self, model: &ModelParams) -> Result<EvalResult> {
         self.engine.evaluate(model)
+    }
+
+    fn rng_state(&self) -> RngState {
+        self.world.rng.state()
+    }
+
+    fn restore_rng_state(&mut self, state: RngState) {
+        self.world.rng = Rng::from_state(state);
     }
 }

@@ -56,6 +56,26 @@
 //! println!("live best accuracy: {:.3}", live.summary.best_accuracy);
 //! ```
 //!
+//! Long runs survive coordinator interruption: give the scenario a
+//! checkpoint directory and every round boundary writes a versioned
+//! binary [`snapshot::RunSnapshot`] (round index, global/regional models,
+//! RNG streams, slack-estimator state, metric accumulators, config
+//! fingerprint); a later process resumes it to a **byte-identical**
+//! [`env::RunResult`] on either backend. Resuming against a different
+//! config is a hard error naming the diverging fields. On the CLI this is
+//! `--checkpoint-dir DIR [--checkpoint-every N]` and `--resume FILE`.
+//!
+//! ```no_run
+//! # use hybridfl::scenario::Scenario;
+//! let partial = Scenario::task1().mock().checkpoint_dir("ckpts").run()?;
+//! // ...process dies; a new one picks up at round 250:
+//! let resumed = Scenario::task1()
+//!     .mock()
+//!     .resume_from("ckpts/snapshot_round_000250.hflsnap")
+//!     .run()?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
 //! The layering underneath, for code that needs more control:
 //!
 //! * [`env`] — the [`env::FlEnvironment`] backend trait and its two
@@ -65,6 +85,9 @@
 //!   against the trait.
 //! * [`harness`] — the paper's tables and figures; the Table III/IV sweep
 //!   runs its independent grid cells on scoped worker threads.
+//! * [`snapshot`] — the checkpoint/replay subsystem: the
+//!   [`snapshot::SnapshotCodec`] trait with binary and JSON codecs, and
+//!   the resume plumbing ([`env::run_resumable`]) the scenario wraps.
 //!
 //! ## The data plane, in one paragraph
 //!
@@ -99,6 +122,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod selection;
 pub mod sim;
+pub mod snapshot;
 pub mod timing;
 pub mod topology;
 

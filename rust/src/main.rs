@@ -3,6 +3,8 @@
 //! ```text
 //! hybridfl run    [--preset P] [--config f.json] [--set k=v]...
 //!                 [--backend sim|live] [--scale S] [--out trace.csv]
+//!                 [--checkpoint-dir D [--checkpoint-every N]]
+//!                 [--resume snapshot.hflsnap]
 //! hybridfl fig2   [--out dir] [--seed N]
 //! hybridfl table3 [--full|--quick] [--mock] [--serial] [--target A] [--out dir]
 //! hybridfl table4 [--full|--quick] [--mock] [--serial] [--target A] [--out dir]
@@ -59,7 +61,11 @@ commands:
   run     one FL run (--preset task1|task1-scaled|task2|task2-scaled|fig2,
           --config cfg.json, --set key=value ..., --backend sim|live,
           --scale S wall-clock seconds per virtual second for live,
-          --out trace.csv)
+          --out trace.csv,
+          --checkpoint-dir DIR write a resumable snapshot at round
+          boundaries [--checkpoint-every N widens the cadence],
+          --resume FILE continue a snapshotted run; the config must
+          match the snapshot's fingerprint exactly)
   fig2    slack-factor traces (paper Fig. 2) -> reports/fig2_traces.csv
   table3  Task-1 sweep: Table III + Fig. 4 traces + Fig. 5 energy
   table4  Task-2 sweep: Table IV + Fig. 6 traces + Fig. 7 energy
@@ -96,6 +102,16 @@ fn resolve_scenario(args: &Args, default_backend: Backend) -> hybridfl::Result<S
     let mut sc = Scenario::from_config(cfg).backend(backend);
     if let Some(scale) = args.get_parsed::<f64>("scale")? {
         sc = sc.time_scale(scale);
+    }
+    if let Some(dir) = args.get("checkpoint-dir") {
+        sc = sc.checkpoint_dir(dir);
+    }
+    if let Some(every) = args.get_parsed::<usize>("checkpoint-every")? {
+        // Scenario::run rejects the combination without a directory.
+        sc = sc.checkpoint_every(every);
+    }
+    if let Some(path) = args.get("resume") {
+        sc = sc.resume_from(path);
     }
     Ok(sc)
 }

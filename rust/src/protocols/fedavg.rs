@@ -10,7 +10,9 @@
 use crate::config::ProtocolKind;
 use crate::env::{CutoffPolicy, FlEnvironment, Selection, Starts};
 use crate::model::ModelParams;
-use crate::protocols::{count_from_fraction, mean_loss, Protocol, RoundRecord};
+use crate::protocols::{
+    count_from_fraction, mean_loss, wrong_kind, Protocol, ProtocolState, RoundRecord,
+};
 use crate::Result;
 
 pub struct FedAvg {
@@ -63,6 +65,22 @@ impl Protocol for FedAvg {
 
     fn global_model(&self) -> &ModelParams {
         &self.global
+    }
+
+    fn snapshot_state(&self) -> ProtocolState {
+        ProtocolState::FedAvg {
+            global: self.global.clone(),
+        }
+    }
+
+    fn restore_state(&mut self, state: ProtocolState) -> Result<()> {
+        match state {
+            ProtocolState::FedAvg { global } => {
+                self.global = global;
+                Ok(())
+            }
+            other => Err(wrong_kind(ProtocolKind::FedAvg, &other)),
+        }
     }
 }
 

@@ -11,7 +11,10 @@
 use crate::config::{ExperimentConfig, ProtocolKind};
 use crate::env::{CutoffPolicy, FlEnvironment, Selection, Starts};
 use crate::model::ModelParams;
-use crate::protocols::{count_from_fraction, mean_loss, Protocol, RoundRecord};
+use crate::protocols::{
+    check_regions, count_from_fraction, mean_loss, wrong_kind, Protocol, ProtocolState,
+    RoundRecord,
+};
 use crate::Result;
 
 pub struct HierFavg {
@@ -104,6 +107,40 @@ impl Protocol for HierFavg {
 
     fn global_model(&self) -> &ModelParams {
         &self.global
+    }
+
+    fn snapshot_state(&self) -> ProtocolState {
+        ProtocolState::HierFavg {
+            global: self.global.clone(),
+            regionals: self.regionals.clone(),
+            region_data: self.region_data.clone(),
+        }
+    }
+
+    fn restore_state(&mut self, state: ProtocolState) -> Result<()> {
+        match state {
+            ProtocolState::HierFavg {
+                global,
+                regionals,
+                region_data,
+            } => {
+                check_regions(ProtocolKind::HierFavg, self.regionals.len(), regionals.len())?;
+                // region_data is legitimately empty only pre-round-1; any
+                // other length would silently truncate the cloud zip.
+                if !region_data.is_empty() {
+                    check_regions(
+                        ProtocolKind::HierFavg,
+                        self.regionals.len(),
+                        region_data.len(),
+                    )?;
+                }
+                self.global = global;
+                self.regionals = regionals;
+                self.region_data = region_data;
+                Ok(())
+            }
+            other => Err(wrong_kind(ProtocolKind::HierFavg, &other)),
+        }
     }
 }
 

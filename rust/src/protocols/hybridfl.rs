@@ -22,7 +22,7 @@
 use crate::config::{CacheMode, ExperimentConfig, ProtocolKind};
 use crate::env::{CutoffPolicy, FlEnvironment, Selection, Starts};
 use crate::model::ModelParams;
-use crate::protocols::{mean_loss, Protocol, RoundRecord};
+use crate::protocols::{check_regions, mean_loss, wrong_kind, Protocol, ProtocolState, RoundRecord};
 use crate::selection::slack::{SlackEstimator, SlackState};
 use crate::Result;
 
@@ -143,6 +143,32 @@ impl Protocol for HybridFl {
                 })
                 .collect(),
         )
+    }
+
+    fn snapshot_state(&self) -> ProtocolState {
+        ProtocolState::HybridFl {
+            global: self.global.clone(),
+            regionals: self.regionals.clone(),
+            slack: self.slack.iter().map(|s| s.snapshot()).collect(),
+        }
+    }
+
+    fn restore_state(&mut self, state: ProtocolState) -> Result<()> {
+        match state {
+            ProtocolState::HybridFl {
+                global,
+                regionals,
+                slack,
+            } => {
+                check_regions(ProtocolKind::HybridFl, self.regionals.len(), regionals.len())?;
+                check_regions(ProtocolKind::HybridFl, self.slack.len(), slack.len())?;
+                self.global = global;
+                self.regionals = regionals;
+                self.slack = slack.into_iter().map(SlackEstimator::from_state).collect();
+                Ok(())
+            }
+            other => Err(wrong_kind(ProtocolKind::HybridFl, &other)),
+        }
     }
 }
 

@@ -33,7 +33,7 @@ pub use hybridfl::HybridFl;
 use crate::config::{ExperimentConfig, ProtocolKind};
 use crate::env::{FlEnvironment, RoundOutcome};
 use crate::model::ModelParams;
-use crate::selection::slack::SlackState;
+use crate::selection::slack::{SlackEstimatorState, SlackState};
 use crate::Result;
 
 /// What a protocol reports after running one round.
@@ -61,6 +61,40 @@ pub struct RoundRecord {
     pub mean_local_loss: f64,
 }
 
+/// A protocol's complete mutable state at a round boundary — everything a
+/// resumed run needs to continue exactly where the interrupted run
+/// stopped. Captured by [`Protocol::snapshot_state`], serialized by the
+/// `snapshot` codecs, and restored with [`Protocol::restore_state`].
+#[derive(Clone, Debug)]
+pub enum ProtocolState {
+    FedAvg {
+        global: ModelParams,
+    },
+    HierFavg {
+        global: ModelParams,
+        regionals: Vec<ModelParams>,
+        /// |D^r| per region (filled lazily on round 1; part of the state
+        /// so a resumed run never re-derives it mid-stream).
+        region_data: Vec<f64>,
+    },
+    HybridFl {
+        global: ModelParams,
+        regionals: Vec<ModelParams>,
+        slack: Vec<SlackEstimatorState>,
+    },
+}
+
+impl ProtocolState {
+    /// Which protocol this state belongs to (mismatch diagnostics).
+    pub fn kind(&self) -> ProtocolKind {
+        match self {
+            ProtocolState::FedAvg { .. } => ProtocolKind::FedAvg,
+            ProtocolState::HierFavg { .. } => ProtocolKind::HierFavg,
+            ProtocolState::HybridFl { .. } => ProtocolKind::HybridFl,
+        }
+    }
+}
+
 /// The protocol interface the run loop drives.
 pub trait Protocol {
     fn kind(&self) -> ProtocolKind;
@@ -76,6 +110,34 @@ pub trait Protocol {
     fn slack_states(&self) -> Option<Vec<SlackState>> {
         None
     }
+
+    /// Capture the full protocol state for a checkpoint (round boundary).
+    fn snapshot_state(&self) -> ProtocolState;
+
+    /// Restore state captured by [`Self::snapshot_state`] (resume path).
+    /// Errors on a protocol-kind or region-count mismatch instead of
+    /// silently running a hybrid of two configurations.
+    fn restore_state(&mut self, state: ProtocolState) -> Result<()>;
+}
+
+/// Shared restore guard: the snapshot's region count must match the
+/// protocol's current topology.
+pub(crate) fn check_regions(kind: ProtocolKind, have: usize, got: usize) -> Result<()> {
+    anyhow::ensure!(
+        have == got,
+        "{} snapshot holds {got} regional entries but the run's topology has {have} regions",
+        kind.as_str()
+    );
+    Ok(())
+}
+
+/// Shared restore guard: the snapshot must belong to the same protocol.
+pub(crate) fn wrong_kind(expected: ProtocolKind, state: &ProtocolState) -> anyhow::Error {
+    anyhow::anyhow!(
+        "snapshot holds {} protocol state but the run uses {}",
+        state.kind().as_str(),
+        expected.as_str()
+    )
 }
 
 /// Instantiate the configured protocol for a topology with the given

@@ -20,9 +20,14 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
+use std::path::PathBuf;
+
 use crate::config::{CacheMode, EngineKind, ExperimentConfig, ProtocolKind};
-use crate::env::{run_to_completion, LiveClusterEnv, RunResult, VirtualClockEnv};
-use crate::protocols::protocol_for;
+use crate::env::{
+    run_resumable, DriverState, FlEnvironment, LiveClusterEnv, RunResult, VirtualClockEnv,
+};
+use crate::protocols::{protocol_for, Protocol};
+use crate::snapshot::{self, CodecKind, RunSnapshot};
 use crate::Result;
 
 /// Which [`crate::env::FlEnvironment`] implementation executes the rounds.
@@ -60,6 +65,10 @@ pub struct Scenario {
     cfg: ExperimentConfig,
     backend: Backend,
     time_scale: f64,
+    checkpoint_dir: Option<PathBuf>,
+    checkpoint_every: Option<usize>,
+    resume_from: Option<PathBuf>,
+    snapshot_codec: CodecKind,
 }
 
 impl Scenario {
@@ -73,6 +82,10 @@ impl Scenario {
             cfg,
             backend: Backend::Sim,
             time_scale: Self::DEFAULT_TIME_SCALE,
+            checkpoint_dir: None,
+            checkpoint_every: None,
+            resume_from: None,
+            snapshot_codec: CodecKind::Binary,
         }
     }
 
@@ -207,29 +220,106 @@ impl Scenario {
         self
     }
 
+    // --- checkpoint / resume ------------------------------------------------
+
+    /// Write a [`RunSnapshot`] into `dir` at round boundaries (every
+    /// round unless [`Self::checkpoint_every`] widens the cadence).
+    /// Snapshots are named `snapshot_round_NNNNNN.<ext>` and written
+    /// atomically.
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Scenario {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Checkpoint every `n` completed rounds (requires
+    /// [`Self::checkpoint_dir`]; `run()` rejects the combination
+    /// otherwise).
+    pub fn checkpoint_every(mut self, n: usize) -> Scenario {
+        self.checkpoint_every = Some(n);
+        self
+    }
+
+    /// Resume from a snapshot file written by a previous run of the
+    /// *same* experiment. The snapshot's config fingerprint must match
+    /// this scenario's config exactly — a divergence is a hard error
+    /// naming the differing fields — and the backend must match too. The
+    /// resumed run's [`RunResult`] is byte-identical to what the
+    /// uninterrupted run would have produced.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Scenario {
+        self.resume_from = Some(path.into());
+        self
+    }
+
+    /// Which codec checkpoints are written with (binary by default;
+    /// [`CodecKind::Json`] for human-readable debugging snapshots).
+    pub fn snapshot_codec(mut self, kind: CodecKind) -> Scenario {
+        self.snapshot_codec = kind;
+        self
+    }
+
     /// The resolved config (inspection / serialization).
     pub fn config(&self) -> &ExperimentConfig {
         &self.cfg
     }
 
-    /// Validate the config, build the backend and the protocol, and drive
-    /// the run to completion. Identical [`RunResult`] shape on every
-    /// backend.
+    /// Validate the config, build the backend and the protocol, restore a
+    /// snapshot when resuming, and drive the run to completion —
+    /// checkpointing at round boundaries when a checkpoint dir is set.
+    /// Identical [`RunResult`] shape on every backend.
     pub fn run(self) -> Result<RunResult> {
         self.cfg.validate()?;
-        match self.backend {
-            Backend::Sim => {
-                let mut env = VirtualClockEnv::new(self.cfg)?;
-                let mut protocol = protocol_for(&env);
-                run_to_completion(&mut env, protocol.as_mut())
+        if self.checkpoint_every.is_some() && self.checkpoint_dir.is_none() {
+            anyhow::bail!("checkpoint_every(n) requires checkpoint_dir(..)");
+        }
+        if let Some(every) = self.checkpoint_every {
+            anyhow::ensure!(every > 0, "checkpoint_every must be >= 1");
+        }
+
+        let backend = self.backend;
+        let mut env: Box<dyn FlEnvironment> = match backend {
+            Backend::Sim => Box::new(VirtualClockEnv::new(self.cfg.clone())?),
+            Backend::Live => Box::new(LiveClusterEnv::new(self.cfg.clone(), self.time_scale)?),
+        };
+        let mut protocol = protocol_for(env.as_ref());
+
+        let driver = match &self.resume_from {
+            Some(path) => snapshot::load_snapshot(path)?.resume_into(
+                backend.as_str(),
+                env.as_mut(),
+                protocol.as_mut(),
+            )?,
+            None => DriverState::fresh(),
+        };
+
+        match self.checkpoint_dir {
+            Some(dir) => {
+                let every = self.checkpoint_every.unwrap_or(1);
+                let kind = self.snapshot_codec;
+                run_resumable(env.as_mut(), protocol.as_mut(), driver, &mut |env, proto, st| {
+                    write_checkpoint(&dir, kind, every, backend, &*env, proto, st)
+                })
             }
-            Backend::Live => {
-                let mut env = LiveClusterEnv::new(self.cfg, self.time_scale)?;
-                let mut protocol = protocol_for(&env);
-                run_to_completion(&mut env, protocol.as_mut())
-            }
+            None => run_resumable(env.as_mut(), protocol.as_mut(), driver, &mut |_, _, _| Ok(())),
         }
     }
+}
+
+/// The scenario's round-boundary hook: capture and atomically write a
+/// snapshot every `every` completed rounds.
+fn write_checkpoint(
+    dir: &std::path::Path,
+    kind: CodecKind,
+    every: usize,
+    backend: Backend,
+    env: &dyn FlEnvironment,
+    proto: &dyn Protocol,
+    st: &DriverState,
+) -> Result<()> {
+    if st.rounds_done % every == 0 {
+        let snap = RunSnapshot::capture(backend.as_str(), env, proto, st);
+        snapshot::save_to_dir(dir, kind, &snap)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -255,6 +345,34 @@ mod tests {
 
     // Validation rejection cases live in tests/scenario_api.rs
     // (builder_rejects_invalid_fraction_and_quota_combos).
+
+    #[test]
+    fn checkpoint_every_without_dir_is_rejected() {
+        let err = Scenario::task1()
+            .mock()
+            .rounds(2)
+            .clients(8)
+            .edges(2)
+            .checkpoint_every(1)
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("checkpoint_dir"), "{err}");
+    }
+
+    #[test]
+    fn resume_from_missing_file_reports_path() {
+        let err = Scenario::task1()
+            .mock()
+            .rounds(2)
+            .clients(8)
+            .edges(2)
+            .resume_from("/nonexistent/snapshot.hflsnap")
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("/nonexistent/snapshot.hflsnap"), "{err}");
+    }
 
     #[test]
     fn sim_run_matches_flrun() {

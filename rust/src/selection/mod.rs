@@ -3,7 +3,7 @@
 
 pub mod slack;
 
-pub use slack::SlackEstimator;
+pub use slack::{SlackEstimator, SlackEstimatorState};
 
 use crate::rng::Rng;
 

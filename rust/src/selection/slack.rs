@@ -67,6 +67,23 @@ pub struct SlackState {
 const THETA_MIN: f64 = 0.05;
 const THETA_MAX: f64 = 1.0;
 
+/// The estimator's complete mutable state, captured bit-for-bit for the
+/// checkpoint/replay subsystem: the running LSE sums are what make θ̂ a
+/// function of the whole submission history, so a resumed run must carry
+/// them — re-seeding from `theta_init` would silently restart the
+/// regression. Restored via [`SlackEstimator::from_state`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlackEstimatorState {
+    pub n_r: usize,
+    pub c: f64,
+    pub num: f64,
+    pub den: f64,
+    pub theta: f64,
+    pub c_r: f64,
+    pub last: Option<SlackState>,
+    pub rounds_observed: usize,
+}
+
 #[derive(Clone, Debug)]
 pub struct SlackEstimator {
     /// n_r — region population.
@@ -156,6 +173,34 @@ impl SlackEstimator {
     /// Snapshot of the last completed round (None before round 1 ends).
     pub fn last_state(&self) -> Option<SlackState> {
         self.last
+    }
+
+    /// Capture the full estimator state (checkpoint path).
+    pub fn snapshot(&self) -> SlackEstimatorState {
+        SlackEstimatorState {
+            n_r: self.n_r,
+            c: self.c,
+            num: self.num,
+            den: self.den,
+            theta: self.theta,
+            c_r: self.c_r,
+            last: self.last,
+            rounds_observed: self.rounds_observed,
+        }
+    }
+
+    /// Rebuild an estimator from a captured state (resume path).
+    pub fn from_state(state: SlackEstimatorState) -> SlackEstimator {
+        SlackEstimator {
+            n_r: state.n_r,
+            c: state.c,
+            num: state.num,
+            den: state.den,
+            theta: state.theta,
+            c_r: state.c_r,
+            last: state.last,
+            rounds_observed: state.rounds_observed,
+        }
     }
 
     pub fn rounds_observed(&self) -> usize {
@@ -262,6 +307,26 @@ mod tests {
     fn selection_count_at_least_one() {
         let e = SlackEstimator::new(3, 0.05, 1.0);
         assert!(e.selection_count() >= 1);
+    }
+
+    /// A restored estimator must be indistinguishable from the original:
+    /// same next selection, and identical θ̂ trajectory under identical
+    /// future observations.
+    #[test]
+    fn snapshot_restore_preserves_trajectory() {
+        let mut a = SlackEstimator::new(25, 0.3, 0.5);
+        for t in 0..40 {
+            a.observe(t % 9, t % 4 != 0);
+        }
+        let mut b = SlackEstimator::from_state(a.snapshot());
+        assert_eq!(b.selection_count(), a.selection_count());
+        assert_eq!(b.last_state(), a.last_state());
+        for t in 0..40 {
+            a.observe(t % 7, t % 3 == 0);
+            b.observe(t % 7, t % 3 == 0);
+            assert_eq!(a.theta().to_bits(), b.theta().to_bits());
+            assert_eq!(a.c_r().to_bits(), b.c_r().to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,639 @@
+//! The versioned binary snapshot codec — the production on-disk format.
+//!
+//! # Frame layout
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic            b"HFLSNAP\0"
+//! 8       4     format version   u32 LE (currently 1)
+//! 12      8     payload length   u64 LE
+//! 20      8     payload checksum u64 LE (FNV-1a 64 over the payload)
+//! 28      ...   payload
+//! ```
+//!
+//! The payload is a flat little-endian field sequence (no self-describing
+//! tags — the format version *is* the schema version): strings and
+//! vectors are length-prefixed with a `u64`; `Option<T>` is a `u8`
+//! presence flag followed by `T`; floats are raw IEEE-754 bits, so every
+//! value round-trips bit-exactly (NaN payloads included).
+//!
+//! A [`crate::model::ModelParams`] is written as its logical shape table
+//! followed by the contiguous arena verbatim:
+//!
+//! ```text
+//! u32 n_tensors
+//! per tensor:  u32 ndims, u64 dim...
+//! u64 n_values, f32 LE × n_values      // the arena, one memcpy-shaped run
+//! ```
+//!
+//! The offset table is *not* stored — it is recomputed from the shapes on
+//! decode, and a shape/arena size inconsistency is a typed
+//! [`SnapshotError::Malformed`], never a panic.
+//!
+//! # Versioning policy
+//!
+//! Any change to the payload layout bumps
+//! [`crate::snapshot::FORMAT_VERSION`]. Readers reject versions they do
+//! not know ([`SnapshotError::UnsupportedVersion`]); when a v2 appears,
+//! the v1 decode path stays supported so old checkpoints remain
+//! loadable. The checksum covers only the payload: a flipped bit
+//! anywhere in the body surfaces as
+//! [`SnapshotError::ChecksumMismatch`] before any field is interpreted.
+
+use crate::env::{DriverState, RoundTrace};
+use crate::model::ModelParams;
+use crate::protocols::ProtocolState;
+use crate::rng::RngState;
+use crate::selection::slack::{SlackEstimatorState, SlackState};
+use crate::snapshot::{fnv1a64, RunSnapshot, SnapshotCodec, SnapshotError, FORMAT_VERSION};
+
+/// Leading signature of every binary snapshot.
+pub const MAGIC: &[u8; 8] = b"HFLSNAP\0";
+
+/// Header size: magic + version + payload length + checksum.
+const HEADER_LEN: usize = 8 + 4 + 8 + 8;
+
+/// The versioned length-prefixed binary codec.
+pub struct BinaryCodec;
+
+impl SnapshotCodec for BinaryCodec {
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+
+    fn extension(&self) -> &'static str {
+        "hflsnap"
+    }
+
+    fn encode(&self, snap: &RunSnapshot) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.str(&snap.backend);
+        w.str(&snap.config_json);
+        w.u64(snap.fingerprint);
+        write_rng(&mut w, &snap.rng);
+        write_protocol(&mut w, &snap.protocol);
+        write_driver(&mut w, &snap.driver);
+        let payload = w.into_bytes();
+
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<RunSnapshot, SnapshotError> {
+        if bytes.len() < 8 || &bytes[..8] != MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        if bytes.len() < HEADER_LEN {
+            return Err(SnapshotError::Truncated {
+                offset: bytes.len(),
+                needed: HEADER_LEN - bytes.len(),
+                len: bytes.len(),
+            });
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            return Err(SnapshotError::UnsupportedVersion {
+                found: version,
+                supported: FORMAT_VERSION,
+            });
+        }
+        let payload_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let checksum = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+        let payload = &bytes[HEADER_LEN..];
+        if payload.len() < payload_len {
+            return Err(SnapshotError::Truncated {
+                offset: bytes.len(),
+                needed: payload_len - payload.len(),
+                len: bytes.len(),
+            });
+        }
+        if payload.len() > payload_len {
+            return Err(SnapshotError::Malformed(format!(
+                "{} trailing byte(s) after the declared payload",
+                payload.len() - payload_len
+            )));
+        }
+        let actual = fnv1a64(payload);
+        if actual != checksum {
+            return Err(SnapshotError::ChecksumMismatch {
+                expected: checksum,
+                actual,
+            });
+        }
+
+        let mut r = Reader::new(payload);
+        let backend = r.str()?;
+        let config_json = r.str()?;
+        let fingerprint = r.u64()?;
+        if fnv1a64(config_json.as_bytes()) != fingerprint {
+            return Err(SnapshotError::Malformed(
+                "stored fingerprint does not hash the embedded config".into(),
+            ));
+        }
+        let rng = read_rng(&mut r)?;
+        let protocol = read_protocol(&mut r)?;
+        let driver = read_driver(&mut r)?;
+        r.finish()?;
+        Ok(RunSnapshot {
+            backend,
+            config_json,
+            fingerprint,
+            rng,
+            protocol,
+            driver,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Field-level encode/decode.
+// ---------------------------------------------------------------------------
+
+fn write_rng(w: &mut Writer, rng: &RngState) {
+    for word in rng.s {
+        w.u64(word);
+    }
+    w.opt_f64(rng.gauss_spare);
+}
+
+fn read_rng(r: &mut Reader<'_>) -> Result<RngState, SnapshotError> {
+    let mut s = [0u64; 4];
+    for word in &mut s {
+        *word = r.u64()?;
+    }
+    Ok(RngState {
+        s,
+        gauss_spare: r.opt_f64()?,
+    })
+}
+
+pub(crate) fn write_params(w: &mut Writer, p: &ModelParams) {
+    w.u32(p.n_tensors() as u32);
+    for shape in p.shapes() {
+        w.u32(shape.len() as u32);
+        for &d in shape {
+            w.u64(d as u64);
+        }
+    }
+    let values = p.values();
+    w.u64(values.len() as u64);
+    w.f32s(values);
+}
+
+pub(crate) fn read_params(r: &mut Reader<'_>) -> Result<ModelParams, SnapshotError> {
+    let n_tensors = r.u32()? as usize;
+    r.check_remaining(n_tensors, 4, "tensor shape table")?;
+    let mut shapes = Vec::with_capacity(n_tensors);
+    let mut total = 0usize;
+    for _ in 0..n_tensors {
+        let ndims = r.u32()? as usize;
+        r.check_remaining(ndims, 8, "shape dims")?;
+        let mut shape = Vec::with_capacity(ndims);
+        let mut prod = 1usize;
+        for _ in 0..ndims {
+            let d = r.u64()? as usize;
+            prod = prod
+                .checked_mul(d)
+                .ok_or_else(|| SnapshotError::Malformed("shape product overflow".into()))?;
+            shape.push(d);
+        }
+        total = total
+            .checked_add(prod)
+            .ok_or_else(|| SnapshotError::Malformed("arena size overflow".into()))?;
+        shapes.push(shape);
+    }
+    let n_values = r.u64()? as usize;
+    if n_values != total {
+        return Err(SnapshotError::Malformed(format!(
+            "arena holds {n_values} value(s) but the shapes require {total}"
+        )));
+    }
+    let values = r.f32s(n_values)?;
+    Ok(ModelParams::from_flat(values, shapes))
+}
+
+fn write_params_vec(w: &mut Writer, ps: &[ModelParams]) {
+    w.u64(ps.len() as u64);
+    for p in ps {
+        write_params(w, p);
+    }
+}
+
+fn read_params_vec(r: &mut Reader<'_>) -> Result<Vec<ModelParams>, SnapshotError> {
+    let n = r.u64()? as usize;
+    r.check_remaining(n, 4, "model list")?;
+    (0..n).map(|_| read_params(r)).collect()
+}
+
+fn write_slack_state(w: &mut Writer, s: &SlackState) {
+    w.f64(s.theta);
+    w.f64(s.c_r);
+    w.f64(s.q_r);
+    w.u64(s.submissions as u64);
+}
+
+fn read_slack_state(r: &mut Reader<'_>) -> Result<SlackState, SnapshotError> {
+    Ok(SlackState {
+        theta: r.f64()?,
+        c_r: r.f64()?,
+        q_r: r.f64()?,
+        submissions: r.u64()? as usize,
+    })
+}
+
+fn write_estimator(w: &mut Writer, e: &SlackEstimatorState) {
+    w.u64(e.n_r as u64);
+    w.f64(e.c);
+    w.f64(e.num);
+    w.f64(e.den);
+    w.f64(e.theta);
+    w.f64(e.c_r);
+    match e.last {
+        Some(ref s) => {
+            w.u8(1);
+            write_slack_state(w, s);
+        }
+        None => w.u8(0),
+    }
+    w.u64(e.rounds_observed as u64);
+}
+
+fn read_estimator(r: &mut Reader<'_>) -> Result<SlackEstimatorState, SnapshotError> {
+    Ok(SlackEstimatorState {
+        n_r: r.u64()? as usize,
+        c: r.f64()?,
+        num: r.f64()?,
+        den: r.f64()?,
+        theta: r.f64()?,
+        c_r: r.f64()?,
+        last: if r.bool()? {
+            Some(read_slack_state(r)?)
+        } else {
+            None
+        },
+        rounds_observed: r.u64()? as usize,
+    })
+}
+
+const TAG_FEDAVG: u8 = 0;
+const TAG_HIERFAVG: u8 = 1;
+const TAG_HYBRIDFL: u8 = 2;
+
+fn write_protocol(w: &mut Writer, p: &ProtocolState) {
+    match p {
+        ProtocolState::FedAvg { global } => {
+            w.u8(TAG_FEDAVG);
+            write_params(w, global);
+        }
+        ProtocolState::HierFavg {
+            global,
+            regionals,
+            region_data,
+        } => {
+            w.u8(TAG_HIERFAVG);
+            write_params(w, global);
+            write_params_vec(w, regionals);
+            w.u64(region_data.len() as u64);
+            for &d in region_data {
+                w.f64(d);
+            }
+        }
+        ProtocolState::HybridFl {
+            global,
+            regionals,
+            slack,
+        } => {
+            w.u8(TAG_HYBRIDFL);
+            write_params(w, global);
+            write_params_vec(w, regionals);
+            w.u64(slack.len() as u64);
+            for e in slack {
+                write_estimator(w, e);
+            }
+        }
+    }
+}
+
+fn read_protocol(r: &mut Reader<'_>) -> Result<ProtocolState, SnapshotError> {
+    match r.u8()? {
+        TAG_FEDAVG => Ok(ProtocolState::FedAvg {
+            global: read_params(r)?,
+        }),
+        TAG_HIERFAVG => {
+            let global = read_params(r)?;
+            let regionals = read_params_vec(r)?;
+            let n = r.u64()? as usize;
+            r.check_remaining(n, 8, "region data sizes")?;
+            let region_data = (0..n).map(|_| r.f64()).collect::<Result<_, _>>()?;
+            Ok(ProtocolState::HierFavg {
+                global,
+                regionals,
+                region_data,
+            })
+        }
+        TAG_HYBRIDFL => {
+            let global = read_params(r)?;
+            let regionals = read_params_vec(r)?;
+            let n = r.u64()? as usize;
+            r.check_remaining(n, 8, "slack estimators")?;
+            let slack = (0..n).map(|_| read_estimator(r)).collect::<Result<_, _>>()?;
+            Ok(ProtocolState::HybridFl {
+                global,
+                regionals,
+                slack,
+            })
+        }
+        tag => Err(SnapshotError::Malformed(format!(
+            "unknown protocol-state tag {tag}"
+        ))),
+    }
+}
+
+fn write_usize_vec(w: &mut Writer, xs: &[usize]) {
+    w.u64(xs.len() as u64);
+    for &x in xs {
+        w.u64(x as u64);
+    }
+}
+
+fn read_usize_vec(r: &mut Reader<'_>) -> Result<Vec<usize>, SnapshotError> {
+    let n = r.u64()? as usize;
+    r.check_remaining(n, 8, "count vector")?;
+    (0..n).map(|_| r.u64().map(|v| v as usize)).collect()
+}
+
+pub(crate) fn write_round_trace(w: &mut Writer, row: &RoundTrace) {
+    w.u64(row.t as u64);
+    w.f64(row.round_len);
+    w.f64(row.cum_time);
+    w.f64(row.accuracy);
+    w.f64(row.best_accuracy);
+    w.f64(row.eval_loss);
+    write_usize_vec(w, &row.selected);
+    write_usize_vec(w, &row.alive);
+    write_usize_vec(w, &row.submissions);
+    w.f64(row.cum_energy_j);
+    w.u8(row.deadline_hit as u8);
+    w.u8(row.cloud_aggregated as u8);
+    match row.slack {
+        Some(ref states) => {
+            w.u8(1);
+            w.u64(states.len() as u64);
+            for s in states {
+                write_slack_state(w, s);
+            }
+        }
+        None => w.u8(0),
+    }
+}
+
+fn read_round_trace(r: &mut Reader<'_>) -> Result<RoundTrace, SnapshotError> {
+    Ok(RoundTrace {
+        t: r.u64()? as usize,
+        round_len: r.f64()?,
+        cum_time: r.f64()?,
+        accuracy: r.f64()?,
+        best_accuracy: r.f64()?,
+        eval_loss: r.f64()?,
+        selected: read_usize_vec(r)?,
+        alive: read_usize_vec(r)?,
+        submissions: read_usize_vec(r)?,
+        cum_energy_j: r.f64()?,
+        deadline_hit: r.bool()?,
+        cloud_aggregated: r.bool()?,
+        slack: if r.bool()? {
+            let n = r.u64()? as usize;
+            r.check_remaining(n, 8 * 3, "slack trace states")?;
+            Some((0..n).map(|_| read_slack_state(r)).collect::<Result<_, _>>()?)
+        } else {
+            None
+        },
+    })
+}
+
+fn write_driver(w: &mut Writer, d: &DriverState) {
+    w.u64(d.rounds_done as u64);
+    w.f64(d.cum_time);
+    w.f64(d.cum_energy);
+    w.f64(d.best_acc);
+    w.f64(d.last_acc);
+    w.f64(d.last_loss);
+    w.u64(d.rounds.len() as u64);
+    for row in &d.rounds {
+        write_round_trace(w, row);
+    }
+}
+
+fn read_driver(r: &mut Reader<'_>) -> Result<DriverState, SnapshotError> {
+    let rounds_done = r.u64()? as usize;
+    let cum_time = r.f64()?;
+    let cum_energy = r.f64()?;
+    let best_acc = r.f64()?;
+    let last_acc = r.f64()?;
+    let last_loss = r.f64()?;
+    let n = r.u64()? as usize;
+    r.check_remaining(n, 8, "round traces")?;
+    let rounds = (0..n)
+        .map(|_| read_round_trace(r))
+        .collect::<Result<Vec<_>, _>>()?;
+    if rounds.len() != rounds_done {
+        return Err(SnapshotError::Malformed(format!(
+            "driver claims {rounds_done} completed round(s) but carries {} trace row(s)",
+            rounds.len()
+        )));
+    }
+    Ok(DriverState {
+        rounds_done,
+        cum_time,
+        cum_energy,
+        best_acc,
+        last_acc,
+        last_loss,
+        rounds,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian primitives.
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian byte sink.
+#[derive(Default)]
+pub(crate) struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub(crate) fn new() -> Writer {
+        Writer::default()
+    }
+
+    pub(crate) fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub(crate) fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub(crate) fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Bulk arena write: one reserve, then a tight LE copy loop (the
+    /// per-round checkpoint path serializes every model through this).
+    pub(crate) fn f32s(&mut self, vs: &[f32]) {
+        self.buf.reserve(vs.len() * 4);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    pub(crate) fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    pub(crate) fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    pub(crate) fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    pub(crate) fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Bounds-checked little-endian cursor; every read returns a typed error
+/// on exhaustion instead of panicking.
+pub(crate) struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        // `n` can be a corrupted u64 length prefix: compare against the
+        // remaining span, never compute `pos + n`.
+        if n > self.b.len() - self.pos {
+            return Err(SnapshotError::Truncated {
+                offset: self.pos,
+                needed: n,
+                len: self.b.len(),
+            });
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Pre-flight a length-prefixed run: `count` elements of at least
+    /// `elem_size` bytes each must still fit in the remaining input. Turns
+    /// a corrupted huge length prefix into `Truncated` instead of an
+    /// attempted multi-gigabyte allocation.
+    pub(crate) fn check_remaining(
+        &self,
+        count: usize,
+        elem_size: usize,
+        _what: &str,
+    ) -> Result<(), SnapshotError> {
+        let needed = count.saturating_mul(elem_size);
+        if needed > self.b.len() - self.pos {
+            return Err(SnapshotError::Truncated {
+                offset: self.pos,
+                needed,
+                len: self.b.len(),
+            });
+        }
+        Ok(())
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn bool(&mut self) -> Result<bool, SnapshotError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(SnapshotError::Malformed(format!(
+                "invalid bool byte {v:#04x}"
+            ))),
+        }
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Bulk arena read: one bounds check, then a chunked LE decode of
+    /// `n` consecutive f32 values.
+    pub(crate) fn f32s(&mut self, n: usize) -> Result<Vec<f32>, SnapshotError> {
+        self.check_remaining(n, 4, "arena values")?;
+        let bytes = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())));
+        }
+        Ok(out)
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64, SnapshotError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub(crate) fn opt_f64(&mut self) -> Result<Option<f64>, SnapshotError> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String, SnapshotError> {
+        let n = self.u64()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|e| SnapshotError::Malformed(format!("invalid UTF-8 string: {e}")))
+    }
+
+    /// The payload must be fully consumed — leftover bytes mean the
+    /// schema and the data disagree.
+    pub(crate) fn finish(&self) -> Result<(), SnapshotError> {
+        if self.pos != self.b.len() {
+            return Err(SnapshotError::Malformed(format!(
+                "{} unread byte(s) after the last field",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}

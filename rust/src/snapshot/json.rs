@@ -1,0 +1,515 @@
+//! Human-readable JSON snapshot codec (debugging / inspection).
+//!
+//! Same information as the binary codec, rendered through
+//! [`crate::jsonx`] so a checkpoint can be inspected with standard
+//! tooling. Bit-exactness notes:
+//!
+//! * f64 fields round-trip exactly: the writer emits Rust's
+//!   shortest-roundtrip formatting and the parser reads it back to the
+//!   identical bits. `NaN` (e.g. `last_loss` before the first
+//!   evaluation) is written as `null` and restored as the canonical NaN.
+//! * u64 words that can exceed 2^53 (RNG state, the config fingerprint)
+//!   are encoded as fixed-width hex *strings*, never JSON numbers.
+//! * f32 arena values pass through f64 losslessly (every f32 is exactly
+//!   representable). The one caveat vs. the binary codec: a NaN arena
+//!   value loses its payload bits (JSON has no NaN literal) — model
+//!   arenas are finite in any healthy run, and the binary codec is the
+//!   production format.
+
+use std::collections::BTreeMap;
+
+use crate::env::{DriverState, RoundTrace};
+use crate::jsonx::Json;
+use crate::model::ModelParams;
+use crate::protocols::ProtocolState;
+use crate::rng::RngState;
+use crate::selection::slack::{SlackEstimatorState, SlackState};
+use crate::snapshot::{as_obj, fnv1a64, RunSnapshot, SnapshotCodec, SnapshotError, FORMAT_VERSION};
+
+/// Value of the `kind` discriminator field.
+const KIND: &str = "hybridfl-run-snapshot";
+
+/// The human-readable debug codec.
+pub struct JsonCodec;
+
+impl SnapshotCodec for JsonCodec {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+
+    fn extension(&self) -> &'static str {
+        "json"
+    }
+
+    fn encode(&self, snap: &RunSnapshot) -> Vec<u8> {
+        // The config is embedded as a parsed object (readability); its
+        // canonical dump is what the fingerprint hashes, and jsonx's
+        // BTreeMap keys make dump(parse(dump(x))) == dump(x).
+        let config = Json::parse(&snap.config_json).unwrap_or_else(|_| {
+            // A RunSnapshot built by `capture` always embeds valid JSON;
+            // fall back to the raw string rather than failing encode.
+            Json::Str(snap.config_json.clone())
+        });
+        let j = Json::obj()
+            .set("kind", KIND)
+            .set("snapshot_format", FORMAT_VERSION as u64)
+            .set("backend", snap.backend.as_str())
+            .set("config", config)
+            .set("fingerprint", hex64(snap.fingerprint))
+            .set("rng", rng_to_json(&snap.rng))
+            .set("protocol", protocol_to_json(&snap.protocol))
+            .set("driver", driver_to_json(&snap.driver));
+        j.pretty().into_bytes()
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<RunSnapshot, SnapshotError> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| SnapshotError::Malformed(format!("invalid UTF-8: {e}")))?;
+        let j = Json::parse(text).map_err(|e| SnapshotError::Malformed(format!("{e:#}")))?;
+        let obj = as_obj(&j, "snapshot")?;
+        match obj.get("kind") {
+            Some(Json::Str(k)) if k == KIND => {}
+            _ => return Err(SnapshotError::BadMagic),
+        }
+        let version = req_u64(obj, "snapshot_format")? as u32;
+        if version != FORMAT_VERSION {
+            return Err(SnapshotError::UnsupportedVersion {
+                found: version,
+                supported: FORMAT_VERSION,
+            });
+        }
+        let backend = req_str(obj, "backend")?;
+        let config_json = match obj.get("config") {
+            Some(cfg @ Json::Obj(_)) => cfg.dump(),
+            Some(Json::Str(raw)) => raw.clone(),
+            _ => return Err(SnapshotError::Malformed("config: expected object".into())),
+        };
+        let fingerprint = req_hex64(obj, "fingerprint")?;
+        if fnv1a64(config_json.as_bytes()) != fingerprint {
+            return Err(SnapshotError::Malformed(
+                "stored fingerprint does not hash the embedded config".into(),
+            ));
+        }
+        Ok(RunSnapshot {
+            backend,
+            config_json,
+            fingerprint,
+            rng: rng_from_json(req(obj, "rng")?)?,
+            protocol: protocol_from_json(req(obj, "protocol")?)?,
+            driver: driver_from_json(req(obj, "driver")?)?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode helpers.
+// ---------------------------------------------------------------------------
+
+fn hex64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// f64 → Json. The NaN→`null` mapping happens inside jsonx's number
+/// writer at dump time (JSON has no NaN literal); [`f64_of`] is the
+/// decode-side inverse.
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn rng_to_json(rng: &RngState) -> Json {
+    Json::obj()
+        .set(
+            "s",
+            Json::Arr(rng.s.iter().map(|&w| Json::Str(hex64(w))).collect()),
+        )
+        .set(
+            "gauss_spare",
+            rng.gauss_spare.map_or(Json::Null, Json::Num),
+        )
+}
+
+fn params_to_json(p: &ModelParams) -> Json {
+    Json::obj()
+        .set(
+            "shapes",
+            Json::Arr(
+                p.shapes()
+                    .iter()
+                    .map(|s| Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect()))
+                    .collect(),
+            ),
+        )
+        .set(
+            "values",
+            Json::Arr(p.values().iter().map(|&v| Json::Num(v as f64)).collect()),
+        )
+}
+
+fn params_vec_to_json(ps: &[ModelParams]) -> Json {
+    Json::Arr(ps.iter().map(params_to_json).collect())
+}
+
+fn slack_state_to_json(s: &SlackState) -> Json {
+    Json::obj()
+        .set("theta", num(s.theta))
+        .set("c_r", num(s.c_r))
+        .set("q_r", num(s.q_r))
+        .set("submissions", s.submissions)
+}
+
+fn estimator_to_json(e: &SlackEstimatorState) -> Json {
+    Json::obj()
+        .set("n_r", e.n_r)
+        .set("c", num(e.c))
+        .set("num", num(e.num))
+        .set("den", num(e.den))
+        .set("theta", num(e.theta))
+        .set("c_r", num(e.c_r))
+        .set(
+            "last",
+            e.last.as_ref().map_or(Json::Null, slack_state_to_json),
+        )
+        .set("rounds_observed", e.rounds_observed)
+}
+
+fn protocol_to_json(p: &ProtocolState) -> Json {
+    match p {
+        ProtocolState::FedAvg { global } => Json::obj()
+            .set("kind", "fedavg")
+            .set("global", params_to_json(global)),
+        ProtocolState::HierFavg {
+            global,
+            regionals,
+            region_data,
+        } => Json::obj()
+            .set("kind", "hierfavg")
+            .set("global", params_to_json(global))
+            .set("regionals", params_vec_to_json(regionals))
+            .set(
+                "region_data",
+                Json::Arr(region_data.iter().map(|&d| Json::Num(d)).collect()),
+            ),
+        ProtocolState::HybridFl {
+            global,
+            regionals,
+            slack,
+        } => Json::obj()
+            .set("kind", "hybridfl")
+            .set("global", params_to_json(global))
+            .set("regionals", params_vec_to_json(regionals))
+            .set("slack", Json::Arr(slack.iter().map(estimator_to_json).collect())),
+    }
+}
+
+fn counts_to_json(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn trace_to_json(row: &RoundTrace) -> Json {
+    Json::obj()
+        .set("t", row.t)
+        .set("round_len", num(row.round_len))
+        .set("cum_time", num(row.cum_time))
+        .set("accuracy", num(row.accuracy))
+        .set("best_accuracy", num(row.best_accuracy))
+        .set("eval_loss", num(row.eval_loss))
+        .set("selected", counts_to_json(&row.selected))
+        .set("alive", counts_to_json(&row.alive))
+        .set("submissions", counts_to_json(&row.submissions))
+        .set("cum_energy_j", num(row.cum_energy_j))
+        .set("deadline_hit", row.deadline_hit)
+        .set("cloud_aggregated", row.cloud_aggregated)
+        .set(
+            "slack",
+            row.slack.as_ref().map_or(Json::Null, |states| {
+                Json::Arr(states.iter().map(slack_state_to_json).collect())
+            }),
+        )
+}
+
+fn driver_to_json(d: &DriverState) -> Json {
+    Json::obj()
+        .set("rounds_done", d.rounds_done)
+        .set("cum_time", num(d.cum_time))
+        .set("cum_energy", num(d.cum_energy))
+        .set("best_acc", num(d.best_acc))
+        .set("last_acc", num(d.last_acc))
+        .set("last_loss", num(d.last_loss))
+        .set("rounds", Json::Arr(d.rounds.iter().map(trace_to_json).collect()))
+}
+
+// ---------------------------------------------------------------------------
+// Decode helpers — every failure is a typed Malformed, never a panic.
+// ---------------------------------------------------------------------------
+
+fn req<'a>(
+    obj: &'a BTreeMap<String, Json>,
+    key: &str,
+) -> Result<&'a Json, SnapshotError> {
+    obj.get(key)
+        .ok_or_else(|| SnapshotError::Malformed(format!("missing key '{key}'")))
+}
+
+fn req_str(obj: &BTreeMap<String, Json>, key: &str) -> Result<String, SnapshotError> {
+    match req(obj, key)? {
+        Json::Str(s) => Ok(s.clone()),
+        _ => Err(SnapshotError::Malformed(format!("'{key}': expected string"))),
+    }
+}
+
+/// f64 with the NaN convention: `null` decodes to NaN.
+fn f64_of(j: &Json, what: &str) -> Result<f64, SnapshotError> {
+    match j {
+        Json::Num(n) => Ok(*n),
+        Json::Null => Ok(f64::NAN),
+        _ => Err(SnapshotError::Malformed(format!("'{what}': expected number"))),
+    }
+}
+
+fn req_f64(obj: &BTreeMap<String, Json>, key: &str) -> Result<f64, SnapshotError> {
+    f64_of(req(obj, key)?, key)
+}
+
+fn req_u64(obj: &BTreeMap<String, Json>, key: &str) -> Result<u64, SnapshotError> {
+    let f = req_f64(obj, key)?;
+    if !f.is_finite() || f < 0.0 || f.fract() != 0.0 {
+        return Err(SnapshotError::Malformed(format!(
+            "'{key}': expected non-negative integer, got {f}"
+        )));
+    }
+    Ok(f as u64)
+}
+
+fn req_usize(obj: &BTreeMap<String, Json>, key: &str) -> Result<usize, SnapshotError> {
+    Ok(req_u64(obj, key)? as usize)
+}
+
+fn req_bool(obj: &BTreeMap<String, Json>, key: &str) -> Result<bool, SnapshotError> {
+    match req(obj, key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(SnapshotError::Malformed(format!("'{key}': expected bool"))),
+    }
+}
+
+fn req_arr<'a>(
+    obj: &'a BTreeMap<String, Json>,
+    key: &str,
+) -> Result<&'a [Json], SnapshotError> {
+    match req(obj, key)? {
+        Json::Arr(v) => Ok(v),
+        _ => Err(SnapshotError::Malformed(format!("'{key}': expected array"))),
+    }
+}
+
+fn hex64_of(j: &Json, what: &str) -> Result<u64, SnapshotError> {
+    match j {
+        Json::Str(s) => u64::from_str_radix(s, 16)
+            .map_err(|_| SnapshotError::Malformed(format!("'{what}': bad hex '{s}'"))),
+        _ => Err(SnapshotError::Malformed(format!(
+            "'{what}': expected hex string"
+        ))),
+    }
+}
+
+fn req_hex64(obj: &BTreeMap<String, Json>, key: &str) -> Result<u64, SnapshotError> {
+    hex64_of(req(obj, key)?, key)
+}
+
+fn rng_from_json(j: &Json) -> Result<RngState, SnapshotError> {
+    let obj = as_obj(j, "rng")?;
+    let words = req_arr(obj, "s")?;
+    if words.len() != 4 {
+        return Err(SnapshotError::Malformed(format!(
+            "rng.s: expected 4 words, got {}",
+            words.len()
+        )));
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in words.iter().enumerate() {
+        s[i] = hex64_of(w, "rng.s")?;
+    }
+    let gauss_spare = match req(obj, "gauss_spare")? {
+        Json::Null => None,
+        Json::Num(n) => Some(*n),
+        _ => {
+            return Err(SnapshotError::Malformed(
+                "rng.gauss_spare: expected number or null".into(),
+            ))
+        }
+    };
+    Ok(RngState { s, gauss_spare })
+}
+
+fn params_from_json(j: &Json) -> Result<ModelParams, SnapshotError> {
+    let obj = as_obj(j, "params")?;
+    let mut shapes = Vec::new();
+    let mut total = 0usize;
+    for s in req_arr(obj, "shapes")? {
+        let dims = match s {
+            Json::Arr(d) => d,
+            _ => return Err(SnapshotError::Malformed("shapes: expected arrays".into())),
+        };
+        let mut shape = Vec::with_capacity(dims.len());
+        let mut prod = 1usize;
+        for d in dims {
+            let f = f64_of(d, "shape dim")?;
+            if !f.is_finite() || f < 0.0 || f.fract() != 0.0 {
+                return Err(SnapshotError::Malformed(format!("bad shape dim {f}")));
+            }
+            let d = f as usize;
+            prod = prod
+                .checked_mul(d)
+                .ok_or_else(|| SnapshotError::Malformed("shape product overflow".into()))?;
+            shape.push(d);
+        }
+        total = total
+            .checked_add(prod)
+            .ok_or_else(|| SnapshotError::Malformed("arena size overflow".into()))?;
+        shapes.push(shape);
+    }
+    let raw = req_arr(obj, "values")?;
+    if raw.len() != total {
+        return Err(SnapshotError::Malformed(format!(
+            "arena holds {} value(s) but the shapes require {total}",
+            raw.len()
+        )));
+    }
+    let mut values = Vec::with_capacity(raw.len());
+    for v in raw {
+        values.push(f64_of(v, "arena value")? as f32);
+    }
+    Ok(ModelParams::from_flat(values, shapes))
+}
+
+fn params_vec_from_json(j: &Json) -> Result<Vec<ModelParams>, SnapshotError> {
+    match j {
+        Json::Arr(v) => v.iter().map(params_from_json).collect(),
+        _ => Err(SnapshotError::Malformed("expected model array".into())),
+    }
+}
+
+fn slack_state_from_json(j: &Json) -> Result<SlackState, SnapshotError> {
+    let obj = as_obj(j, "slack state")?;
+    Ok(SlackState {
+        theta: req_f64(obj, "theta")?,
+        c_r: req_f64(obj, "c_r")?,
+        q_r: req_f64(obj, "q_r")?,
+        submissions: req_usize(obj, "submissions")?,
+    })
+}
+
+fn estimator_from_json(j: &Json) -> Result<SlackEstimatorState, SnapshotError> {
+    let obj = as_obj(j, "slack estimator")?;
+    Ok(SlackEstimatorState {
+        n_r: req_usize(obj, "n_r")?,
+        c: req_f64(obj, "c")?,
+        num: req_f64(obj, "num")?,
+        den: req_f64(obj, "den")?,
+        theta: req_f64(obj, "theta")?,
+        c_r: req_f64(obj, "c_r")?,
+        last: match req(obj, "last")? {
+            Json::Null => None,
+            s => Some(slack_state_from_json(s)?),
+        },
+        rounds_observed: req_usize(obj, "rounds_observed")?,
+    })
+}
+
+fn protocol_from_json(j: &Json) -> Result<ProtocolState, SnapshotError> {
+    let obj = as_obj(j, "protocol")?;
+    match req_str(obj, "kind")?.as_str() {
+        "fedavg" => Ok(ProtocolState::FedAvg {
+            global: params_from_json(req(obj, "global")?)?,
+        }),
+        "hierfavg" => Ok(ProtocolState::HierFavg {
+            global: params_from_json(req(obj, "global")?)?,
+            regionals: params_vec_from_json(req(obj, "regionals")?)?,
+            region_data: req_arr(obj, "region_data")?
+                .iter()
+                .map(|v| f64_of(v, "region_data"))
+                .collect::<Result<_, _>>()?,
+        }),
+        "hybridfl" => Ok(ProtocolState::HybridFl {
+            global: params_from_json(req(obj, "global")?)?,
+            regionals: params_vec_from_json(req(obj, "regionals")?)?,
+            slack: req_arr(obj, "slack")?
+                .iter()
+                .map(estimator_from_json)
+                .collect::<Result<_, _>>()?,
+        }),
+        k => Err(SnapshotError::Malformed(format!(
+            "unknown protocol-state kind '{k}'"
+        ))),
+    }
+}
+
+fn counts_from_json(j: &Json, what: &str) -> Result<Vec<usize>, SnapshotError> {
+    match j {
+        Json::Arr(v) => v
+            .iter()
+            .map(|x| {
+                let f = f64_of(x, what)?;
+                if !f.is_finite() || f < 0.0 || f.fract() != 0.0 {
+                    return Err(SnapshotError::Malformed(format!("'{what}': bad count {f}")));
+                }
+                Ok(f as usize)
+            })
+            .collect(),
+        _ => Err(SnapshotError::Malformed(format!("'{what}': expected array"))),
+    }
+}
+
+fn trace_from_json(j: &Json) -> Result<RoundTrace, SnapshotError> {
+    let obj = as_obj(j, "round trace")?;
+    Ok(RoundTrace {
+        t: req_usize(obj, "t")?,
+        round_len: req_f64(obj, "round_len")?,
+        cum_time: req_f64(obj, "cum_time")?,
+        accuracy: req_f64(obj, "accuracy")?,
+        best_accuracy: req_f64(obj, "best_accuracy")?,
+        eval_loss: req_f64(obj, "eval_loss")?,
+        selected: counts_from_json(req(obj, "selected")?, "selected")?,
+        alive: counts_from_json(req(obj, "alive")?, "alive")?,
+        submissions: counts_from_json(req(obj, "submissions")?, "submissions")?,
+        cum_energy_j: req_f64(obj, "cum_energy_j")?,
+        deadline_hit: req_bool(obj, "deadline_hit")?,
+        cloud_aggregated: req_bool(obj, "cloud_aggregated")?,
+        slack: match req(obj, "slack")? {
+            Json::Null => None,
+            Json::Arr(v) => Some(
+                v.iter()
+                    .map(slack_state_from_json)
+                    .collect::<Result<_, _>>()?,
+            ),
+            _ => {
+                return Err(SnapshotError::Malformed(
+                    "slack: expected array or null".into(),
+                ))
+            }
+        },
+    })
+}
+
+fn driver_from_json(j: &Json) -> Result<DriverState, SnapshotError> {
+    let obj = as_obj(j, "driver")?;
+    let rounds_done = req_usize(obj, "rounds_done")?;
+    let rounds: Vec<RoundTrace> = req_arr(obj, "rounds")?
+        .iter()
+        .map(trace_from_json)
+        .collect::<Result<_, _>>()?;
+    if rounds.len() != rounds_done {
+        return Err(SnapshotError::Malformed(format!(
+            "driver claims {rounds_done} completed round(s) but carries {} trace row(s)",
+            rounds.len()
+        )));
+    }
+    Ok(DriverState {
+        rounds_done,
+        cum_time: req_f64(obj, "cum_time")?,
+        cum_energy: req_f64(obj, "cum_energy")?,
+        best_acc: req_f64(obj, "best_acc")?,
+        last_acc: req_f64(obj, "last_acc")?,
+        last_loss: req_f64(obj, "last_loss")?,
+        rounds,
+    })
+}

@@ -1,0 +1,483 @@
+//! Checkpoint/replay subsystem: versioned run snapshots and resumable
+//! runs.
+//!
+//! The paper's premise is tolerating unreliable *end devices*; this module
+//! extends the same discipline to the cloud/edge tier itself. A long
+//! multi-round run no longer holds all of its state in process memory: at
+//! any round boundary the driver can serialize a [`RunSnapshot`] — the
+//! complete resumable state of the run — and a later process can load it,
+//! verify it belongs to the same experiment, and continue to a
+//! **byte-identical** [`crate::env::RunResult`] on either backend
+//! (`tests/resume_determinism.rs` is the bar).
+//!
+//! # What a snapshot captures (and what it doesn't)
+//!
+//! Captured, because it is mutable run state:
+//!
+//! * the round index and the full per-round trace so far
+//!   ([`crate::env::DriverState`]: virtual-time and energy sums, the
+//!   best-accuracy watermark, the evaluation carry);
+//! * the protocol state ([`crate::protocols::ProtocolState`]): global
+//!   model, per-region regional models, and HybridFL's per-region slack
+//!   estimators with their running LSE sums;
+//! * the environment's round-stream RNG ([`crate::rng::RngState`],
+//!   including the cached Box–Muller spare);
+//! * the config fingerprint plus the full config JSON, so a resume
+//!   against a diverging config is a **hard error naming the diverging
+//!   fields** — never a silent hybrid run.
+//!
+//! Not captured, because it is deterministically rebuilt from the config:
+//! the topology, the data partition, the device fleet, the timing/energy
+//! models, and the engine. `World::build` derives all of them from
+//! `cfg.seed` through fixed RNG stream splits, so re-running it on resume
+//! reproduces the identical world — that is precisely what the config
+//! fingerprint protects.
+//!
+//! # Codecs
+//!
+//! [`SnapshotCodec`] splits *what* is saved from *how* it is framed (the
+//! codec/transport split of the RPC framing idiom). Two implementations
+//! ship, both dependency-free:
+//!
+//! * [`BinaryCodec`] — the production format: a fixed 28-byte header
+//!   (magic, format version, payload length, FNV-1a checksum) followed by
+//!   a length-prefixed little-endian payload that dumps each
+//!   `ModelParams` contiguous arena as an offset/shape table plus raw
+//!   f32 LE bytes. See [`binary`] for the exact layout and the
+//!   versioning policy.
+//! * [`JsonCodec`] — a human-readable debug codec over [`crate::jsonx`];
+//!   same information, greppable, ~8× larger. Values round-trip
+//!   bit-exactly (shortest-roundtrip float formatting; u64 words as hex
+//!   strings).
+//!
+//! Decoding never panics: truncated, corrupted or wrong-version byte
+//! streams come back as typed [`SnapshotError`]s
+//! (`tests/snapshot_roundtrip.rs` fuzzes this).
+//!
+//! [`load_snapshot`] sniffs the format from the leading bytes, so
+//! `--resume` accepts either encoding.
+
+pub mod binary;
+pub mod json;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::env::{DriverState, FlEnvironment};
+use crate::jsonx::Json;
+use crate::protocols::{Protocol, ProtocolState};
+use crate::rng::RngState;
+use crate::Result;
+
+pub use binary::BinaryCodec;
+pub use json::JsonCodec;
+
+/// On-disk format version understood by this build. Bumped whenever the
+/// payload layout changes; old readers reject newer snapshots with
+/// [`SnapshotError::UnsupportedVersion`] instead of misparsing them, and
+/// decoding keeps working for every version still listed as supported
+/// (currently only v1 exists).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Typed decode/validation errors. The codecs return these directly so
+/// callers (and tests) can distinguish a truncated file from a checksum
+/// mismatch from a config divergence; they convert into `anyhow::Error`
+/// at the subsystem boundary.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// The byte stream does not start with a known snapshot signature.
+    BadMagic,
+    /// The snapshot was written by an unknown (newer) format version.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// The byte stream ends before the declared content does.
+    Truncated { offset: usize, needed: usize, len: usize },
+    /// Header checksum does not match the payload bytes.
+    ChecksumMismatch { expected: u64, actual: u64 },
+    /// Structurally invalid content (bad tag, bad UTF-8, inconsistent
+    /// lengths, missing JSON keys, ...).
+    Malformed(String),
+    /// The snapshot's config fingerprint does not match the resuming
+    /// run's config.
+    ConfigMismatch { diverging: Vec<String> },
+    /// Filesystem failure while reading or writing a snapshot.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::BadMagic => {
+                write!(f, "not a hybridfl snapshot (unrecognized signature)")
+            }
+            SnapshotError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "snapshot format version {found} is not supported \
+                 (this build reads up to version {supported})"
+            ),
+            SnapshotError::Truncated { offset, needed, len } => write!(
+                f,
+                "snapshot truncated: needed {needed} byte(s) at offset {offset} \
+                 but only {len} byte(s) total"
+            ),
+            SnapshotError::ChecksumMismatch { expected, actual } => write!(
+                f,
+                "snapshot payload checksum mismatch \
+                 (header says {expected:#018x}, payload hashes to {actual:#018x})"
+            ),
+            SnapshotError::Malformed(msg) => write!(f, "malformed snapshot: {msg}"),
+            SnapshotError::ConfigMismatch { diverging } => {
+                if diverging.is_empty() {
+                    write!(
+                        f,
+                        "snapshot config fingerprint does not match this run's config"
+                    )
+                } else {
+                    write!(
+                        f,
+                        "snapshot config does not match this run's config; \
+                         diverging fields: {}",
+                        diverging.join(", ")
+                    )
+                }
+            }
+            SnapshotError::Io(e) => write!(f, "snapshot I/O error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SnapshotError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> SnapshotError {
+        SnapshotError::Io(e)
+    }
+}
+
+/// Everything needed to resume a run at a round boundary. Field-for-field
+/// this is: *whose run* (backend + config fingerprint), *where in the
+/// run* (driver state incl. the trace), and *what would have happened
+/// next* (protocol state + RNG streams).
+#[derive(Clone, Debug)]
+pub struct RunSnapshot {
+    /// Backend label (`sim` / `live`) the snapshot was captured on. A
+    /// trace must not silently mix backends, so resume checks it.
+    pub backend: String,
+    /// `cfg.to_json().dump()` of the run's config — kept verbatim so a
+    /// fingerprint mismatch can name the diverging fields.
+    pub config_json: String,
+    /// FNV-1a 64 of `config_json`.
+    pub fingerprint: u64,
+    /// The environment's round-stream RNG at the boundary.
+    pub rng: RngState,
+    /// The protocol's full mutable state at the boundary.
+    pub protocol: ProtocolState,
+    /// The driver's accumulators and per-round trace at the boundary.
+    pub driver: DriverState,
+}
+
+impl RunSnapshot {
+    /// Capture a snapshot at the current round boundary.
+    pub fn capture(
+        backend: &str,
+        env: &dyn FlEnvironment,
+        protocol: &dyn Protocol,
+        driver: &DriverState,
+    ) -> RunSnapshot {
+        let config_json = env.cfg().to_json().dump();
+        RunSnapshot {
+            backend: backend.to_string(),
+            fingerprint: fnv1a64(config_json.as_bytes()),
+            config_json,
+            rng: env.rng_state(),
+            protocol: protocol.snapshot_state(),
+            driver: driver.clone(),
+        }
+    }
+
+    /// Rounds completed when the snapshot was taken.
+    pub fn round(&self) -> usize {
+        self.driver.rounds_done
+    }
+
+    /// Verify this snapshot belongs to the given config. On divergence
+    /// returns [`SnapshotError::ConfigMismatch`] naming the differing
+    /// field paths.
+    pub fn ensure_config_matches(
+        &self,
+        cfg: &crate::config::ExperimentConfig,
+    ) -> std::result::Result<(), SnapshotError> {
+        let current = cfg.to_json();
+        let current_dump = current.dump();
+        if current_dump == self.config_json {
+            return Ok(());
+        }
+        let snap_cfg = Json::parse(&self.config_json)
+            .map_err(|e| SnapshotError::Malformed(format!("embedded config: {e}")))?;
+        Err(SnapshotError::ConfigMismatch {
+            diverging: diff_json_paths(&snap_cfg, &current),
+        })
+    }
+
+    /// Restore this snapshot into a freshly-built environment/protocol
+    /// pair and hand back the driver state to continue from. Hard-errors
+    /// on a backend, config-fingerprint or protocol mismatch.
+    pub fn resume_into(
+        self,
+        backend: &str,
+        env: &mut dyn FlEnvironment,
+        protocol: &mut dyn Protocol,
+    ) -> Result<DriverState> {
+        anyhow::ensure!(
+            self.backend == backend,
+            "snapshot was captured on the '{}' backend but this run uses '{}'",
+            self.backend,
+            backend
+        );
+        self.ensure_config_matches(env.cfg())?;
+        anyhow::ensure!(
+            self.driver.rounds_done <= env.cfg().t_max,
+            "snapshot is {} rounds in but t_max is {}",
+            self.driver.rounds_done,
+            env.cfg().t_max
+        );
+        env.restore_rng_state(self.rng);
+        protocol.restore_state(self.protocol)?;
+        Ok(self.driver)
+    }
+}
+
+/// The what/how split: a codec turns a [`RunSnapshot`] into bytes and
+/// back without knowing where the bytes live (file today; a socket when
+/// edge-state migration lands).
+pub trait SnapshotCodec {
+    /// Codec label for logs and reports.
+    fn name(&self) -> &'static str;
+    /// File extension snapshots written by this codec carry.
+    fn extension(&self) -> &'static str;
+    /// Serialize a snapshot (headers, checksums and all).
+    fn encode(&self, snap: &RunSnapshot) -> Vec<u8>;
+    /// Deserialize and validate. Never panics on hostile input.
+    fn decode(&self, bytes: &[u8]) -> std::result::Result<RunSnapshot, SnapshotError>;
+}
+
+/// Which codec the `Scenario` checkpoint hook writes with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecKind {
+    /// Versioned binary framing (production default).
+    Binary,
+    /// Human-readable JSON (debugging).
+    Json,
+}
+
+impl CodecKind {
+    pub fn codec(self) -> Box<dyn SnapshotCodec> {
+        match self {
+            CodecKind::Binary => Box::new(BinaryCodec),
+            CodecKind::Json => Box::new(JsonCodec),
+        }
+    }
+}
+
+/// FNV-1a 64-bit — the checksum/fingerprint hash of the subsystem (fast,
+/// dependency-free; integrity against corruption, not an adversary).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of a config — what ties a snapshot to its experiment.
+pub fn config_fingerprint(cfg: &crate::config::ExperimentConfig) -> u64 {
+    fnv1a64(cfg.to_json().dump().as_bytes())
+}
+
+/// Collect the JSON paths (e.g. `dropout.mean`) at which two values
+/// differ — the substance of the `--resume` mismatch error message.
+pub fn diff_json_paths(a: &Json, b: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    diff_walk(a, b, String::new(), &mut out);
+    out
+}
+
+fn diff_walk(a: &Json, b: &Json, path: String, out: &mut Vec<String>) {
+    match (a, b) {
+        (Json::Obj(ma), Json::Obj(mb)) => {
+            let keys: std::collections::BTreeSet<&String> =
+                ma.keys().chain(mb.keys()).collect();
+            for k in keys {
+                let sub = if path.is_empty() {
+                    k.to_string()
+                } else {
+                    format!("{path}.{k}")
+                };
+                match (ma.get(k.as_str()), mb.get(k.as_str())) {
+                    (Some(va), Some(vb)) => diff_walk(va, vb, sub, out),
+                    _ => out.push(sub),
+                }
+            }
+        }
+        (Json::Arr(va), Json::Arr(vb)) if va.len() == vb.len() => {
+            for (i, (xa, xb)) in va.iter().zip(vb.iter()).enumerate() {
+                diff_walk(xa, xb, format!("{path}[{i}]"), out);
+            }
+        }
+        _ => {
+            if a != b {
+                out.push(if path.is_empty() { "<root>".into() } else { path });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// File I/O: atomic save, format-sniffing load.
+// ---------------------------------------------------------------------------
+
+/// Path of the checkpoint written after round `round` in `dir`.
+pub fn snapshot_path(dir: &Path, round: usize, kind: CodecKind) -> PathBuf {
+    dir.join(format!(
+        "snapshot_round_{round:06}.{}",
+        kind.codec().extension()
+    ))
+}
+
+/// Serialize and write atomically (temp file + rename, so an interrupted
+/// writer never leaves a half-snapshot under the final name). The temp
+/// name carries the codec extension and the writer's pid, so concurrent
+/// runs checkpointing the same round into one directory cannot stage
+/// through the same file.
+pub fn save_snapshot(path: &Path, kind: CodecKind, snap: &RunSnapshot) -> Result<()> {
+    let codec = kind.codec();
+    let bytes = codec.encode(snap);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(SnapshotError::Io)?;
+    }
+    let tmp = path.with_extension(format!("{}.{}.tmp", codec.extension(), std::process::id()));
+    std::fs::write(&tmp, &bytes).map_err(SnapshotError::Io)?;
+    std::fs::rename(&tmp, path).map_err(SnapshotError::Io)?;
+    Ok(())
+}
+
+/// Write the round-`N` checkpoint into `dir` and return its path.
+pub fn save_to_dir(dir: &Path, kind: CodecKind, snap: &RunSnapshot) -> Result<PathBuf> {
+    let path = snapshot_path(dir, snap.round(), kind);
+    save_snapshot(&path, kind, snap)?;
+    Ok(path)
+}
+
+/// Decode a snapshot from bytes, sniffing the codec from the leading
+/// bytes (binary magic vs. a JSON object).
+pub fn decode_snapshot(bytes: &[u8]) -> std::result::Result<RunSnapshot, SnapshotError> {
+    if bytes.starts_with(binary::MAGIC) {
+        return BinaryCodec.decode(bytes);
+    }
+    if bytes
+        .iter()
+        .find(|b| !b.is_ascii_whitespace())
+        .is_some_and(|&b| b == b'{')
+    {
+        return JsonCodec.decode(bytes);
+    }
+    Err(SnapshotError::BadMagic)
+}
+
+/// Read and decode a snapshot file (either codec).
+pub fn load_snapshot(path: &Path) -> Result<RunSnapshot> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading snapshot {}: {e}", path.display()))?;
+    decode_snapshot(&bytes)
+        .map_err(|e| anyhow::anyhow!("decoding snapshot {}: {e}", path.display()))
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers for the codec implementations and their tests.
+// ---------------------------------------------------------------------------
+
+/// A canonical, bit-exact byte encoding of a [`crate::env::RunResult`] —
+/// the equality oracle of the deterministic-replay tests ("byte-identical
+/// RunResult" means *these* bytes are identical).
+pub fn run_result_bytes(r: &crate::env::RunResult) -> Vec<u8> {
+    let mut w = binary::Writer::new();
+    let s = &r.summary;
+    w.str(&s.protocol);
+    w.u64(s.rounds_run as u64);
+    w.f64(s.best_accuracy);
+    w.f64(s.avg_round_len);
+    w.opt_u64(s.rounds_to_target.map(|v| v as u64));
+    w.opt_f64(s.time_to_target);
+    w.f64(s.mean_device_energy_wh);
+    w.f64(s.total_time);
+    w.f64(s.final_loss);
+    w.u64(r.rounds.len() as u64);
+    for row in &r.rounds {
+        binary::write_round_trace(&mut w, row);
+    }
+    w.into_bytes()
+}
+
+/// `BTreeMap` view of a parsed JSON object (decode convenience).
+pub(crate) fn as_obj<'a>(
+    j: &'a Json,
+    what: &str,
+) -> std::result::Result<&'a BTreeMap<String, Json>, SnapshotError> {
+    match j {
+        Json::Obj(m) => Ok(m),
+        _ => Err(SnapshotError::Malformed(format!("{what}: expected object"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn diff_names_nested_and_missing_fields() {
+        let a = Json::parse(r#"{"x": 1, "d": {"mean": 0.3, "std": 0.1}, "only_a": true}"#)
+            .unwrap();
+        let b = Json::parse(r#"{"x": 2, "d": {"mean": 0.6, "std": 0.1}}"#).unwrap();
+        let diff = diff_json_paths(&a, &b);
+        assert!(diff.contains(&"x".to_string()), "{diff:?}");
+        assert!(diff.contains(&"d.mean".to_string()), "{diff:?}");
+        assert!(diff.contains(&"only_a".to_string()), "{diff:?}");
+        assert!(!diff.iter().any(|p| p == "d.std"), "{diff:?}");
+    }
+
+    #[test]
+    fn config_fingerprint_is_stable_and_sensitive() {
+        let cfg = crate::config::ExperimentConfig::fig2();
+        let f1 = config_fingerprint(&cfg);
+        let f2 = config_fingerprint(&cfg.clone());
+        assert_eq!(f1, f2);
+        let mut changed = cfg;
+        changed.c_fraction = 0.31;
+        assert_ne!(f1, config_fingerprint(&changed));
+    }
+
+    #[test]
+    fn decode_sniffs_garbage_as_bad_magic() {
+        assert!(matches!(
+            decode_snapshot(b"definitely not a snapshot"),
+            Err(SnapshotError::BadMagic)
+        ));
+        assert!(matches!(decode_snapshot(b""), Err(SnapshotError::BadMagic)));
+    }
+}

@@ -114,6 +114,122 @@ fn run_mock_roundtrip_with_trace() {
 }
 
 #[test]
+fn checkpoint_then_resume_via_cli() {
+    let dir = std::env::temp_dir().join("hybridfl_cli_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = bin()
+        .args([
+            "run",
+            "--preset",
+            "fig2",
+            "--set",
+            "t_max=6",
+            "--checkpoint-dir",
+            dir.to_str().unwrap(),
+            "--checkpoint-every",
+            "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let snap = dir.join("snapshot_round_000003.hflsnap");
+    assert!(snap.exists());
+    assert!(dir.join("snapshot_round_000006.hflsnap").exists());
+
+    let out = bin()
+        .args([
+            "run",
+            "--preset",
+            "fig2",
+            "--set",
+            "t_max=6",
+            "--resume",
+            snap.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("best accuracy"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite bugfix: `--resume` against a config that diverges from the
+/// snapshot's fingerprint must fail loudly, naming the diverging fields,
+/// instead of running an inconsistent hybrid run.
+#[test]
+fn resume_with_diverging_config_names_the_fields() {
+    let dir = std::env::temp_dir().join("hybridfl_cli_ckpt_mismatch");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = bin()
+        .args([
+            "run",
+            "--preset",
+            "fig2",
+            "--set",
+            "t_max=4",
+            "--checkpoint-dir",
+            dir.to_str().unwrap(),
+            "--checkpoint-every",
+            "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+
+    let out = bin()
+        .args([
+            "run",
+            "--preset",
+            "fig2",
+            "--set",
+            "t_max=4",
+            "--set",
+            "c=0.5",
+            "--set",
+            "e_dr=0.1",
+            "--resume",
+            dir.join("snapshot_round_000002.hflsnap").to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("c_fraction"), "{err}");
+    assert!(err.contains("dropout.mean"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_every_without_dir_fails_loudly() {
+    let out = bin()
+        .args([
+            "run",
+            "--preset",
+            "fig2",
+            "--set",
+            "t_max=2",
+            "--checkpoint-every",
+            "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("checkpoint_dir"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
 fn fig2_command_writes_traces() {
     let dir = std::env::temp_dir().join("hybridfl_cli_fig2");
     let _ = std::fs::remove_dir_all(&dir);

@@ -18,12 +18,12 @@
 use hybridfl::config::{Dist, EngineKind, ExperimentConfig, ProtocolKind};
 use hybridfl::model;
 use hybridfl::scenario::Scenario;
+use hybridfl::snapshot::run_result_bytes;
 
-#[test]
-#[ignore = "large-fleet smoke (~50k clients); run with --ignored --release"]
-fn fifty_thousand_clients_stream_with_flat_model_memory() {
-    const N: usize = 50_000;
-    const M: usize = 8;
+const N: usize = 50_000;
+const M: usize = 8;
+
+fn fleet_cfg() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::task1_scaled();
     cfg.engine = EngineKind::Mock;
     cfg.protocol = ProtocolKind::HybridFl;
@@ -35,6 +35,13 @@ fn fifty_thousand_clients_stream_with_flat_model_memory() {
     cfg.dropout = Dist::new(0.2, 0.05);
     cfg.t_max = 3;
     cfg.seed = 4242;
+    cfg
+}
+
+#[test]
+#[ignore = "large-fleet smoke (~50k clients); run with --ignored --release"]
+fn fifty_thousand_clients_stream_with_flat_model_memory() {
+    let cfg = fleet_cfg();
 
     model::reset_arena_peak();
     let baseline = model::arena_count();
@@ -64,4 +71,40 @@ fn fifty_thousand_clients_stream_with_flat_model_memory() {
         "peak resident model arenas {resident} should be O(regions={M}), \
          not O(submissions={quota})"
     );
+}
+
+/// The resume path at fleet scale: checkpoint the 50k-client run at round
+/// 2, discard all process state, resume — the `RunResult` must be
+/// byte-identical to the uninterrupted run's, and the resumed segment
+/// must keep the O(regions) arena-peak property (a snapshot restore that
+/// buffered models would show up here).
+#[test]
+#[ignore = "large-fleet resume (~50k clients); run with --ignored --release"]
+fn fifty_thousand_clients_checkpoint_resume_byte_identical() {
+    let cfg = fleet_cfg();
+    let full = Scenario::from_config(cfg.clone()).run().unwrap();
+    let full_bytes = run_result_bytes(&full);
+
+    let dir = std::env::temp_dir().join("hybridfl_large_fleet_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    let checkpointed = Scenario::from_config(cfg.clone())
+        .checkpoint_dir(&dir)
+        .checkpoint_every(2)
+        .run()
+        .unwrap();
+    assert_eq!(full_bytes, run_result_bytes(&checkpointed));
+
+    model::reset_arena_peak();
+    let baseline = model::arena_count();
+    let resumed = Scenario::from_config(cfg)
+        .resume_from(dir.join("snapshot_round_000002.hflsnap"))
+        .run()
+        .unwrap();
+    let resident = model::arena_peak() - baseline;
+    assert_eq!(full_bytes, run_result_bytes(&resumed));
+    assert!(
+        resident < 16 * M + 64,
+        "resumed segment peaked at {resident} arenas; must stay O(regions={M})"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,238 @@
+//! The checkpoint/replay subsystem's acceptance bar: a seeded run
+//! checkpointed at round k, with all process state discarded, must resume
+//! to a `RunResult` **byte-identical** to the uninterrupted run's — on
+//! both backends, for every protocol, with either codec.
+//!
+//! "Byte-identical" is literal: `snapshot::run_result_bytes` serializes a
+//! `RunResult` with raw IEEE-754 bits, and the encodings are compared as
+//! byte vectors.
+
+use std::path::{Path, PathBuf};
+
+use hybridfl::config::{Dist, EngineKind, ExperimentConfig, ProtocolKind};
+use hybridfl::scenario::{Backend, Scenario};
+use hybridfl::snapshot::{run_result_bytes, CodecKind};
+
+fn mock_cfg(protocol: ProtocolKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::task1_scaled();
+    cfg.engine = EngineKind::Mock;
+    cfg.protocol = protocol;
+    cfg.n_clients = 20;
+    cfg.n_edges = 2;
+    cfg.dataset_size = 400;
+    cfg.eval_size = 50;
+    cfg.t_max = 9;
+    cfg.dropout = Dist::new(0.25, 0.05);
+    cfg.seed = 11;
+    cfg
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn snap_file(dir: &Path, round: usize, ext: &str) -> PathBuf {
+    dir.join(format!("snapshot_round_{round:06}.{ext}"))
+}
+
+/// Sim backend, all three protocols: uninterrupted vs checkpointed vs
+/// resumed-from-k must all be byte-identical. HierFAVG runs with κ₂ = 3
+/// so the resume point (round 3, a cloud round) and the resumed segment
+/// both cross cloud-aggregation boundaries.
+#[test]
+fn sim_resume_is_byte_identical_for_every_protocol() {
+    for protocol in ProtocolKind::ALL {
+        let mut cfg = mock_cfg(protocol);
+        cfg.hier_kappa2 = 3;
+        let full = Scenario::from_config(cfg.clone()).run().unwrap();
+        let full_bytes = run_result_bytes(&full);
+
+        let dir = fresh_dir(&format!("hybridfl_resume_sim_{}", protocol.as_str()));
+        let checkpointed = Scenario::from_config(cfg.clone())
+            .checkpoint_dir(&dir)
+            .checkpoint_every(3)
+            .run()
+            .unwrap();
+        // Checkpointing itself must not perturb the run.
+        assert_eq!(
+            full_bytes,
+            run_result_bytes(&checkpointed),
+            "{protocol:?}: checkpointing changed the run"
+        );
+
+        // "Process state discarded": a brand-new Scenario (fresh env,
+        // fresh protocol, fresh driver) resumes from the on-disk bytes.
+        for round in [3usize, 6] {
+            let resumed = Scenario::from_config(cfg.clone())
+                .resume_from(snap_file(&dir, round, "hflsnap"))
+                .run()
+                .unwrap();
+            assert_eq!(
+                full_bytes,
+                run_result_bytes(&resumed),
+                "{protocol:?}: resume from round {round} diverged"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The JSON debug codec meets the same bar on the sim backend.
+#[test]
+fn sim_resume_via_json_codec_is_byte_identical() {
+    let cfg = mock_cfg(ProtocolKind::HybridFl);
+    let full = Scenario::from_config(cfg.clone()).run().unwrap();
+
+    let dir = fresh_dir("hybridfl_resume_sim_json");
+    Scenario::from_config(cfg.clone())
+        .checkpoint_dir(&dir)
+        .checkpoint_every(4)
+        .snapshot_codec(CodecKind::Json)
+        .run()
+        .unwrap();
+    let resumed = Scenario::from_config(cfg)
+        .resume_from(snap_file(&dir, 4, "json"))
+        .run()
+        .unwrap();
+    assert_eq!(run_result_bytes(&full), run_result_bytes(&resumed));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The live threaded backend: same world enacted by real threads.
+/// Fold order at an edge is arrival order, so byte-identity across runs
+/// needs every within-region completion-time gap to dwarf scheduler
+/// jitter: a small fleet (few near-coincident completions) at a very
+/// generous time scale (1e-2 — a 1-virtual-second gap is 10 ms of wall
+/// clock, two orders of magnitude above sleep-wakeup jitter). This is
+/// the same regime `tests/live_runtime.rs` pins for sim/live parity,
+/// widened further.
+#[test]
+fn live_resume_is_byte_identical() {
+    let mut cfg = mock_cfg(ProtocolKind::HybridFl);
+    cfg.n_clients = 12;
+    cfg.dataset_size = 360;
+    cfg.t_max = 3;
+    cfg.seed = 42;
+    let scale = 1e-2;
+
+    let full = Scenario::from_config(cfg.clone())
+        .backend(Backend::Live)
+        .time_scale(scale)
+        .run()
+        .unwrap();
+    let full_bytes = run_result_bytes(&full);
+
+    let dir = fresh_dir("hybridfl_resume_live");
+    let checkpointed = Scenario::from_config(cfg.clone())
+        .backend(Backend::Live)
+        .time_scale(scale)
+        .checkpoint_dir(&dir)
+        .run()
+        .unwrap();
+    assert_eq!(full_bytes, run_result_bytes(&checkpointed));
+
+    let resumed = Scenario::from_config(cfg)
+        .backend(Backend::Live)
+        .time_scale(scale)
+        .resume_from(snap_file(&dir, 2, "hflsnap"))
+        .run()
+        .unwrap();
+    assert_eq!(full_bytes, run_result_bytes(&resumed));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A snapshot refuses to cross backends: the trace would silently mix
+/// wall-clock and virtual-clock rounds.
+#[test]
+fn resume_rejects_backend_mismatch() {
+    let cfg = mock_cfg(ProtocolKind::HybridFl);
+    let dir = fresh_dir("hybridfl_resume_backend_mismatch");
+    Scenario::from_config(cfg.clone())
+        .checkpoint_dir(&dir)
+        .checkpoint_every(3)
+        .run()
+        .unwrap();
+    let err = Scenario::from_config(cfg)
+        .backend(Backend::Live)
+        .time_scale(5e-3)
+        .resume_from(snap_file(&dir, 3, "hflsnap"))
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("backend"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite bugfix: resuming with a diverged config is a hard error that
+/// names the diverging fields — never an inconsistent hybrid run.
+#[test]
+fn resume_rejects_config_divergence_naming_fields() {
+    let cfg = mock_cfg(ProtocolKind::HybridFl);
+    let dir = fresh_dir("hybridfl_resume_cfg_mismatch");
+    Scenario::from_config(cfg.clone())
+        .checkpoint_dir(&dir)
+        .checkpoint_every(3)
+        .run()
+        .unwrap();
+
+    let mut diverged = cfg.clone();
+    diverged.c_fraction = 0.45;
+    diverged.dropout.mean = 0.6;
+    let err = Scenario::from_config(diverged)
+        .resume_from(snap_file(&dir, 3, "hflsnap"))
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("c_fraction"), "{err}");
+    assert!(err.contains("dropout.mean"), "{err}");
+
+    // A different protocol is also a config divergence (and is caught
+    // before any protocol state could be misapplied).
+    let mut other_proto = cfg;
+    other_proto.protocol = ProtocolKind::FedAvg;
+    let err = Scenario::from_config(other_proto)
+        .resume_from(snap_file(&dir, 3, "hflsnap"))
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("protocol"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Defense in depth under the fingerprint: a protocol refuses state of
+/// the wrong kind even when handed to it directly.
+#[test]
+fn protocol_restore_rejects_wrong_kind() {
+    use hybridfl::env::{FlEnvironment as _, VirtualClockEnv};
+    use hybridfl::protocols::{FedAvg, HierFavg, Protocol as _};
+
+    let cfg = mock_cfg(ProtocolKind::FedAvg);
+    let env = VirtualClockEnv::new(cfg.clone()).unwrap();
+    let fedavg = FedAvg::new(env.init_model());
+    let state = fedavg.snapshot_state();
+    let mut hier = HierFavg::new(&cfg, env.n_regions(), env.init_model());
+    let err = hier.restore_state(state).unwrap_err().to_string();
+    assert!(err.contains("fedavg"), "{err}");
+    assert!(err.contains("hierfavg"), "{err}");
+}
+
+/// Resuming from the final round's snapshot runs zero further rounds and
+/// still reproduces the uninterrupted result exactly.
+#[test]
+fn resume_at_final_round_is_a_noop_replay() {
+    let cfg = mock_cfg(ProtocolKind::FedAvg);
+    let full = Scenario::from_config(cfg.clone()).run().unwrap();
+    let dir = fresh_dir("hybridfl_resume_final");
+    Scenario::from_config(cfg.clone())
+        .checkpoint_dir(&dir)
+        .run()
+        .unwrap();
+    let resumed = Scenario::from_config(cfg.clone())
+        .resume_from(snap_file(&dir, cfg.t_max, "hflsnap"))
+        .run()
+        .unwrap();
+    assert_eq!(run_result_bytes(&full), run_result_bytes(&resumed));
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,313 @@
+//! Property tests for the snapshot codecs (ISSUE 4 satellite):
+//!
+//! * arbitrary `ModelParams` shapes round-trip bit-exactly through the
+//!   binary and JSON codecs;
+//! * truncated / corrupted / wrong-version byte streams come back as
+//!   typed `SnapshotError`s — never a panic;
+//! * `RunSnapshot` round-trips with the RNG streams intact (a restored
+//!   generator continues the original draw sequence exactly).
+
+use hybridfl::config::ExperimentConfig;
+use hybridfl::env::DriverState;
+use hybridfl::model::ModelParams;
+use hybridfl::protocols::ProtocolState;
+use hybridfl::rng::{Rng, RngState};
+use hybridfl::selection::SlackEstimator;
+use hybridfl::snapshot::{
+    decode_snapshot, fnv1a64, BinaryCodec, CodecKind, JsonCodec, RunSnapshot, SnapshotCodec,
+    SnapshotError,
+};
+
+/// Random parameter set: 0–5 tensors with 0–3 dims each (zero-sized
+/// dims included), finite values.
+fn arbitrary_params(rng: &mut Rng) -> ModelParams {
+    let n_tensors = rng.below(6);
+    let mut tensors = Vec::with_capacity(n_tensors);
+    let mut shapes = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        let ndims = rng.below(4);
+        let shape: Vec<usize> = (0..ndims).map(|_| rng.below(5)).collect();
+        let count: usize = shape.iter().product();
+        let values: Vec<f32> = (0..count).map(|_| rng.normal(0.0, 10.0) as f32).collect();
+        tensors.push(values);
+        shapes.push(shape);
+    }
+    ModelParams::new(tensors, shapes)
+}
+
+/// Wrap a protocol state in a structurally-valid snapshot (real config,
+/// consistent fingerprint, fresh driver).
+fn snap_with(protocol: ProtocolState, rng_state: RngState) -> RunSnapshot {
+    let config_json = ExperimentConfig::fig2().to_json().dump();
+    RunSnapshot {
+        backend: "sim".into(),
+        fingerprint: fnv1a64(config_json.as_bytes()),
+        config_json,
+        rng: rng_state,
+        protocol,
+        driver: DriverState::fresh(),
+    }
+}
+
+fn rng_state(seed: u64) -> RngState {
+    let mut r = Rng::new(seed);
+    for _ in 0..seed % 13 {
+        r.next_u64();
+    }
+    if seed % 2 == 0 {
+        let _ = r.gaussian(); // park a Box–Muller spare in the state
+    }
+    r.state()
+}
+
+/// Equality oracle: two snapshots are identical iff their canonical
+/// binary encodings are identical (bit-exact floats included).
+fn assert_same(a: &RunSnapshot, b: &RunSnapshot) {
+    assert_eq!(BinaryCodec.encode(a), BinaryCodec.encode(b));
+}
+
+#[test]
+fn arbitrary_params_roundtrip_bit_exactly_both_codecs() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let global = arbitrary_params(&mut rng);
+        let regionals: Vec<ModelParams> =
+            (0..rng.below(4)).map(|_| arbitrary_params(&mut rng)).collect();
+        let mut est = SlackEstimator::new(10 + rng.below(40), 0.3, 0.5);
+        for t in 0..rng.below(20) {
+            est.observe(t % 5, t % 2 == 0);
+        }
+        let snap = snap_with(
+            ProtocolState::HybridFl {
+                global,
+                regionals,
+                slack: vec![est.snapshot()],
+            },
+            rng_state(seed),
+        );
+        for codec in [&BinaryCodec as &dyn SnapshotCodec, &JsonCodec] {
+            let bytes = codec.encode(&snap);
+            let back = codec
+                .decode(&bytes)
+                .unwrap_or_else(|e| panic!("{} decode (seed {seed}): {e}", codec.name()));
+            assert_same(&snap, &back);
+            // Format sniffing must route to the right codec too.
+            assert_same(&snap, &decode_snapshot(&bytes).unwrap());
+        }
+    }
+}
+
+/// The binary codec must preserve *any* f32 bit pattern — NaN payloads
+/// and infinities included (the JSON codec documents NaN collapsing, so
+/// this is binary-only).
+#[test]
+fn binary_preserves_non_finite_bit_patterns() {
+    let weird = ModelParams::new(
+        vec![vec![
+            f32::NAN,
+            f32::from_bits(0x7fc0_dead), // NaN with a payload
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -0.0,
+            f32::MIN_POSITIVE,
+        ]],
+        vec![vec![6]],
+    );
+    let snap = snap_with(ProtocolState::FedAvg { global: weird }, rng_state(3));
+    let back = BinaryCodec.decode(&BinaryCodec.encode(&snap)).unwrap();
+    let (a, b) = match (&snap.protocol, &back.protocol) {
+        (ProtocolState::FedAvg { global: a }, ProtocolState::FedAvg { global: b }) => (a, b),
+        _ => unreachable!(),
+    };
+    for (x, y) in a.values().iter().zip(b.values().iter()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+#[test]
+fn rng_state_survives_roundtrip_and_continues_sequence() {
+    let mut original = Rng::new(99);
+    for _ in 0..7 {
+        original.next_u64();
+    }
+    let _ = original.gaussian(); // spare cached
+    let snap = snap_with(
+        ProtocolState::FedAvg {
+            global: ModelParams::new(vec![vec![1.0]], vec![vec![1]]),
+        },
+        original.state(),
+    );
+    for codec in [&BinaryCodec as &dyn SnapshotCodec, &JsonCodec] {
+        let back = codec.decode(&codec.encode(&snap)).unwrap();
+        let mut restored = Rng::from_state(back.rng);
+        let mut reference = Rng::from_state(original.state());
+        for _ in 0..50 {
+            assert_eq!(restored.gaussian().to_bits(), reference.gaussian().to_bits());
+            assert_eq!(restored.next_u64(), reference.next_u64());
+        }
+    }
+}
+
+#[test]
+fn every_truncation_is_a_typed_error_binary() {
+    let snap = snap_with(
+        ProtocolState::HierFavg {
+            global: ModelParams::new(vec![vec![1.0, 2.0]], vec![vec![2]]),
+            regionals: vec![ModelParams::new(vec![vec![3.0]], vec![vec![1]])],
+            region_data: vec![10.0],
+        },
+        rng_state(1),
+    );
+    let bytes = BinaryCodec.encode(&snap);
+    assert!(BinaryCodec.decode(&bytes).is_ok());
+    for len in 0..bytes.len() {
+        let err = BinaryCodec
+            .decode(&bytes[..len])
+            .expect_err(&format!("prefix of {len} bytes must not decode"));
+        assert!(
+            matches!(
+                err,
+                SnapshotError::BadMagic
+                    | SnapshotError::Truncated { .. }
+                    | SnapshotError::ChecksumMismatch { .. }
+                    | SnapshotError::Malformed(_)
+            ),
+            "prefix {len}: unexpected error {err:?}"
+        );
+    }
+}
+
+#[test]
+fn every_truncation_is_a_typed_error_json() {
+    let snap = snap_with(
+        ProtocolState::FedAvg {
+            global: ModelParams::new(vec![vec![1.5, -2.5]], vec![vec![2]]),
+        },
+        rng_state(2),
+    );
+    let bytes = JsonCodec.encode(&snap);
+    assert!(JsonCodec.decode(&bytes).is_ok());
+    for len in 0..bytes.len() {
+        assert!(
+            JsonCodec.decode(&bytes[..len]).is_err(),
+            "JSON prefix of {len} bytes must not decode"
+        );
+    }
+}
+
+/// Single-byte corruption anywhere in a binary snapshot must be caught —
+/// in the payload by the checksum, in the header by the field checks.
+#[test]
+fn every_single_byte_corruption_is_detected_binary() {
+    let snap = snap_with(
+        ProtocolState::FedAvg {
+            global: ModelParams::new(vec![vec![0.5; 8]], vec![vec![8]]),
+        },
+        rng_state(4),
+    );
+    let bytes = BinaryCodec.encode(&snap);
+    for i in 0..bytes.len() {
+        let mut corrupt = bytes.clone();
+        corrupt[i] ^= 0x55;
+        assert!(
+            BinaryCodec.decode(&corrupt).is_err(),
+            "flip at byte {i} went undetected"
+        );
+    }
+}
+
+#[test]
+fn wrong_version_is_rejected_not_misparsed() {
+    let snap = snap_with(
+        ProtocolState::FedAvg {
+            global: ModelParams::new(vec![vec![1.0]], vec![vec![1]]),
+        },
+        rng_state(5),
+    );
+    let mut bytes = BinaryCodec.encode(&snap);
+    bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+    match BinaryCodec.decode(&bytes) {
+        Err(SnapshotError::UnsupportedVersion { found: 99, supported }) => {
+            assert_eq!(supported, hybridfl::snapshot::FORMAT_VERSION);
+        }
+        other => panic!("expected UnsupportedVersion, got {other:?}"),
+    }
+
+    // Same policy for the JSON codec's format field.
+    let text = String::from_utf8(JsonCodec.encode(&snap)).unwrap();
+    let bumped = text.replace(
+        "\"snapshot_format\": 1",
+        "\"snapshot_format\": 99",
+    );
+    assert_ne!(text, bumped, "test must actually change the version field");
+    assert!(matches!(
+        JsonCodec.decode(bumped.as_bytes()),
+        Err(SnapshotError::UnsupportedVersion { found: 99, .. })
+    ));
+}
+
+#[test]
+fn json_missing_keys_and_garbage_are_malformed() {
+    assert!(matches!(
+        JsonCodec.decode(b"{\"kind\": \"hybridfl-run-snapshot\"}"),
+        Err(SnapshotError::Malformed(_))
+    ));
+    assert!(JsonCodec.decode(b"{not json").is_err());
+    // A JSON document of the wrong kind is "not a snapshot", not malformed.
+    assert!(matches!(
+        JsonCodec.decode(b"{\"kind\": \"something-else\"}"),
+        Err(SnapshotError::BadMagic)
+    ));
+}
+
+/// The config-fingerprint guard: a snapshot refuses to resume into a
+/// diverging config, and the error names the fields that moved.
+#[test]
+fn config_mismatch_names_the_diverging_fields() {
+    let snap = snap_with(
+        ProtocolState::FedAvg {
+            global: ModelParams::new(vec![vec![1.0]], vec![vec![1]]),
+        },
+        rng_state(6),
+    );
+    let mut changed = ExperimentConfig::fig2();
+    changed.c_fraction = 0.5;
+    changed.dropout.mean = 0.1;
+    let err = snap.ensure_config_matches(&changed).unwrap_err();
+    match err {
+        SnapshotError::ConfigMismatch { ref diverging } => {
+            assert!(diverging.contains(&"c_fraction".to_string()), "{diverging:?}");
+            assert!(diverging.contains(&"dropout.mean".to_string()), "{diverging:?}");
+            assert!(!diverging.contains(&"t_max".to_string()), "{diverging:?}");
+        }
+        other => panic!("expected ConfigMismatch, got {other:?}"),
+    }
+    let msg = err.to_string();
+    assert!(msg.contains("c_fraction"), "{msg}");
+    assert!(msg.contains("dropout.mean"), "{msg}");
+
+    // The matching config passes.
+    assert!(snap.ensure_config_matches(&ExperimentConfig::fig2()).is_ok());
+}
+
+/// A snapshot written by a real checkpointing run loads back through the
+/// public file API with either codec.
+#[test]
+fn file_save_load_roundtrip_both_codecs() {
+    use hybridfl::snapshot::{load_snapshot, save_snapshot};
+    let snap = snap_with(
+        ProtocolState::FedAvg {
+            global: ModelParams::new(vec![vec![2.0, 4.0]], vec![vec![2]]),
+        },
+        rng_state(7),
+    );
+    let dir = std::env::temp_dir().join("hybridfl_snapshot_file_roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    for kind in [CodecKind::Binary, CodecKind::Json] {
+        let path = dir.join(format!("snap.{}", kind.codec().extension()));
+        save_snapshot(&path, kind, &snap).unwrap();
+        let back = load_snapshot(&path).unwrap();
+        assert_same(&snap, &back);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
