@@ -1,0 +1,162 @@
+//! Bench: protocol dynamics under non-stationary churn — the dynamic
+//! Fig. 2 story. HybridFL vs FedAvg vs HierFAVG on a two-region fleet
+//! under bursty Markov availability plus a scripted drop-out step change
+//! (region 1, mid-run): round lengths, convergence, deadline pressure,
+//! and how fast HybridFL's selected proportion re-converges after the
+//! regime shift. Emits `BENCH_churn.json`.
+//!
+//! Run: `cargo bench --bench churn_adaptivity` (`--quick` for CI smoke,
+//! `--full` for the long horizon).
+
+use hybridfl::benchkit::{bench, black_box, write_report, BenchArgs};
+use hybridfl::churn::{ChurnModel, FaultEvent};
+use hybridfl::config::{Dist, EngineKind, ExperimentConfig, ProtocolKind, RegionSpec};
+use hybridfl::env::RunResult;
+use hybridfl::jsonx::Json;
+use hybridfl::scenario::Scenario;
+
+fn base_cfg(protocol: ProtocolKind, t_max: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::task1_scaled();
+    cfg.engine = EngineKind::Mock;
+    cfg.protocol = protocol;
+    cfg.n_clients = 40;
+    cfg.n_edges = 2;
+    cfg.regions = vec![
+        RegionSpec { n_clients: 20, dropout_mean: 0.3 },
+        RegionSpec { n_clients: 20, dropout_mean: 0.3 },
+    ];
+    cfg.dropout = Dist::new(0.3, 0.02);
+    cfg.c_fraction = 0.3;
+    cfg.dataset_size = 800;
+    cfg.eval_size = 50;
+    cfg.t_max = t_max;
+    cfg.seed = 42;
+    cfg
+}
+
+fn churn(shift_at: usize) -> ChurnModel {
+    ChurnModel::Composed {
+        layers: vec![
+            ChurnModel::MarkovOnOff {
+                p_fail: 0.08,
+                p_recover: 0.3,
+                down_dropout: 0.97,
+                region_scale: Vec::new(),
+            },
+            ChurnModel::FaultScript {
+                events: vec![FaultEvent::DropoutShift {
+                    region: Some(1),
+                    at_round: shift_at,
+                    delta: 0.3,
+                }],
+            },
+        ],
+    }
+}
+
+fn run(protocol: ProtocolKind, t_max: usize, shift_at: usize) -> RunResult {
+    Scenario::from_config(base_cfg(protocol, t_max))
+        .churn(churn(shift_at))
+        .run()
+        .expect("churn run failed")
+}
+
+/// Rounds after the shift until the trailing-10 mean alive fraction of
+/// the degraded region recovers to within 0.05 of its pre-shift mean
+/// (None = never within the run).
+fn reconverge_rounds(result: &RunResult, shift_at: usize, n_r: f64) -> Option<usize> {
+    let frac: Vec<f64> = result
+        .rounds
+        .iter()
+        .map(|r| r.alive[1] as f64 / n_r)
+        .collect();
+    let window = 10usize;
+    let pre_lo = shift_at.saturating_sub(1 + 2 * window);
+    let pre: f64 = frac[pre_lo..shift_at - 1].iter().sum::<f64>()
+        / (shift_at - 1 - pre_lo) as f64;
+    for end in (shift_at + window)..=frac.len() {
+        let mean: f64 = frac[end - window..end].iter().sum::<f64>() / window as f64;
+        if mean >= pre - 0.05 {
+            // rounds[end - 1] is round t = end.
+            return Some(end - shift_at);
+        }
+    }
+    None
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let (t_max, shift_at) = if args.quick {
+        (80, 30)
+    } else if args.full {
+        (400, 120)
+    } else {
+        (240, 80)
+    };
+
+    println!("=== churn adaptivity: Markov + drop-out step @round {shift_at}, {t_max} rounds ===");
+    let mut protocols = Json::obj();
+    let mut hybrid_reconverge: Option<usize> = None;
+    for p in ProtocolKind::ALL {
+        let result = run(p, t_max, shift_at);
+        let s = &result.summary;
+        let deadline_rounds = result.rounds.iter().filter(|r| r.deadline_hit).count();
+        let post_avg_len: f64 = {
+            let post: Vec<f64> = result
+                .rounds
+                .iter()
+                .filter(|r| r.t >= shift_at)
+                .map(|r| r.round_len)
+                .collect();
+            post.iter().sum::<f64>() / post.len().max(1) as f64
+        };
+        println!(
+            "{:<10} avg_round {:>8.2}s  post-shift avg {:>8.2}s  best_acc {:.4}  deadline {}/{}",
+            p.as_str(),
+            s.avg_round_len,
+            post_avg_len,
+            s.best_accuracy,
+            deadline_rounds,
+            result.rounds.len()
+        );
+        let mut entry = Json::obj()
+            .set("avg_round_len_s", s.avg_round_len)
+            .set("post_shift_avg_round_len_s", post_avg_len)
+            .set("best_accuracy", s.best_accuracy)
+            .set("deadline_rounds", deadline_rounds)
+            .set("rounds", result.rounds.len());
+        if p == ProtocolKind::HybridFl {
+            hybrid_reconverge = reconverge_rounds(&result, shift_at, 20.0);
+            entry = entry.set(
+                "reconverge_rounds",
+                hybrid_reconverge.map_or(Json::Null, |r| Json::Num(r as f64)),
+            );
+            println!(
+                "           selected-proportion re-convergence: {}",
+                hybrid_reconverge
+                    .map_or("not within run".into(), |r| format!("{r} rounds after shift"))
+            );
+        }
+        protocols = protocols.set(p.as_str(), entry);
+    }
+
+    // Engine throughput of one full churning HybridFL run.
+    let iters = if args.quick { 3 } else { 10 };
+    let stats = bench(1, iters, || {
+        black_box(run(ProtocolKind::HybridFl, t_max, shift_at));
+    });
+    stats.report(&format!("churn: {t_max}-round HybridFL run (markov+shift)"));
+
+    let report = Json::obj()
+        .set("bench", "churn_adaptivity")
+        .set("t_max", t_max)
+        .set("shift_at", shift_at)
+        .set("protocols", protocols)
+        .set(
+            "hybrid_reconverge_rounds",
+            hybrid_reconverge.map_or(Json::Null, |r| Json::Num(r as f64)),
+        )
+        .set("run_mean_s", stats.mean.as_secs_f64())
+        .set("run_p50_s", stats.p50.as_secs_f64());
+    write_report("churn", &report);
+}

@@ -68,6 +68,7 @@ fn representative_snapshot(regions: usize, rounds: usize) -> RunSnapshot {
             selected: vec![20; regions],
             alive: vec![16; regions],
             submissions: vec![12; regions],
+            avail: vec![0.7; regions],
             cum_energy_j: driver.cum_energy,
             deadline_hit: t % 5 == 0,
             cloud_aggregated: true,
@@ -81,6 +82,10 @@ fn representative_snapshot(regions: usize, rounds: usize) -> RunSnapshot {
         fingerprint: fnv1a64(config_json.as_bytes()),
         config_json,
         rng: Rng::new(99).state(),
+        // A churning world's state: one Markov flag per client.
+        churn: hybridfl::churn::ChurnState::Markov {
+            up: (0..500).map(|k| k % 7 != 0).collect(),
+        },
         protocol: ProtocolState::HybridFl {
             global: lenet_sized_params(0),
             regionals: (1..=regions as u64).map(lenet_sized_params).collect(),

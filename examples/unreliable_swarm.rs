@@ -1,25 +1,41 @@
-//! Unreliable swarm: watch the regional slack factors adapt, live, to a
-//! fleet whose regions have wildly different (and agnostic!) reliability.
+//! Unreliable swarm, now with a *churning* world: watch the regional
+//! slack factors adapt, live, to reliability that the protocol cannot
+//! observe — and that refuses to stand still.
 //!
-//! Three regions with drop-out means 0.2 / 0.5 / 0.8. The edges can only
-//! count submissions — no client probing — yet θ̂_r separates cleanly and
-//! per-region participation |X_r|/n_r is steered toward the cloud's C.
+//! Three regions with drop-out means 0.2 / 0.5 / 0.8, two churn layers
+//! on top of the sampled fleet:
+//!
+//! * **MarkovOnOff** — every client is a bursty two-state chain, so
+//!   outages arrive correlated over rounds instead of i.i.d.;
+//! * **FaultScript** — one scripted blackout takes region 2's edge down
+//!   completely for rounds 50..70.
+//!
+//! The edges still only count submissions — no client probing — yet θ̂_r
+//! separates by reliability, collapses with the blackout, and re-converges
+//! after the edge comes back. The run's ground truth (per-round fates) is
+//! exported to a replayable JSON trace at the end.
 //!
 //! ```bash
 //! cargo run --release --example unreliable_swarm     # mock engine, instant
 //! ```
 
+use hybridfl::churn::{ChurnModel, FaultEvent};
 use hybridfl::config::{Dist, RegionSpec};
 use hybridfl::scenario::Scenario;
 
 fn main() -> hybridfl::Result<()> {
+    let blackout = FaultEvent::RegionBlackout {
+        region: 2,
+        from_round: 50,
+        until_round: 70,
+    };
     let sc = Scenario::task1()
         .mock() // protocol dynamics; no artifacts needed
         .clients(60)
         .edges(3)
         .dataset_size(3000)
         .c_fraction(0.3)
-        .rounds(120)
+        .rounds(140)
         .tune(|cfg| {
             cfg.name = "unreliable-swarm".into();
             cfg.regions = vec![
@@ -28,9 +44,24 @@ fn main() -> hybridfl::Result<()> {
                 RegionSpec { n_clients: 20, dropout_mean: 0.8 },
             ];
             cfg.dropout = Dist::new(0.5, 0.05);
-        });
+        })
+        .churn(ChurnModel::Composed {
+            layers: vec![
+                ChurnModel::MarkovOnOff {
+                    p_fail: 0.05,
+                    p_recover: 0.3,
+                    down_dropout: 0.95,
+                    region_scale: Vec::new(),
+                },
+                ChurnModel::FaultScript {
+                    events: vec![blackout],
+                },
+            ],
+        })
+        .record_fates("reports/unreliable_swarm_fates.json");
 
     println!("three regions, drop-out means 0.2 / 0.5 / 0.8 — reliability agnostic");
+    println!("churn: markov bursts everywhere + region 3 blackout over rounds 50..70");
     println!(
         "cloud target: C = {} of the fleet submitting each round\n",
         sc.config().c_fraction
@@ -38,38 +69,56 @@ fn main() -> hybridfl::Result<()> {
 
     let result = sc.run()?;
 
-    println!("round |        theta_r        |         C_r          |   |X_r|/n_r");
-    for row in result.rounds.iter().filter(|r| r.t % 12 == 0 || r.t == 1) {
+    println!("round |        theta_r        |      avail_r (truth)   |   |X_r|/n_r");
+    for row in result
+        .rounds
+        .iter()
+        .filter(|r| r.t % 10 == 0 || r.t == 1 || r.t == 50 || r.t == 70)
+    {
         let slack = row.slack.as_ref().unwrap();
         let thetas: Vec<String> = slack.iter().map(|s| format!("{:.2}", s.theta)).collect();
-        let crs: Vec<String> = slack.iter().map(|s| format!("{:.2}", s.c_r)).collect();
+        let avail: Vec<String> = row.avail.iter().map(|a| format!("{a:.2}")).collect();
         let alive: Vec<String> = row
             .alive
             .iter()
             .map(|&a| format!("{:.2}", a as f64 / 20.0))
             .collect();
         println!(
-            "{:>5} | {:>21} | {:>20} | {:>16}",
+            "{:>5} | {:>21} | {:>22} | {:>16}",
             row.t,
             thetas.join("  "),
-            crs.join("  "),
+            avail.join("  "),
             alive.join("  ")
         );
     }
 
-    // Converged view (last 30 rounds).
-    let tail = &result.rounds[90..];
-    println!("\nconverged means (rounds 91-120):");
+    // The blackout window: region 3 goes silent, ground truth says why.
+    let in_blackout = &result.rounds[54]; // t = 55
+    println!(
+        "\nmid-blackout (round {}): region 3 avail {:.2}, submissions {:?}",
+        in_blackout.t, in_blackout.avail[2], in_blackout.submissions
+    );
+    assert_eq!(in_blackout.submissions[2], 0);
+
+    // Converged view after the blackout lifts (last 30 rounds).
+    let tail = &result.rounds[110..];
+    println!("\nre-converged means (rounds 111-140, blackout long over):");
     for r in 0..3 {
         let theta: f64 =
             tail.iter().map(|x| x.slack.as_ref().unwrap()[r].theta).sum::<f64>() / 30.0;
         let alive: f64 =
             tail.iter().map(|x| x.alive[r] as f64 / 20.0).sum::<f64>() / 30.0;
+        let avail: f64 = tail.iter().map(|x| x.avail[r]).sum::<f64>() / 30.0;
         println!(
-            "  region {} (E[dr]={:.1}):  theta={theta:.2}  participation={alive:.2}  (target C=0.30)",
+            "  region {} (E[dr]={:.1}):  theta={theta:.2}  truth avail={avail:.2}  \
+             participation={alive:.2}  (target C=0.30)",
             r + 1,
             [0.2, 0.5, 0.8][r]
         );
     }
+    println!("\nground-truth fate trace -> reports/unreliable_swarm_fates.json");
+    println!("replay it by rebuilding this scenario with");
+    println!("  .replay_fates(\"reports/unreliable_swarm_fates.json\")");
+    println!("in place of .churn(..) — same rounds, fate for fate.");
     Ok(())
 }

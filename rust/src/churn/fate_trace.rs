@@ -1,0 +1,320 @@
+//! Fate traces: ground-truth per-round client fates, recordable from any
+//! run and replayable as a scenario.
+//!
+//! A [`FateTrace`] maps `(round, client)` to the client's fate — did it
+//! drop out, and when did it complete (virtual seconds from round start).
+//! The environment records one entry per *selected* client per round
+//! (`--record-fates`); the JSON file it writes can be replayed verbatim
+//! (`--replay-fates`, [`crate::churn::ChurnModel::Replay`]), hand-edited,
+//! or written from scratch to script arbitrary availability patterns.
+//!
+//! Replay semantics: a selected client listed in the trace for that round
+//! takes its recorded fate bit-for-bit; a selected client the trace does
+//! not list is treated as unavailable (dropped). Selection itself is
+//! untouched — it draws from the seeded RNG stream exactly as before —
+//! so re-running the recorded experiment with its own trace is a fixed
+//! point: the replayed run records the identical trace.
+//!
+//! # File format
+//!
+//! ```json
+//! {
+//!   "kind": "hybridfl-fate-trace",
+//!   "version": 1,
+//!   "rounds": [
+//!     {"t": 1, "fates": [
+//!       {"client": 0, "region": 0, "dropped": false, "completion": 41.25},
+//!       {"client": 7, "region": 1, "dropped": true}
+//!     ]}
+//!   ]
+//! }
+//! ```
+//!
+//! Dropped entries carry no `completion` (it is +∞, which JSON cannot
+//! express); `completion` is required for non-dropped entries. Floats
+//! round-trip bit-exactly through the shortest-roundtrip formatting of
+//! [`crate::jsonx`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::env::ClientFate;
+use crate::jsonx::Json;
+
+/// Trace-file `kind` discriminator.
+const KIND: &str = "hybridfl-fate-trace";
+/// Trace-file format version.
+const VERSION: u64 = 1;
+
+/// One client's recorded fate in one round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FateRecord {
+    /// Region the client belonged to when the fate played out (kept for
+    /// analysis; replay routes by the *current* topology).
+    pub region: usize,
+    pub dropped: bool,
+    /// Completion time in virtual seconds from round start
+    /// (`f64::INFINITY` when dropped).
+    pub completion: f64,
+}
+
+/// Ground-truth per-round fates, keyed `(round, client)`. BTreeMaps keep
+/// serialization deterministic (stable diffs, byte-stable fixed points).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FateTrace {
+    rounds: BTreeMap<usize, BTreeMap<usize, FateRecord>>,
+}
+
+impl FateTrace {
+    pub fn new() -> FateTrace {
+        FateTrace::default()
+    }
+
+    /// Record every fate of one executed round (the environment calls
+    /// this right after drawing — or replaying — the round's fates).
+    pub fn record(&mut self, t: usize, fates: &[ClientFate]) {
+        let round = self.rounds.entry(t).or_default();
+        for f in fates {
+            round.insert(
+                f.client,
+                FateRecord {
+                    region: f.region,
+                    dropped: f.dropped,
+                    completion: f.completion,
+                },
+            );
+        }
+    }
+
+    /// Insert a single hand-written entry.
+    pub fn insert(&mut self, t: usize, client: usize, rec: FateRecord) {
+        self.rounds.entry(t).or_default().insert(client, rec);
+    }
+
+    /// The recorded fate of `client` in round `t`, if any.
+    pub fn get(&self, t: usize, client: usize) -> Option<&FateRecord> {
+        self.rounds.get(&t).and_then(|r| r.get(&client))
+    }
+
+    /// Number of rounds with at least one recorded fate.
+    pub fn n_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Total number of recorded (round, client) entries.
+    pub fn n_entries(&self) -> usize {
+        self.rounds.values().map(|r| r.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rounds.is_empty()
+    }
+
+    // --- serialization ------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let rounds: Vec<Json> = self
+            .rounds
+            .iter()
+            .map(|(&t, fates)| {
+                let entries: Vec<Json> = fates
+                    .iter()
+                    .map(|(&client, rec)| {
+                        let j = Json::obj()
+                            .set("client", client)
+                            .set("region", rec.region)
+                            .set("dropped", rec.dropped);
+                        if rec.dropped {
+                            j
+                        } else {
+                            j.set("completion", rec.completion)
+                        }
+                    })
+                    .collect();
+                Json::obj().set("t", t).set("fates", Json::Arr(entries))
+            })
+            .collect();
+        Json::obj()
+            .set("kind", KIND)
+            .set("version", VERSION)
+            .set("rounds", Json::Arr(rounds))
+    }
+
+    pub fn from_json(j: &Json) -> Result<FateTrace> {
+        match j.get("kind") {
+            Some(Json::Str(k)) if k == KIND => {}
+            _ => bail!("not a fate trace (missing kind '{KIND}')"),
+        }
+        let version = j.req("version")?.as_usize()? as u64;
+        if version != VERSION {
+            bail!("fate-trace version {version} is not supported (this build reads {VERSION})");
+        }
+        let mut trace = FateTrace::new();
+        for round in j.req("rounds")?.as_arr()? {
+            let t = round.req("t")?.as_usize()?;
+            if t == 0 {
+                bail!("fate-trace rounds are 1-based; round 0 is invalid");
+            }
+            for entry in round.req("fates")?.as_arr()? {
+                let client = entry.req("client")?.as_usize()?;
+                let region = entry.req("region")?.as_usize()?;
+                let dropped = entry.req("dropped")?.as_bool()?;
+                let completion = if dropped {
+                    f64::INFINITY
+                } else {
+                    let c = entry
+                        .req("completion")
+                        .context("non-dropped fate needs a completion time")?
+                        .as_f64()?;
+                    if !(c.is_finite() && c >= 0.0) {
+                        bail!("completion must be finite and >= 0, got {c}");
+                    }
+                    c
+                };
+                if trace
+                    .rounds
+                    .entry(t)
+                    .or_default()
+                    .insert(
+                        client,
+                        FateRecord {
+                            region,
+                            dropped,
+                            completion,
+                        },
+                    )
+                    .is_some()
+                {
+                    bail!("round {t} lists client {client} twice");
+                }
+            }
+        }
+        Ok(trace)
+    }
+
+    /// Write the trace as pretty JSON (atomically: temp file + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, self.to_json().pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<FateTrace> {
+        Self::from_json(&Json::parse_file(path)?)
+            .with_context(|| format!("loading fate trace {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fate(client: usize, region: usize, dropped: bool, completion: f64) -> ClientFate {
+        ClientFate {
+            client,
+            region,
+            dropped,
+            completion,
+        }
+    }
+
+    #[test]
+    fn record_get_and_counts() {
+        let mut tr = FateTrace::new();
+        tr.record(
+            1,
+            &[fate(0, 0, false, 12.5), fate(3, 1, true, f64::INFINITY)],
+        );
+        tr.record(2, &[fate(0, 0, false, 9.0)]);
+        assert_eq!(tr.n_rounds(), 2);
+        assert_eq!(tr.n_entries(), 3);
+        assert!(!tr.get(1, 0).unwrap().dropped);
+        assert!(tr.get(1, 3).unwrap().dropped);
+        assert!(tr.get(1, 3).unwrap().completion.is_infinite());
+        assert!(tr.get(1, 7).is_none());
+        assert!(tr.get(3, 0).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_bit_exact() {
+        let mut tr = FateTrace::new();
+        tr.record(
+            1,
+            &[
+                fate(0, 0, false, 41.25),
+                fate(1, 0, false, 0.1 + 0.2), // non-representable decimal
+                fate(9, 1, true, f64::INFINITY),
+            ],
+        );
+        tr.record(7, &[fate(4, 1, false, 1e-12)]);
+        let back = FateTrace::from_json(&Json::parse(&tr.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(tr, back);
+        assert_eq!(
+            back.get(1, 1).unwrap().completion.to_bits(),
+            (0.1f64 + 0.2).to_bits()
+        );
+    }
+
+    #[test]
+    fn file_save_load_roundtrip() {
+        let mut tr = FateTrace::new();
+        tr.record(1, &[fate(2, 0, false, 5.0)]);
+        let dir = std::env::temp_dir().join("hybridfl_fate_trace_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("trace.json");
+        tr.save(&path).unwrap();
+        assert_eq!(FateTrace::load(&path).unwrap(), tr);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_traces_are_rejected() {
+        let bad = [
+            r#"{"version": 1, "rounds": []}"#, // no kind
+            r#"{"kind": "hybridfl-fate-trace", "version": 9, "rounds": []}"#,
+            r#"{"kind": "hybridfl-fate-trace", "version": 1,
+                "rounds": [{"t": 0, "fates": []}]}"#, // round 0
+            r#"{"kind": "hybridfl-fate-trace", "version": 1,
+                "rounds": [{"t": 1, "fates": [
+                    {"client": 0, "region": 0, "dropped": false}]}]}"#, // no completion
+            r#"{"kind": "hybridfl-fate-trace", "version": 1,
+                "rounds": [{"t": 1, "fates": [
+                    {"client": 0, "region": 0, "dropped": true},
+                    {"client": 0, "region": 0, "dropped": true}]}]}"#, // duplicate
+        ];
+        for text in bad {
+            let j = Json::parse(text).unwrap();
+            assert!(FateTrace::from_json(&j).is_err(), "accepted: {text}");
+        }
+    }
+
+    #[test]
+    fn handwritten_trace_builds_via_insert() {
+        let mut tr = FateTrace::new();
+        for k in 0..5 {
+            tr.insert(
+                1,
+                k,
+                FateRecord {
+                    region: 0,
+                    dropped: k % 2 == 0,
+                    completion: if k % 2 == 0 { f64::INFINITY } else { 30.0 },
+                },
+            );
+        }
+        assert_eq!(tr.n_entries(), 5);
+        assert!(tr.get(1, 0).unwrap().dropped);
+        assert!(!tr.get(1, 1).unwrap().dropped);
+    }
+}

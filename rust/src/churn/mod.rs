@@ -1,0 +1,1450 @@
+//! Dynamic reliability: time-varying churn processes, scripted fault
+//! events, and fate-trace replay.
+//!
+//! The paper's whole pitch is that the regional slack estimator adapts to
+//! client reliability it cannot observe — but a *stationary* world (one
+//! `dropout_p` per client, i.i.d. fates every round) only ever tests the
+//! estimator against a fixed target. Real MEC fleets churn: diurnal
+//! availability cycles, battery depletion, flash crowds and correlated
+//! edge outages are the norm in mobile edge networks. This module makes
+//! the simulated world non-stationary while keeping every draw
+//! deterministic in the seed.
+//!
+//! # Architecture
+//!
+//! * [`ChurnModel`] — the *config-level* description of the world's
+//!   dynamics. It lives in [`crate::config::ExperimentConfig::churn`],
+//!   serializes with the config (so it participates in the snapshot
+//!   fingerprint) and parses from a compact CLI spec
+//!   ([`ChurnModel::parse_spec`], the `--churn` flag).
+//! * [`WorldDynamics`] — the *runtime* process. Both
+//!   [`crate::env::FlEnvironment`] backends run one dynamics step at each
+//!   round boundary, **before** the round's fate draw: the step resets
+//!   the fleet to its pristine base profiles, then lets the model rewrite
+//!   per-client reliability (and, for mobility events, the topology) as a
+//!   deterministic function of its state, the round index and a dedicated
+//!   RNG substream. Protocols never observe any of this — they still see
+//!   only submission counts, exactly the paper's reliability-agnostic
+//!   contract.
+//! * [`ChurnState`] — the process's mutable state at a round boundary
+//!   (Markov on/off flags, battery levels). Captured into a
+//!   [`crate::snapshot::RunSnapshot`] so a resumed run continues the
+//!   exact reliability trajectory of the uninterrupted one.
+//! * [`FateTrace`] — ground-truth per-round fates recorded by the
+//!   environment (`--record-fates`) and replayable as a scenario
+//!   (`--replay-fates` / [`ChurnModel::Replay`]), including hand-written
+//!   or externally derived traces. Replaying a recorded trace is a fixed
+//!   point: the replayed run records the identical trace.
+//!
+//! # Determinism discipline
+//!
+//! The dynamics step draws from `round_rng.split(t).split(CHURN_STREAM)`
+//! — a child stream of the round's RNG. Stream splitting never advances
+//! the parent, so the selection and fate draws that follow are
+//! bit-identical whether the step drew nothing ([`ChurnModel::Stationary`])
+//! or ten thousand Bernoullis: a `Stationary` run is byte-identical to a
+//! run of the pre-churn code, and adding churn never perturbs the parts
+//! of the world it does not touch.
+
+pub mod fate_trace;
+
+pub use fate_trace::{FateRecord, FateTrace};
+
+use anyhow::{bail, Context, Result};
+
+use crate::devices::ClientProfile;
+use crate::jsonx::Json;
+use crate::rng::Rng;
+use crate::topology::Topology;
+
+/// Config-level description of the world's reliability dynamics. The
+/// default ([`ChurnModel::Stationary`]) reproduces the historical
+/// behavior: one static `dropout_p` per client, i.i.d. fates per round.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChurnModel {
+    /// Frozen world — today's behavior, and the default.
+    Stationary,
+    /// Bursty availability: each client is an independent two-state
+    /// Markov chain stepped once per round. An *up* client keeps its base
+    /// `dropout_p`; a *down* client drops out with `down_dropout`
+    /// (correlated multi-round outages, unlike i.i.d. fates).
+    MarkovOnOff {
+        /// P(up → down) per round.
+        p_fail: f64,
+        /// P(down → up) per round.
+        p_recover: f64,
+        /// Effective drop-out probability while down (≈ 1).
+        down_dropout: f64,
+        /// Optional per-region multiplier on both transition rates
+        /// (empty = 1.0 everywhere; otherwise one entry per region).
+        region_scale: Vec<f64>,
+    },
+    /// Sinusoidal drop-out modulation — the diurnal availability cycle:
+    /// `dropout_k(t) = clamp(base_k + amplitude · sin(2π(t−1)/period + φ_r))`.
+    Diurnal {
+        /// Peak drop-out modulation added to the base probability.
+        amplitude: f64,
+        /// Cycle length in rounds.
+        period: usize,
+        /// Per-region phase offsets φ_r in radians (empty = evenly
+        /// spaced over the cycle, so regions peak at different times).
+        region_phase: Vec<f64>,
+    },
+    /// Monotone battery depletion with recharge: every client starts at a
+    /// jittered charge level, loses `drain_per_round` per round, and once
+    /// depleted drops out with `depleted_dropout` until a per-round
+    /// recharge draw (`recharge_p`) restores it to full charge.
+    BatteryDrain {
+        drain_per_round: f64,
+        recharge_p: f64,
+        depleted_dropout: f64,
+    },
+    /// Scheduled, scripted events (region blackout over a round window,
+    /// drop-out step changes, bandwidth degradation, client mobility
+    /// between regions). Pure function of the round index — no state.
+    FaultScript { events: Vec<FaultEvent> },
+    /// Replay the ground-truth fates of a recorded [`FateTrace`] instead
+    /// of drawing them: selected clients take their recorded
+    /// dropped/completion — and recorded region attachment — verbatim; a
+    /// selected client the trace does not list for that round is treated
+    /// as unavailable (dropped). Traces recorded under migration events
+    /// replay faithfully on the virtual clock only: the live fabric
+    /// binds clients to their base edges, so a recorded region that
+    /// disagrees with the static topology cannot be enacted there.
+    Replay {
+        /// Path to the trace JSON (written by `--record-fates` or by
+        /// hand).
+        path: String,
+    },
+    /// Layered composition: each layer rewrites the fleet in order, on
+    /// top of what the previous layers produced (e.g. Markov burstiness
+    /// plus one scripted regional blackout). One level deep; `Replay` is
+    /// not composable (it bypasses the world entirely).
+    Composed { layers: Vec<ChurnModel> },
+}
+
+impl Default for ChurnModel {
+    fn default() -> ChurnModel {
+        ChurnModel::Stationary
+    }
+}
+
+/// One scripted fault event ([`ChurnModel::FaultScript`]). Round windows
+/// are half-open `[from_round, until_round)` over 1-based round indices;
+/// point events apply from `at_round` onward.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Every client of `region` is unavailable during the window — a
+    /// correlated edge outage.
+    RegionBlackout {
+        region: usize,
+        from_round: usize,
+        until_round: usize,
+    },
+    /// Permanent drop-out step change from `at_round` on: `delta` is
+    /// added to the affected clients' base drop-out probability
+    /// (`region: None` = the whole fleet). The dynamic Fig. 2 scenario.
+    DropoutShift {
+        region: Option<usize>,
+        at_round: usize,
+        delta: f64,
+    },
+    /// Wireless bandwidth of `region`'s clients is multiplied by
+    /// `factor` (∈ (0, 1]) during the window — longer completions, more
+    /// stragglers, same aliveness.
+    BandwidthDegrade {
+        region: usize,
+        from_round: usize,
+        until_round: usize,
+        factor: f64,
+    },
+    /// Client mobility: from `at_round` on, `client` is attached to
+    /// `to_region`'s edge. Supported on the virtual-clock backend only
+    /// (the live fabric binds client threads to edge channels at spawn).
+    Migrate {
+        client: usize,
+        at_round: usize,
+        to_region: usize,
+    },
+}
+
+fn prob(v: f64, what: &str) -> Result<()> {
+    if !(0.0..=1.0).contains(&v) || !v.is_finite() {
+        bail!("{what} must be a probability in [0, 1], got {v}");
+    }
+    Ok(())
+}
+
+impl FaultEvent {
+    /// Validate against the experiment's region/client counts.
+    fn validate(&self, n_regions: usize, n_clients: usize) -> Result<()> {
+        let region_ok = |r: usize| -> Result<()> {
+            if r >= n_regions {
+                bail!("event names region {r} but the topology has {n_regions} regions");
+            }
+            Ok(())
+        };
+        match self {
+            FaultEvent::RegionBlackout {
+                region,
+                from_round,
+                until_round,
+            } => {
+                region_ok(*region)?;
+                if from_round >= until_round {
+                    bail!(
+                        "blackout window [{from_round}, {until_round}) is empty \
+                         (rounds are 1-based, until is exclusive)"
+                    );
+                }
+            }
+            FaultEvent::DropoutShift { region, delta, .. } => {
+                if let Some(r) = region {
+                    region_ok(*r)?;
+                }
+                if !delta.is_finite() || delta.abs() > 1.0 {
+                    bail!("dropout shift delta must be finite and in [-1, 1], got {delta}");
+                }
+            }
+            FaultEvent::BandwidthDegrade {
+                region,
+                from_round,
+                until_round,
+                factor,
+            } => {
+                region_ok(*region)?;
+                if from_round >= until_round {
+                    bail!(
+                        "bandwidth window [{from_round}, {until_round}) is empty \
+                         (rounds are 1-based, until is exclusive)"
+                    );
+                }
+                if !(*factor > 0.0 && *factor <= 1.0) {
+                    bail!("bandwidth factor must be in (0, 1], got {factor}");
+                }
+            }
+            FaultEvent::Migrate {
+                client, to_region, ..
+            } => {
+                region_ok(*to_region)?;
+                if *client >= n_clients {
+                    bail!("migration names client {client} but the fleet has {n_clients} clients");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            FaultEvent::RegionBlackout {
+                region,
+                from_round,
+                until_round,
+            } => Json::obj()
+                .set("kind", "region_blackout")
+                .set("region", *region)
+                .set("from_round", *from_round)
+                .set("until_round", *until_round),
+            FaultEvent::DropoutShift {
+                region,
+                at_round,
+                delta,
+            } => Json::obj()
+                .set("kind", "dropout_shift")
+                .set(
+                    "region",
+                    region.map_or(Json::Null, |r| Json::Num(r as f64)),
+                )
+                .set("at_round", *at_round)
+                .set("delta", *delta),
+            FaultEvent::BandwidthDegrade {
+                region,
+                from_round,
+                until_round,
+                factor,
+            } => Json::obj()
+                .set("kind", "bandwidth_degrade")
+                .set("region", *region)
+                .set("from_round", *from_round)
+                .set("until_round", *until_round)
+                .set("factor", *factor),
+            FaultEvent::Migrate {
+                client,
+                at_round,
+                to_region,
+            } => Json::obj()
+                .set("kind", "migrate")
+                .set("client", *client)
+                .set("at_round", *at_round)
+                .set("to_region", *to_region),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<FaultEvent> {
+        let kind = j.req("kind")?.as_str()?;
+        Ok(match kind {
+            "region_blackout" => FaultEvent::RegionBlackout {
+                region: j.req("region")?.as_usize()?,
+                from_round: j.req("from_round")?.as_usize()?,
+                until_round: j.req("until_round")?.as_usize()?,
+            },
+            "dropout_shift" => FaultEvent::DropoutShift {
+                region: match j.req("region")? {
+                    Json::Null => None,
+                    v => Some(v.as_usize()?),
+                },
+                at_round: j.req("at_round")?.as_usize()?,
+                delta: j.req("delta")?.as_f64()?,
+            },
+            "bandwidth_degrade" => FaultEvent::BandwidthDegrade {
+                region: j.req("region")?.as_usize()?,
+                from_round: j.req("from_round")?.as_usize()?,
+                until_round: j.req("until_round")?.as_usize()?,
+                factor: j.req("factor")?.as_f64()?,
+            },
+            "migrate" => FaultEvent::Migrate {
+                client: j.req("client")?.as_usize()?,
+                at_round: j.req("at_round")?.as_usize()?,
+                to_region: j.req("to_region")?.as_usize()?,
+            },
+            k => bail!("unknown fault event kind '{k}'"),
+        })
+    }
+}
+
+impl ChurnModel {
+    /// Short kind label for logs and error messages.
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            ChurnModel::Stationary => "stationary",
+            ChurnModel::MarkovOnOff { .. } => "markov",
+            ChurnModel::Diurnal { .. } => "diurnal",
+            ChurnModel::BatteryDrain { .. } => "battery",
+            ChurnModel::FaultScript { .. } => "script",
+            ChurnModel::Replay { .. } => "replay",
+            ChurnModel::Composed { .. } => "composed",
+        }
+    }
+
+    /// Whether this model contains a [`FaultEvent::Migrate`] anywhere —
+    /// the live backend rejects those (client threads are bound to their
+    /// edge channels at spawn).
+    pub fn has_migrations(&self) -> bool {
+        match self {
+            ChurnModel::FaultScript { events } => events
+                .iter()
+                .any(|e| matches!(e, FaultEvent::Migrate { .. })),
+            ChurnModel::Composed { layers } => layers.iter().any(|l| l.has_migrations()),
+            _ => false,
+        }
+    }
+
+    /// Whether the dynamics step is a structural no-op (fates come from
+    /// the base profiles or from a replayed trace).
+    pub fn is_noop(&self) -> bool {
+        match self {
+            ChurnModel::Stationary | ChurnModel::Replay { .. } => true,
+            ChurnModel::Composed { layers } => layers.iter().all(|l| l.is_noop()),
+            _ => false,
+        }
+    }
+
+    /// Validate against the experiment's region/client counts (called
+    /// from [`crate::config::ExperimentConfig::validate`]).
+    pub fn validate(&self, n_regions: usize, n_clients: usize) -> Result<()> {
+        self.validate_inner(n_regions, n_clients, true)
+    }
+
+    fn validate_inner(&self, n_regions: usize, n_clients: usize, top: bool) -> Result<()> {
+        match self {
+            ChurnModel::Stationary => {}
+            ChurnModel::MarkovOnOff {
+                p_fail,
+                p_recover,
+                down_dropout,
+                region_scale,
+            } => {
+                prob(*p_fail, "markov p_fail")?;
+                prob(*p_recover, "markov p_recover")?;
+                prob(*down_dropout, "markov down_dropout")?;
+                if !region_scale.is_empty() && region_scale.len() != n_regions {
+                    bail!(
+                        "markov region_scale has {} entries but the topology has {} regions \
+                         (leave it empty for 1.0 everywhere)",
+                        region_scale.len(),
+                        n_regions
+                    );
+                }
+                for (r, &s) in region_scale.iter().enumerate() {
+                    if !(s.is_finite() && s >= 0.0) {
+                        bail!("markov region_scale[{r}] must be a finite non-negative factor, got {s}");
+                    }
+                }
+            }
+            ChurnModel::Diurnal {
+                amplitude,
+                period,
+                region_phase,
+            } => {
+                prob(*amplitude, "diurnal amplitude")?;
+                if *period == 0 {
+                    bail!("diurnal period must be >= 1 round");
+                }
+                if !region_phase.is_empty() && region_phase.len() != n_regions {
+                    bail!(
+                        "diurnal region_phase has {} entries but the topology has {} regions \
+                         (leave it empty for evenly spaced phases)",
+                        region_phase.len(),
+                        n_regions
+                    );
+                }
+                for (r, &p) in region_phase.iter().enumerate() {
+                    if !p.is_finite() {
+                        bail!("diurnal region_phase[{r}] must be finite, got {p}");
+                    }
+                }
+            }
+            ChurnModel::BatteryDrain {
+                drain_per_round,
+                recharge_p,
+                depleted_dropout,
+            } => {
+                if !(*drain_per_round > 0.0 && *drain_per_round <= 1.0) {
+                    bail!("battery drain_per_round must be in (0, 1], got {drain_per_round}");
+                }
+                prob(*recharge_p, "battery recharge_p")?;
+                prob(*depleted_dropout, "battery depleted_dropout")?;
+            }
+            ChurnModel::FaultScript { events } => {
+                if events.is_empty() {
+                    bail!("fault script has no events");
+                }
+                for e in events {
+                    e.validate(n_regions, n_clients)?;
+                }
+            }
+            ChurnModel::Replay { path } => {
+                if path.is_empty() {
+                    bail!("replay path is empty");
+                }
+                if !top {
+                    bail!("replay cannot appear inside a composed churn model");
+                }
+            }
+            ChurnModel::Composed { layers } => {
+                if !top {
+                    bail!("composed churn models nest at most one level deep");
+                }
+                if layers.is_empty() {
+                    bail!("composed churn model has no layers");
+                }
+                for l in layers {
+                    l.validate_inner(n_regions, n_clients, false)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // --- JSON (config serialization) ---------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ChurnModel::Stationary => Json::obj().set("kind", "stationary"),
+            ChurnModel::MarkovOnOff {
+                p_fail,
+                p_recover,
+                down_dropout,
+                region_scale,
+            } => Json::obj()
+                .set("kind", "markov_on_off")
+                .set("p_fail", *p_fail)
+                .set("p_recover", *p_recover)
+                .set("down_dropout", *down_dropout)
+                .set(
+                    "region_scale",
+                    Json::Arr(region_scale.iter().map(|&s| Json::Num(s)).collect()),
+                ),
+            ChurnModel::Diurnal {
+                amplitude,
+                period,
+                region_phase,
+            } => Json::obj()
+                .set("kind", "diurnal")
+                .set("amplitude", *amplitude)
+                .set("period", *period)
+                .set(
+                    "region_phase",
+                    Json::Arr(region_phase.iter().map(|&p| Json::Num(p)).collect()),
+                ),
+            ChurnModel::BatteryDrain {
+                drain_per_round,
+                recharge_p,
+                depleted_dropout,
+            } => Json::obj()
+                .set("kind", "battery_drain")
+                .set("drain_per_round", *drain_per_round)
+                .set("recharge_p", *recharge_p)
+                .set("depleted_dropout", *depleted_dropout),
+            ChurnModel::FaultScript { events } => Json::obj()
+                .set("kind", "fault_script")
+                .set("events", Json::Arr(events.iter().map(|e| e.to_json()).collect())),
+            ChurnModel::Replay { path } => Json::obj()
+                .set("kind", "replay")
+                .set("path", path.as_str()),
+            ChurnModel::Composed { layers } => Json::obj()
+                .set("kind", "composed")
+                .set(
+                    "layers",
+                    Json::Arr(layers.iter().map(|l| l.to_json()).collect()),
+                ),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ChurnModel> {
+        let kind = j.req("kind")?.as_str()?;
+        Ok(match kind {
+            "stationary" => ChurnModel::Stationary,
+            "markov_on_off" => ChurnModel::MarkovOnOff {
+                p_fail: j.req("p_fail")?.as_f64()?,
+                p_recover: j.req("p_recover")?.as_f64()?,
+                down_dropout: j.req("down_dropout")?.as_f64()?,
+                region_scale: j
+                    .req("region_scale")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64())
+                    .collect::<Result<_>>()?,
+            },
+            "diurnal" => ChurnModel::Diurnal {
+                amplitude: j.req("amplitude")?.as_f64()?,
+                period: j.req("period")?.as_usize()?,
+                region_phase: j
+                    .req("region_phase")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64())
+                    .collect::<Result<_>>()?,
+            },
+            "battery_drain" => ChurnModel::BatteryDrain {
+                drain_per_round: j.req("drain_per_round")?.as_f64()?,
+                recharge_p: j.req("recharge_p")?.as_f64()?,
+                depleted_dropout: j.req("depleted_dropout")?.as_f64()?,
+            },
+            "fault_script" => ChurnModel::FaultScript {
+                events: j
+                    .req("events")?
+                    .as_arr()?
+                    .iter()
+                    .map(FaultEvent::from_json)
+                    .collect::<Result<_>>()?,
+            },
+            "replay" => ChurnModel::Replay {
+                path: j.req("path")?.as_str()?.to_string(),
+            },
+            "composed" => ChurnModel::Composed {
+                layers: j
+                    .req("layers")?
+                    .as_arr()?
+                    .iter()
+                    .map(ChurnModel::from_json)
+                    .collect::<Result<_>>()?,
+            },
+            k => bail!("unknown churn kind '{k}'"),
+        })
+    }
+
+    // --- CLI spec ----------------------------------------------------------
+
+    /// Parse the compact `--churn` spec. Layers compose with `+`:
+    ///
+    /// ```text
+    /// stationary
+    /// markov[:p_fail=0.05,p_recover=0.25,down_dr=0.95]
+    /// diurnal[:amplitude=0.25,period=48]
+    /// battery[:drain=0.02,recharge=0.15,depleted_dr=0.99]
+    /// script:events.json            # FaultScript events from a JSON file
+    /// replay:trace.json             # == --replay-fates trace.json
+    /// markov+script:events.json     # composition
+    /// ```
+    pub fn parse_spec(spec: &str) -> Result<ChurnModel> {
+        let parts: Vec<&str> = spec.split('+').map(str::trim).collect();
+        if parts.len() == 1 {
+            return Self::parse_one(parts[0]);
+        }
+        let layers = parts
+            .iter()
+            .map(|p| Self::parse_one(p))
+            .collect::<Result<Vec<_>>>()?;
+        if layers.iter().any(|l| matches!(l, ChurnModel::Replay { .. })) {
+            bail!("replay cannot be composed with other churn layers");
+        }
+        Ok(ChurnModel::Composed { layers })
+    }
+
+    fn parse_one(spec: &str) -> Result<ChurnModel> {
+        let (kind, rest) = match spec.split_once(':') {
+            Some((k, r)) => (k.trim(), Some(r.trim())),
+            None => (spec.trim(), None),
+        };
+        let kv = |rest: Option<&str>| -> Result<Vec<(String, f64)>> {
+            let Some(rest) = rest else {
+                return Ok(Vec::new());
+            };
+            rest.split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|pair| {
+                    let (k, v) = pair
+                        .split_once('=')
+                        .with_context(|| format!("churn option '{pair}' is not key=value"))?;
+                    let v: f64 = v
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("churn option '{pair}': not a number"))?;
+                    Ok((k.trim().to_string(), v))
+                })
+                .collect()
+        };
+        let take = |opts: &[(String, f64)], key: &str, default: f64| -> f64 {
+            opts.iter()
+                .rev()
+                .find(|(k, _)| k == key)
+                .map_or(default, |(_, v)| *v)
+        };
+        let known = |opts: &[(String, f64)], keys: &[&str]| -> Result<()> {
+            for (k, _) in opts {
+                if !keys.contains(&k.as_str()) {
+                    bail!("unknown churn option '{k}' (valid: {})", keys.join(", "));
+                }
+            }
+            Ok(())
+        };
+        Ok(match kind {
+            "stationary" => ChurnModel::Stationary,
+            "markov" => {
+                let opts = kv(rest)?;
+                known(&opts, &["p_fail", "p_recover", "down_dr"])?;
+                ChurnModel::MarkovOnOff {
+                    p_fail: take(&opts, "p_fail", 0.05),
+                    p_recover: take(&opts, "p_recover", 0.25),
+                    down_dropout: take(&opts, "down_dr", 0.95),
+                    region_scale: Vec::new(),
+                }
+            }
+            "diurnal" => {
+                let opts = kv(rest)?;
+                known(&opts, &["amplitude", "period"])?;
+                let period = take(&opts, "period", 48.0);
+                if period < 1.0 || period.fract() != 0.0 {
+                    bail!("diurnal period must be a whole number of rounds >= 1, got {period}");
+                }
+                ChurnModel::Diurnal {
+                    amplitude: take(&opts, "amplitude", 0.25),
+                    period: period as usize,
+                    region_phase: Vec::new(),
+                }
+            }
+            "battery" => {
+                let opts = kv(rest)?;
+                known(&opts, &["drain", "recharge", "depleted_dr"])?;
+                ChurnModel::BatteryDrain {
+                    drain_per_round: take(&opts, "drain", 0.02),
+                    recharge_p: take(&opts, "recharge", 0.15),
+                    depleted_dropout: take(&opts, "depleted_dr", 0.99),
+                }
+            }
+            "script" => {
+                let path = rest.filter(|r| !r.is_empty()).with_context(|| {
+                    "script churn needs a file: script:events.json".to_string()
+                })?;
+                let j = Json::parse_file(std::path::Path::new(path))?;
+                let events_json = match &j {
+                    Json::Arr(v) => v.as_slice(),
+                    Json::Obj(_) => j.req("events")?.as_arr()?,
+                    _ => bail!("{path}: expected an event array or {{\"events\": [...]}}"),
+                };
+                ChurnModel::FaultScript {
+                    events: events_json
+                        .iter()
+                        .map(FaultEvent::from_json)
+                        .collect::<Result<_>>()?,
+                }
+            }
+            "replay" => {
+                let path = rest.filter(|r| !r.is_empty()).with_context(|| {
+                    "replay churn needs a file: replay:trace.json".to_string()
+                })?;
+                ChurnModel::Replay {
+                    path: path.to_string(),
+                }
+            }
+            k => bail!(
+                "unknown churn kind '{k}' \
+                 (stationary|markov|diurnal|battery|script:FILE|replay:FILE, compose with '+')"
+            ),
+        })
+    }
+}
+
+/// A churn process's mutable state at a round boundary — what a
+/// [`crate::snapshot::RunSnapshot`] captures so the resumed run continues
+/// the exact reliability trajectory. Stateless models (stationary,
+/// diurnal, fault scripts, replay) are pure functions of the round index
+/// and carry [`ChurnState::Stateless`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChurnState {
+    Stateless,
+    /// Per-client on/off flags of [`ChurnModel::MarkovOnOff`].
+    Markov { up: Vec<bool> },
+    /// Per-client charge levels of [`ChurnModel::BatteryDrain`].
+    Battery { level: Vec<f64> },
+    /// One state per layer of [`ChurnModel::Composed`].
+    Composed { layers: Vec<ChurnState> },
+}
+
+/// The runtime world dynamics: pristine base state plus the evolving
+/// churn process. Both backends call [`WorldDynamics::step`] at each
+/// round boundary, before the round's fate draw.
+pub struct WorldDynamics {
+    model: ChurnModel,
+    base_profiles: Vec<ClientProfile>,
+    base_topo: Topology,
+    state: ChurnState,
+}
+
+/// Initial state for one model layer. `init_rng` staggers battery levels
+/// so fleets do not deplete in lockstep; Markov chains start all-up.
+fn init_state(model: &ChurnModel, n: usize, init_rng: &mut Rng) -> ChurnState {
+    match model {
+        ChurnModel::MarkovOnOff { .. } => ChurnState::Markov { up: vec![true; n] },
+        ChurnModel::BatteryDrain { .. } => ChurnState::Battery {
+            level: (0..n).map(|_| 0.25 + 0.75 * init_rng.uniform()).collect(),
+        },
+        ChurnModel::Composed { layers } => ChurnState::Composed {
+            layers: layers
+                .iter()
+                .map(|l| init_state(l, n, init_rng))
+                .collect(),
+        },
+        _ => ChurnState::Stateless,
+    }
+}
+
+fn state_matches(model: &ChurnModel, state: &ChurnState, n: usize) -> bool {
+    match (model, state) {
+        (ChurnModel::MarkovOnOff { .. }, ChurnState::Markov { up }) => up.len() == n,
+        (ChurnModel::BatteryDrain { .. }, ChurnState::Battery { level }) => level.len() == n,
+        (ChurnModel::Composed { layers }, ChurnState::Composed { layers: states }) => {
+            layers.len() == states.len()
+                && layers
+                    .iter()
+                    .zip(states.iter())
+                    .all(|(m, s)| state_matches(m, s, n))
+        }
+        (
+            ChurnModel::Stationary
+            | ChurnModel::Diurnal { .. }
+            | ChurnModel::FaultScript { .. }
+            | ChurnModel::Replay { .. },
+            ChurnState::Stateless,
+        ) => true,
+        _ => false,
+    }
+}
+
+impl WorldDynamics {
+    /// Build the dynamics from the sampled base world. `init_rng` is a
+    /// dedicated stream from `World::build` (stream splitting never
+    /// advances the parent, so stationary runs are unaffected).
+    pub fn new(
+        model: ChurnModel,
+        profiles: &[ClientProfile],
+        topo: &Topology,
+        init_rng: &mut Rng,
+    ) -> WorldDynamics {
+        let state = init_state(&model, profiles.len(), init_rng);
+        WorldDynamics {
+            model,
+            base_profiles: profiles.to_vec(),
+            base_topo: topo.clone(),
+            state,
+        }
+    }
+
+    pub fn model(&self) -> &ChurnModel {
+        &self.model
+    }
+
+    /// True when the step leaves the world untouched (stationary or
+    /// replayed fates) — the caller can skip it entirely.
+    pub fn is_noop(&self) -> bool {
+        self.model.is_noop()
+    }
+
+    pub fn has_migrations(&self) -> bool {
+        self.model.has_migrations()
+    }
+
+    /// Snapshot the process state (checkpoint path).
+    pub fn state(&self) -> ChurnState {
+        self.state.clone()
+    }
+
+    /// Restore a captured process state (resume path). Rejects a state of
+    /// the wrong shape for this model.
+    pub fn restore(&mut self, state: ChurnState) -> Result<()> {
+        if !state_matches(&self.model, &state, self.base_profiles.len()) {
+            bail!(
+                "churn state does not fit the configured '{}' model \
+                 ({} clients)",
+                self.model.kind_str(),
+                self.base_profiles.len()
+            );
+        }
+        self.state = state;
+        Ok(())
+    }
+
+    /// Evolve the world for round `t` (1-based): reset the fleet to its
+    /// pristine base, rebuild the topology under any active migrations,
+    /// then let the model rewrite per-client reliability as a function of
+    /// its state, `t` and `rng`. Returns `true` when the topology changed
+    /// relative to the base (the caller refreshes region-data caches).
+    ///
+    /// Deterministic: given the state at the round boundary and the
+    /// round's churn substream, the rewritten world is identical whether
+    /// the run is fresh or resumed.
+    pub fn step(
+        &mut self,
+        t: usize,
+        rng: &mut Rng,
+        profiles: &mut [ClientProfile],
+        topo: &mut Topology,
+    ) -> bool {
+        profiles.copy_from_slice(&self.base_profiles);
+        let topo_changed = if self.has_migrations() {
+            *topo = self.base_topo.clone();
+            apply_migrations(&self.model, t, topo)
+        } else {
+            false
+        };
+        apply_layer(&self.model, &mut self.state, t, rng, &self.base_profiles, profiles, topo);
+        topo_changed
+    }
+}
+
+/// Apply every `Migrate` event with `at_round <= t` to a fresh clone of
+/// the base topology. Returns whether anything moved.
+fn apply_migrations(model: &ChurnModel, t: usize, topo: &mut Topology) -> bool {
+    let mut moved = false;
+    let mut walk = |events: &[FaultEvent]| {
+        for e in events {
+            if let FaultEvent::Migrate {
+                client,
+                at_round,
+                to_region,
+            } = e
+            {
+                if t >= *at_round && topo.region_of[*client] != *to_region {
+                    let from = topo.region_of[*client];
+                    topo.regions[from].retain(|&k| k != *client);
+                    topo.regions[*to_region].push(*client);
+                    topo.region_of[*client] = *to_region;
+                    moved = true;
+                }
+            }
+        }
+    };
+    match model {
+        ChurnModel::FaultScript { events } => walk(events),
+        ChurnModel::Composed { layers } => {
+            for l in layers {
+                if let ChurnModel::FaultScript { events } = l {
+                    walk(events);
+                }
+            }
+        }
+        _ => {}
+    }
+    moved
+}
+
+/// One model layer's rewrite of the (already base-reset) fleet. Layers of
+/// a composed model run in order, each on top of the previous layer's
+/// output; draws come sequentially from the shared churn substream, so
+/// the draw sequence is a deterministic function of (state, t).
+#[allow(clippy::too_many_arguments)]
+fn apply_layer(
+    model: &ChurnModel,
+    state: &mut ChurnState,
+    t: usize,
+    rng: &mut Rng,
+    base: &[ClientProfile],
+    profiles: &mut [ClientProfile],
+    topo: &Topology,
+) {
+    match (model, state) {
+        (ChurnModel::Stationary | ChurnModel::Replay { .. }, _) => {}
+        (
+            ChurnModel::MarkovOnOff {
+                p_fail,
+                p_recover,
+                down_dropout,
+                region_scale,
+            },
+            ChurnState::Markov { up },
+        ) => {
+            for (k, flag) in up.iter_mut().enumerate() {
+                let scale = region_scale
+                    .get(topo.region_of[k])
+                    .copied()
+                    .unwrap_or(1.0);
+                *flag = if *flag {
+                    !rng.bernoulli((p_fail * scale).clamp(0.0, 1.0))
+                } else {
+                    rng.bernoulli((p_recover * scale).clamp(0.0, 1.0))
+                };
+                if !*flag {
+                    profiles[k].dropout_p = profiles[k].dropout_p.max(*down_dropout);
+                }
+            }
+        }
+        (
+            ChurnModel::Diurnal {
+                amplitude,
+                period,
+                region_phase,
+            },
+            _,
+        ) => {
+            let m = topo.n_regions();
+            let omega = std::f64::consts::TAU / *period as f64;
+            for (k, p) in profiles.iter_mut().enumerate() {
+                let r = topo.region_of[k];
+                let phase = region_phase
+                    .get(r)
+                    .copied()
+                    .unwrap_or(std::f64::consts::TAU * r as f64 / m as f64);
+                let wave = amplitude * (omega * (t as f64 - 1.0) + phase).sin();
+                p.dropout_p = (p.dropout_p + wave).clamp(0.0, 1.0);
+            }
+        }
+        (
+            ChurnModel::BatteryDrain {
+                drain_per_round,
+                recharge_p,
+                depleted_dropout,
+            },
+            ChurnState::Battery { level },
+        ) => {
+            for (k, lvl) in level.iter_mut().enumerate() {
+                if *lvl > 0.0 {
+                    *lvl -= drain_per_round;
+                }
+                if *lvl <= 0.0 {
+                    // Depleted this round; a recharge draw decides whether
+                    // the client is back next round (draw count stays a
+                    // deterministic function of the state).
+                    profiles[k].dropout_p = profiles[k].dropout_p.max(*depleted_dropout);
+                    if rng.bernoulli(*recharge_p) {
+                        *lvl = 1.0;
+                    }
+                }
+            }
+        }
+        (ChurnModel::FaultScript { events }, _) => {
+            for e in events {
+                apply_profile_event(e, t, base, profiles, topo);
+            }
+        }
+        (ChurnModel::Composed { layers }, ChurnState::Composed { layers: states }) => {
+            for (l, s) in layers.iter().zip(states.iter_mut()) {
+                apply_layer(l, s, t, rng, base, profiles, topo);
+            }
+        }
+        // Shape mismatches are rejected at construction/restore time;
+        // reaching this arm would be a logic error, but degrading to a
+        // no-op round beats corrupting a run mid-flight.
+        _ => debug_assert!(false, "churn model/state shape mismatch"),
+    }
+}
+
+/// Profile-level effect of one scripted event at round `t` (migrations
+/// are handled separately, against the topology).
+fn apply_profile_event(
+    e: &FaultEvent,
+    t: usize,
+    _base: &[ClientProfile],
+    profiles: &mut [ClientProfile],
+    topo: &Topology,
+) {
+    match e {
+        FaultEvent::RegionBlackout {
+            region,
+            from_round,
+            until_round,
+        } => {
+            if (*from_round..*until_round).contains(&t) {
+                for &k in &topo.regions[*region] {
+                    profiles[k].dropout_p = 1.0;
+                }
+            }
+        }
+        FaultEvent::DropoutShift {
+            region,
+            at_round,
+            delta,
+        } => {
+            if t >= *at_round {
+                match region {
+                    Some(r) => {
+                        for &k in &topo.regions[*r] {
+                            profiles[k].dropout_p = (profiles[k].dropout_p + delta).clamp(0.0, 1.0);
+                        }
+                    }
+                    None => {
+                        for p in profiles.iter_mut() {
+                            p.dropout_p = (p.dropout_p + delta).clamp(0.0, 1.0);
+                        }
+                    }
+                }
+            }
+        }
+        FaultEvent::BandwidthDegrade {
+            region,
+            from_round,
+            until_round,
+            factor,
+        } => {
+            if (*from_round..*until_round).contains(&t) {
+                for &k in &topo.regions[*region] {
+                    profiles[k].bw_mhz *= factor;
+                }
+            }
+        }
+        FaultEvent::Migrate { .. } => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn fixture() -> (Vec<ClientProfile>, Topology) {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.n_clients = 12;
+        cfg.n_edges = 3;
+        let topo = Topology::build(&cfg, &mut Rng::new(1)).unwrap();
+        let profiles = crate::devices::sample_fleet(&cfg, &topo, &mut Rng::new(2)).unwrap();
+        (profiles, topo)
+    }
+
+    fn dynamics(model: ChurnModel) -> (WorldDynamics, Vec<ClientProfile>, Topology) {
+        let (profiles, topo) = fixture();
+        let dyn_ = WorldDynamics::new(model, &profiles, &topo, &mut Rng::new(3));
+        (dyn_, profiles, topo)
+    }
+
+    #[test]
+    fn stationary_step_is_identity() {
+        let (mut d, base, topo) = dynamics(ChurnModel::Stationary);
+        let mut profiles = base.clone();
+        let mut topo2 = topo.clone();
+        for t in 1..=5 {
+            let changed = d.step(t, &mut Rng::new(t as u64), &mut profiles, &mut topo2);
+            assert!(!changed);
+            assert_eq!(profiles, base);
+        }
+    }
+
+    #[test]
+    fn markov_produces_correlated_outages_and_is_deterministic() {
+        let model = ChurnModel::MarkovOnOff {
+            p_fail: 0.4,
+            p_recover: 0.3,
+            down_dropout: 0.97,
+            region_scale: Vec::new(),
+        };
+        let run = |seed_offset: u64| -> Vec<Vec<f64>> {
+            let (mut d, base, topo) = dynamics(model.clone());
+            let mut profiles = base.clone();
+            let mut topo2 = topo;
+            (1..=20u64)
+                .map(|t| {
+                    d.step(
+                        t as usize,
+                        &mut Rng::new(t + seed_offset),
+                        &mut profiles,
+                        &mut topo2,
+                    );
+                    profiles.iter().map(|p| p.dropout_p).collect()
+                })
+                .collect()
+        };
+        let a = run(0);
+        let b = run(0);
+        assert_eq!(a, b, "same streams must evolve identically");
+        // Some client must visit the down state within 20 rounds at
+        // p_fail = 0.4.
+        assert!(
+            a.iter().flatten().any(|&dr| dr >= 0.97),
+            "no outage in 20 rounds"
+        );
+    }
+
+    #[test]
+    fn markov_state_restore_continues_trajectory() {
+        let model = ChurnModel::MarkovOnOff {
+            p_fail: 0.3,
+            p_recover: 0.3,
+            down_dropout: 0.95,
+            region_scale: Vec::new(),
+        };
+        let (mut d, base, topo) = dynamics(model.clone());
+        let mut profiles = base.clone();
+        let mut topo2 = topo.clone();
+        for t in 1..=7 {
+            d.step(t, &mut Rng::new(100 + t as u64), &mut profiles, &mut topo2);
+        }
+        let snap = d.state();
+
+        let (mut resumed, _, _) = dynamics(model);
+        resumed.restore(snap).unwrap();
+        let mut p2 = base.clone();
+        let mut t2 = topo;
+        for t in 8..=20 {
+            d.step(t, &mut Rng::new(100 + t as u64), &mut profiles, &mut topo2);
+            resumed.step(t, &mut Rng::new(100 + t as u64), &mut p2, &mut t2);
+            assert_eq!(profiles, p2, "round {t} diverged after restore");
+        }
+    }
+
+    #[test]
+    fn restore_rejects_wrong_shape() {
+        let (mut d, ..) = dynamics(ChurnModel::MarkovOnOff {
+            p_fail: 0.1,
+            p_recover: 0.1,
+            down_dropout: 0.9,
+            region_scale: Vec::new(),
+        });
+        assert!(d.restore(ChurnState::Stateless).is_err());
+        assert!(d.restore(ChurnState::Markov { up: vec![true; 3] }).is_err());
+        assert!(d
+            .restore(ChurnState::Markov {
+                up: vec![true; 12]
+            })
+            .is_ok());
+    }
+
+    #[test]
+    fn diurnal_modulation_cycles() {
+        let model = ChurnModel::Diurnal {
+            amplitude: 0.3,
+            period: 8,
+            region_phase: vec![0.0, 0.0, 0.0],
+        };
+        let (mut d, base, topo) = dynamics(model);
+        let mut profiles = base.clone();
+        let mut topo2 = topo;
+        let mut series = Vec::new();
+        for t in 1..=8 {
+            d.step(t, &mut Rng::new(5), &mut profiles, &mut topo2);
+            series.push(profiles[0].dropout_p);
+        }
+        let max = series.iter().cloned().fold(f64::MIN, f64::max);
+        let min = series.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max - min > 0.3, "no cycle visible: {series:?}");
+        // Full period returns to the starting value.
+        d.step(9, &mut Rng::new(5), &mut profiles, &mut topo2);
+        assert!((profiles[0].dropout_p - series[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn battery_depletes_and_recharges() {
+        let model = ChurnModel::BatteryDrain {
+            drain_per_round: 0.34,
+            recharge_p: 0.5,
+            depleted_dropout: 0.99,
+        };
+        let (mut d, base, topo) = dynamics(model);
+        let mut profiles = base.clone();
+        let mut topo2 = topo;
+        let mut saw_depleted = false;
+        let mut saw_recovered_after_depleted = false;
+        let mut depleted_before = vec![false; profiles.len()];
+        for t in 1..=30 {
+            d.step(t, &mut Rng::new(40 + t as u64), &mut profiles, &mut topo2);
+            for (k, p) in profiles.iter().enumerate() {
+                let down = p.dropout_p >= 0.99;
+                if down {
+                    saw_depleted = true;
+                    depleted_before[k] = true;
+                } else if depleted_before[k] {
+                    saw_recovered_after_depleted = true;
+                }
+            }
+        }
+        assert!(saw_depleted, "no client ever depleted");
+        assert!(saw_recovered_after_depleted, "no client ever recharged");
+    }
+
+    #[test]
+    fn blackout_and_shift_and_bandwidth_apply_in_window() {
+        let model = ChurnModel::FaultScript {
+            events: vec![
+                FaultEvent::RegionBlackout {
+                    region: 0,
+                    from_round: 3,
+                    until_round: 5,
+                },
+                FaultEvent::DropoutShift {
+                    region: Some(1),
+                    at_round: 4,
+                    delta: 0.2,
+                },
+                FaultEvent::BandwidthDegrade {
+                    region: 2,
+                    from_round: 2,
+                    until_round: 4,
+                    factor: 0.5,
+                },
+            ],
+        };
+        let (mut d, base, topo) = dynamics(model);
+        let mut profiles = base.clone();
+        let mut topo2 = topo.clone();
+        let r0 = topo.regions[0][0];
+        let r1 = topo.regions[1][0];
+        let r2 = topo.regions[2][0];
+
+        d.step(2, &mut Rng::new(0), &mut profiles, &mut topo2);
+        assert_eq!(profiles[r0].dropout_p, base[r0].dropout_p);
+        assert!((profiles[r2].bw_mhz - base[r2].bw_mhz * 0.5).abs() < 1e-12);
+
+        d.step(3, &mut Rng::new(0), &mut profiles, &mut topo2);
+        assert_eq!(profiles[r0].dropout_p, 1.0);
+        assert_eq!(profiles[r1].dropout_p, base[r1].dropout_p);
+
+        d.step(4, &mut Rng::new(0), &mut profiles, &mut topo2);
+        assert_eq!(profiles[r0].dropout_p, 1.0);
+        assert!((profiles[r1].dropout_p - (base[r1].dropout_p + 0.2)).abs() < 1e-12);
+
+        d.step(5, &mut Rng::new(0), &mut profiles, &mut topo2);
+        assert_eq!(profiles[r0].dropout_p, base[r0].dropout_p); // window closed
+        assert_eq!(profiles[r2].bw_mhz, base[r2].bw_mhz); // window closed
+        assert!((profiles[r1].dropout_p - (base[r1].dropout_p + 0.2)).abs() < 1e-12); // permanent
+    }
+
+    #[test]
+    fn migration_moves_client_between_regions() {
+        let (_, topo) = fixture();
+        let client = topo.regions[0][0];
+        let model = ChurnModel::FaultScript {
+            events: vec![FaultEvent::Migrate {
+                client,
+                at_round: 3,
+                to_region: 1,
+            }],
+        };
+        let (mut d, base, _) = dynamics(model);
+        let mut profiles = base;
+        let mut topo2 = topo.clone();
+        assert!(!d.step(2, &mut Rng::new(0), &mut profiles, &mut topo2));
+        assert_eq!(topo2.region_of[client], 0);
+        assert!(d.step(3, &mut Rng::new(0), &mut profiles, &mut topo2));
+        assert_eq!(topo2.region_of[client], 1);
+        assert!(!topo2.regions[0].contains(&client));
+        assert!(topo2.regions[1].contains(&client));
+        // Idempotent across later rounds.
+        assert!(d.step(4, &mut Rng::new(0), &mut profiles, &mut topo2));
+        assert_eq!(
+            topo2.regions[1].iter().filter(|&&k| k == client).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn composed_layers_stack() {
+        let model = ChurnModel::Composed {
+            layers: vec![
+                ChurnModel::MarkovOnOff {
+                    p_fail: 0.0, // never fails — layer is a pass-through
+                    p_recover: 1.0,
+                    down_dropout: 0.9,
+                    region_scale: Vec::new(),
+                },
+                ChurnModel::FaultScript {
+                    events: vec![FaultEvent::RegionBlackout {
+                        region: 0,
+                        from_round: 1,
+                        until_round: 2,
+                    }],
+                },
+            ],
+        };
+        let (mut d, base, topo) = dynamics(model);
+        let mut profiles = base.clone();
+        let mut topo2 = topo.clone();
+        d.step(1, &mut Rng::new(0), &mut profiles, &mut topo2);
+        for &k in &topo.regions[0] {
+            assert_eq!(profiles[k].dropout_p, 1.0);
+        }
+        for &k in &topo.regions[1] {
+            assert_eq!(profiles[k].dropout_p, base[k].dropout_p);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_every_variant() {
+        let models = vec![
+            ChurnModel::Stationary,
+            ChurnModel::MarkovOnOff {
+                p_fail: 0.05,
+                p_recover: 0.25,
+                down_dropout: 0.95,
+                region_scale: vec![1.0, 2.0],
+            },
+            ChurnModel::Diurnal {
+                amplitude: 0.25,
+                period: 48,
+                region_phase: vec![0.0, 1.5],
+            },
+            ChurnModel::BatteryDrain {
+                drain_per_round: 0.02,
+                recharge_p: 0.15,
+                depleted_dropout: 0.99,
+            },
+            ChurnModel::FaultScript {
+                events: vec![
+                    FaultEvent::RegionBlackout {
+                        region: 0,
+                        from_round: 10,
+                        until_round: 20,
+                    },
+                    FaultEvent::DropoutShift {
+                        region: None,
+                        at_round: 5,
+                        delta: -0.1,
+                    },
+                    FaultEvent::BandwidthDegrade {
+                        region: 1,
+                        from_round: 2,
+                        until_round: 9,
+                        factor: 0.25,
+                    },
+                    FaultEvent::Migrate {
+                        client: 7,
+                        at_round: 30,
+                        to_region: 1,
+                    },
+                ],
+            },
+            ChurnModel::Replay {
+                path: "trace.json".into(),
+            },
+            ChurnModel::Composed {
+                layers: vec![
+                    ChurnModel::Stationary,
+                    ChurnModel::Diurnal {
+                        amplitude: 0.1,
+                        period: 10,
+                        region_phase: vec![],
+                    },
+                ],
+            },
+        ];
+        for m in models {
+            let j = m.to_json();
+            let back = ChurnModel::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+            assert_eq!(m, back, "roundtrip mismatch for {}", m.kind_str());
+        }
+    }
+
+    #[test]
+    fn spec_parsing_defaults_and_composition() {
+        assert_eq!(
+            ChurnModel::parse_spec("stationary").unwrap(),
+            ChurnModel::Stationary
+        );
+        match ChurnModel::parse_spec("markov:p_fail=0.1").unwrap() {
+            ChurnModel::MarkovOnOff {
+                p_fail, p_recover, ..
+            } => {
+                assert!((p_fail - 0.1).abs() < 1e-12);
+                assert!((p_recover - 0.25).abs() < 1e-12); // default
+            }
+            other => panic!("{other:?}"),
+        }
+        match ChurnModel::parse_spec("diurnal:amplitude=0.4,period=24").unwrap() {
+            ChurnModel::Diurnal {
+                amplitude, period, ..
+            } => {
+                assert!((amplitude - 0.4).abs() < 1e-12);
+                assert_eq!(period, 24);
+            }
+            other => panic!("{other:?}"),
+        }
+        match ChurnModel::parse_spec("markov+battery:drain=0.1").unwrap() {
+            ChurnModel::Composed { layers } => assert_eq!(layers.len(), 2),
+            other => panic!("{other:?}"),
+        }
+        assert!(ChurnModel::parse_spec("bogus").is_err());
+        assert!(ChurnModel::parse_spec("markov:bogus=1").is_err());
+        assert!(ChurnModel::parse_spec("markov+replay:x.json").is_err());
+        assert!(ChurnModel::parse_spec("script:").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_fields() {
+        assert!(ChurnModel::MarkovOnOff {
+            p_fail: 1.5,
+            p_recover: 0.1,
+            down_dropout: 0.9,
+            region_scale: vec![],
+        }
+        .validate(2, 10)
+        .is_err());
+        assert!(ChurnModel::Diurnal {
+            amplitude: 0.2,
+            period: 0,
+            region_phase: vec![],
+        }
+        .validate(2, 10)
+        .is_err());
+        assert!(ChurnModel::FaultScript {
+            events: vec![FaultEvent::RegionBlackout {
+                region: 5,
+                from_round: 1,
+                until_round: 2,
+            }],
+        }
+        .validate(2, 10)
+        .is_err());
+        assert!(ChurnModel::FaultScript {
+            events: vec![FaultEvent::Migrate {
+                client: 99,
+                at_round: 1,
+                to_region: 0,
+            }],
+        }
+        .validate(2, 10)
+        .is_err());
+        // Nested composition and nested replay are rejected.
+        assert!(ChurnModel::Composed {
+            layers: vec![ChurnModel::Composed {
+                layers: vec![ChurnModel::Stationary],
+            }],
+        }
+        .validate(2, 10)
+        .is_err());
+        assert!(ChurnModel::Composed {
+            layers: vec![ChurnModel::Replay {
+                path: "x.json".into(),
+            }],
+        }
+        .validate(2, 10)
+        .is_err());
+    }
+}

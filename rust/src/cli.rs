@@ -21,6 +21,7 @@ pub struct Args {
 const VALUE_KEYS: &[&str] = &[
     "set", "preset", "config", "out", "seed", "protocol", "rounds", "c", "e-dr",
     "scale", "target", "backend", "checkpoint-dir", "checkpoint-every", "resume",
+    "churn", "record-fates", "replay-fates",
 ];
 
 /// Boolean switches (no value).
@@ -175,6 +176,21 @@ mod tests {
     fn backend_is_a_value_key() {
         let a = parse(&["run", "--backend", "live"]);
         assert_eq!(a.get("backend"), Some("live"));
+    }
+
+    #[test]
+    fn churn_and_fate_flags_are_value_keys() {
+        let a = parse(&[
+            "run",
+            "--churn",
+            "markov:p_fail=0.1",
+            "--record-fates",
+            "trace.json",
+        ]);
+        assert_eq!(a.get("churn"), Some("markov:p_fail=0.1"));
+        assert_eq!(a.get("record-fates"), Some("trace.json"));
+        let b = parse(&["run", "--replay-fates", "trace.json"]);
+        assert_eq!(b.get("replay-fates"), Some("trace.json"));
     }
 
     #[test]

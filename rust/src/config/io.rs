@@ -6,6 +6,7 @@ use super::{
     CacheMode, Dist, EngineKind, ExperimentConfig, PartitionScheme, ProtocolKind,
     RegionSpec, TaskKind,
 };
+use crate::churn::ChurnModel;
 use crate::jsonx::Json;
 
 impl Dist {
@@ -84,6 +85,7 @@ impl ExperimentConfig {
             .set("perf_ghz", self.perf_ghz.to_json())
             .set("bw_mhz", self.bw_mhz.to_json())
             .set("dropout", self.dropout.to_json())
+            .set("churn", self.churn.to_json())
             .set("snr", self.snr)
             .set("cloud_edge_mbps", self.cloud_edge_mbps)
             .set("model_size_mb", self.model_size_mb)
@@ -135,6 +137,12 @@ impl ExperimentConfig {
             perf_ghz: Dist::from_json(j.req("perf_ghz")?)?,
             bw_mhz: Dist::from_json(j.req("bw_mhz")?)?,
             dropout: Dist::from_json(j.req("dropout")?)?,
+            // Absent in configs written before the churn subsystem: those
+            // runs were stationary by construction.
+            churn: match j.get("churn") {
+                Some(c) => ChurnModel::from_json(c)?,
+                None => ChurnModel::Stationary,
+            },
             snr: j.req("snr")?.as_f64()?,
             cloud_edge_mbps: j.req("cloud_edge_mbps")?.as_f64()?,
             model_size_mb: j.req("model_size_mb")?.as_f64()?,
@@ -194,6 +202,7 @@ fn apply_one(cfg: &mut ExperimentConfig, key: &str, val: &str) -> Result<()> {
         "cache_mode" => cfg.cache_mode = CacheMode::parse(val)?,
         "dropout_mean" | "e_dr" => cfg.dropout.mean = val.parse()?,
         "dropout_std" => cfg.dropout.std = val.parse()?,
+        "churn" => cfg.churn = ChurnModel::parse_spec(val)?,
         "perf_mean" => cfg.perf_ghz.mean = val.parse()?,
         "perf_std" => cfg.perf_ghz.std = val.parse()?,
         "bw_mean" => cfg.bw_mhz.mean = val.parse()?,
@@ -254,6 +263,42 @@ mod tests {
         assert_eq!(cfg.dropout.mean, 0.6);
         assert_eq!(cfg.protocol, ProtocolKind::FedAvg);
         assert_eq!(cfg.t_max, 10);
+    }
+
+    #[test]
+    fn churn_roundtrips_and_defaults_to_stationary() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.churn = ChurnModel::MarkovOnOff {
+            p_fail: 0.05,
+            p_recover: 0.25,
+            down_dropout: 0.95,
+            region_scale: vec![1.0, 2.0, 0.5],
+        };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+
+        // A pre-churn config file (no "churn" key) loads as stationary.
+        let mut j = cfg.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("churn");
+        }
+        let legacy = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(legacy.churn, ChurnModel::Stationary);
+    }
+
+    #[test]
+    fn churn_override_parses_spec() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        apply_overrides(&mut cfg, &["churn=diurnal:amplitude=0.4,period=24".into()]).unwrap();
+        assert_eq!(
+            cfg.churn,
+            ChurnModel::Diurnal {
+                amplitude: 0.4,
+                period: 24,
+                region_phase: vec![],
+            }
+        );
+        assert!(apply_overrides(&mut cfg, &["churn=bogus".into()]).is_err());
     }
 
     #[test]

@@ -9,6 +9,8 @@ pub use io::apply_overrides;
 
 use anyhow::{bail, Result};
 
+use crate::churn::ChurnModel;
+
 /// Which of the paper's two ML tasks drives on-device training.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TaskKind {
@@ -217,6 +219,11 @@ pub struct ExperimentConfig {
     pub bw_mhz: Dist,
     /// dr_k ~ 𝓝 — drop-out probability per round.
     pub dropout: Dist,
+    /// Time-varying reliability dynamics layered on top of the sampled
+    /// base fleet (churn processes, scripted fault events, fate replay).
+    /// [`ChurnModel::Stationary`] — the default — reproduces the
+    /// historical frozen-world behavior bit for bit.
+    pub churn: ChurnModel,
     /// Wireless signal-to-noise ratio (linear, not dB).
     pub snr: f64,
 
@@ -321,6 +328,12 @@ impl ExperimentConfig {
                 self.n_clients
             );
         }
+        let n_regions = if self.regions.is_empty() {
+            self.n_edges
+        } else {
+            self.regions.len()
+        };
+        self.churn.validate(n_regions, self.n_clients)?;
         Ok(())
     }
 }
@@ -371,6 +384,25 @@ mod tests {
         let mut cfg = ExperimentConfig::task1_scaled();
         cfg.regions = vec![RegionSpec { n_clients: 3, dropout_mean: 0.1 }];
         assert!(cfg.validate().is_err()); // doesn't sum to n_clients
+    }
+
+    #[test]
+    fn validate_checks_churn_against_topology() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.churn = ChurnModel::MarkovOnOff {
+            p_fail: 0.1,
+            p_recover: 0.3,
+            down_dropout: 0.95,
+            region_scale: vec![1.0], // 1 entry, but n_edges = 3
+        };
+        assert!(cfg.validate().is_err());
+        cfg.churn = ChurnModel::MarkovOnOff {
+            p_fail: 0.1,
+            p_recover: 0.3,
+            down_dropout: 0.95,
+            region_scale: vec![1.0, 2.0, 0.5],
+        };
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -10,6 +10,7 @@ use super::{
     CacheMode, Dist, EngineKind, ExperimentConfig, PartitionScheme, ProtocolKind,
     RegionSpec, TaskKind,
 };
+use crate::churn::ChurnModel;
 
 impl ExperimentConfig {
     /// Task 1 — Aerofoil, exact Table II column.
@@ -34,6 +35,7 @@ impl ExperimentConfig {
             perf_ghz: Dist::new(0.5, 0.1),
             bw_mhz: Dist::new(0.5, 0.1),
             dropout: Dist::new(0.3, 0.05),
+            churn: ChurnModel::Stationary,
             snr: 1.0e2,
             cloud_edge_mbps: 1.0e3,
             model_size_mb: 5.0,
@@ -84,6 +86,7 @@ impl ExperimentConfig {
             perf_ghz: Dist::new(1.0, 0.3),
             bw_mhz: Dist::new(1.0, 0.3),
             dropout: Dist::new(0.3, 0.05),
+            churn: ChurnModel::Stationary,
             snr: 1.0e2,
             cloud_edge_mbps: 1.0e3,
             model_size_mb: 10.0,

@@ -10,6 +10,8 @@
 //! as the paper's reliability-agnostic setting prescribes. The type is
 //! deliberately not exported through the `protocols` API.
 
+use anyhow::{bail, ensure, Result};
+
 use crate::config::ExperimentConfig;
 use crate::rng::Rng;
 use crate::topology::Topology;
@@ -51,11 +53,16 @@ pub fn sample_profile(
 
 /// Sample the whole fleet, honoring per-region drop-out overrides from the
 /// topology (explicit `RegionSpec`s) or the global `cfg.dropout.mean`.
+///
+/// Every client must be covered by exactly one topology region: a client
+/// left out would silently keep an all-zero placeholder profile, and its
+/// zero `perf_ghz` later divides inside `TimingModel::t_train`. Incomplete
+/// or overlapping coverage is therefore a hard error, not a latent NaN.
 pub fn sample_fleet(
     cfg: &ExperimentConfig,
     topo: &Topology,
     rng: &mut Rng,
-) -> Vec<ClientProfile> {
+) -> Result<Vec<ClientProfile>> {
     let mut profiles = vec![
         ClientProfile {
             perf_ghz: 0.0,
@@ -64,16 +71,34 @@ pub fn sample_fleet(
         };
         cfg.n_clients
     ];
+    let mut covered = vec![false; cfg.n_clients];
     let mut drng = rng.split(0xDE_01CE);
     for (r, clients) in topo.regions.iter().enumerate() {
         let mean = topo
             .dropout_mean_override(r)
             .unwrap_or(cfg.dropout.mean);
         for &k in clients {
+            ensure!(
+                k < cfg.n_clients,
+                "topology region {r} names client {k} but the fleet has {} clients",
+                cfg.n_clients
+            );
+            ensure!(
+                !covered[k],
+                "client {k} appears in more than one topology region"
+            );
+            covered[k] = true;
             profiles[k] = sample_profile(cfg, mean, &mut drng);
         }
     }
-    profiles
+    if let Some(k) = covered.iter().position(|&c| !c) {
+        bail!(
+            "client {k} is not covered by any topology region — its profile \
+             would stay the all-zero placeholder (zero perf_ghz divides in the \
+             timing model)"
+        );
+    }
+    Ok(profiles)
 }
 
 #[cfg(test)]
@@ -85,7 +110,7 @@ mod tests {
     fn fleet_matches_population_and_bounds() {
         let cfg = ExperimentConfig::task2_scaled();
         let topo = Topology::build(&cfg, &mut Rng::new(1)).unwrap();
-        let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(2));
+        let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(2)).unwrap();
         assert_eq!(fleet.len(), cfg.n_clients);
         for p in &fleet {
             assert!(p.perf_ghz > 0.0);
@@ -98,7 +123,7 @@ mod tests {
     fn fleet_heterogeneity_sampled() {
         let cfg = ExperimentConfig::task2_scaled();
         let topo = Topology::build(&cfg, &mut Rng::new(1)).unwrap();
-        let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(2));
+        let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(2)).unwrap();
         let perf_min = fleet.iter().map(|p| p.perf_ghz).fold(f64::MAX, f64::min);
         let perf_max = fleet.iter().map(|p| p.perf_ghz).fold(0.0, f64::max);
         assert!(perf_max - perf_min > 0.1, "no heterogeneity sampled");
@@ -115,7 +140,7 @@ mod tests {
         ];
         cfg.dropout.std = 0.02;
         let topo = Topology::build(&cfg, &mut Rng::new(3)).unwrap();
-        let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(4));
+        let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(4)).unwrap();
         let mean_r = |r: usize| -> f64 {
             let cs = &topo.regions[r];
             cs.iter().map(|&k| fleet[k].dropout_p).sum::<f64>() / cs.len() as f64
@@ -128,8 +153,46 @@ mod tests {
     fn sampling_is_deterministic() {
         let cfg = ExperimentConfig::task1_scaled();
         let topo = Topology::build(&cfg, &mut Rng::new(5)).unwrap();
-        let a = sample_fleet(&cfg, &topo, &mut Rng::new(6));
-        let b = sample_fleet(&cfg, &topo, &mut Rng::new(6));
+        let a = sample_fleet(&cfg, &topo, &mut Rng::new(6)).unwrap();
+        let b = sample_fleet(&cfg, &topo, &mut Rng::new(6)).unwrap();
         assert_eq!(a, b);
+    }
+
+    /// The coverage guard: a topology that leaves a client out of every
+    /// region (or lists one twice) is a hard error, never a silent
+    /// all-zero profile.
+    #[test]
+    fn uncovered_client_is_a_hard_error() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.n_clients = 10;
+        let topo = Topology::build(&cfg, &mut Rng::new(7)).unwrap();
+        cfg.n_clients = 11; // client 10 exists but no region names it
+        let err = sample_fleet(&cfg, &topo, &mut Rng::new(8))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("client 10"), "{err}");
+        assert!(err.contains("not covered"), "{err}");
+    }
+
+    #[test]
+    fn duplicated_client_is_a_hard_error() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.n_clients = 10;
+        let mut topo = Topology::build(&cfg, &mut Rng::new(9)).unwrap();
+        let dup = topo.regions[0][0];
+        topo.regions[1].push(dup);
+        let err = sample_fleet(&cfg, &topo, &mut Rng::new(10))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("more than one"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_client_is_a_hard_error() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.n_clients = 10;
+        let mut topo = Topology::build(&cfg, &mut Rng::new(11)).unwrap();
+        topo.regions[0].push(42);
+        assert!(sample_fleet(&cfg, &topo, &mut Rng::new(12)).is_err());
     }
 }

@@ -26,10 +26,12 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::churn::{ChurnState, FateTrace};
 use crate::config::{EngineKind, ExperimentConfig};
 use crate::env::{
-    charge_energy, draw_fates, draw_selection, region_histogram, resolve_cutoff, CutPlan,
-    CutoffPolicy, FlEnvironment, RoundOutcome, Selection, Starts, World,
+    charge_energy, draw_fates, draw_selection, ground_truth_avail, record_fates,
+    region_histogram, resolve_cutoff, step_world, CutPlan, CutoffPolicy, FlEnvironment,
+    RoundOutcome, Selection, Starts, World,
 };
 use crate::live::cluster::ClusterFabric;
 use crate::live::messages::RoundJob;
@@ -60,6 +62,12 @@ impl LiveClusterEnv {
         let mut cfg = cfg;
         // Live numerics are always mock (PJRT handles are not Send).
         cfg.engine = EngineKind::Mock;
+        anyhow::ensure!(
+            !cfg.churn.has_migrations(),
+            "client-mobility (migrate) churn events are not supported on the \
+             live backend: client threads are bound to their edge channels at \
+             spawn — run migration scenarios on the virtual clock"
+        );
         let world = World::build(cfg)?;
         let fabric = ClusterFabric::spawn(&world, time_scale)?;
         let eval_engine = build_engine(&world.cfg, Arc::clone(&world.data))?;
@@ -110,12 +118,17 @@ impl FlEnvironment for LiveClusterEnv {
         starts: Starts<'_>,
         policy: CutoffPolicy,
     ) -> Result<RoundOutcome> {
+        // World dynamics first (contract point 6) — identical step to the
+        // virtual-clock backend; migrations are rejected at construction,
+        // so the fabric's client↔edge binding never goes stale.
+        step_world(&mut self.world, t);
         let m = self.world.topo.n_regions();
         let mut rng = self.world.rng.split(t as u64);
 
         // Same world derivation as the virtual clock backend.
         let selected = draw_selection(&self.world.topo, &selection, &mut rng);
-        let fates = draw_fates(&self.world, &selected, &mut rng);
+        let fates = draw_fates(&self.world, t, &selected, &mut rng);
+        record_fates(&mut self.world, t, &fates);
 
         // Fan the jobs out to the edges (who relay to their clients).
         let mut jobs: Vec<Vec<RoundJob>> = vec![Vec::new(); m];
@@ -199,12 +212,14 @@ impl FlEnvironment for LiveClusterEnv {
         let alive = region_histogram(m, fates.iter().filter(|f| !f.dropped).map(|f| f.region));
         let regional: Vec<_> = reports.into_iter().map(|r| r.agg).collect();
         let submissions: Vec<usize> = regional.iter().map(|r| r.count()).collect();
+        let avail = ground_truth_avail(&self.world, &fates);
 
         Ok(RoundOutcome {
             selected: selected_h,
             alive,
             submissions,
             regional,
+            avail,
             round_len: plan.round_len,
             deadline_hit: plan.deadline_hit,
             energy_j,
@@ -221,5 +236,21 @@ impl FlEnvironment for LiveClusterEnv {
 
     fn restore_rng_state(&mut self, state: RngState) {
         self.world.rng = Rng::from_state(state);
+    }
+
+    fn churn_state(&self) -> ChurnState {
+        self.world.dynamics.state()
+    }
+
+    fn restore_churn_state(&mut self, state: ChurnState) -> Result<()> {
+        self.world.dynamics.restore(state)
+    }
+
+    fn set_fate_recording(&mut self, on: bool) {
+        self.world.recorder = on.then(FateTrace::new);
+    }
+
+    fn take_fate_trace(&mut self) -> Option<FateTrace> {
+        self.world.recorder.take()
     }
 }

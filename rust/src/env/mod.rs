@@ -61,6 +61,24 @@
 //!    charges every selected client per eq. 35: dropped clients burn half
 //!    their training energy, in-time finishers the full round, stragglers
 //!    the `cutoff/completion` fraction.
+//! 6. **Time-varying fates.** Client reliability is not assumed
+//!    stationary: before each round's fate draw the environment runs one
+//!    [`crate::churn::WorldDynamics`] step, which may rewrite per-client
+//!    drop-out probabilities and bandwidth (and, on the virtual clock,
+//!    client↔region attachment) as a deterministic function of the round
+//!    index, the churn state and a dedicated RNG substream. The step
+//!    happens strictly *below* the trait: protocols observe only its
+//!    consequences through submission counts, so reliability-agnosticism
+//!    is preserved verbatim. A [`ChurnModel::Stationary`] world draws
+//!    nothing from the round stream and is byte-identical to the
+//!    pre-churn behavior; under [`ChurnModel::Replay`] the fate draw is
+//!    bypassed entirely and the recorded trace is the world. The
+//!    environment also reports the per-region ground-truth availability
+//!    (`RoundOutcome::avail`) for the metrics layer — like `alive`, it is
+//!    simulator truth that protocol logic must not read.
+//!
+//! [`ChurnModel::Stationary`]: crate::churn::ChurnModel::Stationary
+//! [`ChurnModel::Replay`]: crate::churn::ChurnModel::Replay
 //!
 //! Drive a protocol to completion over any environment with
 //! [`run_to_completion`], or use the [`crate::scenario::Scenario`] builder
@@ -76,6 +94,7 @@ pub use virtual_clock::VirtualClockEnv;
 use std::sync::Arc;
 
 use crate::aggregation::RegionAccumulator;
+use crate::churn::{ChurnModel, ChurnState, FateTrace, WorldDynamics};
 use crate::config::ExperimentConfig;
 use crate::data::FederatedData;
 use crate::devices::{self, ClientProfile};
@@ -149,6 +168,13 @@ pub struct RoundOutcome {
     /// environment folded every in-time model as it arrived, so no
     /// submitted model is resident here.
     pub regional: Vec<RegionAccumulator>,
+    /// Per-region ground-truth availability this round: the mean no-abort
+    /// probability `E[1 − dr_k]` over the region's fleet *after* the
+    /// round's world-dynamics step — or, under fate replay, the realized
+    /// alive/selected fraction of the replayed fates (NaN for a region
+    /// with none selected). Environment-side truth for the metrics layer
+    /// (churn analysis); protocol logic must not read it.
+    pub avail: Vec<f64>,
     /// Core round length in virtual seconds (no cloud↔edge RTT).
     pub round_len: f64,
     /// True when the cutoff policy was *not* satisfied before `T_lim`.
@@ -191,6 +217,20 @@ pub trait FlEnvironment {
     /// Restore a round-stream RNG captured by [`Self::rng_state`]
     /// (resume path).
     fn restore_rng_state(&mut self, state: RngState);
+    /// The churn process state at the round boundary (checkpoint path) —
+    /// together with [`Self::rng_state`] this pins the world's entire
+    /// reliability trajectory.
+    fn churn_state(&self) -> ChurnState;
+    /// Restore churn state captured by [`Self::churn_state`] (resume
+    /// path). Errors on a state whose shape does not fit the configured
+    /// churn model.
+    fn restore_churn_state(&mut self, state: ChurnState) -> Result<()>;
+    /// Start (or stop) recording each round's ground-truth fates into an
+    /// in-memory [`FateTrace`].
+    fn set_fate_recording(&mut self, on: bool);
+    /// Take the recorded fate trace (ends recording). `None` when
+    /// recording was never enabled.
+    fn take_fate_trace(&mut self) -> Option<FateTrace>;
 }
 
 /// A selected client's fate in one round — drop-out draw plus completion
@@ -208,8 +248,9 @@ pub struct ClientFate {
 }
 
 /// The shared simulated world both backends are parameterized by:
-/// topology, corpus, device fleet, timing/energy models, and the RNG stream
-/// rounds draw from. Built identically (same split discipline) so a sim
+/// topology, corpus, device fleet, timing/energy models, the RNG stream
+/// rounds draw from, and the reliability dynamics that evolve the fleet at
+/// round boundaries. Built identically (same split discipline) so a sim
 /// and a live run with the same config inhabit the same random world.
 pub(crate) struct World {
     pub cfg: ExperimentConfig,
@@ -220,6 +261,13 @@ pub(crate) struct World {
     pub em: EnergyModel,
     /// Base stream for per-round draws (`split(t)` per round).
     pub rng: Rng,
+    /// Reliability dynamics (churn process + pristine base world).
+    pub dynamics: WorldDynamics,
+    /// Ground-truth trace replayed instead of fate draws
+    /// ([`ChurnModel::Replay`]).
+    pub replay: Option<FateTrace>,
+    /// In-flight fate recording (`--record-fates`).
+    pub recorder: Option<FateTrace>,
 }
 
 impl World {
@@ -228,10 +276,21 @@ impl World {
         let rng = Rng::new(cfg.seed);
         let topo = Topology::build(&cfg, &mut rng.split(1))?;
         let data = Arc::new(crate::data::build(&cfg, &mut rng.split(2)));
-        let profiles = devices::sample_fleet(&cfg, &topo, &mut rng.split(3));
+        let profiles = devices::sample_fleet(&cfg, &topo, &mut rng.split(3))?;
         let tm = TimingModel::new(&cfg);
         let em = EnergyModel::new(&cfg);
         let round_rng = rng.split(4);
+        // Stream 5 seeds churn-process initialization (battery jitter).
+        // Splitting never advances the parent, so stationary worlds are
+        // bit-identical with or without this stream existing.
+        let dynamics =
+            WorldDynamics::new(cfg.churn.clone(), &profiles, &topo, &mut rng.split(5));
+        let replay = match &cfg.churn {
+            ChurnModel::Replay { path } => {
+                Some(FateTrace::load(std::path::Path::new(path))?)
+            }
+            _ => None,
+        };
         Ok(World {
             cfg,
             topo,
@@ -240,6 +299,9 @@ impl World {
             tm,
             em,
             rng: round_rng,
+            dynamics,
+            replay,
+            recorder: None,
         })
     }
 
@@ -271,9 +333,113 @@ pub(crate) fn draw_selection(topo: &Topology, selection: &Selection, rng: &mut R
     }
 }
 
-/// Draw each selected client's fate: independent drop-out draw (dr_k) plus
-/// deterministic completion time from the timing model.
-pub(crate) fn draw_fates(world: &World, selected: &[usize], rng: &mut Rng) -> Vec<ClientFate> {
+/// Label of the churn substream inside a round's RNG: the dynamics step
+/// draws from `round_rng.split(t).split(CHURN_STREAM)`, a child stream
+/// that never advances its parent — so selection and fate draws are
+/// bit-identical no matter how much (or little) the step consumed.
+const CHURN_STREAM: u64 = 0xC0_0C_AA;
+
+/// Run the round-`t` world-dynamics step (round boundary, before the fate
+/// draw). Returns `true` when the topology changed (migration events) and
+/// region-data caches must be refreshed. A no-op world (stationary /
+/// replayed fates) returns immediately without touching anything.
+pub(crate) fn step_world(world: &mut World, t: usize) -> bool {
+    if world.dynamics.is_noop() {
+        return false;
+    }
+    let mut crng = world.rng.split(t as u64).split(CHURN_STREAM);
+    world
+        .dynamics
+        .step(t, &mut crng, &mut world.profiles, &mut world.topo)
+}
+
+/// Per-region ground-truth availability for this round.
+///
+/// * Normally: the mean no-abort probability `1 − dr_k` over each
+///   region's fleet, as the world stands after the dynamics step.
+/// * Under fate replay the base profiles say nothing about the replayed
+///   world, so the series reports the *realized* availability of the
+///   round's replayed fates instead (alive/selected per region; NaN for
+///   a region with no selected clients — the trace is silent about it).
+pub(crate) fn ground_truth_avail(world: &World, fates: &[ClientFate]) -> Vec<f64> {
+    let m = world.topo.n_regions();
+    if world.replay.is_some() {
+        let selected = region_histogram(m, fates.iter().map(|f| f.region));
+        let alive = region_histogram(m, fates.iter().filter(|f| !f.dropped).map(|f| f.region));
+        return (0..m)
+            .map(|r| {
+                if selected[r] == 0 {
+                    f64::NAN
+                } else {
+                    alive[r] as f64 / selected[r] as f64
+                }
+            })
+            .collect();
+    }
+    world
+        .topo
+        .regions
+        .iter()
+        .map(|cs| {
+            if cs.is_empty() {
+                return 0.0;
+            }
+            cs.iter()
+                .map(|&k| 1.0 - world.profiles[k].dropout_p)
+                .sum::<f64>()
+                / cs.len() as f64
+        })
+        .collect()
+}
+
+/// Resolve each selected client's fate for round `t`.
+///
+/// * Normally: independent drop-out draw (dr_k) plus deterministic
+///   completion time from the timing model.
+/// * Under [`ChurnModel::Replay`]: the recorded trace *is* the world —
+///   each selected client takes its recorded fate verbatim (no RNG is
+///   consumed), including its recorded region attachment (so traces
+///   recorded under migration events keep the original routing; an
+///   out-of-range recorded region falls back to the current topology).
+///   A selected client the trace does not list for this round is
+///   treated as unavailable (dropped).
+pub(crate) fn draw_fates(
+    world: &World,
+    t: usize,
+    selected: &[usize],
+    rng: &mut Rng,
+) -> Vec<ClientFate> {
+    if let Some(trace) = &world.replay {
+        let m = world.topo.n_regions();
+        return selected
+            .iter()
+            .map(|&k| match trace.get(t, k) {
+                Some(rec) => {
+                    let region = if rec.region < m {
+                        rec.region
+                    } else {
+                        world.topo.region_of[k]
+                    };
+                    ClientFate {
+                        client: k,
+                        region,
+                        dropped: rec.dropped,
+                        completion: if rec.dropped {
+                            f64::INFINITY
+                        } else {
+                            rec.completion
+                        },
+                    }
+                }
+                None => ClientFate {
+                    client: k,
+                    region: world.topo.region_of[k],
+                    dropped: true,
+                    completion: f64::INFINITY,
+                },
+            })
+            .collect();
+    }
     selected
         .iter()
         .map(|&k| {
@@ -293,6 +459,14 @@ pub(crate) fn draw_fates(world: &World, selected: &[usize], rng: &mut Rng) -> Ve
             }
         })
         .collect()
+}
+
+/// Record the round's ground-truth fates when recording is on (both
+/// backends call this right after the fate resolution).
+pub(crate) fn record_fates(world: &mut World, t: usize, fates: &[ClientFate]) {
+    if let Some(rec) = world.recorder.as_mut() {
+        rec.record(t, fates);
+    }
 }
 
 /// A resolved round cut: per-region cutoff times plus the round length and
@@ -422,6 +596,9 @@ pub struct RoundTrace {
     pub selected: Vec<usize>,
     pub alive: Vec<usize>,
     pub submissions: Vec<usize>,
+    /// Per-region ground-truth availability this round (mean `1 − dr_k`
+    /// after the world-dynamics step) — the churn-analysis series.
+    pub avail: Vec<f64>,
     /// Cumulative device energy, Joules, across the fleet.
     pub cum_energy_j: f64,
     pub deadline_hit: bool,
@@ -582,6 +759,7 @@ pub fn run_resumable(
             selected: rec.selected,
             alive: rec.alive,
             submissions: rec.submissions,
+            avail: rec.avail,
             cum_energy_j: st.cum_energy,
             deadline_hit: rec.deadline_hit,
             cloud_aggregated: rec.cloud_aggregated,

@@ -17,10 +17,12 @@
 use std::sync::Arc;
 
 use crate::aggregation::StreamingAggregator;
+use crate::churn::{ChurnState, FateTrace};
 use crate::config::ExperimentConfig;
 use crate::env::{
-    charge_energy, draw_fates, draw_selection, region_histogram, resolve_cutoff, ClientFate,
-    CutoffPolicy, FlEnvironment, RoundOutcome, Selection, Starts, World,
+    charge_energy, draw_fates, draw_selection, ground_truth_avail, record_fates,
+    region_histogram, resolve_cutoff, step_world, ClientFate, CutoffPolicy, FlEnvironment,
+    RoundOutcome, Selection, Starts, World,
 };
 use crate::model::ModelParams;
 use crate::rng::{Rng, RngState};
@@ -90,13 +92,20 @@ impl FlEnvironment for VirtualClockEnv {
         starts: Starts<'_>,
         policy: CutoffPolicy,
     ) -> Result<RoundOutcome> {
+        // World dynamics first (contract point 6): churn may rewrite
+        // per-client reliability — and, under migration events, the
+        // topology — before anything about this round is drawn.
+        if step_world(&mut self.world, t) {
+            self.region_data = self.world.region_data_sizes();
+        }
         let m = self.world.topo.n_regions();
         let mut rng = self.world.rng.split(t as u64);
 
         // Selection fan-out, then per-client fates — same RNG order as the
         // live backend so both inhabit the same random world.
         let selected = draw_selection(&self.world.topo, &selection, &mut rng);
-        let fates = draw_fates(&self.world, &selected, &mut rng);
+        let fates = draw_fates(&self.world, t, &selected, &mut rng);
+        record_fates(&mut self.world, t, &fates);
 
         // Round cut per policy, then energy accounting against it.
         let plan = resolve_cutoff(&self.world.tm, m, &fates, policy);
@@ -136,12 +145,14 @@ impl FlEnvironment for VirtualClockEnv {
         let alive = region_histogram(m, fates.iter().filter(|f| !f.dropped).map(|f| f.region));
         let regional = agg.into_regions();
         let submissions: Vec<usize> = regional.iter().map(|r| r.count()).collect();
+        let avail = ground_truth_avail(&self.world, &fates);
 
         Ok(RoundOutcome {
             selected: selected_h,
             alive,
             submissions,
             regional,
+            avail,
             round_len: plan.round_len,
             deadline_hit: plan.deadline_hit,
             energy_j,
@@ -158,5 +169,21 @@ impl FlEnvironment for VirtualClockEnv {
 
     fn restore_rng_state(&mut self, state: RngState) {
         self.world.rng = Rng::from_state(state);
+    }
+
+    fn churn_state(&self) -> ChurnState {
+        self.world.dynamics.state()
+    }
+
+    fn restore_churn_state(&mut self, state: ChurnState) -> Result<()> {
+        self.world.dynamics.restore(state)
+    }
+
+    fn set_fate_recording(&mut self, on: bool) {
+        self.world.recorder = on.then(FateTrace::new);
+    }
+
+    fn take_fate_trace(&mut self) -> Option<FateTrace> {
+        self.world.recorder.take()
     }
 }

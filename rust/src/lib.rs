@@ -56,11 +56,60 @@
 //! println!("live best accuracy: {:.3}", live.summary.best_accuracy);
 //! ```
 //!
+//! The world need not stand still: the [`churn`] subsystem layers
+//! time-varying reliability on top of the sampled fleet — Markov bursty
+//! availability, diurnal drop-out cycles, battery depletion, and scripted
+//! fault events (regional blackouts, drop-out step changes, bandwidth
+//! degradation, client mobility), composable and deterministic in the
+//! seed. Any run's ground-truth per-round fates can be exported as a JSON
+//! [`churn::FateTrace`] and replayed as a scenario of its own (including
+//! hand-written traces). Protocols observe none of this directly — only
+//! submission counts — so the paper's reliability-agnosticism contract
+//! survives a churning world, which is exactly what the dynamic Fig. 2
+//! scenarios stress-test.
+//!
+//! ```no_run
+//! use hybridfl::churn::{ChurnModel, FaultEvent};
+//! use hybridfl::scenario::Scenario;
+//!
+//! // Bursty availability plus a scripted blackout of region 1 during
+//! // rounds 40..60; record the ground truth for later replay.
+//! let result = Scenario::task1()
+//!     .mock()
+//!     .churn(ChurnModel::Composed {
+//!         layers: vec![
+//!             ChurnModel::MarkovOnOff {
+//!                 p_fail: 0.05,
+//!                 p_recover: 0.25,
+//!                 down_dropout: 0.95,
+//!                 region_scale: vec![],
+//!             },
+//!             ChurnModel::FaultScript {
+//!                 events: vec![FaultEvent::RegionBlackout {
+//!                     region: 1,
+//!                     from_round: 40,
+//!                     until_round: 60,
+//!                 }],
+//!             },
+//!         ],
+//!     })
+//!     .record_fates("fates.json")
+//!     .run()?;
+//! // Replaying the trace reproduces the run exactly (fixed point):
+//! let replayed = Scenario::task1().mock().replay_fates("fates.json").run()?;
+//! # let _ = (result, replayed);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! On the CLI this is `--churn markov:p_fail=0.1+script:events.json`,
+//! `--record-fates trace.json` and `--replay-fates trace.json`.
+//!
 //! Long runs survive coordinator interruption: give the scenario a
 //! checkpoint directory and every round boundary writes a versioned
 //! binary [`snapshot::RunSnapshot`] (round index, global/regional models,
-//! RNG streams, slack-estimator state, metric accumulators, config
-//! fingerprint); a later process resumes it to a **byte-identical**
+//! RNG streams, slack-estimator state, churn-process state, metric
+//! accumulators, config fingerprint); a later process resumes it to a
+//! **byte-identical**
 //! [`env::RunResult`] on either backend. Resuming against a different
 //! config is a hard error naming the diverging fields. On the CLI this is
 //! `--checkpoint-dir DIR [--checkpoint-every N]` and `--resume FILE`.
@@ -105,6 +154,7 @@
 
 pub mod aggregation;
 pub mod benchkit;
+pub mod churn;
 pub mod cli;
 pub mod config;
 pub mod data;

@@ -5,6 +5,8 @@
 //!                 [--backend sim|live] [--scale S] [--out trace.csv]
 //!                 [--checkpoint-dir D [--checkpoint-every N]]
 //!                 [--resume snapshot.hflsnap]
+//!                 [--churn SPEC] [--record-fates f.json]
+//!                 [--replay-fates f.json]
 //! hybridfl fig2   [--out dir] [--seed N]
 //! hybridfl table3 [--full|--quick] [--mock] [--serial] [--target A] [--out dir]
 //! hybridfl table4 [--full|--quick] [--mock] [--serial] [--target A] [--out dir]
@@ -65,7 +67,15 @@ commands:
           --checkpoint-dir DIR write a resumable snapshot at round
           boundaries [--checkpoint-every N widens the cadence],
           --resume FILE continue a snapshotted run; the config must
-          match the snapshot's fingerprint exactly)
+          match the snapshot's fingerprint exactly,
+          --churn SPEC time-varying reliability: stationary | markov |
+          diurnal | battery | script:events.json | replay:trace.json,
+          options as k=v after ':', compose layers with '+'
+          (e.g. markov:p_fail=0.1+script:blackout.json),
+          --record-fates FILE export the run's ground-truth per-round
+          fates as a replayable JSON trace,
+          --replay-fates FILE drive the world from a recorded or
+          hand-written fate trace instead of drawing fates)
   fig2    slack-factor traces (paper Fig. 2) -> reports/fig2_traces.csv
   table3  Task-1 sweep: Table III + Fig. 4 traces + Fig. 5 energy
   table4  Task-2 sweep: Table IV + Fig. 6 traces + Fig. 7 energy
@@ -112,6 +122,27 @@ fn resolve_scenario(args: &Args, default_backend: Backend) -> hybridfl::Result<S
     }
     if let Some(path) = args.get("resume") {
         sc = sc.resume_from(path);
+    }
+    if let Some(spec) = args.get("churn") {
+        sc = sc.churn(hybridfl::churn::ChurnModel::parse_spec(spec)?);
+    }
+    if let Some(path) = args.get("replay-fates") {
+        // Guard against *any* configured churn model — whether it came
+        // from --churn, --set churn=..., or a --config file — not just
+        // the flag: silently discarding one would run a different world
+        // than the user asked for.
+        let configured = &sc.config().churn;
+        anyhow::ensure!(
+            matches!(configured, hybridfl::churn::ChurnModel::Stationary),
+            "--replay-fates replaces the churn model, but a '{}' model is \
+             already configured (via --churn, --set churn=..., or the config \
+             file); drop one of the two",
+            configured.kind_str()
+        );
+        sc = sc.replay_fates(path);
+    }
+    if let Some(path) = args.get("record-fates") {
+        sc = sc.record_fates(path);
     }
     Ok(sc)
 }

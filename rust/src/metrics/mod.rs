@@ -11,14 +11,16 @@ use crate::sim::{RoundTrace, RunResult, RunSummary};
 use crate::Result;
 
 /// Render per-round traces as CSV (one row per round; slack columns appear
-/// when present — HybridFL runs).
+/// when present — HybridFL runs; `avail_rN` is the per-region ground-truth
+/// availability after the round's world-dynamics step, the series churn
+/// analyses plot against the protocol's observables).
 pub fn traces_to_csv(rounds: &[RoundTrace]) -> String {
     let mut out = String::new();
     let n_regions = rounds.first().map_or(0, |r| r.submissions.len());
     let has_slack = rounds.first().is_some_and(|r| r.slack.is_some());
     out.push_str("t,round_len,cum_time,accuracy,best_accuracy,eval_loss,cum_energy_wh,deadline_hit,cloud_aggregated");
     for r in 0..n_regions {
-        let _ = write!(out, ",selected_r{r},alive_r{r},submissions_r{r}");
+        let _ = write!(out, ",selected_r{r},alive_r{r},submissions_r{r},avail_r{r}");
         if has_slack {
             let _ = write!(out, ",theta_r{r},c_r{r},q_r{r}");
         }
@@ -41,10 +43,11 @@ pub fn traces_to_csv(rounds: &[RoundTrace]) -> String {
         for r in 0..n_regions {
             let _ = write!(
                 out,
-                ",{},{},{}",
+                ",{},{},{},{:.5}",
                 row.selected.get(r).copied().unwrap_or(0),
                 row.alive.get(r).copied().unwrap_or(0),
                 row.submissions.get(r).copied().unwrap_or(0),
+                row.avail.get(r).copied().unwrap_or(0.0),
             );
             if has_slack {
                 if let Some(s) = row.slack.as_ref().and_then(|v| v.get(r)) {
@@ -176,6 +179,7 @@ mod tests {
         assert_eq!(lines.len(), 6); // header + 5 rounds
         assert!(lines[0].starts_with("t,round_len"));
         assert!(lines[0].contains("theta_r0")); // HybridFL slack columns
+        assert!(lines[0].contains("avail_r0")); // ground-truth availability
         // Every row has the same number of fields as the header.
         let n = lines[0].split(',').count();
         for l in &lines[1..] {

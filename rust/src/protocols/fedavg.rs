@@ -56,6 +56,7 @@ impl Protocol for FedAvg {
             selected: out.selected,
             alive: out.alive,
             submissions: out.submissions,
+            avail: out.avail,
             energy_j: out.energy_j,
             deadline_hit: out.deadline_hit,
             cloud_aggregated: true,

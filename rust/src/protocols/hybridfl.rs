@@ -118,6 +118,7 @@ impl Protocol for HybridFl {
             selected: out.selected,
             alive: out.alive,
             submissions: out.submissions,
+            avail: out.avail,
             energy_j: out.energy_j,
             deadline_hit: out.deadline_hit,
             cloud_aggregated: true,

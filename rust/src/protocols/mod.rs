@@ -50,6 +50,10 @@ pub struct RoundRecord {
     pub alive: Vec<usize>,
     /// |S_r(t)| — models collected in time, per region.
     pub submissions: Vec<usize>,
+    /// Per-region ground-truth availability after this round's
+    /// world-dynamics step (environment truth for the metrics layer —
+    /// protocols relay it, never act on it).
+    pub avail: Vec<f64>,
     /// Total device energy spent this round (Joules).
     pub energy_j: f64,
     /// Whether the quota / all-responses condition was met before T_lim.

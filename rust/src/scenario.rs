@@ -22,6 +22,7 @@
 
 use std::path::PathBuf;
 
+use crate::churn::ChurnModel;
 use crate::config::{CacheMode, EngineKind, ExperimentConfig, ProtocolKind};
 use crate::env::{
     run_resumable, DriverState, FlEnvironment, LiveClusterEnv, RunResult, VirtualClockEnv,
@@ -69,6 +70,7 @@ pub struct Scenario {
     checkpoint_every: Option<usize>,
     resume_from: Option<PathBuf>,
     snapshot_codec: CodecKind,
+    record_fates: Option<PathBuf>,
 }
 
 impl Scenario {
@@ -86,6 +88,7 @@ impl Scenario {
             checkpoint_every: None,
             resume_from: None,
             snapshot_codec: CodecKind::Binary,
+            record_fates: None,
         }
     }
 
@@ -139,6 +142,34 @@ impl Scenario {
     /// E[dr] — mean per-round drop-out probability of the fleet.
     pub fn dropout(mut self, mean: f64) -> Scenario {
         self.cfg.dropout.mean = mean;
+        self
+    }
+
+    /// Time-varying reliability dynamics (the churn subsystem): Markov
+    /// burstiness, diurnal cycles, battery drain, scripted fault events,
+    /// or a composition of them. [`ChurnModel::Stationary`] (the default)
+    /// reproduces the frozen-world behavior bit for bit.
+    pub fn churn(mut self, model: ChurnModel) -> Scenario {
+        self.cfg.churn = model;
+        self
+    }
+
+    /// Record the run's ground-truth per-round fates and write them as a
+    /// [`crate::churn::FateTrace`] JSON at `path` when the run completes.
+    /// Observational: recording never perturbs the run (and composes with
+    /// [`Self::replay_fates`] — replay + record is the fixed-point check).
+    pub fn record_fates(mut self, path: impl Into<PathBuf>) -> Scenario {
+        self.record_fates = Some(path.into());
+        self
+    }
+
+    /// Replay the ground-truth fates of a recorded (or hand-written)
+    /// trace instead of drawing them — shorthand for
+    /// `.churn(ChurnModel::Replay { path })`.
+    pub fn replay_fates(mut self, path: impl Into<PathBuf>) -> Scenario {
+        self.cfg.churn = ChurnModel::Replay {
+            path: path.into().to_string_lossy().into_owned(),
+        };
         self
     }
 
@@ -274,6 +305,13 @@ impl Scenario {
         if let Some(every) = self.checkpoint_every {
             anyhow::ensure!(every > 0, "checkpoint_every must be >= 1");
         }
+        if self.record_fates.is_some() && self.resume_from.is_some() {
+            anyhow::bail!(
+                "record_fates on a resumed run would write a partial trace: rounds \
+                 up to the checkpoint are restored from the snapshot, not executed, \
+                 so their fates cannot be recorded — record from a fresh run instead"
+            );
+        }
 
         let backend = self.backend;
         let mut env: Box<dyn FlEnvironment> = match backend {
@@ -291,16 +329,30 @@ impl Scenario {
             None => DriverState::fresh(),
         };
 
-        match self.checkpoint_dir {
+        if self.record_fates.is_some() {
+            env.set_fate_recording(true);
+        }
+
+        let result = match self.checkpoint_dir {
             Some(dir) => {
                 let every = self.checkpoint_every.unwrap_or(1);
                 let kind = self.snapshot_codec;
                 run_resumable(env.as_mut(), protocol.as_mut(), driver, &mut |env, proto, st| {
                     write_checkpoint(&dir, kind, every, backend, &*env, proto, st)
-                })
+                })?
             }
-            None => run_resumable(env.as_mut(), protocol.as_mut(), driver, &mut |_, _, _| Ok(())),
+            None => {
+                run_resumable(env.as_mut(), protocol.as_mut(), driver, &mut |_, _, _| Ok(()))?
+            }
+        };
+
+        if let Some(path) = &self.record_fates {
+            let trace = env
+                .take_fate_trace()
+                .expect("recording was enabled before the run");
+            trace.save(path)?;
         }
+        Ok(result)
     }
 }
 

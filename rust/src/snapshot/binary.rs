@@ -40,6 +40,7 @@
 //! anywhere in the body surfaces as
 //! [`SnapshotError::ChecksumMismatch`] before any field is interpreted.
 
+use crate::churn::ChurnState;
 use crate::env::{DriverState, RoundTrace};
 use crate::model::ModelParams;
 use crate::protocols::ProtocolState;
@@ -71,6 +72,7 @@ impl SnapshotCodec for BinaryCodec {
         w.str(&snap.config_json);
         w.u64(snap.fingerprint);
         write_rng(&mut w, &snap.rng);
+        write_churn(&mut w, &snap.churn);
         write_protocol(&mut w, &snap.protocol);
         write_driver(&mut w, &snap.driver);
         let payload = w.into_bytes();
@@ -136,6 +138,7 @@ impl SnapshotCodec for BinaryCodec {
             ));
         }
         let rng = read_rng(&mut r)?;
+        let churn = read_churn(&mut r, 0)?;
         let protocol = read_protocol(&mut r)?;
         let driver = read_driver(&mut r)?;
         r.finish()?;
@@ -144,6 +147,7 @@ impl SnapshotCodec for BinaryCodec {
             config_json,
             fingerprint,
             rng,
+            churn,
             protocol,
             driver,
         })
@@ -170,6 +174,76 @@ fn read_rng(r: &mut Reader<'_>) -> Result<RngState, SnapshotError> {
         s,
         gauss_spare: r.opt_f64()?,
     })
+}
+
+const CHURN_STATELESS: u8 = 0;
+const CHURN_MARKOV: u8 = 1;
+const CHURN_BATTERY: u8 = 2;
+const CHURN_COMPOSED: u8 = 3;
+
+/// Composed states nest one level in the model, but decode defensively
+/// against deeper (corrupted) nesting anyway.
+const CHURN_MAX_DEPTH: u8 = 2;
+
+fn write_churn(w: &mut Writer, c: &ChurnState) {
+    match c {
+        ChurnState::Stateless => w.u8(CHURN_STATELESS),
+        ChurnState::Markov { up } => {
+            w.u8(CHURN_MARKOV);
+            w.u64(up.len() as u64);
+            for &b in up {
+                w.u8(b as u8);
+            }
+        }
+        ChurnState::Battery { level } => {
+            w.u8(CHURN_BATTERY);
+            w.u64(level.len() as u64);
+            for &l in level {
+                w.f64(l);
+            }
+        }
+        ChurnState::Composed { layers } => {
+            w.u8(CHURN_COMPOSED);
+            w.u64(layers.len() as u64);
+            for l in layers {
+                write_churn(w, l);
+            }
+        }
+    }
+}
+
+fn read_churn(r: &mut Reader<'_>, depth: u8) -> Result<ChurnState, SnapshotError> {
+    match r.u8()? {
+        CHURN_STATELESS => Ok(ChurnState::Stateless),
+        CHURN_MARKOV => {
+            let n = r.u64()? as usize;
+            r.check_remaining(n, 1, "markov flags")?;
+            let up = (0..n).map(|_| r.bool()).collect::<Result<_, _>>()?;
+            Ok(ChurnState::Markov { up })
+        }
+        CHURN_BATTERY => {
+            let n = r.u64()? as usize;
+            r.check_remaining(n, 8, "battery levels")?;
+            let level = (0..n).map(|_| r.f64()).collect::<Result<_, _>>()?;
+            Ok(ChurnState::Battery { level })
+        }
+        CHURN_COMPOSED => {
+            if depth >= CHURN_MAX_DEPTH {
+                return Err(SnapshotError::Malformed(
+                    "churn state nests deeper than any valid model".into(),
+                ));
+            }
+            let n = r.u64()? as usize;
+            r.check_remaining(n, 1, "churn layers")?;
+            let layers = (0..n)
+                .map(|_| read_churn(r, depth + 1))
+                .collect::<Result<_, _>>()?;
+            Ok(ChurnState::Composed { layers })
+        }
+        tag => Err(SnapshotError::Malformed(format!(
+            "unknown churn-state tag {tag}"
+        ))),
+    }
 }
 
 pub(crate) fn write_params(w: &mut Writer, p: &ModelParams) {
@@ -367,6 +441,19 @@ fn read_usize_vec(r: &mut Reader<'_>) -> Result<Vec<usize>, SnapshotError> {
     (0..n).map(|_| r.u64().map(|v| v as usize)).collect()
 }
 
+fn write_f64_vec(w: &mut Writer, xs: &[f64]) {
+    w.u64(xs.len() as u64);
+    for &x in xs {
+        w.f64(x);
+    }
+}
+
+fn read_f64_vec(r: &mut Reader<'_>) -> Result<Vec<f64>, SnapshotError> {
+    let n = r.u64()? as usize;
+    r.check_remaining(n, 8, "f64 vector")?;
+    (0..n).map(|_| r.f64()).collect()
+}
+
 pub(crate) fn write_round_trace(w: &mut Writer, row: &RoundTrace) {
     w.u64(row.t as u64);
     w.f64(row.round_len);
@@ -377,6 +464,7 @@ pub(crate) fn write_round_trace(w: &mut Writer, row: &RoundTrace) {
     write_usize_vec(w, &row.selected);
     write_usize_vec(w, &row.alive);
     write_usize_vec(w, &row.submissions);
+    write_f64_vec(w, &row.avail);
     w.f64(row.cum_energy_j);
     w.u8(row.deadline_hit as u8);
     w.u8(row.cloud_aggregated as u8);
@@ -403,6 +491,7 @@ fn read_round_trace(r: &mut Reader<'_>) -> Result<RoundTrace, SnapshotError> {
         selected: read_usize_vec(r)?,
         alive: read_usize_vec(r)?,
         submissions: read_usize_vec(r)?,
+        avail: read_f64_vec(r)?,
         cum_energy_j: r.f64()?,
         deadline_hit: r.bool()?,
         cloud_aggregated: r.bool()?,

@@ -18,6 +18,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::churn::ChurnState;
 use crate::env::{DriverState, RoundTrace};
 use crate::jsonx::Json;
 use crate::model::ModelParams;
@@ -57,6 +58,7 @@ impl SnapshotCodec for JsonCodec {
             .set("config", config)
             .set("fingerprint", hex64(snap.fingerprint))
             .set("rng", rng_to_json(&snap.rng))
+            .set("churn", churn_to_json(&snap.churn))
             .set("protocol", protocol_to_json(&snap.protocol))
             .set("driver", driver_to_json(&snap.driver));
         j.pretty().into_bytes()
@@ -95,6 +97,7 @@ impl SnapshotCodec for JsonCodec {
             config_json,
             fingerprint,
             rng: rng_from_json(req(obj, "rng")?)?,
+            churn: churn_from_json(req(obj, "churn")?, 0)?,
             protocol: protocol_from_json(req(obj, "protocol")?)?,
             driver: driver_from_json(req(obj, "driver")?)?,
         })
@@ -126,6 +129,27 @@ fn rng_to_json(rng: &RngState) -> Json {
             "gauss_spare",
             rng.gauss_spare.map_or(Json::Null, Json::Num),
         )
+}
+
+fn churn_to_json(c: &ChurnState) -> Json {
+    match c {
+        ChurnState::Stateless => Json::obj().set("kind", "stateless"),
+        ChurnState::Markov { up } => Json::obj()
+            .set("kind", "markov")
+            .set("up", Json::Arr(up.iter().map(|&b| Json::Bool(b)).collect())),
+        ChurnState::Battery { level } => Json::obj()
+            .set("kind", "battery")
+            .set(
+                "level",
+                Json::Arr(level.iter().map(|&l| num(l)).collect()),
+            ),
+        ChurnState::Composed { layers } => Json::obj()
+            .set("kind", "composed")
+            .set(
+                "layers",
+                Json::Arr(layers.iter().map(churn_to_json).collect()),
+            ),
+    }
 }
 
 fn params_to_json(p: &ModelParams) -> Json {
@@ -216,6 +240,10 @@ fn trace_to_json(row: &RoundTrace) -> Json {
         .set("selected", counts_to_json(&row.selected))
         .set("alive", counts_to_json(&row.alive))
         .set("submissions", counts_to_json(&row.submissions))
+        .set(
+            "avail",
+            Json::Arr(row.avail.iter().map(|&a| num(a)).collect()),
+        )
         .set("cum_energy_j", num(row.cum_energy_j))
         .set("deadline_hit", row.deadline_hit)
         .set("cloud_aggregated", row.cloud_aggregated)
@@ -338,6 +366,46 @@ fn rng_from_json(j: &Json) -> Result<RngState, SnapshotError> {
         }
     };
     Ok(RngState { s, gauss_spare })
+}
+
+fn churn_from_json(j: &Json, depth: u8) -> Result<ChurnState, SnapshotError> {
+    let obj = as_obj(j, "churn")?;
+    match req_str(obj, "kind")?.as_str() {
+        "stateless" => Ok(ChurnState::Stateless),
+        "markov" => Ok(ChurnState::Markov {
+            up: req_arr(obj, "up")?
+                .iter()
+                .map(|v| match v {
+                    Json::Bool(b) => Ok(*b),
+                    _ => Err(SnapshotError::Malformed(
+                        "churn.up: expected booleans".into(),
+                    )),
+                })
+                .collect::<Result<_, _>>()?,
+        }),
+        "battery" => Ok(ChurnState::Battery {
+            level: req_arr(obj, "level")?
+                .iter()
+                .map(|v| f64_of(v, "churn.level"))
+                .collect::<Result<_, _>>()?,
+        }),
+        "composed" => {
+            if depth >= 2 {
+                return Err(SnapshotError::Malformed(
+                    "churn state nests deeper than any valid model".into(),
+                ));
+            }
+            Ok(ChurnState::Composed {
+                layers: req_arr(obj, "layers")?
+                    .iter()
+                    .map(|l| churn_from_json(l, depth + 1))
+                    .collect::<Result<_, _>>()?,
+            })
+        }
+        k => Err(SnapshotError::Malformed(format!(
+            "unknown churn-state kind '{k}'"
+        ))),
+    }
 }
 
 fn params_from_json(j: &Json) -> Result<ModelParams, SnapshotError> {
@@ -471,6 +539,13 @@ fn trace_from_json(j: &Json) -> Result<RoundTrace, SnapshotError> {
         selected: counts_from_json(req(obj, "selected")?, "selected")?,
         alive: counts_from_json(req(obj, "alive")?, "alive")?,
         submissions: counts_from_json(req(obj, "submissions")?, "submissions")?,
+        avail: match req(obj, "avail")? {
+            Json::Arr(v) => v
+                .iter()
+                .map(|x| f64_of(x, "avail"))
+                .collect::<Result<_, _>>()?,
+            _ => return Err(SnapshotError::Malformed("avail: expected array".into())),
+        },
         cum_energy_j: req_f64(obj, "cum_energy_j")?,
         deadline_hit: req_bool(obj, "deadline_hit")?,
         cloud_aggregated: req_bool(obj, "cloud_aggregated")?,

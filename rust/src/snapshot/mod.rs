@@ -22,6 +22,9 @@
 //!   estimators with their running LSE sums;
 //! * the environment's round-stream RNG ([`crate::rng::RngState`],
 //!   including the cached Box–Muller spare);
+//! * the churn-process state ([`crate::churn::ChurnState`]: Markov
+//!   on/off flags, battery charge levels), so a resumed run continues
+//!   the exact reliability trajectory of a non-stationary world;
 //! * the config fingerprint plus the full config JSON, so a resume
 //!   against a diverging config is a **hard error naming the diverging
 //!   fields** — never a silent hybrid run.
@@ -64,6 +67,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::path::{Path, PathBuf};
 
+use crate::churn::ChurnState;
 use crate::env::{DriverState, FlEnvironment};
 use crate::jsonx::Json;
 use crate::protocols::{Protocol, ProtocolState};
@@ -75,10 +79,15 @@ pub use json::JsonCodec;
 
 /// On-disk format version understood by this build. Bumped whenever the
 /// payload layout changes; old readers reject newer snapshots with
-/// [`SnapshotError::UnsupportedVersion`] instead of misparsing them, and
-/// decoding keeps working for every version still listed as supported
-/// (currently only v1 exists).
-pub const FORMAT_VERSION: u32 = 1;
+/// [`SnapshotError::UnsupportedVersion`] instead of misparsing them.
+///
+/// v2 (churn subsystem) added the churn-process state to the payload and
+/// the per-round availability series to every trace row. v1 support was
+/// retired rather than kept: the config schema gained the `churn` key in
+/// the same change, so no v1 snapshot can pass the config-fingerprint
+/// check against a config this build produces — a v1 decode path would
+/// be dead code behind a guaranteed `ConfigMismatch`.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Typed decode/validation errors. The codecs return these directly so
 /// callers (and tests) can distinguish a truncated file from a checksum
@@ -177,6 +186,9 @@ pub struct RunSnapshot {
     pub fingerprint: u64,
     /// The environment's round-stream RNG at the boundary.
     pub rng: RngState,
+    /// The churn-process state at the boundary (Markov flags, battery
+    /// levels; [`ChurnState::Stateless`] for stationary/scripted worlds).
+    pub churn: ChurnState,
     /// The protocol's full mutable state at the boundary.
     pub protocol: ProtocolState,
     /// The driver's accumulators and per-round trace at the boundary.
@@ -197,6 +209,7 @@ impl RunSnapshot {
             fingerprint: fnv1a64(config_json.as_bytes()),
             config_json,
             rng: env.rng_state(),
+            churn: env.churn_state(),
             protocol: protocol.snapshot_state(),
             driver: driver.clone(),
         }
@@ -249,6 +262,7 @@ impl RunSnapshot {
             env.cfg().t_max
         );
         env.restore_rng_state(self.rng);
+        env.restore_churn_state(self.churn)?;
         protocol.restore_state(self.protocol)?;
         Ok(self.driver)
     }

@@ -1,0 +1,542 @@
+//! Dynamic-reliability subsystem tests (ISSUE 5):
+//!
+//! * `Stationary` churn is byte-identical to the historical frozen-world
+//!   behavior on both backends (the plumbing never perturbs a run);
+//! * each built-in process visibly moves the ground-truth availability
+//!   series while staying deterministic in the seed;
+//! * the slack estimator *re-converges* after a scripted drop-out step
+//!   change — the dynamic Fig. 2 analogue;
+//! * `--record-fates` → `--replay-fates` is a fixed point, and
+//!   hand-written traces drive the world verbatim;
+//! * client mobility reroutes selection on the virtual clock and is a
+//!   loud error on the live backend.
+
+use hybridfl::churn::{ChurnModel, FateRecord, FateTrace, FaultEvent};
+use hybridfl::config::{Dist, EngineKind, ExperimentConfig, ProtocolKind, RegionSpec};
+use hybridfl::env::{CutoffPolicy, FlEnvironment as _, Selection, Starts, VirtualClockEnv};
+use hybridfl::scenario::{Backend, Scenario};
+use hybridfl::snapshot::run_result_bytes;
+
+/// Two explicit 20-client regions on the mock engine.
+fn two_region_cfg(dropout_mean: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::task1_scaled();
+    cfg.engine = EngineKind::Mock;
+    cfg.protocol = ProtocolKind::HybridFl;
+    cfg.n_clients = 40;
+    cfg.n_edges = 2;
+    cfg.regions = vec![
+        RegionSpec { n_clients: 20, dropout_mean },
+        RegionSpec { n_clients: 20, dropout_mean },
+    ];
+    cfg.dropout = Dist::new(dropout_mean, 0.02);
+    cfg.c_fraction = 0.3;
+    cfg.dataset_size = 800;
+    cfg.eval_size = 50;
+    cfg.t_max = 20;
+    cfg.seed = 13;
+    cfg
+}
+
+fn markov() -> ChurnModel {
+    ChurnModel::MarkovOnOff {
+        p_fail: 0.25,
+        p_recover: 0.35,
+        down_dropout: 0.97,
+        region_scale: Vec::new(),
+    }
+}
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("hybridfl_churn_dynamics");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(name)
+}
+
+// ---------------------------------------------------------------------------
+// Stationarity: churn plumbing must not perturb frozen-world runs.
+// ---------------------------------------------------------------------------
+
+/// On the sim backend, the default config, an explicit `Stationary` churn
+/// model, the legacy `FlRun` path, and a run with fate recording enabled
+/// all produce byte-identical `RunResult`s: the subsystem is invisible
+/// until a non-stationary model is asked for.
+#[test]
+fn stationary_is_byte_identical_across_entry_points_sim() {
+    let cfg = two_region_cfg(0.3);
+    let default_bytes =
+        run_result_bytes(&Scenario::from_config(cfg.clone()).run().unwrap());
+    let explicit = Scenario::from_config(cfg.clone())
+        .churn(ChurnModel::Stationary)
+        .run()
+        .unwrap();
+    assert_eq!(default_bytes, run_result_bytes(&explicit));
+    let flrun = hybridfl::sim::FlRun::new(cfg.clone()).unwrap().run().unwrap();
+    assert_eq!(default_bytes, run_result_bytes(&flrun));
+
+    let recorded_path = tmp_path("stationary_record.json");
+    let recorded = Scenario::from_config(cfg)
+        .record_fates(&recorded_path)
+        .run()
+        .unwrap();
+    assert_eq!(
+        default_bytes,
+        run_result_bytes(&recorded),
+        "fate recording perturbed the run"
+    );
+    let _ = std::fs::remove_file(&recorded_path);
+}
+
+/// Same bar on the live threaded backend (small fleet + generous time
+/// scale, the regime `tests/resume_determinism.rs` pins for byte
+/// stability against scheduler jitter).
+#[test]
+fn stationary_is_byte_identical_live() {
+    let mut cfg = two_region_cfg(0.25);
+    cfg.n_clients = 12;
+    cfg.regions = vec![
+        RegionSpec { n_clients: 6, dropout_mean: 0.25 },
+        RegionSpec { n_clients: 6, dropout_mean: 0.25 },
+    ];
+    cfg.dataset_size = 360;
+    cfg.t_max = 3;
+    cfg.seed = 42;
+    let scale = 1e-2;
+    let a = Scenario::from_config(cfg.clone())
+        .backend(Backend::Live)
+        .time_scale(scale)
+        .run()
+        .unwrap();
+    let b = Scenario::from_config(cfg)
+        .backend(Backend::Live)
+        .time_scale(scale)
+        .churn(ChurnModel::Stationary)
+        .run()
+        .unwrap();
+    assert_eq!(run_result_bytes(&a), run_result_bytes(&b));
+}
+
+// ---------------------------------------------------------------------------
+// The built-in processes move the world, deterministically.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn markov_churn_is_deterministic_and_changes_the_world() {
+    let cfg = two_region_cfg(0.2);
+    let run = |churn: ChurnModel| {
+        Scenario::from_config(cfg.clone()).churn(churn).run().unwrap()
+    };
+    let a = run(markov());
+    let b = run(markov());
+    assert_eq!(
+        run_result_bytes(&a),
+        run_result_bytes(&b),
+        "same seed + same churn must be byte-identical"
+    );
+    let stationary = run(ChurnModel::Stationary);
+    assert_ne!(
+        run_result_bytes(&a),
+        run_result_bytes(&stationary),
+        "markov churn left no trace on the run"
+    );
+    // Ground truth: some round must show depressed availability (a down
+    // client carries dropout 0.97 against a 0.2 base).
+    let min_avail = a
+        .rounds
+        .iter()
+        .flat_map(|r| r.avail.iter())
+        .cloned()
+        .fold(f64::MAX, f64::min);
+    assert!(
+        min_avail < 0.75,
+        "no outage visible in the availability series: min {min_avail}"
+    );
+}
+
+#[test]
+fn diurnal_availability_oscillates() {
+    let mut cfg = two_region_cfg(0.3);
+    cfg.t_max = 20;
+    let result = Scenario::from_config(cfg)
+        .churn(ChurnModel::Diurnal {
+            amplitude: 0.3,
+            period: 10,
+            region_phase: vec![0.0, 0.0],
+        })
+        .run()
+        .unwrap();
+    let series: Vec<f64> = result.rounds.iter().map(|r| r.avail[0]).collect();
+    let max = series.iter().cloned().fold(f64::MIN, f64::max);
+    let min = series.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(
+        max - min > 0.4,
+        "diurnal modulation not visible: range {:.3} in {series:?}",
+        max - min
+    );
+    // One full period apart, the availability repeats exactly.
+    assert!((series[0] - series[10]).abs() < 1e-12);
+}
+
+#[test]
+fn battery_drain_depresses_availability_in_waves() {
+    let mut cfg = two_region_cfg(0.2);
+    cfg.t_max = 30;
+    let result = Scenario::from_config(cfg)
+        .churn(ChurnModel::BatteryDrain {
+            drain_per_round: 0.25,
+            recharge_p: 0.4,
+            depleted_dropout: 0.99,
+        })
+        .run()
+        .unwrap();
+    let min_avail = result
+        .rounds
+        .iter()
+        .flat_map(|r| r.avail.iter())
+        .cloned()
+        .fold(f64::MAX, f64::min);
+    assert!(
+        min_avail < 0.55,
+        "no depletion wave visible: min avail {min_avail}"
+    );
+    // Recharges must pull availability back up at some round: the series
+    // has to swing, not sink monotonically.
+    let max_avail = result
+        .rounds
+        .iter()
+        .flat_map(|r| r.avail.iter())
+        .cloned()
+        .fold(f64::MIN, f64::max);
+    assert!(
+        max_avail > min_avail + 0.15,
+        "no recovery after depletion: max {max_avail} vs min {min_avail}"
+    );
+}
+
+#[test]
+fn regional_blackout_zeroes_the_region_for_its_window() {
+    let mut cfg = two_region_cfg(0.2);
+    cfg.t_max = 8;
+    let result = Scenario::from_config(cfg)
+        .churn(ChurnModel::FaultScript {
+            events: vec![FaultEvent::RegionBlackout {
+                region: 0,
+                from_round: 3,
+                until_round: 6,
+            }],
+        })
+        .run()
+        .unwrap();
+    for row in &result.rounds {
+        if (3..6).contains(&row.t) {
+            assert_eq!(row.alive[0], 0, "round {}: blackout leaked", row.t);
+            assert_eq!(row.submissions[0], 0, "round {}", row.t);
+            assert!(row.avail[0] < 1e-12, "round {}: avail {}", row.t, row.avail[0]);
+        } else {
+            assert!(row.avail[0] > 0.5, "round {}: avail {}", row.t, row.avail[0]);
+        }
+        // The untouched region never blacks out.
+        assert!(row.avail[1] > 0.5, "round {}", row.t);
+    }
+    // Before and after the window the region participates again.
+    let t2 = &result.rounds[1];
+    let t6 = &result.rounds[5];
+    assert!(t2.alive[0] > 0);
+    assert!(t6.alive[0] > 0);
+}
+
+// ---------------------------------------------------------------------------
+// The dynamic Fig. 2 analogue: slack re-convergence after a regime shift.
+// ---------------------------------------------------------------------------
+
+/// A scripted drop-out step change hits region 1 at round 50 (+0.35 on
+/// every client). The slack estimator only ever sees submission counts,
+/// yet: participation collapses right after the shift, selection ramps
+/// up to compensate, and the per-region alive fraction re-converges to
+/// the cloud's target C within the run — the paper's Fig. 2 story, made
+/// dynamic.
+#[test]
+fn dropout_step_change_reconverges_selected_proportion() {
+    let mut cfg = two_region_cfg(0.3);
+    cfg.t_max = 250;
+    let shift_at = 50usize;
+    let result = Scenario::from_config(cfg)
+        .churn(ChurnModel::FaultScript {
+            events: vec![FaultEvent::DropoutShift {
+                region: Some(1),
+                at_round: shift_at,
+                delta: 0.35,
+            }],
+        })
+        .run()
+        .unwrap();
+
+    let n_r = 20.0;
+    let c = 0.3;
+    let alive_frac = |rows: &[hybridfl::env::RoundTrace]| -> f64 {
+        rows.iter().map(|r| r.alive[1] as f64 / n_r).sum::<f64>() / rows.len() as f64
+    };
+    let selected_mean = |rows: &[hybridfl::env::RoundTrace]| -> f64 {
+        rows.iter().map(|r| r.selected[1] as f64).sum::<f64>() / rows.len() as f64
+    };
+
+    // rounds[i] carries t = i + 1; the shift applies from t = 50 on.
+    let pre = &result.rounds[29..49]; // t in 30..49, converged stationary
+    let post = &result.rounds[50..70]; // t in 51..70, right after the shift
+    let tail = &result.rounds[200..250]; // t in 201..250, re-converged
+
+    // Pre-shift: steered to the target.
+    let pre_alive = alive_frac(pre);
+    assert!(
+        (pre_alive - c).abs() < 0.12,
+        "pre-shift alive fraction {pre_alive} should hover near C={c}"
+    );
+    // The shift bites: participation collapses before adaptation.
+    let post_alive = alive_frac(post);
+    assert!(
+        post_alive < pre_alive - 0.04,
+        "step change did not depress participation: pre {pre_alive}, post {post_alive}"
+    );
+    // Re-convergence: the tail is steered back toward C...
+    let tail_alive = alive_frac(tail);
+    assert!(
+        (tail_alive - c).abs() < 0.12,
+        "no re-convergence: tail alive fraction {tail_alive} vs C={c}"
+    );
+    assert!(
+        tail_alive > post_alive,
+        "tail {tail_alive} should recover above the post-shift dip {post_alive}"
+    );
+    // ...because selection in the degraded region ramped up.
+    let pre_sel = selected_mean(pre);
+    let tail_sel = selected_mean(tail);
+    assert!(
+        tail_sel > pre_sel + 2.0,
+        "selection did not compensate: pre {pre_sel}, tail {tail_sel}"
+    );
+    // Ground truth confirms the regime shift itself.
+    assert!(result.rounds[30].avail[1] > 0.6);
+    assert!(result.rounds[60].avail[1] < 0.45);
+}
+
+// ---------------------------------------------------------------------------
+// Fate-trace record / replay.
+// ---------------------------------------------------------------------------
+
+/// The acceptance bar: record a churning run's ground truth, replay it,
+/// record the replay — the two traces are identical (a fixed point), and
+/// the replayed run reproduces the recorded run's observable trajectory.
+#[test]
+fn record_then_replay_is_a_fixed_point() {
+    let mut cfg = two_region_cfg(0.25);
+    cfg.t_max = 12;
+    let p1 = tmp_path("fixed_point_1.json");
+    let p2 = tmp_path("fixed_point_2.json");
+
+    let original = Scenario::from_config(cfg.clone())
+        .churn(ChurnModel::Composed {
+            layers: vec![
+                markov(),
+                ChurnModel::FaultScript {
+                    events: vec![FaultEvent::RegionBlackout {
+                        region: 1,
+                        from_round: 4,
+                        until_round: 6,
+                    }],
+                },
+            ],
+        })
+        .record_fates(&p1)
+        .run()
+        .unwrap();
+    let trace1 = FateTrace::load(&p1).unwrap();
+    assert_eq!(trace1.n_rounds(), 12);
+
+    let replayed = Scenario::from_config(cfg)
+        .replay_fates(&p1)
+        .record_fates(&p2)
+        .run()
+        .unwrap();
+    let trace2 = FateTrace::load(&p2).unwrap();
+    assert_eq!(trace1, trace2, "replay is not a fixed point");
+
+    // The replayed world reproduces every observable of the original run.
+    // `avail` is compared by its replay semantics: the original reports
+    // the churned fleet's mean no-abort probability, the replay reports
+    // the *realized* availability of the forced fates — so the replayed
+    // value must equal alive/selected exactly.
+    assert_eq!(original.rounds.len(), replayed.rounds.len());
+    for (a, b) in original.rounds.iter().zip(replayed.rounds.iter()) {
+        assert_eq!(a.selected, b.selected, "round {}", a.t);
+        assert_eq!(a.alive, b.alive, "round {}", a.t);
+        assert_eq!(a.submissions, b.submissions, "round {}", a.t);
+        for r in 0..b.avail.len() {
+            if b.selected[r] == 0 {
+                assert!(b.avail[r].is_nan(), "round {} region {r}", a.t);
+            } else {
+                let realized = b.alive[r] as f64 / b.selected[r] as f64;
+                assert_eq!(
+                    b.avail[r].to_bits(),
+                    realized.to_bits(),
+                    "round {} region {r}",
+                    a.t
+                );
+            }
+        }
+        assert_eq!(a.round_len.to_bits(), b.round_len.to_bits(), "round {}", a.t);
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "round {}", a.t);
+        assert_eq!(
+            a.cum_energy_j.to_bits(),
+            b.cum_energy_j.to_bits(),
+            "round {}",
+            a.t
+        );
+    }
+    let _ = std::fs::remove_file(&p1);
+    let _ = std::fs::remove_file(&p2);
+}
+
+/// Hand-written traces drive the world verbatim: a trace scripting one
+/// round of total silence produces exactly one deadline-bound round with
+/// zero submissions.
+#[test]
+fn handwritten_trace_scripts_a_round_of_silence() {
+    let mut cfg = two_region_cfg(0.0);
+    cfg.protocol = ProtocolKind::FedAvg;
+    cfg.t_max = 4;
+    let mut trace = FateTrace::new();
+    for t in 1..=4usize {
+        for k in 0..cfg.n_clients {
+            let dropped = t == 2;
+            trace.insert(
+                t,
+                k,
+                FateRecord {
+                    region: if k < 20 { 0 } else { 1 },
+                    dropped,
+                    completion: if dropped { f64::INFINITY } else { 50.0 },
+                },
+            );
+        }
+    }
+    let path = tmp_path("handwritten.json");
+    trace.save(&path).unwrap();
+
+    let result = Scenario::from_config(cfg).replay_fates(&path).run().unwrap();
+    for row in &result.rounds {
+        let subs: usize = row.submissions.iter().sum();
+        let sel: usize = row.selected.iter().sum();
+        if row.t == 2 {
+            assert_eq!(subs, 0, "scripted silence leaked submissions");
+            assert!(row.deadline_hit);
+        } else {
+            assert_eq!(subs, sel, "round {}", row.t);
+            assert!(!row.deadline_hit);
+            // Every scripted completion is 50 s; FedAvg waits for all.
+            assert!((row.round_len - 50.0).abs() < 1e-9, "round {}", row.t);
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A selected client the trace does not list is treated as unavailable:
+/// an empty trace silences the entire run.
+#[test]
+fn empty_trace_means_everyone_is_down() {
+    let mut cfg = two_region_cfg(0.0);
+    cfg.t_max = 3;
+    let path = tmp_path("empty.json");
+    FateTrace::new().save(&path).unwrap();
+    let result = Scenario::from_config(cfg).replay_fates(&path).run().unwrap();
+    for row in &result.rounds {
+        assert_eq!(row.submissions.iter().sum::<usize>(), 0);
+        assert!(row.deadline_hit);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Recording a resumed run would miss every round the snapshot restored
+/// instead of executing — rejected loudly, never a silent partial trace.
+#[test]
+fn record_fates_on_resumed_run_is_rejected() {
+    let err = Scenario::from_config(two_region_cfg(0.1))
+        .resume_from("/nonexistent/snap.hflsnap")
+        .record_fates(tmp_path("never_written.json"))
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("partial trace"), "{err}");
+}
+
+#[test]
+fn replay_missing_file_is_a_loud_error() {
+    let err = Scenario::from_config(two_region_cfg(0.1))
+        .replay_fates("/nonexistent/trace.json")
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("/nonexistent/trace.json"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Client mobility.
+// ---------------------------------------------------------------------------
+
+/// On the virtual clock, a migration event reroutes the client: the
+/// per-region selection histogram shifts from [20, 20] to [19, 21] the
+/// round the move lands.
+#[test]
+fn migration_reroutes_selection_on_the_virtual_clock() {
+    let mut cfg = two_region_cfg(0.0);
+    cfg.churn = ChurnModel::FaultScript {
+        events: vec![FaultEvent::Migrate {
+            client: 0,
+            at_round: 2,
+            to_region: 1,
+        }],
+    };
+    let mut env = VirtualClockEnv::new(cfg).unwrap();
+    let model = env.init_model();
+    // Ask for more clients than any region holds: selection saturates at
+    // the region's current size, which is exactly the membership count.
+    let out1 = env
+        .run_round(
+            1,
+            Selection::PerRegion(vec![25, 25]),
+            Starts::Global(&model),
+            CutoffPolicy::AllPerRegion,
+        )
+        .unwrap();
+    assert_eq!(out1.selected, vec![20, 20]);
+    let out2 = env
+        .run_round(
+            2,
+            Selection::PerRegion(vec![25, 25]),
+            Starts::Global(&model),
+            CutoffPolicy::AllPerRegion,
+        )
+        .unwrap();
+    assert_eq!(out2.selected, vec![19, 21], "migration did not reroute");
+}
+
+/// The live fabric binds client threads to edge channels at spawn, so
+/// migration scenarios are rejected loudly there.
+#[test]
+fn migration_is_rejected_on_the_live_backend() {
+    let mut cfg = two_region_cfg(0.1);
+    cfg.t_max = 2;
+    let err = Scenario::from_config(cfg)
+        .churn(ChurnModel::FaultScript {
+            events: vec![FaultEvent::Migrate {
+                client: 3,
+                at_round: 1,
+                to_region: 1,
+            }],
+        })
+        .backend(Backend::Live)
+        .time_scale(1e-3)
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("live backend"), "{err}");
+    assert!(err.contains("virtual clock"), "{err}");
+}

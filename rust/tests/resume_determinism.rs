@@ -9,6 +9,7 @@
 
 use std::path::{Path, PathBuf};
 
+use hybridfl::churn::ChurnModel;
 use hybridfl::config::{Dist, EngineKind, ExperimentConfig, ProtocolKind};
 use hybridfl::scenario::{Backend, Scenario};
 use hybridfl::snapshot::{run_result_bytes, CodecKind};
@@ -77,6 +78,118 @@ fn sim_resume_is_byte_identical_for_every_protocol() {
         }
         let _ = std::fs::remove_dir_all(&dir);
     }
+}
+
+/// Churning worlds meet the same bar: a run under stateful reliability
+/// dynamics (Markov on/off flags, battery charge levels), checkpointed
+/// and resumed with all process state discarded, reproduces the
+/// uninterrupted run byte for byte — the snapshot carries the churn
+/// state, so the resumed world continues the exact reliability
+/// trajectory.
+#[test]
+fn sim_resume_under_stateful_churn_is_byte_identical() {
+    let churns = [
+        ChurnModel::MarkovOnOff {
+            p_fail: 0.3,
+            p_recover: 0.35,
+            down_dropout: 0.97,
+            region_scale: Vec::new(),
+        },
+        ChurnModel::BatteryDrain {
+            drain_per_round: 0.3,
+            recharge_p: 0.4,
+            depleted_dropout: 0.99,
+        },
+    ];
+    for churn in churns {
+        let mut cfg = mock_cfg(ProtocolKind::HybridFl);
+        cfg.churn = churn.clone();
+        let full = Scenario::from_config(cfg.clone()).run().unwrap();
+        let full_bytes = run_result_bytes(&full);
+
+        let dir = fresh_dir(&format!("hybridfl_resume_churn_{}", churn.kind_str()));
+        let checkpointed = Scenario::from_config(cfg.clone())
+            .checkpoint_dir(&dir)
+            .checkpoint_every(3)
+            .run()
+            .unwrap();
+        assert_eq!(
+            full_bytes,
+            run_result_bytes(&checkpointed),
+            "{}: checkpointing changed the run",
+            churn.kind_str()
+        );
+        for round in [3usize, 6] {
+            let resumed = Scenario::from_config(cfg.clone())
+                .resume_from(snap_file(&dir, round, "hflsnap"))
+                .run()
+                .unwrap();
+            assert_eq!(
+                full_bytes,
+                run_result_bytes(&resumed),
+                "{}: resume from round {round} diverged",
+                churn.kind_str()
+            );
+        }
+        // The JSON debug codec meets the same bar for churn state.
+        let json_dir = fresh_dir(&format!("hybridfl_resume_churn_json_{}", churn.kind_str()));
+        Scenario::from_config(cfg.clone())
+            .checkpoint_dir(&json_dir)
+            .checkpoint_every(4)
+            .snapshot_codec(CodecKind::Json)
+            .run()
+            .unwrap();
+        let resumed = Scenario::from_config(cfg)
+            .resume_from(snap_file(&json_dir, 4, "json"))
+            .run()
+            .unwrap();
+        assert_eq!(full_bytes, run_result_bytes(&resumed), "{}", churn.kind_str());
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&json_dir);
+    }
+}
+
+/// Same bar on the live threaded backend under MarkovOnOff churn (the
+/// jitter-safe regime of `live_resume_is_byte_identical`).
+#[test]
+fn live_resume_under_markov_churn_is_byte_identical() {
+    let mut cfg = mock_cfg(ProtocolKind::HybridFl);
+    cfg.n_clients = 12;
+    cfg.dataset_size = 360;
+    cfg.t_max = 3;
+    cfg.seed = 42;
+    cfg.churn = ChurnModel::MarkovOnOff {
+        p_fail: 0.3,
+        p_recover: 0.35,
+        down_dropout: 0.97,
+        region_scale: Vec::new(),
+    };
+    let scale = 1e-2;
+
+    let full = Scenario::from_config(cfg.clone())
+        .backend(Backend::Live)
+        .time_scale(scale)
+        .run()
+        .unwrap();
+    let full_bytes = run_result_bytes(&full);
+
+    let dir = fresh_dir("hybridfl_resume_live_churn");
+    let checkpointed = Scenario::from_config(cfg.clone())
+        .backend(Backend::Live)
+        .time_scale(scale)
+        .checkpoint_dir(&dir)
+        .run()
+        .unwrap();
+    assert_eq!(full_bytes, run_result_bytes(&checkpointed));
+
+    let resumed = Scenario::from_config(cfg)
+        .backend(Backend::Live)
+        .time_scale(scale)
+        .resume_from(snap_file(&dir, 2, "hflsnap"))
+        .run()
+        .unwrap();
+    assert_eq!(full_bytes, run_result_bytes(&resumed));
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// The JSON debug codec meets the same bar on the sim backend.

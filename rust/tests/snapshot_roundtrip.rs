@@ -7,6 +7,7 @@
 //! * `RunSnapshot` round-trips with the RNG streams intact (a restored
 //!   generator continues the original draw sequence exactly).
 
+use hybridfl::churn::ChurnState;
 use hybridfl::config::ExperimentConfig;
 use hybridfl::env::DriverState;
 use hybridfl::model::ModelParams;
@@ -36,16 +37,52 @@ fn arbitrary_params(rng: &mut Rng) -> ModelParams {
 }
 
 /// Wrap a protocol state in a structurally-valid snapshot (real config,
-/// consistent fingerprint, fresh driver).
+/// consistent fingerprint, fresh driver, stateless world).
 fn snap_with(protocol: ProtocolState, rng_state: RngState) -> RunSnapshot {
+    snap_with_churn(protocol, rng_state, ChurnState::Stateless)
+}
+
+fn snap_with_churn(
+    protocol: ProtocolState,
+    rng_state: RngState,
+    churn: ChurnState,
+) -> RunSnapshot {
     let config_json = ExperimentConfig::fig2().to_json().dump();
     RunSnapshot {
         backend: "sim".into(),
         fingerprint: fnv1a64(config_json.as_bytes()),
         config_json,
         rng: rng_state,
+        churn,
         protocol,
         driver: DriverState::fresh(),
+    }
+}
+
+/// An arbitrary churn state, shape-varied by seed (every enum variant
+/// appears across the seed range, composed nesting included).
+fn arbitrary_churn(rng: &mut Rng) -> ChurnState {
+    match rng.below(4) {
+        0 => ChurnState::Stateless,
+        1 => ChurnState::Markov {
+            up: (0..rng.below(40)).map(|_| rng.bernoulli(0.7)).collect(),
+        },
+        2 => ChurnState::Battery {
+            level: (0..rng.below(40)).map(|_| rng.uniform()).collect(),
+        },
+        _ => ChurnState::Composed {
+            layers: (0..1 + rng.below(3))
+                .map(|_| match rng.below(3) {
+                    0 => ChurnState::Stateless,
+                    1 => ChurnState::Markov {
+                        up: (0..rng.below(10)).map(|_| rng.bernoulli(0.5)).collect(),
+                    },
+                    _ => ChurnState::Battery {
+                        level: (0..rng.below(10)).map(|_| rng.uniform()).collect(),
+                    },
+                })
+                .collect(),
+        },
     }
 }
 
@@ -77,13 +114,15 @@ fn arbitrary_params_roundtrip_bit_exactly_both_codecs() {
         for t in 0..rng.below(20) {
             est.observe(t % 5, t % 2 == 0);
         }
-        let snap = snap_with(
+        let churn = arbitrary_churn(&mut rng);
+        let snap = snap_with_churn(
             ProtocolState::HybridFl {
                 global,
                 regionals,
                 slack: vec![est.snapshot()],
             },
             rng_state(seed),
+            churn,
         );
         for codec in [&BinaryCodec as &dyn SnapshotCodec, &JsonCodec] {
             let bytes = codec.encode(&snap);
@@ -236,7 +275,10 @@ fn wrong_version_is_rejected_not_misparsed() {
     // Same policy for the JSON codec's format field.
     let text = String::from_utf8(JsonCodec.encode(&snap)).unwrap();
     let bumped = text.replace(
-        "\"snapshot_format\": 1",
+        &format!(
+            "\"snapshot_format\": {}",
+            hybridfl::snapshot::FORMAT_VERSION
+        ),
         "\"snapshot_format\": 99",
     );
     assert_ne!(text, bumped, "test must actually change the version field");
@@ -288,6 +330,42 @@ fn config_mismatch_names_the_diverging_fields() {
 
     // The matching config passes.
     assert!(snap.ensure_config_matches(&ExperimentConfig::fig2()).is_ok());
+}
+
+/// Churn state round-trips bit-exactly through both codecs in every
+/// shape (Markov flags, battery levels, composed layers).
+#[test]
+fn churn_state_roundtrips_both_codecs() {
+    let states = vec![
+        ChurnState::Stateless,
+        ChurnState::Markov {
+            up: vec![true, false, true, true],
+        },
+        ChurnState::Battery {
+            level: vec![1.0, 0.25, -0.017, 0.1 + 0.2],
+        },
+        ChurnState::Composed {
+            layers: vec![
+                ChurnState::Markov { up: vec![false] },
+                ChurnState::Stateless,
+                ChurnState::Battery { level: vec![0.5] },
+            ],
+        },
+    ];
+    for (i, churn) in states.into_iter().enumerate() {
+        let snap = snap_with_churn(
+            ProtocolState::FedAvg {
+                global: ModelParams::new(vec![vec![1.0]], vec![vec![1]]),
+            },
+            rng_state(i as u64),
+            churn.clone(),
+        );
+        for codec in [&BinaryCodec as &dyn SnapshotCodec, &JsonCodec] {
+            let back = codec.decode(&codec.encode(&snap)).unwrap();
+            assert_eq!(back.churn, churn, "{} codec, state {i}", codec.name());
+            assert_same(&snap, &back);
+        }
+    }
 }
 
 /// A snapshot written by a real checkpointing run loads back through the
