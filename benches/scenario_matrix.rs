@@ -1,0 +1,67 @@
+//! Bench: the selection-zoo evaluation matrix — every adversarial churn
+//! scenario × protocol × selector cell (see `harness::matrix`). Prints
+//! the grid and emits `BENCH_matrix.json`, which the CI regression gate
+//! diffs against the committed `BENCH_matrix.baseline.json` (a >10%
+//! round-length regression in any cell fails the build). Every cell of
+//! the grid appears in the JSON — a cell that cannot run carries an
+//! explicit `skipped` reason rather than vanishing.
+//!
+//! Run: `cargo bench --bench scenario_matrix` (`--quick` for CI smoke,
+//! `--full` for the long horizon).
+
+use hybridfl::benchkit::{bench, black_box, write_report, BenchArgs};
+use hybridfl::harness::matrix::{check_complete, report_json, run_matrix, scenarios};
+use hybridfl::selection::SelectorKind;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let rounds = if args.quick {
+        40
+    } else if args.full {
+        240
+    } else {
+        120
+    };
+    let seed = 42;
+
+    let names: Vec<&str> = scenarios(rounds).iter().map(|s| s.name).collect();
+    println!(
+        "=== scenario matrix: {} scenarios x 3 protocols x {} selectors, {rounds} rounds ===",
+        names.len(),
+        SelectorKind::ALL.len()
+    );
+    let cells = run_matrix(rounds, seed).expect("matrix run failed");
+    check_complete(rounds, &cells).expect("matrix grid incomplete");
+
+    let mut current = "";
+    for c in &cells {
+        if c.scenario != current {
+            current = c.scenario;
+            println!("--- {current} ---");
+        }
+        println!(
+            "{:<10} {:<8} avg_round {:>8.2}s  best_acc {:.4}  sel {:.3}  \
+             energy {:.4}Wh  deadline {}/{}",
+            c.protocol.as_str(),
+            c.selector.as_str(),
+            c.avg_round_len,
+            c.best_accuracy,
+            c.selected_proportion,
+            c.mean_device_energy_wh,
+            c.deadline_rounds,
+            c.rounds
+        );
+    }
+
+    // Engine throughput of the whole grid at a shortened horizon.
+    let iters = if args.quick { 2 } else { 5 };
+    let stats = bench(1, iters, || {
+        black_box(run_matrix(rounds / 4, seed).expect("timed matrix run failed"));
+    });
+    stats.report(&format!("matrix: full grid at {} rounds", rounds / 4));
+
+    let report = report_json(rounds, seed, &cells)
+        .set("grid_mean_s", stats.mean.as_secs_f64())
+        .set("grid_p50_s", stats.p50.as_secs_f64());
+    write_report("matrix", &report);
+}

@@ -21,7 +21,7 @@ pub struct Args {
 const VALUE_KEYS: &[&str] = &[
     "set", "preset", "config", "out", "seed", "protocol", "rounds", "c", "e-dr",
     "scale", "target", "backend", "checkpoint-dir", "checkpoint-every", "resume",
-    "churn", "record-fates", "replay-fates",
+    "churn", "record-fates", "replay-fates", "selector",
 ];
 
 /// Boolean switches (no value).
@@ -191,6 +191,12 @@ mod tests {
         assert_eq!(a.get("record-fates"), Some("trace.json"));
         let b = parse(&["run", "--replay-fates", "trace.json"]);
         assert_eq!(b.get("replay-fates"), Some("trace.json"));
+    }
+
+    #[test]
+    fn selector_is_a_value_key() {
+        let a = parse(&["run", "--selector", "fedcs"]);
+        assert_eq!(a.get("selector"), Some("fedcs"));
     }
 
     #[test]

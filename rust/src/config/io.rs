@@ -8,6 +8,7 @@ use super::{
 };
 use crate::churn::ChurnModel;
 use crate::jsonx::Json;
+use crate::selection::SelectorKind;
 
 impl Dist {
     fn to_json(self) -> Json {
@@ -82,6 +83,7 @@ impl ExperimentConfig {
             .set("theta_init", self.theta_init)
             .set("hier_kappa2", self.hier_kappa2)
             .set("cache_mode", self.cache_mode.as_str())
+            .set("selector", self.selector.as_str())
             .set("perf_ghz", self.perf_ghz.to_json())
             .set("bw_mhz", self.bw_mhz.to_json())
             .set("dropout", self.dropout.to_json())
@@ -134,6 +136,12 @@ impl ExperimentConfig {
             theta_init: j.req("theta_init")?.as_f64()?,
             hier_kappa2: j.req("hier_kappa2")?.as_usize()?,
             cache_mode: CacheMode::parse(j.req("cache_mode")?.as_str()?)?,
+            // Absent in configs written before the selection zoo: those
+            // runs always used the slack estimator.
+            selector: match j.get("selector") {
+                Some(s) => SelectorKind::parse(s.as_str()?)?,
+                None => SelectorKind::Slack,
+            },
             perf_ghz: Dist::from_json(j.req("perf_ghz")?)?,
             bw_mhz: Dist::from_json(j.req("bw_mhz")?)?,
             dropout: Dist::from_json(j.req("dropout")?)?,
@@ -200,6 +208,7 @@ fn apply_one(cfg: &mut ExperimentConfig, key: &str, val: &str) -> Result<()> {
         "theta_init" => cfg.theta_init = val.parse()?,
         "hier_kappa2" => cfg.hier_kappa2 = val.parse()?,
         "cache_mode" => cfg.cache_mode = CacheMode::parse(val)?,
+        "selector" => cfg.selector = SelectorKind::parse(val)?,
         "dropout_mean" | "e_dr" => cfg.dropout.mean = val.parse()?,
         "dropout_std" => cfg.dropout.std = val.parse()?,
         "churn" => cfg.churn = ChurnModel::parse_spec(val)?,
@@ -299,6 +308,27 @@ mod tests {
             }
         );
         assert!(apply_overrides(&mut cfg, &["churn=bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn selector_roundtrips_and_defaults_to_slack() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.selector = SelectorKind::FedCs;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+
+        // A pre-zoo config file (no "selector" key) loads as slack.
+        let mut j = cfg.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("selector");
+        }
+        let legacy = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(legacy.selector, SelectorKind::Slack);
+
+        let mut cfg = ExperimentConfig::task1_scaled();
+        apply_overrides(&mut cfg, &["selector=oracle".into()]).unwrap();
+        assert_eq!(cfg.selector, SelectorKind::Oracle);
+        assert!(apply_overrides(&mut cfg, &["selector=psychic".into()]).is_err());
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub use io::apply_overrides;
 use anyhow::{bail, Result};
 
 use crate::churn::ChurnModel;
+use crate::selection::SelectorKind;
 
 /// Which of the paper's two ML tasks drives on-device training.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -211,6 +212,11 @@ pub struct ExperimentConfig {
     pub hier_kappa2: usize,
     /// HybridFL cache rule (eq. 17 literal vs fresh-only ablation).
     pub cache_mode: CacheMode,
+    /// Client-selection strategy (the selection zoo; see
+    /// [`crate::selection`]). `Slack` — the paper's estimator — is the
+    /// default and reproduces pre-zoo behavior bit for bit. `Oracle` is
+    /// sim-only; the live backend rejects it at construction.
+    pub selector: SelectorKind,
 
     // --- device heterogeneity (Table II) ------------------------------------
     /// s_k ~ 𝓝, in GHz.
@@ -409,6 +415,9 @@ mod tests {
     fn enum_parse_roundtrip() {
         for p in ProtocolKind::ALL {
             assert_eq!(ProtocolKind::parse(p.as_str()).unwrap(), p);
+        }
+        for s in SelectorKind::ALL {
+            assert_eq!(SelectorKind::parse(s.as_str()).unwrap(), s);
         }
         assert!(TaskKind::parse("nope").is_err());
         assert!(EngineKind::parse("tpu").is_err());

@@ -11,6 +11,7 @@ use super::{
     RegionSpec, TaskKind,
 };
 use crate::churn::ChurnModel;
+use crate::selection::SelectorKind;
 
 impl ExperimentConfig {
     /// Task 1 — Aerofoil, exact Table II column.
@@ -32,6 +33,7 @@ impl ExperimentConfig {
             theta_init: 0.5,
             hier_kappa2: 10,
             cache_mode: CacheMode::Fresh,
+            selector: SelectorKind::Slack,
             perf_ghz: Dist::new(0.5, 0.1),
             bw_mhz: Dist::new(0.5, 0.1),
             dropout: Dist::new(0.3, 0.05),
@@ -83,6 +85,7 @@ impl ExperimentConfig {
             theta_init: 0.5,
             hier_kappa2: 10,
             cache_mode: CacheMode::Fresh,
+            selector: SelectorKind::Slack,
             perf_ghz: Dist::new(1.0, 0.3),
             bw_mhz: Dist::new(1.0, 0.3),
             dropout: Dist::new(0.3, 0.05),

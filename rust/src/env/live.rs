@@ -68,6 +68,13 @@ impl LiveClusterEnv {
              live backend: client threads are bound to their edge channels at \
              spawn — run migration scenarios on the virtual clock"
         );
+        anyhow::ensure!(
+            cfg.selector != crate::selection::SelectorKind::Oracle,
+            "the oracle selector is not supported on the live backend: it \
+             reads ground-truth client fates before selection, which exist \
+             only as the virtual clock's pre-drawable fate table — run \
+             oracle cells on the virtual clock"
+        );
         let world = World::build(cfg)?;
         let fabric = ClusterFabric::spawn(&world, time_scale)?;
         let eval_engine = build_engine(&world.cfg, Arc::clone(&world.data))?;
@@ -125,9 +132,11 @@ impl FlEnvironment for LiveClusterEnv {
         let m = self.world.topo.n_regions();
         let mut rng = self.world.rng.split(t as u64);
 
-        // Same world derivation as the virtual clock backend.
-        let selected = draw_selection(&self.world.topo, &selection, &mut rng);
-        let fates = draw_fates(&self.world, t, &selected, &mut rng);
+        // Same world derivation as the virtual clock backend. The oracle
+        // selector is rejected at construction, so no ground-truth table
+        // exists here.
+        let selected = draw_selection(&self.world, &selection, None, &mut rng);
+        let fates = draw_fates(&self.world, t, &selected, None, &mut rng);
         record_fates(&mut self.world, t, &fates);
 
         // Fan the jobs out to the edges (who relay to their clients).

@@ -33,10 +33,24 @@
 //!    local losses). `RoundOutcome::alive` is simulator ground truth
 //!    recorded *by the environment* for the metrics layer; protocol
 //!    decision logic must not read it (and the shipped protocols do not).
-//! 2. **Selection is uniform.** The protocol chooses *how many* clients to
-//!    select ([`Selection`]); the environment samples *which* ones,
-//!    uniformly without replacement. No environment may bias selection by
-//!    hidden device state.
+//! 2. **Selection strategy.** The protocol chooses *how many* clients to
+//!    select ([`Selection`]); the environment picks *which* ones according
+//!    to the configured [`crate::selection::SelectorKind`]. For `slack`
+//!    and `random` that is a uniform draw without replacement — the
+//!    historical behavior, and no environment may bias those draws by
+//!    hidden device state. `fedcs` ranks candidates by the shared timing
+//!    model's estimated completion time (fastest first, client-id
+//!    tie-break) — a *declared* use of static device estimates that needs
+//!    no per-round ground truth, so it remains deployable on both
+//!    backends. `oracle` selects only clients whose ground-truth fate for
+//!    the round is survival, globally fastest first — a declared breach
+//!    of reliability-agnosticism that exists purely to measure the
+//!    achievable optimum; it is defined only on the virtual clock's
+//!    pre-drawable fate table, and [`LiveClusterEnv`] rejects it loudly
+//!    at construction. For a [`Selection::PerRegion`] request the oracle
+//!    fills the *total* requested count from the whole fleet (it may
+//!    reallocate across regions and selects fewer when fewer are alive);
+//!    every other selector honors the per-region counts.
 //! 3. **Cutoff semantics.** [`CutoffPolicy::Quota`] ends the round the
 //!    moment the given number of submissions arrived globally (or at
 //!    `T_lim`); the `All*` policies wait for every selected client, capped
@@ -103,7 +117,7 @@ use crate::model::ModelParams;
 use crate::protocols::Protocol;
 use crate::rng::{Rng, RngState};
 use crate::runtime::EvalResult;
-use crate::selection::select_clients;
+use crate::selection::{select_clients, SelectorKind};
 use crate::timing::TimingModel;
 use crate::topology::Topology;
 use crate::Result;
@@ -315,22 +329,119 @@ impl World {
     }
 }
 
-/// Uniform selection per the [`Selection`] spec. Both backends call this
-/// with the round's RNG so the sampled sets are identical across backends.
-pub(crate) fn draw_selection(topo: &Topology, selection: &Selection, rng: &mut Rng) -> Vec<usize> {
-    match selection {
-        Selection::PerRegion(counts) => {
-            let mut out = Vec::new();
-            for (r, &want) in counts.iter().enumerate() {
-                out.extend(select_clients(&topo.regions[r], want, rng));
+/// Pick the concrete client set per the [`Selection`] spec and the
+/// configured selector (contract point 2). Both backends call this with
+/// the round's RNG so the sampled sets are identical across backends.
+///
+/// The `slack` and `random` selectors consume exactly the RNG draws the
+/// historical uniform path did, so default-configured runs stay
+/// byte-identical; `fedcs` and `oracle` are deterministic ranks and
+/// consume none. `oracle_drops` is the round's ground-truth drop table
+/// ([`oracle_drop_table`]) and must be `Some` iff the oracle is
+/// configured.
+pub(crate) fn draw_selection(
+    world: &World,
+    selection: &Selection,
+    oracle_drops: Option<&[bool]>,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let topo = &world.topo;
+    match world.cfg.selector {
+        SelectorKind::Slack | SelectorKind::Random => match selection {
+            Selection::PerRegion(counts) => {
+                let mut out = Vec::new();
+                for (r, &want) in counts.iter().enumerate() {
+                    out.extend(select_clients(&topo.regions[r], want, rng));
+                }
+                out
             }
-            out
-        }
-        Selection::Uniform(count) => {
-            let all: Vec<usize> = (0..topo.n_clients()).collect();
-            select_clients(&all, *count, rng)
+            Selection::Uniform(count) => {
+                let all: Vec<usize> = (0..topo.n_clients()).collect();
+                select_clients(&all, *count, rng)
+            }
+        },
+        SelectorKind::FedCs => match selection {
+            Selection::PerRegion(counts) => {
+                let mut out = Vec::new();
+                for (r, &want) in counts.iter().enumerate() {
+                    out.extend(fastest_first(world, topo.regions[r].iter().copied(), want));
+                }
+                out
+            }
+            Selection::Uniform(count) => fastest_first(world, 0..topo.n_clients(), *count),
+        },
+        SelectorKind::Oracle => {
+            let drops =
+                oracle_drops.expect("oracle selector requires the round's ground-truth table");
+            let total = match selection {
+                Selection::PerRegion(counts) => counts.iter().sum(),
+                Selection::Uniform(count) => *count,
+            };
+            fastest_first(
+                world,
+                (0..topo.n_clients()).filter(|&k| !drops[k]),
+                total,
+            )
         }
     }
+}
+
+/// Rank `candidates` by the timing model's estimated completion time
+/// (ascending, client-id tie-break) and keep the first `count` — the
+/// FedCS-style deadline-aware pick, also used by the oracle once the
+/// candidate set is narrowed to ground-truth survivors.
+fn fastest_first(
+    world: &World,
+    candidates: impl Iterator<Item = usize>,
+    count: usize,
+) -> Vec<usize> {
+    let mut ranked: Vec<(f64, usize)> = candidates
+        .map(|k| {
+            let psize = world.data.partitions[k].len() as f64;
+            (world.tm.completion(&world.profiles[k], psize), k)
+        })
+        .collect();
+    ranked.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ranked.truncate(count);
+    ranked.into_iter().map(|(_, k)| k).collect()
+}
+
+/// Label of the oracle substream inside a round's RNG — like
+/// [`CHURN_STREAM`], a child stream that never advances its parent, so
+/// non-oracle runs are untouched by its existence.
+const ORACLE_STREAM: u64 = 0x0A_AC_1E;
+
+/// The oracle selector's ground-truth drop table for round `t`: one flag
+/// per client in the *whole* fleet. `None` unless the oracle is
+/// configured.
+///
+/// Normally the table is drawn from `round_rng.split(t).split(ORACLE_STREAM)`
+/// and [`draw_fates`] then consumes this same table instead of fresh
+/// Bernoulli draws — what the oracle foresaw is exactly what happens.
+/// Under fate replay the recorded trace is the world, so the table is
+/// read straight from it (a client the trace does not list for the round
+/// is down). Recording an oracle run and replaying it is therefore a
+/// fixed point: the oracle only selects survivors, so every recorded
+/// fate is a survival and the replayed table marks exactly that set
+/// alive again.
+pub(crate) fn oracle_drop_table(world: &World, t: usize) -> Option<Vec<bool>> {
+    if world.cfg.selector != SelectorKind::Oracle {
+        return None;
+    }
+    let n = world.topo.n_clients();
+    if let Some(trace) = &world.replay {
+        return Some(
+            (0..n)
+                .map(|k| trace.get(t, k).map_or(true, |rec| rec.dropped))
+                .collect(),
+        );
+    }
+    let mut orng = world.rng.split(t as u64).split(ORACLE_STREAM);
+    Some(
+        (0..n)
+            .map(|k| orng.bernoulli(world.profiles[k].dropout_p))
+            .collect(),
+    )
 }
 
 /// Label of the churn substream inside a round's RNG: the dynamics step
@@ -403,10 +514,15 @@ pub(crate) fn ground_truth_avail(world: &World, fates: &[ClientFate]) -> Vec<f64
 ///   out-of-range recorded region falls back to the current topology).
 ///   A selected client the trace does not list for this round is
 ///   treated as unavailable (dropped).
+/// * Under the oracle selector `oracle_drops` carries the round's
+///   pre-drawn ground-truth table ([`oracle_drop_table`]) and replaces
+///   the per-client Bernoulli draws — selection and fate resolution see
+///   one consistent world.
 pub(crate) fn draw_fates(
     world: &World,
     t: usize,
     selected: &[usize],
+    oracle_drops: Option<&[bool]>,
     rng: &mut Rng,
 ) -> Vec<ClientFate> {
     if let Some(trace) = &world.replay {
@@ -444,7 +560,10 @@ pub(crate) fn draw_fates(
         .iter()
         .map(|&k| {
             let p = &world.profiles[k];
-            let dropped = rng.bernoulli(p.dropout_p);
+            let dropped = match oracle_drops {
+                Some(table) => table[k],
+                None => rng.bernoulli(p.dropout_p),
+            };
             let psize = world.data.partitions[k].len() as f64;
             let completion = if dropped {
                 f64::INFINITY

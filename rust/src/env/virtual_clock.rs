@@ -20,9 +20,9 @@ use crate::aggregation::StreamingAggregator;
 use crate::churn::{ChurnState, FateTrace};
 use crate::config::ExperimentConfig;
 use crate::env::{
-    charge_energy, draw_fates, draw_selection, ground_truth_avail, record_fates,
-    region_histogram, resolve_cutoff, step_world, ClientFate, CutoffPolicy, FlEnvironment,
-    RoundOutcome, Selection, Starts, World,
+    charge_energy, draw_fates, draw_selection, ground_truth_avail, oracle_drop_table,
+    record_fates, region_histogram, resolve_cutoff, step_world, ClientFate, CutoffPolicy,
+    FlEnvironment, RoundOutcome, Selection, Starts, World,
 };
 use crate::model::ModelParams;
 use crate::rng::{Rng, RngState};
@@ -102,9 +102,12 @@ impl FlEnvironment for VirtualClockEnv {
         let mut rng = self.world.rng.split(t as u64);
 
         // Selection fan-out, then per-client fates — same RNG order as the
-        // live backend so both inhabit the same random world.
-        let selected = draw_selection(&self.world.topo, &selection, &mut rng);
-        let fates = draw_fates(&self.world, t, &selected, &mut rng);
+        // live backend so both inhabit the same random world. The oracle's
+        // ground-truth table (when configured) is drawn once, from a child
+        // stream, and feeds both steps so they agree on who survives.
+        let oracle_drops = oracle_drop_table(&self.world, t);
+        let selected = draw_selection(&self.world, &selection, oracle_drops.as_deref(), &mut rng);
+        let fates = draw_fates(&self.world, t, &selected, oracle_drops.as_deref(), &mut rng);
         record_fates(&mut self.world, t, &fates);
 
         // Round cut per policy, then energy accounting against it.

@@ -1,0 +1,340 @@
+//! The adversarial evaluation matrix: scenario × protocol × selector.
+//!
+//! The slack estimator's published comparisons run under churn it was
+//! implicitly tuned for. This harness pits every protocol and every
+//! selection strategy (see [`crate::selection`]) against adversarial
+//! churn compositions the estimator was *never* tuned for:
+//!
+//! * `stationary` — the control: the frozen i.i.d. world of the paper's
+//!   own evaluation.
+//! * `blackout` — Markov burstiness plus a scripted correlated blackout
+//!   of region 0 for an eighth of the run: the regional estimator's
+//!   worst case (its region goes entirely dark mid-estimate).
+//! * `flashcrowd` — a batch of clients migrates into region 1 mid-run
+//!   and the crowded region's drop-out rises: both regions' populations
+//!   and reliabilities shift under the estimators simultaneously
+//!   (virtual clock only — migration is rejected on the live backend).
+//! * `compound` — diurnal availability cycles compounding with battery
+//!   depletion: a slowly drifting, multi-timescale target.
+//!
+//! Every cell runs the mock engine on the virtual clock (the only
+//! backend that admits the oracle and migration), from one shared base
+//! world per seed. A cell reports the mean round length (what the
+//! selection policy costs in time), best accuracy (whether aggressive
+//! selection starves learning), the mean selected proportion (how much
+//! of the fleet the policy wakes per round), mean per-device energy
+//! (what that burden costs), and the deadline-round count (how often the
+//! policy stalls to `T_lim`). The grid is complete by construction —
+//! [`check_complete`] errors on a missing cell, and a cell that cannot
+//! run must carry an explicit `skipped` marker rather than vanish.
+
+use crate::churn::{ChurnModel, FaultEvent};
+use crate::config::{ExperimentConfig, ProtocolKind};
+use crate::jsonx::Json;
+use crate::scenario::Scenario;
+use crate::selection::SelectorKind;
+use crate::Result;
+
+/// One adversarial reliability scenario of the matrix.
+pub struct MatrixScenario {
+    pub name: &'static str,
+    pub churn: ChurnModel,
+}
+
+/// The four matrix scenarios, with event windows placed relative to the
+/// run length (`rounds`) so quick and full grids stress the same phases.
+pub fn scenarios(rounds: usize) -> Vec<MatrixScenario> {
+    let blackout_from = (rounds / 4).max(1);
+    let blackout_until = blackout_from + (rounds / 8).max(2);
+    let crowd_at = (rounds / 3).max(1);
+    vec![
+        MatrixScenario {
+            name: "stationary",
+            churn: ChurnModel::Stationary,
+        },
+        MatrixScenario {
+            name: "blackout",
+            churn: ChurnModel::Composed {
+                layers: vec![
+                    ChurnModel::MarkovOnOff {
+                        p_fail: 0.08,
+                        p_recover: 0.3,
+                        down_dropout: 0.97,
+                        region_scale: vec![],
+                    },
+                    ChurnModel::FaultScript {
+                        events: vec![FaultEvent::RegionBlackout {
+                            region: 0,
+                            from_round: blackout_from,
+                            until_round: blackout_until,
+                        }],
+                    },
+                ],
+            },
+        },
+        MatrixScenario {
+            name: "flashcrowd",
+            churn: ChurnModel::FaultScript {
+                events: (0..6)
+                    .map(|k| FaultEvent::Migrate {
+                        client: k,
+                        at_round: crowd_at,
+                        to_region: 1,
+                    })
+                    .chain(std::iter::once(FaultEvent::DropoutShift {
+                        region: Some(1),
+                        at_round: crowd_at,
+                        delta: 0.15,
+                    }))
+                    .collect(),
+            },
+        },
+        MatrixScenario {
+            name: "compound",
+            churn: ChurnModel::Composed {
+                layers: vec![
+                    ChurnModel::Diurnal {
+                        amplitude: 0.25,
+                        period: 20,
+                        region_phase: vec![],
+                    },
+                    ChurnModel::BatteryDrain {
+                        drain_per_round: 0.02,
+                        recharge_p: 0.1,
+                        depleted_dropout: 0.9,
+                    },
+                ],
+            },
+        },
+    ]
+}
+
+/// One evaluated grid cell.
+pub struct MatrixCell {
+    pub scenario: &'static str,
+    pub protocol: ProtocolKind,
+    pub selector: SelectorKind,
+    pub rounds: usize,
+    /// Mean core round length + protocol RTT, virtual seconds.
+    pub avg_round_len: f64,
+    pub best_accuracy: f64,
+    /// Mean over rounds of (Σ_r |U_r|) / n — the fleet fraction woken
+    /// per round.
+    pub selected_proportion: f64,
+    pub mean_device_energy_wh: f64,
+    /// Rounds whose cutoff policy degraded to `T_lim`.
+    pub deadline_rounds: usize,
+    /// Why the cell did not run, if it did not. Every cell of the grid
+    /// is present either way — skips are marked, never silent.
+    pub skipped: Option<String>,
+}
+
+/// The shared base world: 40 clients over two heterogeneous regions
+/// (drop-out means 0.2 / 0.4 — the regional imbalance the slack
+/// estimator exists for), mock engine, C = 0.3.
+pub fn base_cfg(rounds: usize, seed: u64) -> ExperimentConfig {
+    let mut cfg = crate::sim::test_support::hetero_two_region_cfg(0.2, 0.4);
+    cfg.name = "scenario-matrix".into();
+    cfg.t_max = rounds;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Run one cell of the grid on the virtual clock.
+fn run_cell(
+    sc: &MatrixScenario,
+    protocol: ProtocolKind,
+    selector: SelectorKind,
+    rounds: usize,
+    seed: u64,
+) -> Result<MatrixCell> {
+    let mut cfg = base_cfg(rounds, seed);
+    cfg.protocol = protocol;
+    cfg.selector = selector;
+    let result = Scenario::from_config(cfg).churn(sc.churn.clone()).run()?;
+    let n = 40.0;
+    let rows = &result.rounds;
+    let selected_proportion = rows
+        .iter()
+        .map(|r| r.selected.iter().sum::<usize>() as f64 / n)
+        .sum::<f64>()
+        / rows.len().max(1) as f64;
+    Ok(MatrixCell {
+        scenario: sc.name,
+        protocol,
+        selector,
+        rounds: rows.len(),
+        avg_round_len: result.summary.avg_round_len,
+        best_accuracy: result.summary.best_accuracy,
+        selected_proportion,
+        mean_device_energy_wh: result.summary.mean_device_energy_wh,
+        deadline_rounds: rows.iter().filter(|r| r.deadline_hit).count(),
+        skipped: None,
+    })
+}
+
+/// Run the full scenario × protocol × selector grid (4 × 3 × 4 cells)
+/// and verify completeness before returning.
+pub fn run_matrix(rounds: usize, seed: u64) -> Result<Vec<MatrixCell>> {
+    let mut cells = Vec::new();
+    for sc in scenarios(rounds) {
+        for protocol in ProtocolKind::ALL {
+            for selector in SelectorKind::ALL {
+                cells.push(run_cell(&sc, protocol, selector, rounds, seed)?);
+            }
+        }
+    }
+    check_complete(rounds, &cells)?;
+    Ok(cells)
+}
+
+/// Error unless every grid combination is present exactly once — the
+/// no-silently-skipped-cells guarantee (a skipped cell is still present,
+/// with its `skipped` reason set).
+pub fn check_complete(rounds: usize, cells: &[MatrixCell]) -> Result<()> {
+    for sc in scenarios(rounds) {
+        for protocol in ProtocolKind::ALL {
+            for selector in SelectorKind::ALL {
+                let hits = cells
+                    .iter()
+                    .filter(|c| {
+                        c.scenario == sc.name && c.protocol == protocol && c.selector == selector
+                    })
+                    .count();
+                anyhow::ensure!(
+                    hits == 1,
+                    "matrix cell {}/{}/{} appears {hits} times (expected exactly 1)",
+                    sc.name,
+                    protocol.as_str(),
+                    selector.as_str()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The `BENCH_matrix.json` payload: the grid axes plus one record per
+/// cell, keyed for the CI regression gate.
+pub fn report_json(rounds: usize, seed: u64, cells: &[MatrixCell]) -> Json {
+    let scenario_names: Vec<&str> = scenarios(rounds).iter().map(|s| s.name).collect();
+    let protocol_names: Vec<&str> = ProtocolKind::ALL.iter().map(|p| p.as_str()).collect();
+    let selector_names: Vec<&str> = SelectorKind::ALL.iter().map(|s| s.as_str()).collect();
+    let cell_rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj()
+                .set("scenario", c.scenario)
+                .set("protocol", c.protocol.as_str())
+                .set("selector", c.selector.as_str())
+                .set("rounds", c.rounds)
+                .set("avg_round_len_s", c.avg_round_len)
+                .set("best_accuracy", c.best_accuracy)
+                .set("selected_proportion", c.selected_proportion)
+                .set("mean_device_energy_wh", c.mean_device_energy_wh)
+                .set("deadline_rounds", c.deadline_rounds)
+                .set(
+                    "skipped",
+                    match &c.skipped {
+                        Some(reason) => Json::Str(reason.clone()),
+                        None => Json::Null,
+                    },
+                )
+        })
+        .collect();
+    Json::obj()
+        .set("bench", "scenario_matrix")
+        .set("rounds", rounds)
+        .set("seed", seed)
+        .set(
+            "grid",
+            Json::obj()
+                .set("scenarios", scenario_names)
+                .set("protocols", protocol_names)
+                .set("selectors", selector_names),
+        )
+        .set("cells", Json::Arr(cell_rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_scenario_validates_against_the_base_world() {
+        for rounds in [8, 40, 160] {
+            for sc in scenarios(rounds) {
+                let mut cfg = base_cfg(rounds, 1);
+                cfg.churn = sc.churn;
+                cfg.validate()
+                    .unwrap_or_else(|e| panic!("{} @ {rounds} rounds: {e}", sc.name));
+            }
+        }
+    }
+
+    #[test]
+    fn single_cell_runs_and_reports_metrics() {
+        let sc = &scenarios(6)[0];
+        let cell = run_cell(sc, ProtocolKind::HybridFl, SelectorKind::Oracle, 6, 3).unwrap();
+        assert_eq!(cell.rounds, 6);
+        assert!(cell.avg_round_len > 0.0);
+        assert!(cell.selected_proportion > 0.0 && cell.selected_proportion <= 1.0);
+        assert!(cell.mean_device_energy_wh > 0.0);
+        assert!(cell.skipped.is_none());
+    }
+
+    #[test]
+    fn check_complete_rejects_missing_and_duplicate_cells() {
+        let rounds = 6;
+        let mut cells = Vec::new();
+        for sc in scenarios(rounds) {
+            for protocol in ProtocolKind::ALL {
+                for selector in SelectorKind::ALL {
+                    cells.push(MatrixCell {
+                        scenario: sc.name,
+                        protocol,
+                        selector,
+                        rounds,
+                        avg_round_len: 1.0,
+                        best_accuracy: 0.5,
+                        selected_proportion: 0.3,
+                        mean_device_energy_wh: 0.01,
+                        deadline_rounds: 0,
+                        skipped: None,
+                    });
+                }
+            }
+        }
+        check_complete(rounds, &cells).unwrap();
+        let dropped = cells.pop().unwrap();
+        assert!(check_complete(rounds, &cells).is_err());
+        cells.push(dropped);
+        let dup = MatrixCell {
+            scenario: cells[0].scenario,
+            protocol: cells[0].protocol,
+            selector: cells[0].selector,
+            rounds,
+            avg_round_len: 1.0,
+            best_accuracy: 0.5,
+            selected_proportion: 0.3,
+            mean_device_energy_wh: 0.01,
+            deadline_rounds: 0,
+            skipped: None,
+        };
+        cells.push(dup);
+        assert!(check_complete(rounds, &cells).is_err());
+    }
+
+    #[test]
+    fn report_json_carries_every_cell_with_skip_marker() {
+        let sc = &scenarios(6)[0];
+        let cell = run_cell(sc, ProtocolKind::FedAvg, SelectorKind::Random, 6, 2).unwrap();
+        let j = report_json(6, 2, &[cell]);
+        let cells = j.req("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.req("selector").unwrap().as_str().unwrap(), "random");
+        assert!(matches!(c.req("skipped").unwrap(), Json::Null));
+        assert!(c.req("avg_round_len_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -5,9 +5,12 @@
 //! * [`sweep`] — the Table III / Table IV grids (E[dr] × C × protocol),
 //!   which also emit the per-round accuracy traces of Figs. 4/6 and the
 //!   energy numbers of Figs. 5/7.
+//! * [`matrix`] — the adversarial scenario × protocol × selector grid
+//!   behind `BENCH_matrix.json` and the CI regression gate.
 
 pub mod ablation;
 pub mod fig2;
+pub mod matrix;
 pub mod sweep;
 
 pub use fig2::run_fig2;

@@ -104,6 +104,34 @@
 //! On the CLI this is `--churn markov:p_fail=0.1+script:events.json`,
 //! `--record-fates trace.json` and `--replay-fates trace.json`.
 //!
+//! Client selection itself is pluggable — the [`selection`] zoo: the
+//! paper's slack estimator (default, byte-identical to the pre-zoo
+//! behavior), a FedCS-style deadline-aware ranker, a uniform-random
+//! control, and a ground-truth oracle that lower-bounds the round length
+//! (sim-only: the live backend rejects it loudly). `harness::matrix`
+//! runs the full scenario × protocol × selector grid over adversarial
+//! churn compositions.
+//!
+//! ```no_run
+//! # use hybridfl::scenario::Scenario;
+//! use hybridfl::selection::SelectorKind;
+//!
+//! // How close does the slack estimator get to cheating foresight?
+//! let slack = Scenario::task1().mock().run()?;
+//! let bound = Scenario::task1()
+//!     .mock()
+//!     .selector(SelectorKind::Oracle)
+//!     .run()?;
+//! println!(
+//!     "slack {:.1}s vs oracle bound {:.1}s per round",
+//!     slack.summary.avg_round_len,
+//!     bound.summary.avg_round_len
+//! );
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! On the CLI this is `--selector slack|fedcs|oracle|random`.
+//!
 //! Long runs survive coordinator interruption: give the scenario a
 //! checkpoint directory and every round boundary writes a versioned
 //! binary [`snapshot::RunSnapshot`] (round index, global/regional models,

@@ -75,7 +75,9 @@ commands:
           --record-fates FILE export the run's ground-truth per-round
           fates as a replayable JSON trace,
           --replay-fates FILE drive the world from a recorded or
-          hand-written fate trace instead of drawing fates)
+          hand-written fate trace instead of drawing fates,
+          --selector slack|fedcs|oracle|random client-selection strategy
+          (slack = the paper's estimator, default; oracle is sim-only))
   fig2    slack-factor traces (paper Fig. 2) -> reports/fig2_traces.csv
   table3  Task-1 sweep: Table III + Fig. 4 traces + Fig. 5 energy
   table4  Task-2 sweep: Table IV + Fig. 6 traces + Fig. 7 energy
@@ -125,6 +127,9 @@ fn resolve_scenario(args: &Args, default_backend: Backend) -> hybridfl::Result<S
     }
     if let Some(spec) = args.get("churn") {
         sc = sc.churn(hybridfl::churn::ChurnModel::parse_spec(spec)?);
+    }
+    if let Some(s) = args.get("selector") {
+        sc = sc.selector(hybridfl::selection::SelectorKind::parse(s)?);
     }
     if let Some(path) = args.get("replay-fates") {
         // Guard against *any* configured churn model — whether it came

@@ -6,7 +6,8 @@
 //! 1. **Regional client selection** (§III.A): each edge r selects
 //!    `C_r(t)·n_r` clients where `C_r(t) = C/θ̂_r` and θ̂_r is the
 //!    LSE-estimated regional slack factor over observable submission
-//!    counts only ([`SlackEstimator`]).
+//!    counts only ([`crate::selection::SlackEstimator`], held behind the
+//!    configured [`crate::selection::SelectionStrategy`]).
 //! 2. **Local training**: survivors train τ GD epochs from the global
 //!    model w(t−1) (the environment fans this out — inline on the virtual
 //!    clock, on client threads in the live cluster).
@@ -23,30 +24,30 @@ use crate::config::{CacheMode, ExperimentConfig, ProtocolKind};
 use crate::env::{CutoffPolicy, FlEnvironment, Selection, Starts};
 use crate::model::ModelParams;
 use crate::protocols::{check_regions, mean_loss, wrong_kind, Protocol, ProtocolState, RoundRecord};
-use crate::selection::slack::{SlackEstimator, SlackState};
+use crate::selection::{build_strategy, SelectionStrategy};
+use crate::selection::slack::SlackState;
 use crate::Result;
 
 pub struct HybridFl {
     global: ModelParams,
     /// w^r(t−1) — previous regional models (the cache substrate, eq. 17).
     regionals: Vec<ModelParams>,
-    /// One slack estimator per region (edge-resident state in a real
+    /// The configured count head (edge-resident state in a real
     /// deployment; here cloud-side protocol state driven purely by
-    /// observable submission counts).
-    slack: Vec<SlackEstimator>,
+    /// observable submission counts). The default [`SlackStrategy`] is
+    /// the paper's per-region estimators, bit for bit.
+    ///
+    /// [`SlackStrategy`]: crate::selection::SlackStrategy
+    strategy: Box<dyn SelectionStrategy>,
     cache_mode: CacheMode,
 }
 
 impl HybridFl {
     pub fn new(cfg: &ExperimentConfig, region_sizes: &[usize], init: ModelParams) -> HybridFl {
-        let slack = region_sizes
-            .iter()
-            .map(|&n_r| SlackEstimator::new(n_r, cfg.c_fraction, cfg.theta_init))
-            .collect();
         HybridFl {
             regionals: vec![init.clone(); region_sizes.len()],
             global: init,
-            slack,
+            strategy: build_strategy(cfg, region_sizes),
             cache_mode: cfg.cache_mode,
         }
     }
@@ -60,8 +61,9 @@ impl Protocol for HybridFl {
     fn run_round(&mut self, t: usize, env: &mut dyn FlEnvironment) -> Result<RoundRecord> {
         let m = env.n_regions();
 
-        // --- step 1: slack-modulated regional selection ------------------------
-        let counts: Vec<usize> = self.slack.iter().map(|s| s.selection_count()).collect();
+        // --- step 1: strategy-modulated regional selection (the slack
+        // estimators under the default selector) --------------------------------
+        let counts: Vec<usize> = self.strategy.counts(t);
 
         // --- steps 2–3: fan out training; the round ends when C·n models
         // arrived globally (or at T_lim).
@@ -105,10 +107,9 @@ impl Protocol for HybridFl {
             self.regionals[r] = w_r;
         }
 
-        // --- slack update from the observable submission counts ---------------
-        for r in 0..m {
-            self.slack[r].observe(out.submissions[r], quota_met);
-        }
+        // --- strategy update from the observable submission counts ------------
+        debug_assert_eq!(out.submissions.len(), m);
+        self.strategy.observe(&out.submissions, quota_met);
         let mean_local_loss = mean_loss(&out);
 
         Ok(RoundRecord {
@@ -131,26 +132,14 @@ impl Protocol for HybridFl {
     }
 
     fn slack_states(&self) -> Option<Vec<SlackState>> {
-        Some(
-            self.slack
-                .iter()
-                .map(|s| {
-                    s.last_state().unwrap_or(SlackState {
-                        theta: s.theta(),
-                        c_r: s.c_r(),
-                        q_r: 0.0,
-                        submissions: 0,
-                    })
-                })
-                .collect(),
-        )
+        self.strategy.slack_states()
     }
 
     fn snapshot_state(&self) -> ProtocolState {
         ProtocolState::HybridFl {
             global: self.global.clone(),
             regionals: self.regionals.clone(),
-            slack: self.slack.iter().map(|s| s.snapshot()).collect(),
+            slack: self.strategy.snapshot(),
         }
     }
 
@@ -162,10 +151,9 @@ impl Protocol for HybridFl {
                 slack,
             } => {
                 check_regions(ProtocolKind::HybridFl, self.regionals.len(), regionals.len())?;
-                check_regions(ProtocolKind::HybridFl, self.slack.len(), slack.len())?;
+                self.strategy.restore(slack)?;
                 self.global = global;
                 self.regionals = regionals;
-                self.slack = slack.into_iter().map(SlackEstimator::from_state).collect();
                 Ok(())
             }
             other => Err(wrong_kind(ProtocolKind::HybridFl, &other)),

@@ -154,6 +154,19 @@ impl Scenario {
         self
     }
 
+    /// Client-selection strategy (the selection zoo; see
+    /// [`crate::selection`]). [`SelectorKind::Slack`] (the default) is
+    /// the paper's estimator and reproduces pre-zoo behavior bit for
+    /// bit; [`SelectorKind::Oracle`] is sim-only and rejected by the
+    /// live backend.
+    ///
+    /// [`SelectorKind::Slack`]: crate::selection::SelectorKind::Slack
+    /// [`SelectorKind::Oracle`]: crate::selection::SelectorKind::Oracle
+    pub fn selector(mut self, kind: crate::selection::SelectorKind) -> Scenario {
+        self.cfg.selector = kind;
+        self
+    }
+
     /// Record the run's ground-truth per-round fates and write them as a
     /// [`crate::churn::FateTrace`] JSON at `path` when the run completes.
     /// Observational: recording never perturbs the run (and composes with

@@ -1,19 +1,334 @@
-//! Client selection (S1, paper §III.A): regional slack factors and the
-//! probabilistic selection-proportion estimator.
+//! Client selection (S1, paper §III.A): the selection-strategy zoo.
+//!
+//! The paper's HybridFL picks *how many* clients per region with the
+//! regional slack estimator ([`slack`]) and leaves *which* ones to a
+//! uniform draw. This module generalizes both halves behind one
+//! configuration knob ([`SelectorKind`], `ExperimentConfig::selector`):
+//!
+//! | selector | count head (how many)            | pick rule (which ones)      |
+//! |----------|----------------------------------|-----------------------------|
+//! | `slack`  | `C/θ̂_r` per region (eqs. 6/15)  | uniform without replacement |
+//! | `fedcs`  | `C·n_r` per region               | fastest estimated round     |
+//! |          |                                  | time first (FedCS-style)    |
+//! | `oracle` | `C·n_r` per region               | ground-truth alive clients, |
+//! |          |                                  | globally fastest first      |
+//! | `random` | proportion ~ U[C, 1] per region  | uniform without replacement |
+//!
+//! The *count head* is protocol state: HybridFL owns one
+//! [`SelectionStrategy`] (which for `slack` wraps the unchanged
+//! [`SlackEstimator`]s — the default path is byte-identical to the
+//! pre-zoo code). The *pick rule* is an environment concern — the
+//! environment samples the concrete client set per the backend contract
+//! — and is dispatched on `cfg.selector` inside `env::draw_selection`.
+//! The baselines (FedAvg, HierFAVG) keep their own protocol-defined
+//! counts, so for them a selector changes the pick rule only: `slack`
+//! and `random` are both the uniform draw there.
+//!
+//! ## Why the oracle is sim-only
+//!
+//! [`SelectorKind::Oracle`] reads the round's ground-truth drop-out
+//! fates *before* selection — information that exists only because the
+//! virtual clock draws fates from a seeded table the environment can
+//! peek at ahead of time. It deliberately violates the paper's
+//! reliability-agnosticism constraint to measure the achievable optimum:
+//! it selects only clients that will survive the round, globally fastest
+//! first, so its round length is the theoretical floor every deployable
+//! selector is compared against. A live cluster has no such table — the
+//! future of a real device is not observable — so [`LiveClusterEnv`]
+//! rejects `oracle` loudly at construction (like churn `Migrate`
+//! events). Run oracle cells on the virtual clock.
+//!
+//! ## The evaluation matrix
+//!
+//! `harness::matrix` runs the scenario × protocol × selector grid (see
+//! its docs for the adversarial churn compositions). Each cell reports
+//! the mean round length (time-efficiency of the selection policy), the
+//! converged best accuracy (whether aggressive selection starves
+//! learning), the mean selected proportion (device burden: how many
+//! clients the policy wakes per round), and the mean per-device energy
+//! (what that burden costs). Reading a row against its `oracle` cell
+//! shows how far the estimator sits from the optimum; reading it
+//! against `random` shows what the estimator's knowledge is worth.
+//!
+//! [`LiveClusterEnv`]: crate::env::LiveClusterEnv
 
 pub mod slack;
 
 pub use slack::{SlackEstimator, SlackEstimatorState};
 
+use anyhow::bail;
+
+use crate::config::ExperimentConfig;
 use crate::rng::Rng;
+use crate::selection::slack::SlackState;
+use crate::Result;
+
+/// Which selection strategy a run uses (`--selector`, `--set selector=`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectorKind {
+    /// The paper's regional slack estimator (default; byte-identical to
+    /// the pre-zoo behavior).
+    Slack,
+    /// FedCS-style deadline-aware baseline: rank clients by the timing
+    /// model's estimated completion time, fastest first.
+    FedCs,
+    /// Ground-truth upper bound: select only clients that will survive
+    /// the round, globally fastest first. Sim-only.
+    Oracle,
+    /// Zero-knowledge control: a per-region selection proportion drawn
+    /// uniformly from [C, 1] (the slack head's clamp band) each round,
+    /// picked uniformly.
+    Random,
+}
+
+impl SelectorKind {
+    pub const ALL: [SelectorKind; 4] = [
+        SelectorKind::Slack,
+        SelectorKind::FedCs,
+        SelectorKind::Oracle,
+        SelectorKind::Random,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SelectorKind::Slack => "slack",
+            SelectorKind::FedCs => "fedcs",
+            SelectorKind::Oracle => "oracle",
+            SelectorKind::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "slack" => Ok(SelectorKind::Slack),
+            "fedcs" => Ok(SelectorKind::FedCs),
+            "oracle" => Ok(SelectorKind::Oracle),
+            "random" => Ok(SelectorKind::Random),
+            _ => bail!("unknown selector '{s}' (slack|fedcs|oracle|random)"),
+        }
+    }
+}
 
 /// Uniformly select `count` clients (without replacement) from a region's
-/// client list — step 1 of every round, for every protocol.
+/// client list — the pick rule of the `slack` and `random` selectors, for
+/// every protocol.
 pub fn select_clients(region_clients: &[usize], count: usize, rng: &mut Rng) -> Vec<usize> {
     rng.sample_indices(region_clients.len(), count)
         .into_iter()
         .map(|i| region_clients[i])
         .collect()
+}
+
+/// The count head of the selection zoo: how many clients HybridFL asks
+/// for per region, and what protocol state that decision carries.
+///
+/// Implementations are deterministic in `(config, t, observation
+/// history)` — no wall clock, no hidden RNG state — so a resumed run
+/// re-derives the same counts. Only the slack head carries state across
+/// rounds; the others snapshot an empty estimator list.
+pub trait SelectionStrategy: Send {
+    fn kind(&self) -> SelectorKind;
+
+    /// |U_r(t)| per region for the upcoming round `t` (1-based).
+    fn counts(&self, t: usize) -> Vec<usize>;
+
+    /// End-of-round observation: per-region submission counts |S_r(t)|
+    /// plus whether the round ended by quota (censored) or by deadline.
+    /// Both are cloud/edge-observable; a stateless head ignores them.
+    fn observe(&mut self, submissions: &[usize], quota_censored: bool);
+
+    /// Per-region slack telemetry (Fig. 2 traces) — `Some` only for the
+    /// slack head.
+    fn slack_states(&self) -> Option<Vec<SlackState>>;
+
+    /// Checkpointable state (empty for stateless heads).
+    fn snapshot(&self) -> Vec<SlackEstimatorState>;
+
+    /// Restore state captured by [`Self::snapshot`]. Errors on a shape
+    /// mismatch instead of silently mixing two configurations.
+    fn restore(&mut self, states: Vec<SlackEstimatorState>) -> Result<()>;
+}
+
+/// Instantiate the configured strategy for a topology with the given
+/// per-region populations.
+pub fn build_strategy(
+    cfg: &ExperimentConfig,
+    region_sizes: &[usize],
+) -> Box<dyn SelectionStrategy> {
+    match cfg.selector {
+        SelectorKind::Slack => Box::new(SlackStrategy::new(cfg, region_sizes)),
+        SelectorKind::FedCs | SelectorKind::Oracle => Box::new(FixedFractionStrategy {
+            kind: cfg.selector,
+            c: cfg.c_fraction,
+            region_sizes: region_sizes.to_vec(),
+        }),
+        SelectorKind::Random => Box::new(RandomStrategy {
+            seed: cfg.seed,
+            c: cfg.c_fraction,
+            region_sizes: region_sizes.to_vec(),
+        }),
+    }
+}
+
+/// Round a fractional selection proportion to a concrete count in
+/// `[1, n_r]` (same rule as the slack head's `selection_count`).
+fn fraction_count(fraction: f64, n: usize) -> usize {
+    ((fraction * n as f64).round() as usize).clamp(1, n)
+}
+
+/// The paper's count head: one [`SlackEstimator`] per region, untouched
+/// behind the trait — `counts` and `observe` call through to the exact
+/// pre-zoo estimator code, so the default path is byte-identical.
+pub struct SlackStrategy {
+    estimators: Vec<SlackEstimator>,
+}
+
+impl SlackStrategy {
+    pub fn new(cfg: &ExperimentConfig, region_sizes: &[usize]) -> SlackStrategy {
+        SlackStrategy {
+            estimators: region_sizes
+                .iter()
+                .map(|&n_r| SlackEstimator::new(n_r, cfg.c_fraction, cfg.theta_init))
+                .collect(),
+        }
+    }
+}
+
+impl SelectionStrategy for SlackStrategy {
+    fn kind(&self) -> SelectorKind {
+        SelectorKind::Slack
+    }
+
+    fn counts(&self, _t: usize) -> Vec<usize> {
+        self.estimators.iter().map(|s| s.selection_count()).collect()
+    }
+
+    fn observe(&mut self, submissions: &[usize], quota_censored: bool) {
+        for (est, &s) in self.estimators.iter_mut().zip(submissions) {
+            est.observe(s, quota_censored);
+        }
+    }
+
+    fn slack_states(&self) -> Option<Vec<SlackState>> {
+        Some(
+            self.estimators
+                .iter()
+                .map(|s| {
+                    s.last_state().unwrap_or(SlackState {
+                        theta: s.theta(),
+                        c_r: s.c_r(),
+                        q_r: 0.0,
+                        submissions: 0,
+                    })
+                })
+                .collect(),
+        )
+    }
+
+    fn snapshot(&self) -> Vec<SlackEstimatorState> {
+        self.estimators.iter().map(|s| s.snapshot()).collect()
+    }
+
+    fn restore(&mut self, states: Vec<SlackEstimatorState>) -> Result<()> {
+        anyhow::ensure!(
+            states.len() == self.estimators.len(),
+            "slack snapshot holds {} estimators but the topology has {} regions",
+            states.len(),
+            self.estimators.len()
+        );
+        self.estimators = states.into_iter().map(SlackEstimator::from_state).collect();
+        Ok(())
+    }
+}
+
+/// Stateless count head shared by `fedcs` and `oracle`: the target
+/// participation `C·n_r` per region, every round. The interesting part
+/// of both selectors is their pick rule, which lives in the environment.
+struct FixedFractionStrategy {
+    kind: SelectorKind,
+    c: f64,
+    region_sizes: Vec<usize>,
+}
+
+impl SelectionStrategy for FixedFractionStrategy {
+    fn kind(&self) -> SelectorKind {
+        self.kind
+    }
+
+    fn counts(&self, _t: usize) -> Vec<usize> {
+        self.region_sizes
+            .iter()
+            .map(|&n| fraction_count(self.c, n))
+            .collect()
+    }
+
+    fn observe(&mut self, _submissions: &[usize], _quota_censored: bool) {}
+
+    fn slack_states(&self) -> Option<Vec<SlackState>> {
+        None
+    }
+
+    fn snapshot(&self) -> Vec<SlackEstimatorState> {
+        Vec::new()
+    }
+
+    fn restore(&mut self, states: Vec<SlackEstimatorState>) -> Result<()> {
+        stateless_restore(self.kind, states)
+    }
+}
+
+/// Label of the random count head's RNG stream, derived from the world
+/// seed (disjoint from the `World::build` streams 1–5, and a pure
+/// function of `(seed, t)` so resumed runs re-derive identical counts).
+const SELECTOR_STREAM: u64 = 0x5E_1E_C7;
+
+/// Zero-knowledge control head: each round, each region's selection
+/// proportion is drawn uniformly from [C, 1] — the same band the slack
+/// head's clamp confines `C_r` to. This is what "guessing inside the
+/// feasible range" achieves; the learned estimator must beat it.
+struct RandomStrategy {
+    seed: u64,
+    c: f64,
+    region_sizes: Vec<usize>,
+}
+
+impl SelectionStrategy for RandomStrategy {
+    fn kind(&self) -> SelectorKind {
+        SelectorKind::Random
+    }
+
+    fn counts(&self, t: usize) -> Vec<usize> {
+        let mut rng = Rng::new(self.seed).split(SELECTOR_STREAM).split(t as u64);
+        self.region_sizes
+            .iter()
+            .map(|&n| fraction_count(rng.uniform_in(self.c, 1.0), n))
+            .collect()
+    }
+
+    fn observe(&mut self, _submissions: &[usize], _quota_censored: bool) {}
+
+    fn slack_states(&self) -> Option<Vec<SlackState>> {
+        None
+    }
+
+    fn snapshot(&self) -> Vec<SlackEstimatorState> {
+        Vec::new()
+    }
+
+    fn restore(&mut self, states: Vec<SlackEstimatorState>) -> Result<()> {
+        stateless_restore(SelectorKind::Random, states)
+    }
+}
+
+fn stateless_restore(kind: SelectorKind, states: Vec<SlackEstimatorState>) -> Result<()> {
+    anyhow::ensure!(
+        states.is_empty(),
+        "snapshot carries {} slack estimators but the '{}' selector is stateless \
+         (was the snapshot taken under a different selector?)",
+        states.len(),
+        kind.as_str()
+    );
+    Ok(())
 }
 
 #[cfg(test)]
@@ -40,5 +355,109 @@ mod tests {
         let clients = vec![1, 2, 3];
         let mut rng = Rng::new(1);
         assert_eq!(select_clients(&clients, 10, &mut rng).len(), 3);
+    }
+
+    #[test]
+    fn selector_kind_parse_roundtrip() {
+        for k in SelectorKind::ALL {
+            assert_eq!(SelectorKind::parse(k.as_str()).unwrap(), k);
+        }
+        let err = SelectorKind::parse("psychic").unwrap_err().to_string();
+        assert!(err.contains("psychic") && err.contains("oracle"), "{err}");
+    }
+
+    fn cfg_with(selector: SelectorKind) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.selector = selector;
+        cfg
+    }
+
+    #[test]
+    fn build_strategy_matches_config_kind() {
+        for k in SelectorKind::ALL {
+            let s = build_strategy(&cfg_with(k), &[10, 10]);
+            assert_eq!(s.kind(), k);
+        }
+    }
+
+    /// The slack head behind the trait must compute the exact counts the
+    /// bare estimators would — the byte-identity hinge.
+    #[test]
+    fn slack_strategy_mirrors_bare_estimators() {
+        let cfg = cfg_with(SelectorKind::Slack);
+        let sizes = [12usize, 8];
+        let mut strat = SlackStrategy::new(&cfg, &sizes);
+        let mut bare: Vec<SlackEstimator> = sizes
+            .iter()
+            .map(|&n| SlackEstimator::new(n, cfg.c_fraction, cfg.theta_init))
+            .collect();
+        for t in 1..=30 {
+            let want: Vec<usize> = bare.iter().map(|e| e.selection_count()).collect();
+            assert_eq!(strat.counts(t), want, "round {t}");
+            let subs = [t % 5, (t * 3) % 4];
+            let censored = t % 3 != 0;
+            strat.observe(&subs, censored);
+            for (e, &s) in bare.iter_mut().zip(&subs) {
+                e.observe(s, censored);
+            }
+        }
+        // And the snapshots are the estimators' own snapshots.
+        let snap = strat.snapshot();
+        for (s, e) in snap.iter().zip(&bare) {
+            assert_eq!(*s, e.snapshot());
+        }
+    }
+
+    #[test]
+    fn fixed_fraction_counts_hit_target_participation() {
+        let s = build_strategy(&cfg_with(SelectorKind::FedCs), &[10, 7, 1]);
+        assert_eq!(s.counts(1), vec![3, 2, 1]); // 0.3 · n_r, floored at 1
+        assert_eq!(s.counts(99), s.counts(1)); // stateless: same every round
+        let o = build_strategy(&cfg_with(SelectorKind::Oracle), &[10, 7, 1]);
+        assert_eq!(o.counts(5), vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn random_counts_stay_in_clamp_band_and_are_reproducible() {
+        let cfg = cfg_with(SelectorKind::Random);
+        let s = build_strategy(&cfg, &[20, 20]);
+        let again = build_strategy(&cfg, &[20, 20]);
+        let mut saw_above_c = false;
+        for t in 1..=50 {
+            let counts = s.counts(t);
+            assert_eq!(counts, again.counts(t), "pure function of (seed, t)");
+            for &c in &counts {
+                // proportion ∈ [C, 1] ⇒ count ∈ [C·n_r rounded, n_r]
+                assert!((6..=20).contains(&c), "round {t}: count {c}");
+                if c > 6 {
+                    saw_above_c = true;
+                }
+            }
+        }
+        assert!(saw_above_c, "the control should explore above C");
+        // A different seed explores a different trajectory.
+        let mut other_cfg = cfg_with(SelectorKind::Random);
+        other_cfg.seed = cfg.seed + 1;
+        let other = build_strategy(&other_cfg, &[20, 20]);
+        let diverged = (1..=50).any(|t| other.counts(t) != s.counts(t));
+        assert!(diverged);
+    }
+
+    #[test]
+    fn stateless_heads_reject_slack_snapshots() {
+        let mut s = build_strategy(&cfg_with(SelectorKind::FedCs), &[10]);
+        assert!(s.snapshot().is_empty());
+        assert!(s.restore(Vec::new()).is_ok());
+        let est = SlackEstimator::new(10, 0.3, 0.5);
+        let err = s.restore(vec![est.snapshot()]).unwrap_err().to_string();
+        assert!(err.contains("stateless"), "{err}");
+    }
+
+    #[test]
+    fn slack_strategy_restore_checks_region_count() {
+        let cfg = cfg_with(SelectorKind::Slack);
+        let mut s = SlackStrategy::new(&cfg, &[10, 10]);
+        let err = s.restore(Vec::new()).unwrap_err().to_string();
+        assert!(err.contains("2 regions"), "{err}");
     }
 }

@@ -1,9 +1,12 @@
 //! Shared fixtures for protocol unit tests: a fully-assembled
-//! [`VirtualClockEnv`] over the mock engine. Exposed as a public module so
-//! integration tests and benches can reuse it, but not part of the stable
-//! API surface.
+//! [`VirtualClockEnv`] over the mock engine, the canonical two-region
+//! fleet the churn/selection suites drive, and the reduced-scale PJRT
+//! configs for the end-to-end tests. Exposed as a public module so
+//! integration tests and benches can reuse it, but not part of the
+//! stable API surface.
 
-use crate::config::{Dist, EngineKind, ExperimentConfig};
+use crate::churn::ChurnModel;
+use crate::config::{Dist, EngineKind, ExperimentConfig, ProtocolKind, RegionSpec, TaskKind};
 use crate::env::VirtualClockEnv;
 
 /// A small mock-engine config with a uniform drop-out probability across
@@ -25,4 +28,63 @@ pub fn mock_cfg(dropout: f64, n_clients: usize, n_edges: usize) -> ExperimentCon
 pub fn mock_env(dropout: f64, n_clients: usize, n_edges: usize) -> VirtualClockEnv {
     VirtualClockEnv::new(mock_cfg(dropout, n_clients, n_edges))
         .expect("fixture environment must build")
+}
+
+/// Two explicit 20-client regions on the mock engine with *heterogeneous*
+/// per-region drop-out means — the regional imbalance the slack estimator
+/// exists for. 20-round HybridFL run, fixed seed 13; callers override
+/// `t_max`/`seed`/`protocol` as needed.
+pub fn hetero_two_region_cfg(dropout_mean_0: f64, dropout_mean_1: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::task1_scaled();
+    cfg.engine = EngineKind::Mock;
+    cfg.protocol = ProtocolKind::HybridFl;
+    cfg.n_clients = 40;
+    cfg.n_edges = 2;
+    cfg.regions = vec![
+        RegionSpec { n_clients: 20, dropout_mean: dropout_mean_0 },
+        RegionSpec { n_clients: 20, dropout_mean: dropout_mean_1 },
+    ];
+    cfg.dropout = Dist::new((dropout_mean_0 + dropout_mean_1) / 2.0, 0.02);
+    cfg.c_fraction = 0.3;
+    cfg.dataset_size = 800;
+    cfg.eval_size = 50;
+    cfg.t_max = 20;
+    cfg.seed = 13;
+    cfg
+}
+
+/// [`hetero_two_region_cfg`] with both regions at the same mean — the
+/// fleet the churn-dynamics suite has pinned byte-identity against.
+pub fn two_region_cfg(dropout_mean: f64) -> ExperimentConfig {
+    hetero_two_region_cfg(dropout_mean, dropout_mean)
+}
+
+/// The canonical bursty-availability churn spec: clients fail into a
+/// near-dead state (drop-out 0.97) and recover, uniformly across regions.
+pub fn markov_churn() -> ChurnModel {
+    ChurnModel::MarkovOnOff {
+        p_fail: 0.25,
+        p_recover: 0.35,
+        down_dropout: 0.97,
+        region_scale: Vec::new(),
+    }
+}
+
+/// A scratch path under the OS temp dir, namespaced per suite so
+/// concurrent test binaries never collide.
+pub fn tmp_path(suite: &str, name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hybridfl_{suite}"));
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(name)
+}
+
+/// Reduced-scale real-training config for the end-to-end suite: the
+/// task's `*_scaled` preset trimmed to `t_max` rounds.
+pub fn e2e_cfg(task: TaskKind, t_max: usize) -> ExperimentConfig {
+    let mut cfg = match task {
+        TaskKind::Aerofoil => ExperimentConfig::task1_scaled(),
+        TaskKind::Mnist => ExperimentConfig::task2_scaled(),
+    };
+    cfg.t_max = t_max;
+    cfg
 }

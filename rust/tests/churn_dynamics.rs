@@ -12,44 +12,14 @@
 //!   loud error on the live backend.
 
 use hybridfl::churn::{ChurnModel, FateRecord, FateTrace, FaultEvent};
-use hybridfl::config::{Dist, EngineKind, ExperimentConfig, ProtocolKind, RegionSpec};
+use hybridfl::config::{ProtocolKind, RegionSpec};
 use hybridfl::env::{CutoffPolicy, FlEnvironment as _, Selection, Starts, VirtualClockEnv};
 use hybridfl::scenario::{Backend, Scenario};
+use hybridfl::sim::test_support::{markov_churn as markov, two_region_cfg};
 use hybridfl::snapshot::run_result_bytes;
 
-/// Two explicit 20-client regions on the mock engine.
-fn two_region_cfg(dropout_mean: f64) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::task1_scaled();
-    cfg.engine = EngineKind::Mock;
-    cfg.protocol = ProtocolKind::HybridFl;
-    cfg.n_clients = 40;
-    cfg.n_edges = 2;
-    cfg.regions = vec![
-        RegionSpec { n_clients: 20, dropout_mean },
-        RegionSpec { n_clients: 20, dropout_mean },
-    ];
-    cfg.dropout = Dist::new(dropout_mean, 0.02);
-    cfg.c_fraction = 0.3;
-    cfg.dataset_size = 800;
-    cfg.eval_size = 50;
-    cfg.t_max = 20;
-    cfg.seed = 13;
-    cfg
-}
-
-fn markov() -> ChurnModel {
-    ChurnModel::MarkovOnOff {
-        p_fail: 0.25,
-        p_recover: 0.35,
-        down_dropout: 0.97,
-        region_scale: Vec::new(),
-    }
-}
-
 fn tmp_path(name: &str) -> std::path::PathBuf {
-    let dir = std::env::temp_dir().join("hybridfl_churn_dynamics");
-    let _ = std::fs::create_dir_all(&dir);
-    dir.join(name)
+    hybridfl::sim::test_support::tmp_path("churn_dynamics", name)
 }
 
 // ---------------------------------------------------------------------------

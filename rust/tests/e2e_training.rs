@@ -3,7 +3,8 @@
 //! outcomes the paper's evaluation relies on. Skipped when `make
 //! artifacts` has not run.
 
-use hybridfl::config::{ExperimentConfig, ProtocolKind};
+use hybridfl::config::{ProtocolKind, TaskKind};
+use hybridfl::sim::test_support::e2e_cfg;
 use hybridfl::sim::FlRun;
 
 fn have_artifacts() -> bool {
@@ -17,9 +18,8 @@ fn aerofoil_all_protocols_learn() {
         return;
     }
     for proto in ProtocolKind::ALL {
-        let mut cfg = ExperimentConfig::task1_scaled();
+        let mut cfg = e2e_cfg(TaskKind::Aerofoil, 120);
         cfg.protocol = proto;
-        cfg.t_max = 120;
         let result = FlRun::new(cfg).unwrap().run().unwrap();
         assert!(
             result.summary.best_accuracy > 0.45,
@@ -47,8 +47,7 @@ fn mnist_hybridfl_reaches_target_quickly() {
     if !have_artifacts() {
         return;
     }
-    let mut cfg = ExperimentConfig::task2_scaled();
-    cfg.t_max = 40;
+    let mut cfg = e2e_cfg(TaskKind::Mnist, 40);
     cfg.target_accuracy = Some(0.9);
     let result = FlRun::new(cfg).unwrap().run().unwrap();
     assert!(
@@ -68,11 +67,10 @@ fn hybridfl_fastest_to_target_under_heavy_dropout() {
     }
     let mut times = std::collections::HashMap::new();
     for proto in ProtocolKind::ALL {
-        let mut cfg = ExperimentConfig::task1_scaled();
+        let mut cfg = e2e_cfg(TaskKind::Aerofoil, 500);
         cfg.protocol = proto;
         cfg.dropout.mean = 0.6;
         cfg.c_fraction = 0.1;
-        cfg.t_max = 500;
         cfg.target_accuracy = Some(0.65);
         let result = FlRun::new(cfg).unwrap().run().unwrap();
         let t = result.summary.time_to_target.unwrap_or(f64::MAX);
@@ -90,8 +88,7 @@ fn run_is_deterministic_with_real_training() {
     if !have_artifacts() {
         return;
     }
-    let mut cfg = ExperimentConfig::task1_scaled();
-    cfg.t_max = 15;
+    let cfg = e2e_cfg(TaskKind::Aerofoil, 15);
     let a = FlRun::new(cfg.clone()).unwrap().run().unwrap();
     let b = FlRun::new(cfg).unwrap().run().unwrap();
     // XLA CPU math is deterministic; the whole pipeline must be too.
@@ -113,9 +110,8 @@ fn cache_ablation_regional_trails_fresh() {
         hybridfl::config::CacheMode::Fresh,
         hybridfl::config::CacheMode::Regional,
     ] {
-        let mut cfg = ExperimentConfig::task1_scaled();
+        let mut cfg = e2e_cfg(TaskKind::Aerofoil, 150);
         cfg.cache_mode = mode;
-        cfg.t_max = 150;
         let result = FlRun::new(cfg).unwrap().run().unwrap();
         accs.push(result.summary.best_accuracy);
     }

@@ -1,0 +1,198 @@
+//! Selection-strategy zoo integration tests (ISSUE 6):
+//!
+//! * the default (`slack`) selector reproduces the pre-zoo behavior byte
+//!   for byte on seeded runs — the trait refactor is invisible;
+//! * the oracle is what its name claims: a round-length lower bound for
+//!   every adversarial matrix scenario;
+//! * steady-state selected proportions order oracle ≤ slack ≤ random —
+//!   the slack estimator sits between the cheating bound and the
+//!   over-provisioning control;
+//! * `fedcs` and `random` run on both backends with identical result
+//!   shape (the zoo is backend-agnostic where it promises to be);
+//! * the oracle on the live backend is a loud constructor error naming
+//!   the constraint.
+
+use hybridfl::config::ProtocolKind;
+use hybridfl::harness::matrix;
+use hybridfl::scenario::{Backend, Scenario};
+use hybridfl::selection::SelectorKind;
+use hybridfl::sim::test_support::two_region_cfg;
+use hybridfl::snapshot::run_result_bytes;
+
+// ---------------------------------------------------------------------------
+// The refactor pin: slack-behind-the-trait is the historical behavior.
+// ---------------------------------------------------------------------------
+
+/// The acceptance bar for the refactor: a seeded run with no selector
+/// configured, one with `slack` spelled out, and the legacy `FlRun`
+/// entry point are all byte-identical — and the zoo is not a no-op,
+/// because a different selector does move the run.
+#[test]
+fn default_selector_is_byte_identical_to_pre_zoo_runs() {
+    let cfg = two_region_cfg(0.3);
+    let default_bytes =
+        run_result_bytes(&Scenario::from_config(cfg.clone()).run().unwrap());
+    let explicit = Scenario::from_config(cfg.clone()).selector(SelectorKind::Slack).run().unwrap();
+    assert_eq!(
+        default_bytes,
+        run_result_bytes(&explicit),
+        "an explicit --selector slack perturbed the run"
+    );
+    let flrun = hybridfl::sim::FlRun::new(cfg.clone()).unwrap().run().unwrap();
+    assert_eq!(
+        default_bytes,
+        run_result_bytes(&flrun),
+        "the FlRun entry point diverged from the Scenario path"
+    );
+    let random = Scenario::from_config(cfg).selector(SelectorKind::Random).run().unwrap();
+    assert_ne!(
+        default_bytes,
+        run_result_bytes(&random),
+        "the random selector left no trace — the zoo is not wired through"
+    );
+}
+
+#[test]
+fn every_selector_is_deterministic_per_seed() {
+    for sel in SelectorKind::ALL {
+        let run = || {
+            let mut cfg = two_region_cfg(0.3);
+            cfg.t_max = 10;
+            Scenario::from_config(cfg).selector(sel).run().unwrap()
+        };
+        assert_eq!(
+            run_result_bytes(&run()),
+            run_result_bytes(&run()),
+            "{}: same seed must be byte-identical",
+            sel.as_str()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The oracle bound, across the adversarial matrix.
+// ---------------------------------------------------------------------------
+
+/// Ground-truth foresight must dominate on time: in every matrix
+/// scenario the oracle's mean round length is a lower bound on every
+/// other selector's (small tolerance for fate-draw noise between runs).
+#[test]
+fn oracle_round_length_is_a_lower_bound_in_every_matrix_scenario() {
+    let rounds = 60;
+    for sc in matrix::scenarios(rounds) {
+        let avg_len = |sel: SelectorKind| -> f64 {
+            let mut cfg = matrix::base_cfg(rounds, 7);
+            cfg.selector = sel;
+            Scenario::from_config(cfg)
+                .churn(sc.churn.clone())
+                .run()
+                .unwrap()
+                .summary
+                .avg_round_len
+        };
+        let oracle = avg_len(SelectorKind::Oracle);
+        for sel in [SelectorKind::Slack, SelectorKind::FedCs, SelectorKind::Random] {
+            let other = avg_len(sel);
+            assert!(
+                oracle <= other * 1.05,
+                "{}: oracle avg round {oracle:.2}s beaten by {} at {other:.2}s",
+                sc.name,
+                sel.as_str()
+            );
+        }
+    }
+}
+
+/// Steady state on the stationary fleet: the oracle wakes ≈ C of the
+/// fleet, random over-provisions toward (C+1)/2, and the slack
+/// estimator sits in between — HybridFL's selected proportion is
+/// bracketed by the cheating bound and the control.
+#[test]
+fn selected_proportion_orders_oracle_slack_random() {
+    let proportion = |sel: SelectorKind| -> f64 {
+        let mut cfg = two_region_cfg(0.3);
+        cfg.t_max = 120;
+        let result = Scenario::from_config(cfg).selector(sel).run().unwrap();
+        let tail = &result.rounds[20..];
+        tail.iter()
+            .map(|r| r.selected.iter().sum::<usize>() as f64 / 40.0)
+            .sum::<f64>()
+            / tail.len() as f64
+    };
+    let oracle = proportion(SelectorKind::Oracle);
+    let slack = proportion(SelectorKind::Slack);
+    let random = proportion(SelectorKind::Random);
+    assert!(
+        oracle <= slack + 0.02,
+        "oracle wakes more of the fleet than slack: {oracle:.3} vs {slack:.3}"
+    );
+    assert!(
+        slack <= random + 0.02,
+        "slack over-provisions past the random control: {slack:.3} vs {random:.3}"
+    );
+    assert!(
+        (oracle - 0.3).abs() < 0.05,
+        "oracle proportion {oracle:.3} should sit at C = 0.3"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Backend parity and the oracle's loud sim-only constraint.
+// ---------------------------------------------------------------------------
+
+/// `fedcs` and `random` are deployable estimators: every protocol runs
+/// under them on both backends with the same result shape (mirror of
+/// `every_protocol_runs_on_both_backends` in tests/scenario_api.rs).
+#[test]
+fn fedcs_and_random_run_on_both_backends() {
+    for sel in [SelectorKind::FedCs, SelectorKind::Random] {
+        for proto in ProtocolKind::ALL {
+            for backend in [Backend::Sim, Backend::Live] {
+                let result = Scenario::task1()
+                    .mock()
+                    .protocol(proto)
+                    .selector(sel)
+                    .clients(16)
+                    .edges(2)
+                    .dataset_size(640)
+                    .rounds(3)
+                    .backend(backend)
+                    .run()
+                    .unwrap_or_else(|e| {
+                        panic!("{} / {proto:?} on {backend:?}: {e}", sel.as_str())
+                    });
+                assert_eq!(result.rounds.len(), 3, "{} on {backend:?}", sel.as_str());
+                assert_eq!(result.summary.protocol, proto.as_str());
+                for row in &result.rounds {
+                    let selected: usize = row.selected.iter().sum();
+                    let submitted: usize = row.submissions.iter().sum();
+                    assert!(
+                        selected >= 1 && submitted <= selected,
+                        "{} / {proto:?} on {backend:?}",
+                        sel.as_str()
+                    );
+                    assert!(row.round_len > 0.0);
+                }
+            }
+        }
+    }
+}
+
+/// The oracle reads ground-truth fates that exist only as the virtual
+/// clock's pre-drawable table — the live backend must refuse at
+/// construction, naming the constraint (like churn `Migrate`).
+#[test]
+fn oracle_on_live_backend_is_rejected_loudly() {
+    let mut cfg = two_region_cfg(0.1);
+    cfg.t_max = 2;
+    let err = Scenario::from_config(cfg)
+        .selector(SelectorKind::Oracle)
+        .backend(Backend::Live)
+        .time_scale(1e-3)
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("oracle"), "{err}");
+    assert!(err.contains("live backend"), "{err}");
+    assert!(err.contains("virtual clock"), "{err}");
+}

@@ -1,0 +1,148 @@
+//! Property tests for the slack estimator (`selection::slack`): the
+//! §III.A invariants that must hold for *arbitrary* observation
+//! sequences, not just the trajectories the unit tests happen to walk.
+//!
+//! Three families, each fuzzed over seeded random `(n_r, C, θ_init)`
+//! draws and random `observe()` streams:
+//!
+//! 1. θ̂ never escapes its clamp band and the derived quantities stay in
+//!    their definitional ranges.
+//! 2. The O(1) running-sum LSE is exactly the full-history recomputation
+//!    (the optimization changes nothing, to 1e-12).
+//! 3. Deadline rounds (q̂ = 1) are unbiased samples: a stream of them
+//!    monotonically pulls θ̂ toward the empirical delivery rate.
+
+use hybridfl::rng::Rng;
+use hybridfl::selection::SlackEstimator;
+
+/// θ̂'s clamp band (slack.rs THETA_MIN/THETA_MAX — pinned here so a
+/// silent change to the band fails a test, not just a doc).
+const THETA_MIN: f64 = 0.05;
+const THETA_MAX: f64 = 1.0;
+
+/// Draw a random but valid estimator setup.
+fn random_setup(rng: &mut Rng) -> (usize, f64, f64) {
+    let n_r = 1 + rng.below(120);
+    let c = rng.uniform_in(0.05, 0.9);
+    let theta_init = rng.uniform_in(0.01, 1.5); // deliberately allows out-of-band inits
+    (n_r, c, theta_init)
+}
+
+/// One random observation: submissions may exceed the selection count
+/// (the estimator must tolerate any usize the environment reports) and
+/// censoring is a coin flip.
+fn random_observation(rng: &mut Rng, n_r: usize) -> (usize, bool) {
+    (rng.below(2 * n_r + 1), rng.bernoulli(0.5))
+}
+
+#[test]
+fn theta_stays_in_clamped_bounds_under_arbitrary_observations() {
+    let seeds = Rng::new(0x51ac);
+    for trial in 0..50 {
+        let mut rng = seeds.split(trial);
+        let (n_r, c, theta_init) = random_setup(&mut rng);
+        let mut e = SlackEstimator::new(n_r, c, theta_init);
+        for round in 0..200 {
+            assert!(
+                (THETA_MIN..=THETA_MAX).contains(&e.theta()),
+                "trial {trial} round {round}: theta {} out of [{THETA_MIN}, {THETA_MAX}] \
+                 (n_r={n_r}, c={c}, theta_init={theta_init})",
+                e.theta()
+            );
+            assert!(
+                ((c - 1e-12)..=(1.0 + 1e-12)).contains(&e.c_r()),
+                "trial {trial} round {round}: c_r {} out of [C, 1] (c={c})",
+                e.c_r()
+            );
+            let count = e.selection_count();
+            assert!(
+                (1..=n_r).contains(&count),
+                "trial {trial} round {round}: selection count {count} out of [1, {n_r}]"
+            );
+            let (s, censored) = random_observation(&mut rng, n_r);
+            e.observe(s, censored);
+            let last = e.last_state().unwrap();
+            assert!(
+                (0.0..=1.0).contains(&last.q_r),
+                "q_r {} out of [0, 1]",
+                last.q_r
+            );
+        }
+        assert_eq!(e.rounds_observed(), 200);
+    }
+}
+
+/// Reference θ̂: recompute eq. 15 from the *entire* history each round,
+/// with the same clamp and the same all-zero guard as the running-sum
+/// implementation.
+fn theta_from_full_history(
+    n_r: usize,
+    history: &[(f64, f64, f64)], // (c_r at observe time, q, s)
+    fallback: f64,
+) -> f64 {
+    let num: f64 = history.iter().map(|(c_r, q, s)| c_r * q * s).sum();
+    let den: f64 = history.iter().map(|(c_r, q, _)| (c_r * q) * (c_r * q)).sum();
+    if den > 1e-12 {
+        (num / (n_r as f64 * den)).clamp(THETA_MIN, THETA_MAX)
+    } else {
+        fallback
+    }
+}
+
+#[test]
+fn running_sums_match_full_history_recompute() {
+    let seeds = Rng::new(0xf011);
+    for trial in 0..30 {
+        let mut rng = seeds.split(trial);
+        let (n_r, c, theta_init) = random_setup(&mut rng);
+        let mut e = SlackEstimator::new(n_r, c, theta_init);
+        let mut history: Vec<(f64, f64, f64)> = Vec::new();
+        let theta_start = e.theta(); // post-clamp init, the den==0 fallback
+        for round in 0..150 {
+            let (s, censored) = random_observation(&mut rng, n_r);
+            // Reconstruct the sample exactly as observe() will ingest it.
+            let q = if censored {
+                (s as f64 / (c * n_r as f64)).min(1.0)
+            } else {
+                1.0
+            };
+            history.push((e.c_r(), q, s as f64));
+            e.observe(s, censored);
+            let reference = theta_from_full_history(n_r, &history, theta_start);
+            assert!(
+                (e.theta() - reference).abs() <= 1e-12,
+                "trial {trial} round {round}: running-sum theta {} deviates from \
+                 full-history recompute {} (n_r={n_r}, c={c})",
+                e.theta(),
+                reference
+            );
+        }
+    }
+}
+
+#[test]
+fn deadline_rounds_pull_theta_toward_empirical_delivery_rate() {
+    let n_r = 100;
+    let c = 0.3;
+    for p in [0.35, 0.6, 0.85] {
+        let mut e = SlackEstimator::new(n_r, c, 0.5);
+        let mut prev_gap = (e.theta() - p).abs();
+        for round in 0..300 {
+            // Deterministic delivery at exactly rate p: every deadline
+            // round is an unbiased sample s = p·selected, q̂ = 1.
+            let s = (p * e.selection_count() as f64).round() as usize;
+            e.observe(s, false);
+            let gap = (e.theta() - p).abs();
+            assert!(
+                gap <= prev_gap + 0.02,
+                "p={p} round {round}: |theta - p| grew {prev_gap} -> {gap}"
+            );
+            prev_gap = gap;
+        }
+        assert!(
+            (e.theta() - p).abs() < 0.05,
+            "p={p}: theta {} should settle near the delivery rate",
+            e.theta()
+        );
+    }
+}
