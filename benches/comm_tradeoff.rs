@@ -1,0 +1,199 @@
+//! Bench: communication-efficient submission paths — the codec × protocol
+//! trade-off surface vs the dense baseline (see `hybridfl::comm`). Every
+//! cell reports the bytes actually moved device→edge, the mean round
+//! length, the best accuracy, and the mean device energy, so the JSON
+//! shows directly what a codec buys (shorter uploads, lower energy) and
+//! what it costs (accuracy drift). A final pair of cells pits a relay
+//! quantile against the plain dense run to show relay-assisted upload
+//! shortening the straggler-bound round.
+//!
+//! Emits `BENCH_comm.json` — a required artifact of the CI `bench · smoke`
+//! job. The ≥4× byte reduction of `topk:0.05+ef` vs dense is asserted
+//! here (it is structural: 8 bytes × k kept coordinates vs 4 bytes × n),
+//! the accuracy drift is reported, not asserted.
+//!
+//! Run: `cargo bench --bench comm_tradeoff` (`--quick` for CI smoke,
+//! `--full` for the long horizon).
+
+use hybridfl::benchkit::{bench, black_box, write_report, BenchArgs};
+use hybridfl::comm::CommConfig;
+use hybridfl::config::ProtocolKind;
+use hybridfl::jsonx::Json;
+use hybridfl::scenario::Scenario;
+use hybridfl::sim::RunResult;
+
+/// The codec axis: the dense baseline first, then each compressed path.
+const CODECS: &[&str] = &["dense", "f16", "i8", "topk:0.05+ef"];
+
+/// The relay quantile of the relay-vs-no-relay pair.
+const RELAY_Q: f64 = 0.25;
+
+fn run_cell(spec: &str, protocol: ProtocolKind, rounds: usize, seed: u64) -> (RunResult, u64) {
+    let mut cfg = hybridfl::sim::test_support::hetero_two_region_cfg(0.2, 0.4);
+    cfg.name = "comm-tradeoff".into();
+    cfg.protocol = protocol;
+    cfg.t_max = rounds;
+    cfg.seed = seed;
+    let comm = CommConfig::parse_spec(spec).expect("bench codec spec must parse");
+    let result = Scenario::from_config(cfg)
+        .comm(comm)
+        .run()
+        .unwrap_or_else(|e| panic!("cell {spec}/{} failed: {e:#}", protocol.as_str()));
+    let bytes: u64 = result.rounds.iter().map(|r| r.bytes_moved).sum();
+    (result, bytes)
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let rounds = if args.quick {
+        16
+    } else if args.full {
+        160
+    } else {
+        48
+    };
+    let seed = 42;
+
+    println!(
+        "=== comm trade-off: {} codecs x {} protocols, {rounds} rounds ===",
+        CODECS.len(),
+        ProtocolKind::ALL.len()
+    );
+
+    let mut cell_rows: Vec<Json> = Vec::new();
+    let mut topk_gate: Option<(f64, f64)> = None; // (byte_reduction, acc_delta) on hybridfl
+    for protocol in ProtocolKind::ALL {
+        let (dense, dense_bytes) = run_cell("dense", protocol, rounds, seed);
+        for spec in CODECS {
+            let (result, bytes) = if *spec == "dense" {
+                (dense.clone(), dense_bytes)
+            } else {
+                run_cell(spec, protocol, rounds, seed)
+            };
+            // 0.0 marks an empty cell (nothing folded); keeps the JSON finite.
+            let reduction = if bytes > 0 {
+                dense_bytes as f64 / bytes as f64
+            } else {
+                0.0
+            };
+            let acc_delta = dense.summary.best_accuracy - result.summary.best_accuracy;
+            println!(
+                "{:<8} {:<12} bytes {:>12}  x{:<6.1} vs dense  avg_round {:>8.2}s  \
+                 best_acc {:.4} (Δ {:+.4})  energy {:.4}Wh",
+                protocol.as_str(),
+                spec,
+                bytes,
+                reduction,
+                result.summary.avg_round_len,
+                result.summary.best_accuracy,
+                -acc_delta,
+                result.summary.mean_device_energy_wh,
+            );
+            if *spec == "topk:0.05+ef" {
+                assert!(
+                    bytes > 0 && reduction >= 4.0,
+                    "topk:0.05+ef moved {bytes} bytes vs dense {dense_bytes} on {} — \
+                     expected a >=4x reduction",
+                    protocol.as_str()
+                );
+                if protocol == ProtocolKind::HybridFl {
+                    topk_gate = Some((reduction, acc_delta));
+                }
+            }
+            cell_rows.push(
+                Json::obj()
+                    .set("codec", *spec)
+                    .set("protocol", protocol.as_str())
+                    .set("rounds", result.rounds.len())
+                    .set("bytes_total", bytes)
+                    .set("byte_reduction_vs_dense", reduction)
+                    .set("avg_round_len_s", result.summary.avg_round_len)
+                    .set("best_accuracy", result.summary.best_accuracy)
+                    .set("accuracy_delta_vs_dense", acc_delta)
+                    .set(
+                        "mean_device_energy_wh",
+                        result.summary.mean_device_energy_wh,
+                    ),
+            );
+        }
+    }
+    let (topk_reduction, topk_acc_delta) =
+        topk_gate.expect("the hybridfl topk cell always runs");
+
+    // Relay pair: same world, same dense codec, with and without the
+    // relay quantile. Relay pays off when the round is *straggler-bound*
+    // and the fleet's bandwidths are genuinely heterogeneous (the relay
+    // detour costs 2·upload/bps_strong, so it must undercut
+    // 1·upload/bps_weak) — so this pair runs FedAvg (AllSelected cut:
+    // the round waits for the slowest survivor) over a wide bandwidth
+    // spread. Under HybridFL's quota cut the weak tail is already
+    // outside the round and relaying can even delay the quota.
+    let relay_pair = |spec: &str| -> RunResult {
+        let mut cfg = hybridfl::sim::test_support::hetero_two_region_cfg(0.2, 0.4);
+        cfg.name = "comm-relay".into();
+        cfg.protocol = ProtocolKind::FedAvg;
+        cfg.bw_mhz = hybridfl::config::Dist::new(0.5, 0.3);
+        cfg.t_max = rounds;
+        cfg.seed = seed;
+        let comm = CommConfig::parse_spec(spec).expect("relay spec must parse");
+        Scenario::from_config(cfg)
+            .comm(comm)
+            .run()
+            .unwrap_or_else(|e| panic!("relay cell {spec} failed: {e:#}"))
+    };
+    let no_relay = relay_pair("dense");
+    let with_relay = relay_pair(&format!("relay:{RELAY_Q}"));
+    let relay_speedup = no_relay.summary.avg_round_len / with_relay.summary.avg_round_len;
+    println!(
+        "relay:{RELAY_Q} on fedavg: avg_round {:.2}s vs {:.2}s dense (speedup x{:.3})",
+        with_relay.summary.avg_round_len, no_relay.summary.avg_round_len, relay_speedup
+    );
+
+    // Engine throughput of one compressed run at a shortened horizon.
+    let iters = if args.quick { 2 } else { 5 };
+    let stats = bench(1, iters, || {
+        black_box(run_cell(
+            "topk:0.05+ef",
+            ProtocolKind::HybridFl,
+            (rounds / 4).max(2),
+            seed,
+        ));
+    });
+    stats.report(&format!(
+        "comm: topk+ef hybridfl run at {} rounds",
+        (rounds / 4).max(2)
+    ));
+
+    let codec_names: Vec<&str> = CODECS.to_vec();
+    let protocol_names: Vec<&str> = ProtocolKind::ALL.iter().map(|p| p.as_str()).collect();
+    let report = Json::obj()
+        .set("bench", "comm_tradeoff")
+        .set("rounds", rounds)
+        .set("seed", seed)
+        .set(
+            "grid",
+            Json::obj()
+                .set("codecs", codec_names)
+                .set("protocols", protocol_names),
+        )
+        .set("cells", Json::Arr(cell_rows))
+        .set(
+            "topk_vs_dense",
+            Json::obj()
+                .set("byte_reduction", topk_reduction)
+                .set("accuracy_delta", topk_acc_delta)
+                .set("within_1pct", topk_acc_delta.abs() <= 0.01),
+        )
+        .set(
+            "relay",
+            Json::obj()
+                .set("protocol", "fedavg")
+                .set("quantile", RELAY_Q)
+                .set("avg_round_len_s", with_relay.summary.avg_round_len)
+                .set("dense_avg_round_len_s", no_relay.summary.avg_round_len)
+                .set("speedup", relay_speedup),
+        )
+        .set("run_mean_s", stats.mean.as_secs_f64())
+        .set("run_p50_s", stats.p50.as_secs_f64());
+    write_report("comm", &report);
+}

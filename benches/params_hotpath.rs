@@ -172,7 +172,7 @@ fn main() {
         let mut agg = StreamingAggregator::for_regions(&region_data, &template);
         for i in 0..subs {
             let w = make_model(i);
-            agg.fold(i % m, &w, d_k, 0.5);
+            agg.fold(i % m, &w, d_k, 0.5).unwrap();
         }
         agg.cloud_with_cache(&prevs).unwrap().unwrap()
     };

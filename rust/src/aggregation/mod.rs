@@ -18,8 +18,53 @@
 //!
 //! [`edc`]: RegionAccumulator::edc
 
+use crate::comm::{EncodedUpdate, Payload};
 use crate::model::{weighted_average, ModelParams};
 use crate::Result;
+use std::fmt;
+
+/// A submission the streaming fold cannot accept. Folding is the hot
+/// path of both backends, fed by messages that crossed a (real or
+/// simulated) network — a malformed submission must surface as a typed,
+/// per-submission error the edge can log and skip, not a panic deep in
+/// the chunked `axpy` kernel.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FoldError {
+    /// The submitted model's shape table differs from the accumulator's
+    /// template.
+    ShapeMismatch {
+        region: usize,
+        expected: Vec<Vec<usize>>,
+        got: Vec<Vec<usize>>,
+    },
+    /// An encoded frame is internally inconsistent with the template
+    /// (wrong value count, out-of-range sparse index, …).
+    FrameMismatch { region: usize, detail: String },
+}
+
+impl fmt::Display for FoldError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FoldError::ShapeMismatch {
+                region,
+                expected,
+                got,
+            } => write!(
+                f,
+                "region {region}: submitted model shapes {got:?} do not match \
+                 the accumulator template {expected:?}"
+            ),
+            FoldError::FrameMismatch { region, detail } => {
+                write!(f, "region {region}: malformed encoded frame: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FoldError {}
+
+/// Per-submission fold outcome.
+pub type FoldResult = std::result::Result<(), FoldError>;
 
 /// Plain FedAvg: `w = Σ (|D_k|/Σ|D|) · w_k` over the received models.
 /// Returns `None` if nothing was received (callers keep the old model).
@@ -123,12 +168,115 @@ impl RegionAccumulator {
 
     /// Fold one in-time submission into the partial sum. The caller can
     /// (and should) drop `model` right after — nothing is buffered.
-    pub fn fold(&mut self, model: &ModelParams, data_size: f64, loss: f64) {
+    /// Validates the submission's shape table against the template first:
+    /// a mismatch is a typed error, never a panic in the axpy kernel.
+    pub fn fold(&mut self, model: &ModelParams, data_size: f64, loss: f64) -> FoldResult {
         debug_assert!(data_size >= 0.0);
+        self.check_shapes(model.shapes())?;
         self.acc.axpy((data_size / self.region_data) as f32, model);
         self.covered += data_size;
         self.count += 1;
         self.loss_sum += loss;
+        Ok(())
+    }
+
+    /// Fold one *encoded* submission (see [`crate::comm`]). A
+    /// [`Payload::Dense`] frame carries the full trained model and folds
+    /// exactly like [`Self::fold`]; every compressed variant carries the
+    /// **delta** from the round's start model, so the submitting client's
+    /// model is `start + decode(frame)` and the fold applies `α·start`
+    /// plus the scaled decoded entries straight into the partial sum —
+    /// no intermediate dense model is ever materialized, preserving the
+    /// O(regions) arena peak under compression. All frame validation
+    /// happens before the first write: a rejected submission leaves the
+    /// accumulator untouched.
+    pub fn fold_encoded(
+        &mut self,
+        start: &ModelParams,
+        frame: &EncodedUpdate,
+        data_size: f64,
+        loss: f64,
+    ) -> FoldResult {
+        if let Payload::Dense(model) = &frame.payload {
+            return self.fold(model, data_size, loss);
+        }
+        debug_assert!(data_size >= 0.0);
+        self.check_shapes(start.shapes())?;
+        let n = self.acc.n_values();
+        match &frame.payload {
+            Payload::Dense(_) => unreachable!("dense frames fold above"),
+            Payload::F16(bits) => {
+                if bits.len() != n {
+                    return Err(self
+                        .frame_err(format!("f16 frame has {} values, model has {n}", bits.len())));
+                }
+            }
+            Payload::I8 { values, .. } => {
+                if values.len() != n {
+                    return Err(self.frame_err(format!(
+                        "i8 frame has {} values, model has {n}",
+                        values.len()
+                    )));
+                }
+            }
+            Payload::Sparse { indices, values } => {
+                if indices.len() != values.len() {
+                    return Err(self.frame_err(format!(
+                        "sparse frame has {} indices but {} values",
+                        indices.len(),
+                        values.len()
+                    )));
+                }
+                if let Some(&i) = indices.iter().find(|&&i| i as usize >= n) {
+                    return Err(
+                        self.frame_err(format!("sparse index {i} out of range for {n} values"))
+                    );
+                }
+            }
+        }
+        let alpha = (data_size / self.region_data) as f32;
+        self.acc.axpy(alpha, start);
+        let dst = self.acc.values_mut();
+        match &frame.payload {
+            Payload::Dense(_) => unreachable!("dense frames fold above"),
+            Payload::F16(bits) => {
+                for (d, &b) in dst.iter_mut().zip(bits.iter()) {
+                    *d += alpha * crate::comm::f16_to_f32(b);
+                }
+            }
+            Payload::I8 { scale, values } => {
+                for (d, &q) in dst.iter_mut().zip(values.iter()) {
+                    *d += alpha * f32::from(q) * scale;
+                }
+            }
+            Payload::Sparse { indices, values } => {
+                for (&i, &v) in indices.iter().zip(values.iter()) {
+                    dst[i as usize] += alpha * v;
+                }
+            }
+        }
+        self.covered += data_size;
+        self.count += 1;
+        self.loss_sum += loss;
+        Ok(())
+    }
+
+    fn check_shapes(&self, got: &[Vec<usize>]) -> FoldResult {
+        if got != self.acc.shapes() {
+            return Err(FoldError::ShapeMismatch {
+                region: self.region,
+                expected: self.acc.shapes().to_vec(),
+                got: got.to_vec(),
+            });
+        }
+        Ok(())
+    }
+
+    fn frame_err(&self, detail: String) -> FoldError {
+        FoldError::FrameMismatch {
+            region: self.region,
+            detail,
+        }
     }
 
     pub fn region(&self) -> usize {
@@ -214,8 +362,27 @@ impl StreamingAggregator {
     }
 
     /// Fold one in-time submission into its region.
-    pub fn fold(&mut self, region: usize, model: &ModelParams, data_size: f64, loss: f64) {
-        self.regions[region].fold(model, data_size, loss);
+    pub fn fold(
+        &mut self,
+        region: usize,
+        model: &ModelParams,
+        data_size: f64,
+        loss: f64,
+    ) -> FoldResult {
+        self.regions[region].fold(model, data_size, loss)
+    }
+
+    /// Fold one encoded submission into its region (see
+    /// [`RegionAccumulator::fold_encoded`]).
+    pub fn fold_encoded(
+        &mut self,
+        region: usize,
+        start: &ModelParams,
+        frame: &EncodedUpdate,
+        data_size: f64,
+        loss: f64,
+    ) -> FoldResult {
+        self.regions[region].fold_encoded(start, frame, data_size, loss)
     }
 
     pub fn regions(&self) -> &[RegionAccumulator] {
@@ -332,7 +499,7 @@ mod tests {
         let w1 = p(&[2.0]);
         assert!(regional_with_cache(&[(&w1, 120.0)], 100.0, &prev).is_err());
         let mut acc = RegionAccumulator::new(0, 100.0, &prev);
-        acc.fold(&w1, 120.0, 0.0);
+        acc.fold(&w1, 120.0, 0.0).unwrap();
         assert!(acc.finish_cached(&prev).is_err());
     }
 
@@ -368,8 +535,8 @@ mod tests {
         let w2 = p(&[5.0, 3.0]);
         let batch = regional_with_cache(&[(&w1, 30.0), (&w2, 20.0)], 100.0, &prev).unwrap();
         let mut acc = RegionAccumulator::new(0, 100.0, &prev);
-        acc.fold(&w1, 30.0, 0.1);
-        acc.fold(&w2, 20.0, 0.3);
+        acc.fold(&w1, 30.0, 0.1).unwrap();
+        acc.fold(&w2, 20.0, 0.3).unwrap();
         assert_eq!(acc.count(), 2);
         assert_eq!(acc.edc(), 50.0);
         assert!((acc.loss_sum() - 0.4).abs() < 1e-12);
@@ -383,8 +550,8 @@ mod tests {
         let w2 = p(&[4.0]);
         let batch = fedavg(&[(&w1, 100.0), (&w2, 300.0)]).unwrap();
         let mut acc = RegionAccumulator::new(0, 1000.0, &w1);
-        acc.fold(&w1, 100.0, 0.0);
-        acc.fold(&w2, 300.0, 0.0);
+        acc.fold(&w1, 100.0, 0.0).unwrap();
+        acc.fold(&w2, 300.0, 0.0).unwrap();
         let streamed = acc.fedavg().unwrap();
         assert!(streamed.l2_distance(&batch) < 1e-6);
         let empty = RegionAccumulator::new(0, 1000.0, &w1);
@@ -399,8 +566,8 @@ mod tests {
         let w2 = p(&[4.0]);
         let template = w1.zeros_like();
         let mut agg = StreamingAggregator::for_regions(&[500.0, 800.0], &template);
-        agg.fold(0, &w1, 100.0, 0.0);
-        agg.fold(1, &w2, 300.0, 0.0);
+        agg.fold(0, &w1, 100.0, 0.0).unwrap();
+        agg.fold(1, &w2, 300.0, 0.0).unwrap();
         let global = fedavg_from_regions(agg.regions()).unwrap();
         assert!((global.values()[0] - 3.25).abs() < 1e-5);
         assert_eq!(agg.counts(), vec![1, 1]);
@@ -408,5 +575,143 @@ mod tests {
         // Nothing submitted anywhere → None.
         let empty = StreamingAggregator::for_regions(&[500.0, 800.0], &template);
         assert!(fedavg_from_regions(empty.regions()).is_none());
+    }
+
+    /// Satellite fix: a shape-table mismatch is a typed, recoverable
+    /// error — and the rejected fold leaves the accumulator untouched.
+    #[test]
+    fn fold_rejects_shape_mismatch_with_typed_error() {
+        let template = p(&[0.0, 0.0]);
+        let wrong = p(&[1.0, 2.0, 3.0]);
+        let mut acc = RegionAccumulator::new(1, 100.0, &template);
+        match acc.fold(&wrong, 10.0, 0.0).unwrap_err() {
+            FoldError::ShapeMismatch {
+                region,
+                expected,
+                got,
+            } => {
+                assert_eq!(region, 1);
+                assert_eq!(expected, vec![vec![2]]);
+                assert_eq!(got, vec![vec![3]]);
+            }
+            other => panic!("expected ShapeMismatch, got {other}"),
+        }
+        assert_eq!(acc.count(), 0);
+        assert_eq!(acc.edc(), 0.0);
+        let mut agg = StreamingAggregator::for_regions(&[100.0], &template);
+        assert!(agg.fold(0, &wrong, 10.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn fold_encoded_rejects_inconsistent_frames_before_mutating() {
+        let template = p(&[0.0, 0.0]);
+        let start = p(&[1.0, 2.0]);
+        let mut acc = RegionAccumulator::new(0, 100.0, &template);
+        let short = EncodedUpdate {
+            payload: Payload::F16(vec![0; 3]),
+            wire_bytes: 6,
+        };
+        assert!(matches!(
+            acc.fold_encoded(&start, &short, 10.0, 0.0),
+            Err(FoldError::FrameMismatch { .. })
+        ));
+        let oob = EncodedUpdate {
+            payload: Payload::Sparse {
+                indices: vec![5],
+                values: vec![1.0],
+            },
+            wire_bytes: 8,
+        };
+        assert!(acc.fold_encoded(&start, &oob, 10.0, 0.0).is_err());
+        let wrong_start = p(&[1.0, 2.0, 3.0]);
+        let ok_frame = EncodedUpdate {
+            payload: Payload::Sparse {
+                indices: vec![0],
+                values: vec![1.0],
+            },
+            wire_bytes: 8,
+        };
+        assert!(matches!(
+            acc.fold_encoded(&wrong_start, &ok_frame, 10.0, 0.0),
+            Err(FoldError::ShapeMismatch { .. })
+        ));
+        // Every rejection happened before the first write.
+        assert_eq!(acc.count(), 0);
+        assert!(acc.weighted_sum().values().iter().all(|&v| v == 0.0));
+    }
+
+    /// Satellite coverage: folding encoded frames equals decoding each
+    /// frame to a dense model (start + delta) and dense-folding it —
+    /// within f32 tolerance, and independent of fold order.
+    #[test]
+    fn compressed_fold_matches_decode_then_dense_fold_any_order() {
+        use crate::comm::{f16_to_f32, CodecSpec, EncodeCtx};
+        use crate::rng::Rng;
+        let start = p(&[0.5, -1.0, 2.0, 0.25]);
+        let deltas = [
+            p(&[0.1, -0.2, 0.05, 0.4]),
+            p(&[-0.3, 0.12, 0.0, -0.08]),
+            p(&[0.02, 0.5, -0.6, 0.01]),
+        ];
+        let specs = [
+            CodecSpec::F16,
+            CodecSpec::I8,
+            CodecSpec::TopK {
+                fraction: 0.5,
+                error_feedback: false,
+            },
+        ];
+        let sizes = [30.0, 20.0, 40.0];
+        let mut rng = Rng::new(17);
+        let frames: Vec<EncodedUpdate> = specs
+            .iter()
+            .zip(deltas.iter())
+            .map(|(spec, delta)| {
+                spec.codec().encode(
+                    delta,
+                    &mut EncodeCtx {
+                        rng: &mut rng,
+                        residual: None,
+                    },
+                )
+            })
+            .collect();
+        // Reference: decode each frame to start + delta and dense-fold.
+        let mut reference = RegionAccumulator::new(0, 100.0, &start);
+        for (frame, &size) in frames.iter().zip(sizes.iter()) {
+            let mut model = start.clone();
+            let dst = model.values_mut();
+            match &frame.payload {
+                Payload::Dense(_) => unreachable!(),
+                Payload::F16(bits) => {
+                    for (d, &b) in dst.iter_mut().zip(bits.iter()) {
+                        *d += f16_to_f32(b);
+                    }
+                }
+                Payload::I8 { scale, values } => {
+                    for (d, &q) in dst.iter_mut().zip(values.iter()) {
+                        *d += f32::from(q) * scale;
+                    }
+                }
+                Payload::Sparse { indices, values } => {
+                    for (&i, &v) in indices.iter().zip(values.iter()) {
+                        dst[i as usize] += v;
+                    }
+                }
+            }
+            reference.fold(&model, size, 0.0).unwrap();
+        }
+        for order in [[0usize, 1, 2], [2, 0, 1], [1, 2, 0]] {
+            let mut acc = RegionAccumulator::new(0, 100.0, &start);
+            for &i in &order {
+                acc.fold_encoded(&start, &frames[i], sizes[i], 0.0).unwrap();
+            }
+            assert_eq!(acc.count(), 3);
+            assert_eq!(acc.edc(), 90.0);
+            assert!(
+                acc.weighted_sum().l2_distance(reference.weighted_sum()) < 1e-5,
+                "order {order:?} diverged from the decode-then-fold reference"
+            );
+        }
     }
 }

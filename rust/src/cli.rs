@@ -21,7 +21,7 @@ pub struct Args {
 const VALUE_KEYS: &[&str] = &[
     "set", "preset", "config", "out", "seed", "protocol", "rounds", "c", "e-dr",
     "scale", "target", "backend", "checkpoint-dir", "checkpoint-every", "resume",
-    "churn", "record-fates", "replay-fates", "selector",
+    "churn", "record-fates", "replay-fates", "selector", "comm",
 ];
 
 /// Boolean switches (no value).
@@ -197,6 +197,12 @@ mod tests {
     fn selector_is_a_value_key() {
         let a = parse(&["run", "--selector", "fedcs"]);
         assert_eq!(a.get("selector"), Some("fedcs"));
+    }
+
+    #[test]
+    fn comm_is_a_value_key() {
+        let a = parse(&["run", "--comm", "topk:0.05+ef"]);
+        assert_eq!(a.get("comm"), Some("topk:0.05+ef"));
     }
 
     #[test]

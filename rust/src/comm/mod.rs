@@ -1,0 +1,918 @@
+//! Communication-efficient submission paths: update codecs, error
+//! feedback, and relay-assisted upload.
+//!
+//! The paper's round length is dominated by device→edge model transfer
+//! (`timing::TimingModel::t_comm`), yet every submission in the seed
+//! reproduction was a dense f32 dump of the arena. This module adds the
+//! missing lever: an [`UpdateCodec`] trait with four implementations,
+//! each reporting its **exact bytes on the wire** so the timing model can
+//! convert a codec choice into shorter simulated uploads and the energy
+//! model into lower device spend.
+//!
+//! * [`DenseCodec`] — the legacy path. A dense submission carries the
+//!   client's **full trained model** (not a delta) and is byte-identical
+//!   to the pre-codec behavior: the timing/energy formulas branch to the
+//!   original expressions and no codec RNG stream is ever drawn.
+//! * [`F16Codec`] — stochastic rounding of the **model delta** (trained
+//!   model minus the round's start model) to IEEE-754 half precision:
+//!   2 bytes/value, relative error ≤ 2⁻¹⁰ in the normal range.
+//! * [`I8Codec`] — symmetric linear 8-bit quantization of the delta with
+//!   stochastic rounding: 1 byte/value + one f32 scale, absolute error
+//!   ≤ `max_abs/127` per value.
+//! * [`TopKCodec`] — magnitude top-k sparsification of the delta
+//!   (8 bytes per kept value), optionally with per-client
+//!   **error-feedback residuals** (`+ef`): the mass not sent this round
+//!   is carried into the next round's delta, so nothing is ever silently
+//!   dropped — `sent + residual ≡ delta` exactly.
+//!
+//! Quantized/sparsified payloads are deltas because averaging truncated
+//! *models* would destroy the 95 % of mass top-k drops; averaging
+//! truncated *updates* only delays it (and `+ef` repays it). The edge
+//! already holds the round's start model, so a delta-coded frame folds
+//! into [`crate::aggregation::RegionAccumulator`] as
+//! `acc += α·start + α·decode(frame)` without ever materializing an
+//! intermediate dense model per submission — the O(regions) arena-peak
+//! guarantee survives compression on both backends.
+//!
+//! On top of the codecs sits the **relay** axis ("Relay-Assisted
+//! Cooperative Federated Learning", arXiv 2107.09518): the weakest
+//! quantile of each region's surviving selected clients hands its
+//! encoded frame to the fastest surviving peer over a device-to-device
+//! hop, and the relay uploads a combined frame — cutting the
+//! straggler-driven tail of the round. The transform is a deterministic
+//! post-pass over the drawn fates (`env::draw_fates`), shared verbatim
+//! by both backends and recorded into fate traces, so replay remains a
+//! fixed point.
+//!
+//! Everything is configured through [`CommConfig`] (`ExperimentConfig.
+//! comm`, `--comm` / `--set comm=` on the CLI, `Scenario::comm` /
+//! `Scenario::relay` in code) with a small spec DSL:
+//!
+//! ```text
+//! dense | f16 | i8 | topk:0.05 | topk:0.05+ef | i8+relay:0.25 | relay:0.25
+//! ```
+//!
+//! Determinism: stochastic rounding draws from a dedicated child stream
+//! ([`COMM_STREAM`]) of the round RNG, split per client, and the stream
+//! is derived only when the codec actually needs it — a `dense` run
+//! never perturbs the legacy RNG draws.
+
+use crate::jsonx::Json;
+use crate::model::ModelParams;
+use crate::rng::Rng;
+use crate::Result;
+
+/// RNG stream label for the codec layer's stochastic rounding, split off
+/// the round stream (`rng.split(COMM_STREAM).split(client)`), sibling of
+/// the churn and oracle streams. Never derived for `dense`.
+pub const COMM_STREAM: u64 = 0xC0_DE_CC;
+
+// ---------------------------------------------------------------------------
+// Configuration.
+// ---------------------------------------------------------------------------
+
+/// Which update codec encodes device→edge submissions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CodecSpec {
+    /// Legacy dense f32 submission of the full trained model (default).
+    Dense,
+    /// Stochastic rounding of the model delta to f16.
+    F16,
+    /// Stochastic symmetric 8-bit quantization of the model delta.
+    I8,
+    /// Magnitude top-k sparsification of the model delta; `error_feedback`
+    /// carries the unsent mass into the next round (sim-only state).
+    TopK { fraction: f64, error_feedback: bool },
+}
+
+impl CodecSpec {
+    pub fn is_dense(&self) -> bool {
+        matches!(self, CodecSpec::Dense)
+    }
+
+    pub fn has_error_feedback(&self) -> bool {
+        matches!(
+            self,
+            CodecSpec::TopK {
+                error_feedback: true,
+                ..
+            }
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecSpec::Dense => "dense",
+            CodecSpec::F16 => "f16",
+            CodecSpec::I8 => "i8",
+            CodecSpec::TopK { .. } => "topk",
+        }
+    }
+
+    /// Build the codec implementation for this spec.
+    pub fn codec(&self) -> Box<dyn UpdateCodec> {
+        match *self {
+            CodecSpec::Dense => Box::new(DenseCodec),
+            CodecSpec::F16 => Box::new(F16Codec),
+            CodecSpec::I8 => Box::new(I8Codec),
+            CodecSpec::TopK {
+                fraction,
+                error_feedback,
+            } => Box::new(TopKCodec {
+                fraction,
+                error_feedback,
+            }),
+        }
+    }
+
+    /// Exact device→edge bytes on the wire for one encoded update of an
+    /// `n_values`-parameter model — a pure function of the config, so
+    /// upload times are computable before any training runs.
+    pub fn wire_bytes(&self, n_values: usize) -> u64 {
+        match *self {
+            CodecSpec::Dense => 4 * n_values as u64,
+            CodecSpec::F16 => 2 * n_values as u64,
+            // Per-value i8 plus the shared f32 scale.
+            CodecSpec::I8 => n_values as u64 + 4,
+            // (u32 index, f32 value) per kept entry.
+            CodecSpec::TopK { fraction, .. } => 8 * top_k_count(fraction, n_values) as u64,
+        }
+    }
+}
+
+/// Kept-entry count for top-k over `n` values: at least one entry as
+/// long as the model is non-empty, never more than `n`.
+pub fn top_k_count(fraction: f64, n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    (((n as f64) * fraction).ceil() as usize).clamp(1, n)
+}
+
+/// The `comm` axis of an experiment: codec choice plus the optional
+/// relay quantile. The default (`dense`, no relay) is byte-identical to
+/// the pre-codec behavior on both backends.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommConfig {
+    pub codec: CodecSpec,
+    /// `Some(q)`: per region, the slowest `⌊q·survivors⌋` selected
+    /// clients hand their encoded frame to the fastest survivor, which
+    /// uploads a combined frame.
+    pub relay: Option<f64>,
+}
+
+impl Default for CommConfig {
+    fn default() -> CommConfig {
+        CommConfig {
+            codec: CodecSpec::Dense,
+            relay: None,
+        }
+    }
+}
+
+impl CommConfig {
+    /// True when every code path must take the legacy (pre-codec) route.
+    pub fn is_legacy(&self) -> bool {
+        self.codec.is_dense() && self.relay.is_none()
+    }
+
+    /// Parse the spec DSL: a codec (`dense|f16|i8|topk:K`), optionally
+    /// `+ef` (top-k only) and/or `+relay:Q`, in any order; a bare
+    /// `relay:Q` keeps the dense codec.
+    pub fn parse_spec(spec: &str) -> Result<CommConfig> {
+        let mut codec: Option<CodecSpec> = None;
+        let mut ef = false;
+        let mut relay = None;
+        let set_codec = |slot: &mut Option<CodecSpec>, c: CodecSpec| -> Result<()> {
+            anyhow::ensure!(
+                slot.is_none(),
+                "comm spec '{spec}' names more than one codec"
+            );
+            *slot = Some(c);
+            Ok(())
+        };
+        for part in spec.split('+') {
+            let part = part.trim();
+            match part {
+                "dense" => set_codec(&mut codec, CodecSpec::Dense)?,
+                "f16" => set_codec(&mut codec, CodecSpec::F16)?,
+                "i8" => set_codec(&mut codec, CodecSpec::I8)?,
+                "ef" => ef = true,
+                _ => {
+                    if let Some(v) = part.strip_prefix("topk:") {
+                        let fraction: f64 = v
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad top-k fraction '{v}'"))?;
+                        set_codec(
+                            &mut codec,
+                            CodecSpec::TopK {
+                                fraction,
+                                error_feedback: false,
+                            },
+                        )?;
+                    } else if let Some(v) = part.strip_prefix("relay:") {
+                        let q: f64 = v
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad relay quantile '{v}'"))?;
+                        relay = Some(q);
+                    } else {
+                        anyhow::bail!(
+                            "unknown comm spec part '{part}' \
+                             (dense | f16 | i8 | topk:K [+ef] | relay:Q)"
+                        );
+                    }
+                }
+            }
+        }
+        let mut codec = codec.unwrap_or(CodecSpec::Dense);
+        if ef {
+            match &mut codec {
+                CodecSpec::TopK { error_feedback, .. } => *error_feedback = true,
+                other => anyhow::bail!(
+                    "'+ef' (error feedback) applies to topk only, not '{}'",
+                    other.name()
+                ),
+            }
+        }
+        let cfg = CommConfig { codec, relay };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The canonical spec string (inverse of [`Self::parse_spec`]).
+    pub fn spec(&self) -> String {
+        let mut s = match self.codec {
+            CodecSpec::Dense => "dense".to_string(),
+            CodecSpec::F16 => "f16".to_string(),
+            CodecSpec::I8 => "i8".to_string(),
+            CodecSpec::TopK {
+                fraction,
+                error_feedback,
+            } => {
+                let mut s = format!("topk:{fraction}");
+                if error_feedback {
+                    s.push_str("+ef");
+                }
+                s
+            }
+        };
+        if let Some(q) = self.relay {
+            s.push_str(&format!("+relay:{q}"));
+        }
+        s
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if let CodecSpec::TopK { fraction, .. } = self.codec {
+            anyhow::ensure!(
+                fraction > 0.0 && fraction <= 1.0,
+                "comm: top-k fraction must be in (0, 1], got {fraction}"
+            );
+        }
+        if let Some(q) = self.relay {
+            anyhow::ensure!(
+                q > 0.0 && q < 1.0,
+                "comm: relay quantile must be in (0, 1), got {q}"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj().set("codec", self.codec.name()).set(
+            "relay",
+            match self.relay {
+                Some(q) => Json::Num(q),
+                None => Json::Null,
+            },
+        );
+        if let CodecSpec::TopK {
+            fraction,
+            error_feedback,
+        } = self.codec
+        {
+            j = j.set("fraction", fraction).set("ef", error_feedback);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<CommConfig> {
+        let codec = match j.req("codec")?.as_str()? {
+            "dense" => CodecSpec::Dense,
+            "f16" => CodecSpec::F16,
+            "i8" => CodecSpec::I8,
+            "topk" => CodecSpec::TopK {
+                fraction: j.req("fraction")?.as_f64()?,
+                error_feedback: j.req("ef")?.as_bool()?,
+            },
+            other => anyhow::bail!("unknown comm codec '{other}'"),
+        };
+        let relay = match j.req("relay")? {
+            Json::Null => None,
+            v => Some(v.as_f64()?),
+        };
+        let cfg = CommConfig { codec, relay };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoded frames.
+// ---------------------------------------------------------------------------
+
+/// The encoded body of one device→edge submission. `Dense` carries the
+/// full trained model (two refcount bumps to clone); every other variant
+/// carries the encoded **delta** from the round's start model.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    Dense(ModelParams),
+    F16(Vec<u16>),
+    I8 { scale: f32, values: Vec<i8> },
+    Sparse { indices: Vec<u32>, values: Vec<f32> },
+}
+
+/// One encoded update frame plus its exact size on the wire.
+#[derive(Clone, Debug)]
+pub struct EncodedUpdate {
+    pub payload: Payload,
+    pub wire_bytes: u64,
+}
+
+/// Per-encode context: the client's stochastic-rounding stream and, for
+/// `topk+ef`, its mutable residual vector (device-side state, outside
+/// the coordinator's arena accounting).
+pub struct EncodeCtx<'a> {
+    pub rng: &'a mut Rng,
+    pub residual: Option<&'a mut Vec<f32>>,
+}
+
+/// An update codec: frames a model (or model delta) for the wire and
+/// reports the frame's exact byte count.
+pub trait UpdateCodec {
+    fn name(&self) -> &'static str;
+    /// Exact bytes on the wire for one update of an `n_values` model.
+    fn wire_bytes(&self, n_values: usize) -> u64;
+    /// Encode `update` — the full model for [`DenseCodec`], the delta
+    /// from the round's start model for every other codec. Total over
+    /// any input: non-finite values saturate or map to zero per codec
+    /// (documented on each implementation), never a panic.
+    fn encode(&self, update: &ModelParams, ctx: &mut EncodeCtx<'_>) -> EncodedUpdate;
+}
+
+/// Legacy dense f32 submission (full model, zero-copy).
+pub struct DenseCodec;
+
+impl UpdateCodec for DenseCodec {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn wire_bytes(&self, n_values: usize) -> u64 {
+        4 * n_values as u64
+    }
+
+    fn encode(&self, update: &ModelParams, _ctx: &mut EncodeCtx<'_>) -> EncodedUpdate {
+        EncodedUpdate {
+            wire_bytes: self.wire_bytes(update.n_values()),
+            payload: Payload::Dense(update.clone()),
+        }
+    }
+}
+
+/// Stochastic rounding to f16. Non-finite values pass through (`NaN`
+/// stays `NaN`, infinities stay infinite); magnitudes beyond the f16
+/// range saturate to ±65504 rather than overflowing to infinity.
+pub struct F16Codec;
+
+impl UpdateCodec for F16Codec {
+    fn name(&self) -> &'static str {
+        "f16"
+    }
+
+    fn wire_bytes(&self, n_values: usize) -> u64 {
+        2 * n_values as u64
+    }
+
+    fn encode(&self, update: &ModelParams, ctx: &mut EncodeCtx<'_>) -> EncodedUpdate {
+        let values = update
+            .values()
+            .iter()
+            .map(|&v| f16_stochastic(v, ctx.rng))
+            .collect();
+        EncodedUpdate {
+            wire_bytes: self.wire_bytes(update.n_values()),
+            payload: Payload::F16(values),
+        }
+    }
+}
+
+/// Symmetric linear 8-bit quantization with stochastic rounding:
+/// `scale = max_abs/127`, values rounded to `q·scale`. Non-finite values
+/// are excluded from the scale and quantize to zero.
+pub struct I8Codec;
+
+impl UpdateCodec for I8Codec {
+    fn name(&self) -> &'static str {
+        "i8"
+    }
+
+    fn wire_bytes(&self, n_values: usize) -> u64 {
+        n_values as u64 + 4
+    }
+
+    fn encode(&self, update: &ModelParams, ctx: &mut EncodeCtx<'_>) -> EncodedUpdate {
+        let src = update.values();
+        let max_abs = src
+            .iter()
+            .filter(|v| v.is_finite())
+            .fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = max_abs / 127.0;
+        let values = if scale > 0.0 {
+            src.iter()
+                .map(|&v| {
+                    if !v.is_finite() {
+                        return 0;
+                    }
+                    let q = (v / scale) as f64;
+                    let lo = q.floor();
+                    let up = ctx.rng.uniform() < q - lo;
+                    ((lo as i32 + up as i32).clamp(-127, 127)) as i8
+                })
+                .collect()
+        } else {
+            vec![0i8; src.len()]
+        };
+        EncodedUpdate {
+            wire_bytes: self.wire_bytes(src.len()),
+            payload: Payload::I8 { scale, values },
+        }
+    }
+}
+
+/// Magnitude top-k sparsification with optional error feedback. The
+/// ranked signal is `delta + residual`; the kept entries are sent as
+/// exact f32 copies, and with `+ef` the residual becomes exactly what
+/// was not sent, so `sent + residual ≡ delta + residual_in` bit for
+/// bit. Non-finite values rank as zero magnitude and are never sent
+/// (their residual is reset to zero).
+pub struct TopKCodec {
+    pub fraction: f64,
+    pub error_feedback: bool,
+}
+
+impl UpdateCodec for TopKCodec {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn wire_bytes(&self, n_values: usize) -> u64 {
+        8 * top_k_count(self.fraction, n_values) as u64
+    }
+
+    fn encode(&self, update: &ModelParams, ctx: &mut EncodeCtx<'_>) -> EncodedUpdate {
+        let src = update.values();
+        let n = src.len();
+        // The ranked signal: this round's delta plus the carried residual.
+        let mut work: Vec<f32> = src.to_vec();
+        if let Some(residual) = ctx.residual.as_deref() {
+            debug_assert_eq!(residual.len(), n, "residual length mismatch");
+            for (w, &r) in work.iter_mut().zip(residual.iter()) {
+                *w += r;
+            }
+        }
+        let k = top_k_count(self.fraction, n);
+        let magnitude = |v: f32| if v.is_finite() { v.abs() } else { 0.0 };
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        if k < n {
+            order.select_nth_unstable_by(k, |&a, &b| {
+                magnitude(work[b as usize])
+                    .partial_cmp(&magnitude(work[a as usize]))
+                    .expect("magnitudes are finite")
+                    .then(a.cmp(&b))
+            });
+            order.truncate(k);
+        }
+        // Index order: deterministic regardless of the partial-select
+        // permutation, and cache-friendly to apply at the edge.
+        order.sort_unstable();
+        let mut indices = Vec::with_capacity(k);
+        let mut values = Vec::with_capacity(k);
+        for &i in &order {
+            let v = work[i as usize];
+            indices.push(i);
+            values.push(if v.is_finite() { v } else { 0.0 });
+        }
+        if self.error_feedback {
+            if let Some(residual) = ctx.residual.as_deref_mut() {
+                // residual := ranked signal minus what was sent; exact.
+                residual.copy_from_slice(&work);
+                for r in residual.iter_mut() {
+                    if !r.is_finite() {
+                        *r = 0.0;
+                    }
+                }
+                for &i in &indices {
+                    residual[i as usize] = 0.0;
+                }
+            }
+        }
+        EncodedUpdate {
+            wire_bytes: self.wire_bytes(n),
+            payload: Payload::Sparse { indices, values },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stochastic f16 rounding primitives.
+// ---------------------------------------------------------------------------
+
+/// f32 → f16 bits, truncating toward zero (the lower bracket of the
+/// stochastic round). Saturates past the f16 range; preserves NaN/Inf.
+pub fn f16_truncate_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // Inf or NaN (canonical quiet NaN keeps one payload bit set).
+        return sign | if mant == 0 { 0x7C00 } else { 0x7E00 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        // Beyond the f16 range: saturate to the largest finite value.
+        return sign | 0x7BFF;
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflows to signed zero
+        }
+        // Subnormal: implicit leading 1, shifted into the 10-bit field.
+        let m = (mant | 0x80_0000) >> (13 + 1 - e);
+        return sign | m as u16;
+    }
+    sign | ((e as u16) << 10) | (mant >> 13) as u16
+}
+
+/// f16 bits → f32 (exact).
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign = ((bits & 0x8000) as u32) << 16;
+    let exp = ((bits >> 10) & 0x1F) as u32;
+    let mant = (bits & 0x3FF) as u32;
+    if exp == 0 {
+        // Signed zero or subnormal: value = ±mant · 2⁻²⁴.
+        return sign_factor(bits) * (mant as f32) * 2.0f32.powi(-24);
+    }
+    let out = if exp == 31 {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(out)
+}
+
+fn sign_factor(bits: u16) -> f32 {
+    if bits & 0x8000 != 0 {
+        -1.0
+    } else {
+        1.0
+    }
+}
+
+/// Stochastically round `x` to f16: pick the bracketing representable
+/// below (toward zero) or above with probability proportional to the
+/// distance, so the rounding is unbiased. Non-finite inputs pass through
+/// without drawing from the RNG.
+pub fn f16_stochastic(x: f32, rng: &mut Rng) -> u16 {
+    if !x.is_finite() {
+        return f16_truncate_bits(x);
+    }
+    let lo_bits = f16_truncate_bits(x);
+    let lo = f16_to_f32(lo_bits);
+    if lo == x || (lo_bits & 0x7FFF) >= 0x7BFF {
+        // Exactly representable, or saturated at the range edge.
+        return lo_bits;
+    }
+    // IEEE ordering: +1 on the magnitude bits is the next representable
+    // away from zero, across exponent boundaries included.
+    let hi_bits = lo_bits + 1;
+    let hi = f16_to_f32(hi_bits);
+    let frac = f64::from((x - lo).abs()) / f64::from((hi - lo).abs());
+    if rng.uniform() < frac {
+        hi_bits
+    } else {
+        lo_bits
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Error-feedback residual state (snapshot payload).
+// ---------------------------------------------------------------------------
+
+/// The codec layer's only cross-round mutable state: per-client
+/// error-feedback residuals for `topk+ef`. Held as raw `Vec<f32>`
+/// device-side state (never `ModelParams` — 50k residual arenas would
+/// demolish the O(regions) arena-peak guarantee) and carried in
+/// [`crate::snapshot::RunSnapshot`] so resumed runs stay byte-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CommState {
+    /// No residuals in flight (every codec except `topk+ef`).
+    Stateless,
+    /// `(client, residual)` pairs, sorted by client id.
+    Residuals { clients: Vec<(usize, Vec<f32>)> },
+}
+
+impl CommState {
+    pub fn is_stateless(&self) -> bool {
+        matches!(self, CommState::Stateless)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn model(values: Vec<f32>) -> ModelParams {
+        let n = values.len();
+        ModelParams::from_flat(values, vec![vec![n]])
+    }
+
+    fn decode_dense(frame: &EncodedUpdate, n: usize) -> Vec<f32> {
+        match &frame.payload {
+            Payload::Dense(m) => m.values().to_vec(),
+            Payload::F16(v) => v.iter().map(|&b| f16_to_f32(b)).collect(),
+            Payload::I8 { scale, values } => {
+                values.iter().map(|&q| q as f32 * scale).collect()
+            }
+            Payload::Sparse { indices, values } => {
+                let mut out = vec![0.0f32; n];
+                for (&i, &v) in indices.iter().zip(values.iter()) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+        }
+    }
+
+    #[test]
+    fn spec_dsl_roundtrips() {
+        for spec in ["dense", "f16", "i8", "topk:0.05", "topk:0.05+ef", "i8+relay:0.25"] {
+            let cfg = CommConfig::parse_spec(spec).unwrap();
+            assert_eq!(cfg.spec(), spec, "spec {spec}");
+            let back = CommConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back, cfg, "json roundtrip of {spec}");
+        }
+        // Bare relay keeps the dense codec.
+        let cfg = CommConfig::parse_spec("relay:0.25").unwrap();
+        assert_eq!(cfg.codec, CodecSpec::Dense);
+        assert_eq!(cfg.relay, Some(0.25));
+        assert!(!cfg.is_legacy());
+        assert!(CommConfig::default().is_legacy());
+    }
+
+    #[test]
+    fn spec_dsl_rejects_nonsense() {
+        assert!(CommConfig::parse_spec("f16+ef").is_err()); // ef needs topk
+        assert!(CommConfig::parse_spec("f16+i8").is_err()); // two codecs
+        assert!(CommConfig::parse_spec("topk:0").is_err()); // fraction range
+        assert!(CommConfig::parse_spec("topk:1.5").is_err());
+        assert!(CommConfig::parse_spec("relay:1.0").is_err()); // quantile range
+        assert!(CommConfig::parse_spec("gzip").is_err());
+    }
+
+    #[test]
+    fn wire_bytes_formulas() {
+        let n = 1000;
+        assert_eq!(CodecSpec::Dense.wire_bytes(n), 4000);
+        assert_eq!(CodecSpec::F16.wire_bytes(n), 2000);
+        assert_eq!(CodecSpec::I8.wire_bytes(n), 1004);
+        let topk = CodecSpec::TopK {
+            fraction: 0.05,
+            error_feedback: true,
+        };
+        assert_eq!(topk.wire_bytes(n), 8 * 50);
+        // ≥4× below dense at k=5% — the bench's headline ratio.
+        assert!(4 * topk.wire_bytes(n) <= CodecSpec::Dense.wire_bytes(n));
+        // Tiny models still send at least one entry.
+        assert_eq!(top_k_count(0.05, 3), 1);
+        assert_eq!(top_k_count(0.05, 0), 0);
+    }
+
+    #[test]
+    fn frame_reports_the_config_byte_count() {
+        let mut rng = Rng::new(7);
+        let update = model((0..100).map(|i| (i as f32) * 0.01 - 0.3).collect());
+        for spec in [
+            CodecSpec::Dense,
+            CodecSpec::F16,
+            CodecSpec::I8,
+            CodecSpec::TopK {
+                fraction: 0.05,
+                error_feedback: false,
+            },
+        ] {
+            let frame = spec.codec().encode(
+                &update,
+                &mut EncodeCtx {
+                    rng: &mut rng,
+                    residual: None,
+                },
+            );
+            assert_eq!(frame.wire_bytes, spec.wire_bytes(100), "{}", spec.name());
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_error_is_bounded() {
+        let mut rng = Rng::new(42);
+        for i in 0..5000 {
+            let x = ((rng.uniform() - 0.5) * 200.0) as f32;
+            if x.abs() < 1e-3 {
+                continue;
+            }
+            let dec = f16_to_f32(f16_stochastic(x, &mut rng));
+            let rel = ((dec - x) / x).abs();
+            assert!(rel <= 1.0 / 1024.0 + 1e-9, "iter {i}: x={x} dec={dec} rel={rel}");
+        }
+        // Exact values survive untouched.
+        for x in [0.0f32, 1.0, -2.5, 0.5, 65504.0] {
+            assert_eq!(f16_to_f32(f16_stochastic(x, &mut rng)), x);
+        }
+        // Saturation instead of overflow.
+        assert_eq!(f16_to_f32(f16_stochastic(1e6, &mut rng)), 65504.0);
+        assert_eq!(f16_to_f32(f16_stochastic(-1e6, &mut rng)), -65504.0);
+    }
+
+    #[test]
+    fn f16_preserves_specials() {
+        let mut rng = Rng::new(1);
+        assert!(f16_to_f32(f16_stochastic(f32::NAN, &mut rng)).is_nan());
+        assert_eq!(f16_to_f32(f16_stochastic(f32::INFINITY, &mut rng)), f32::INFINITY);
+        assert_eq!(
+            f16_to_f32(f16_stochastic(f32::NEG_INFINITY, &mut rng)),
+            f32::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn i8_roundtrip_error_is_bounded() {
+        let mut rng = Rng::new(9);
+        let src: Vec<f32> = (0..512).map(|_| ((rng.uniform() - 0.5) * 4.0) as f32).collect();
+        let max_abs = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let frame = I8Codec.encode(
+            &model(src.clone()),
+            &mut EncodeCtx {
+                rng: &mut rng,
+                residual: None,
+            },
+        );
+        let dec = decode_dense(&frame, src.len());
+        let bound = max_abs / 127.0 + 1e-6;
+        for (d, s) in dec.iter().zip(src.iter()) {
+            assert!((d - s).abs() <= bound, "|{d} - {s}| > {bound}");
+        }
+    }
+
+    #[test]
+    fn i8_handles_zero_and_nonfinite_payloads() {
+        let mut rng = Rng::new(3);
+        let frame = I8Codec.encode(
+            &model(vec![0.0; 16]),
+            &mut EncodeCtx {
+                rng: &mut rng,
+                residual: None,
+            },
+        );
+        assert!(decode_dense(&frame, 16).iter().all(|&v| v == 0.0));
+        // NaN/Inf neither poison the scale nor the decoded values.
+        let frame = I8Codec.encode(
+            &model(vec![f32::NAN, f32::INFINITY, 1.0, -0.5]),
+            &mut EncodeCtx {
+                rng: &mut rng,
+                residual: None,
+            },
+        );
+        let dec = decode_dense(&frame, 4);
+        assert_eq!(dec[0], 0.0);
+        assert_eq!(dec[1], 0.0);
+        assert!((dec[2] - 1.0).abs() <= 1.0 / 127.0 + 1e-6);
+    }
+
+    #[test]
+    fn topk_ef_conserves_mass_exactly() {
+        let mut rng = Rng::new(11);
+        let delta: Vec<f32> = (0..256).map(|_| ((rng.uniform() - 0.5) * 2.0) as f32).collect();
+        let mut residual = vec![0.0f32; 256];
+        // Seed the residual with prior-round leftovers.
+        for (i, r) in residual.iter_mut().enumerate() {
+            *r = (i as f32) * 1e-3;
+        }
+        let expect: Vec<f32> = delta
+            .iter()
+            .zip(residual.iter())
+            .map(|(d, r)| d + r)
+            .collect();
+        let codec = TopKCodec {
+            fraction: 0.05,
+            error_feedback: true,
+        };
+        let frame = codec.encode(
+            &model(delta),
+            &mut EncodeCtx {
+                rng: &mut rng,
+                residual: Some(&mut residual),
+            },
+        );
+        let sent = decode_dense(&frame, 256);
+        for i in 0..256 {
+            // sent + residual ≡ delta + residual_in, exactly (f32 copies).
+            assert!(
+                (sent[i] + residual[i] - expect[i]).abs() <= 1e-6,
+                "index {i}: {} + {} != {}",
+                sent[i],
+                residual[i],
+                expect[i]
+            );
+        }
+        // The kept entries are exact copies with zeroed residual.
+        let Payload::Sparse { indices, .. } = &frame.payload else {
+            panic!("topk frames are sparse");
+        };
+        assert_eq!(indices.len(), top_k_count(0.05, 256));
+        for &i in indices {
+            assert_eq!(residual[i as usize], 0.0);
+        }
+    }
+
+    #[test]
+    fn topk_keeps_the_largest_magnitudes_and_ignores_nonfinite() {
+        let mut rng = Rng::new(5);
+        let mut delta = vec![0.01f32; 100];
+        delta[7] = 5.0;
+        delta[42] = -9.0;
+        delta[13] = f32::NAN; // ranks as zero, never sent
+        let codec = TopKCodec {
+            fraction: 0.02,
+            error_feedback: false,
+        };
+        let frame = codec.encode(
+            &model(delta),
+            &mut EncodeCtx {
+                rng: &mut rng,
+                residual: None,
+            },
+        );
+        let Payload::Sparse { indices, values } = &frame.payload else {
+            panic!("topk frames are sparse");
+        };
+        assert_eq!(indices, &[7, 42]);
+        assert_eq!(values, &[5.0, -9.0]);
+    }
+
+    #[test]
+    fn empty_model_encodes_to_empty_frames() {
+        let mut rng = Rng::new(2);
+        let empty = ModelParams::from_flat(Vec::new(), vec![vec![0]]);
+        for spec in [
+            CodecSpec::F16,
+            CodecSpec::I8,
+            CodecSpec::TopK {
+                fraction: 0.5,
+                error_feedback: false,
+            },
+        ] {
+            let frame = spec.codec().encode(
+                &empty,
+                &mut EncodeCtx {
+                    rng: &mut rng,
+                    residual: None,
+                },
+            );
+            assert_eq!(frame.wire_bytes, spec.wire_bytes(0), "{}", spec.name());
+            assert!(decode_dense(&frame, 0).is_empty());
+        }
+    }
+
+    #[test]
+    fn dense_runs_never_touch_the_comm_stream() {
+        // The dense codec draws nothing: encoding with two different RNGs
+        // yields identical frames, and the RNG state is untouched.
+        let update = model(vec![1.0, -2.0, 3.5]);
+        let mut a = Rng::new(1);
+        let before = a.state();
+        let f = DenseCodec.encode(
+            &update,
+            &mut EncodeCtx {
+                rng: &mut a,
+                residual: None,
+            },
+        );
+        assert_eq!(a.state(), before);
+        match f.payload {
+            Payload::Dense(m) => assert!(m.shares_arena(&update)),
+            _ => panic!("dense payload"),
+        }
+    }
+}

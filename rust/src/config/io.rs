@@ -7,6 +7,7 @@ use super::{
     RegionSpec, TaskKind,
 };
 use crate::churn::ChurnModel;
+use crate::comm::CommConfig;
 use crate::jsonx::Json;
 use crate::selection::SelectorKind;
 
@@ -88,6 +89,7 @@ impl ExperimentConfig {
             .set("bw_mhz", self.bw_mhz.to_json())
             .set("dropout", self.dropout.to_json())
             .set("churn", self.churn.to_json())
+            .set("comm", self.comm.to_json())
             .set("snr", self.snr)
             .set("cloud_edge_mbps", self.cloud_edge_mbps)
             .set("model_size_mb", self.model_size_mb)
@@ -151,6 +153,12 @@ impl ExperimentConfig {
                 Some(c) => ChurnModel::from_json(c)?,
                 None => ChurnModel::Stationary,
             },
+            // Absent in configs written before the comm subsystem: those
+            // runs always submitted dense updates, no relay.
+            comm: match j.get("comm") {
+                Some(c) => CommConfig::from_json(c)?,
+                None => CommConfig::default(),
+            },
             snr: j.req("snr")?.as_f64()?,
             cloud_edge_mbps: j.req("cloud_edge_mbps")?.as_f64()?,
             model_size_mb: j.req("model_size_mb")?.as_f64()?,
@@ -212,6 +220,7 @@ fn apply_one(cfg: &mut ExperimentConfig, key: &str, val: &str) -> Result<()> {
         "dropout_mean" | "e_dr" => cfg.dropout.mean = val.parse()?,
         "dropout_std" => cfg.dropout.std = val.parse()?,
         "churn" => cfg.churn = ChurnModel::parse_spec(val)?,
+        "comm" => cfg.comm = CommConfig::parse_spec(val)?,
         "perf_mean" => cfg.perf_ghz.mean = val.parse()?,
         "perf_std" => cfg.perf_ghz.std = val.parse()?,
         "bw_mean" => cfg.bw_mhz.mean = val.parse()?,
@@ -308,6 +317,29 @@ mod tests {
             }
         );
         assert!(apply_overrides(&mut cfg, &["churn=bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn comm_roundtrips_and_defaults_to_dense() {
+        use crate::comm::CodecSpec;
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.comm = CommConfig::parse_spec("topk:0.05+ef+relay:0.25").unwrap();
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+
+        // A pre-comm config file (no "comm" key) loads as dense/no-relay.
+        let mut j = cfg.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("comm");
+        }
+        let legacy = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(legacy.comm, CommConfig::default());
+
+        let mut cfg = ExperimentConfig::task1_scaled();
+        apply_overrides(&mut cfg, &["comm=i8+relay:0.3".into()]).unwrap();
+        assert_eq!(cfg.comm.codec, CodecSpec::I8);
+        assert_eq!(cfg.comm.relay, Some(0.3));
+        assert!(apply_overrides(&mut cfg, &["comm=zip".into()]).is_err());
     }
 
     #[test]

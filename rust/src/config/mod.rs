@@ -10,6 +10,7 @@ pub use io::apply_overrides;
 use anyhow::{bail, Result};
 
 use crate::churn::ChurnModel;
+use crate::comm::CommConfig;
 use crate::selection::SelectorKind;
 
 /// Which of the paper's two ML tasks drives on-device training.
@@ -232,6 +233,11 @@ pub struct ExperimentConfig {
     pub churn: ChurnModel,
     /// Wireless signal-to-noise ratio (linear, not dB).
     pub snr: f64,
+    /// Device→edge submission path: update codec (quantization /
+    /// sparsification, see [`crate::comm`]) plus the optional relay
+    /// quantile. The default — dense, no relay — reproduces the
+    /// historical submission path bit for bit.
+    pub comm: CommConfig,
 
     // --- network / workload constants ---------------------------------------
     /// BR — cloud-edge throughput, Mbps.
@@ -340,6 +346,7 @@ impl ExperimentConfig {
             self.regions.len()
         };
         self.churn.validate(n_regions, self.n_clients)?;
+        self.comm.validate()?;
         Ok(())
     }
 }

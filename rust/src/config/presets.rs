@@ -11,6 +11,7 @@ use super::{
     RegionSpec, TaskKind,
 };
 use crate::churn::ChurnModel;
+use crate::comm::CommConfig;
 use crate::selection::SelectorKind;
 
 impl ExperimentConfig {
@@ -38,6 +39,7 @@ impl ExperimentConfig {
             bw_mhz: Dist::new(0.5, 0.1),
             dropout: Dist::new(0.3, 0.05),
             churn: ChurnModel::Stationary,
+            comm: CommConfig::default(),
             snr: 1.0e2,
             cloud_edge_mbps: 1.0e3,
             model_size_mb: 5.0,
@@ -90,6 +92,7 @@ impl ExperimentConfig {
             bw_mhz: Dist::new(1.0, 0.3),
             dropout: Dist::new(0.3, 0.05),
             churn: ChurnModel::Stationary,
+            comm: CommConfig::default(),
             snr: 1.0e2,
             cloud_edge_mbps: 1.0e3,
             model_size_mb: 10.0,

@@ -67,6 +67,27 @@ impl EnergyModel {
         }
     }
 
+    /// Eq. (35) under an update codec: a compressed upload shortens the
+    /// transmit window, so `comm_j` scales with [`TimingModel::
+    /// t_comm_with`]. The dense codec takes the exact legacy expression
+    /// (bit-identical to [`Self::full_round`]); training energy is
+    /// codec-independent.
+    pub fn full_round_with(
+        &self,
+        p: &ClientProfile,
+        tm: &TimingModel,
+        partition_size: f64,
+        comm: &crate::comm::CommConfig,
+    ) -> EnergySpend {
+        if comm.codec.is_dense() {
+            return self.full_round(p, tm, partition_size);
+        }
+        EnergySpend {
+            comm_j: self.p_trans_w * tm.t_comm_with(p, comm),
+            comp_j: self.comp_power_w(p) * tm.t_train(p, partition_size),
+        }
+    }
+
     /// A client that drops out mid-round: half the training burn, no upload.
     pub fn aborted_round(
         &self,
@@ -116,6 +137,20 @@ mod tests {
         let abort = em.aborted_round(&p, &tm, 100.0);
         assert_eq!(abort.comm_j, 0.0);
         assert!((abort.comp_j - 0.5 * full.comp_j).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compressed_uploads_cut_comm_energy_dense_is_identical() {
+        let (_, tm, em, p) = setup();
+        let dense = crate::comm::CommConfig::default();
+        let base = em.full_round(&p, &tm, 100.0);
+        let via = em.full_round_with(&p, &tm, 100.0, &dense);
+        assert_eq!(base.comm_j.to_bits(), via.comm_j.to_bits());
+        assert_eq!(base.comp_j.to_bits(), via.comp_j.to_bits());
+        let topk = crate::comm::CommConfig::parse_spec("topk:0.05").unwrap();
+        let e = em.full_round_with(&p, &tm, 100.0, &topk);
+        assert!(e.comm_j < base.comm_j / 2.0, "comm={} vs {}", e.comm_j, base.comm_j);
+        assert_eq!(e.comp_j.to_bits(), base.comp_j.to_bits());
     }
 
     #[test]

@@ -4,8 +4,8 @@
 //! The same seeded draws that parameterize the virtual-clock backend
 //! (which clients drop, how long each survivor takes) parameterize the
 //! world here too — but the round itself is *enacted*: every client is an
-//! OS thread behind an mpsc channel, edges fold arriving models into
-//! their region's accumulator and relay model-free notices up, and the
+//! OS thread behind an mpsc channel, edges decode arriving codec frames
+//! into their region's accumulator and relay model-free notices up, and the
 //! cloud (the caller's thread, inside `run_round`) arbitrates quota vs
 //! deadline from real notice arrivals in wall-clock time scaled by
 //! `time_scale`. Out-of-order arrivals, racing edges and straggler
@@ -74,6 +74,13 @@ impl LiveClusterEnv {
              reads ground-truth client fates before selection, which exist \
              only as the virtual clock's pre-drawable fate table — run \
              oracle cells on the virtual clock"
+        );
+        anyhow::ensure!(
+            !cfg.comm.codec.has_error_feedback(),
+            "error-feedback residuals (+ef) are not supported on the live \
+             backend: residuals are per-client state that must survive \
+             rounds, and client threads are stateless between Train \
+             messages — run +ef cells on the virtual clock"
         );
         let world = World::build(cfg)?;
         let fabric = ClusterFabric::spawn(&world, time_scale)?;
@@ -221,6 +228,17 @@ impl FlEnvironment for LiveClusterEnv {
         let alive = region_histogram(m, fates.iter().filter(|f| !f.dropped).map(|f| f.region));
         let regional: Vec<_> = reports.into_iter().map(|r| r.agg).collect();
         let submissions: Vec<usize> = regional.iter().map(|r| r.count()).collect();
+        // Same accounting as the virtual clock: folded submissions times
+        // the configured codec's per-update wire size, against the
+        // *config-level* model size — identical on both backends.
+        let folded: usize = submissions.iter().sum();
+        let bytes_moved = folded as u64
+            * self
+                .world
+                .cfg
+                .comm
+                .codec
+                .wire_bytes(self.world.tm.n_model_values());
         let avail = ground_truth_avail(&self.world, &fates);
 
         Ok(RoundOutcome {
@@ -232,6 +250,7 @@ impl FlEnvironment for LiveClusterEnv {
             round_len: plan.round_len,
             deadline_hit: plan.deadline_hit,
             energy_j,
+            bytes_moved,
         })
     }
 

@@ -90,6 +90,37 @@
 //!    environment also reports the per-region ground-truth availability
 //!    (`RoundOutcome::avail`) for the metrics layer — like `alive`, it is
 //!    simulator truth that protocol logic must not read.
+//! 7. **Compressed submissions and the relay hop.** Device→edge uploads
+//!    are framed by the configured [`crate::comm::UpdateCodec`]: a
+//!    compressed frame's *exact* wire bytes drive the upload leg of the
+//!    timing model ([`crate::timing::TimingModel::t_comm_with`]), the
+//!    transmit energy, and the round's `RoundOutcome::bytes_moved`
+//!    counter (folded submissions × per-update wire bytes — the
+//!    device→edge traffic the bench compares across codecs). Encoded
+//!    frames fold into the region accumulators via
+//!    [`crate::aggregation::RegionAccumulator::fold_encoded`] without an
+//!    intermediate dense model — the O(regions) arena peak holds under
+//!    compression on both backends, and the live fabric ships the actual
+//!    encoded frames over its channels. A malformed submission (shape or
+//!    frame mismatch) is logged and skipped, never folded or counted.
+//!    With `comm.relay = Some(q)`, each region's slowest `⌊q·survivors⌋`
+//!    selected clients hand their encoded frame to the region's fastest
+//!    survivor over a device-to-device hop; the relay uploads the
+//!    combined frames and both parties' submissions land when the relay
+//!    finishes. The transform is a deterministic post-pass over the
+//!    drawn fates, shared by both backends and recorded into fate traces
+//!    (so replayed traces reproduce relayed rounds verbatim and the
+//!    transform is *not* re-applied under replay). Accounting draws the
+//!    line at the radio: `bytes_moved` counts device→edge traffic only
+//!    (the D2D handoff is not edge traffic), and per-client energy keeps
+//!    eq. 35's own-upload charge — relay re-routing is a timing lever,
+//!    not an energy transfer between devices. Error-feedback residuals
+//!    (`topk+ef`) are coordinator-side state on the virtual clock,
+//!    captured/restored through [`FlEnvironment::comm_state`]; the live
+//!    backend rejects `+ef` at construction (client-thread state cannot
+//!    honestly ride a coordinator snapshot). The dense default draws
+//!    nothing from the comm RNG stream and is byte-identical to the
+//!    pre-codec behavior.
 //!
 //! [`ChurnModel::Stationary`]: crate::churn::ChurnModel::Stationary
 //! [`ChurnModel::Replay`]: crate::churn::ChurnModel::Replay
@@ -109,6 +140,7 @@ use std::sync::Arc;
 
 use crate::aggregation::RegionAccumulator;
 use crate::churn::{ChurnModel, ChurnState, FateTrace, WorldDynamics};
+use crate::comm::CommState;
 use crate::config::ExperimentConfig;
 use crate::data::FederatedData;
 use crate::devices::{self, ClientProfile};
@@ -195,6 +227,9 @@ pub struct RoundOutcome {
     pub deadline_hit: bool,
     /// Device energy charged to the fleet this round (Joules).
     pub energy_j: f64,
+    /// Device→edge bytes this round: folded submissions × the configured
+    /// codec's exact per-update wire bytes (contract point 7).
+    pub bytes_moved: u64,
 }
 
 /// The backend trait: capabilities for selection fan-out, client-fate
@@ -239,6 +274,25 @@ pub trait FlEnvironment {
     /// path). Errors on a state whose shape does not fit the configured
     /// churn model.
     fn restore_churn_state(&mut self, state: ChurnState) -> Result<()>;
+    /// The comm subsystem's cross-round state — per-client error-feedback
+    /// residuals for `topk+ef` — captured at a round boundary (checkpoint
+    /// path). Environments holding no codec state report
+    /// [`CommState::Stateless`], the default.
+    fn comm_state(&self) -> CommState {
+        CommState::Stateless
+    }
+    /// Restore comm state captured by [`Self::comm_state`] (resume path).
+    /// The default accepts only [`CommState::Stateless`]: an environment
+    /// that cannot hold residuals must refuse a snapshot that carries
+    /// them rather than silently dropping error-feedback mass.
+    fn restore_comm_state(&mut self, state: CommState) -> Result<()> {
+        anyhow::ensure!(
+            state.is_stateless(),
+            "snapshot carries error-feedback residuals but this environment \
+             holds no codec state"
+        );
+        Ok(())
+    }
     /// Start (or stop) recording each round's ground-truth fates into an
     /// in-memory [`FateTrace`].
     fn set_fate_recording(&mut self, on: bool);
@@ -398,7 +452,10 @@ fn fastest_first(
     let mut ranked: Vec<(f64, usize)> = candidates
         .map(|k| {
             let psize = world.data.partitions[k].len() as f64;
-            (world.tm.completion(&world.profiles[k], psize), k)
+            (
+                world.tm.completion_with(&world.profiles[k], psize, &world.cfg.comm),
+                k,
+            )
         })
         .collect();
     ranked.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -518,6 +575,14 @@ pub(crate) fn ground_truth_avail(world: &World, fates: &[ClientFate]) -> Vec<f64
 ///   pre-drawn ground-truth table ([`oracle_drop_table`]) and replaces
 ///   the per-client Bernoulli draws — selection and fate resolution see
 ///   one consistent world.
+///
+/// Completion times run through [`TimingModel::completion_with`], so a
+/// compressed codec shortens every surviving client's upload leg (dense
+/// takes the exact legacy expression). With `comm.relay` set, the
+/// [`apply_relay`] post-pass then re-routes each region's slowest
+/// survivors through its fastest one — but only on freshly drawn fates:
+/// a replayed trace already carries the transformed completions, so
+/// replay stays a fixed point.
 pub(crate) fn draw_fates(
     world: &World,
     t: usize,
@@ -556,7 +621,7 @@ pub(crate) fn draw_fates(
             })
             .collect();
     }
-    selected
+    let mut fates: Vec<ClientFate> = selected
         .iter()
         .map(|&k| {
             let p = &world.profiles[k];
@@ -568,7 +633,7 @@ pub(crate) fn draw_fates(
             let completion = if dropped {
                 f64::INFINITY
             } else {
-                world.tm.completion(p, psize)
+                world.tm.completion_with(p, psize, &world.cfg.comm)
             };
             ClientFate {
                 client: k,
@@ -577,7 +642,80 @@ pub(crate) fn draw_fates(
                 completion,
             }
         })
-        .collect()
+        .collect();
+    apply_relay(world, &mut fates);
+    fates
+}
+
+/// The relay post-pass (contract point 7): per region, the slowest
+/// `⌊q·survivors⌋` selected clients hand their encoded frame to the
+/// region's fastest survivor over a device-to-device hop, and the relay
+/// uploads the combined frames.
+///
+/// Deterministic and RNG-free: survivors are ranked by completion time
+/// with a client-id tie-break, weak client `i` pairs with strong client
+/// `i mod |strong|`, and the timing algebra is
+///
+/// ```text
+///   handoff_w  = completion_w − upload/bps_w      (1× D2D send replaces
+///                                                  the 2×-weighted edge
+///                                                  upload)
+///   relay_done = max(completion_s, handoff_w) + 2·upload/bps_s
+/// ```
+///
+/// after which *both* parties' submissions land at `relay_done` (the
+/// weak frame reaches the edge inside the relay's combined upload).
+/// Several weak clients mapped to one relay queue up: each handoff
+/// extends the relay's completion in pairing order. No-op when relay is
+/// unconfigured, and never applied to replayed fates (the recorded
+/// trace already carries the transformed completions).
+pub(crate) fn apply_relay(world: &World, fates: &mut [ClientFate]) {
+    let Some(q) = world.cfg.comm.relay else {
+        return;
+    };
+    let m = world.topo.n_regions();
+    let upload_bits = world.tm.upload_bits(&world.cfg.comm);
+    let mut by_region: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for (i, f) in fates.iter().enumerate() {
+        if !f.dropped {
+            by_region[f.region].push(i);
+        }
+    }
+    for members in by_region {
+        let n_weak = ((members.len() as f64) * q).floor() as usize;
+        if n_weak == 0 || members.len() < 2 {
+            continue;
+        }
+        // Slowest first (tie: client id) — the region's straggler tail.
+        let mut ranked = members;
+        ranked.sort_by(|&a, &b| {
+            fates[b]
+                .completion
+                .partial_cmp(&fates[a].completion)
+                .expect("survivor completions are finite")
+                .then(fates[a].client.cmp(&fates[b].client))
+        });
+        let (weak, strong) = ranked.split_at(n_weak);
+        // Relay pool fastest first (tie: client id).
+        let mut strong = strong.to_vec();
+        strong.sort_by(|&a, &b| {
+            fates[a]
+                .completion
+                .partial_cmp(&fates[b].completion)
+                .expect("survivor completions are finite")
+                .then(fates[a].client.cmp(&fates[b].client))
+        });
+        for (i, &w) in weak.iter().enumerate() {
+            let s = strong[i % strong.len()];
+            let bps_w = world.tm.effective_bps(&world.profiles[fates[w].client]);
+            let bps_s = world.tm.effective_bps(&world.profiles[fates[s].client]);
+            let handoff = fates[w].completion - upload_bits / bps_w;
+            let relay_done =
+                fates[s].completion.max(handoff) + 2.0 * upload_bits / bps_s;
+            fates[s].completion = relay_done;
+            fates[w].completion = relay_done;
+        }
+    }
 }
 
 /// Record the round's ground-truth fates when recording is on (both
@@ -668,7 +806,10 @@ pub(crate) fn charge_energy(world: &World, fates: &[ClientFate], cuts: &[f64]) -
         let spend = if f.dropped {
             world.em.aborted_round(p, &world.tm, psize).total_j()
         } else {
-            let full = world.em.full_round(p, &world.tm, psize).total_j();
+            let full = world
+                .em
+                .full_round_with(p, &world.tm, psize, &world.cfg.comm)
+                .total_j();
             let cut = cuts[f.region];
             if f.completion <= cut {
                 full
@@ -720,6 +861,9 @@ pub struct RoundTrace {
     pub avail: Vec<f64>,
     /// Cumulative device energy, Joules, across the fleet.
     pub cum_energy_j: f64,
+    /// Device→edge bytes this round (folded submissions × the codec's
+    /// per-update wire bytes).
+    pub bytes_moved: u64,
     pub deadline_hit: bool,
     pub cloud_aggregated: bool,
     /// HybridFL slack telemetry (θ̂_r, C_r, q_r per region).
@@ -880,6 +1024,7 @@ pub fn run_resumable(
             submissions: rec.submissions,
             avail: rec.avail,
             cum_energy_j: st.cum_energy,
+            bytes_moved: rec.bytes_moved,
             deadline_hit: rec.deadline_hit,
             cloud_aggregated: rec.cloud_aggregated,
             slack: protocol.slack_states(),

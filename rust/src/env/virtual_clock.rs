@@ -14,10 +14,12 @@
 //! the live backend's arrival order. At no point does the environment
 //! hold more than one trained model plus the O(regions) accumulators.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::aggregation::StreamingAggregator;
 use crate::churn::{ChurnState, FateTrace};
+use crate::comm::{CommState, EncodeCtx, COMM_STREAM};
 use crate::config::ExperimentConfig;
 use crate::env::{
     charge_energy, draw_fates, draw_selection, ground_truth_avail, oracle_drop_table,
@@ -34,6 +36,11 @@ pub struct VirtualClockEnv {
     world: World,
     engine: Box<dyn Engine>,
     region_data: Vec<f64>,
+    /// Per-client error-feedback residuals (`topk+ef` only). Raw vectors,
+    /// deliberately outside the `ModelParams` arena accounting: they are
+    /// device-side state, not in-flight models, and only clients that have
+    /// actually submitted under `+ef` hold one.
+    residuals: BTreeMap<usize, Vec<f32>>,
 }
 
 impl VirtualClockEnv {
@@ -47,6 +54,7 @@ impl VirtualClockEnv {
             world,
             engine,
             region_data,
+            residuals: BTreeMap::new(),
         })
     }
 
@@ -132,6 +140,15 @@ impl FlEnvironment for VirtualClockEnv {
 
         // All regions run the same architecture, so region 0's start
         // model provides the zeros template for every accumulator.
+        //
+        // Under a compressed codec each trained model is framed exactly as
+        // the device would frame it — delta vs the region's start model,
+        // stochastic rounding from the client's own comm stream, error
+        // feedback against its carried residual — and the frame decodes
+        // straight into the accumulator (`fold_encoded`), never through an
+        // intermediate dense model. Dense keeps the legacy fold verbatim.
+        let comm = self.world.cfg.comm.clone();
+        let codec = comm.codec.codec();
         let mut agg = StreamingAggregator::for_regions(&self.region_data, starts.for_region(0));
         for f in survivors {
             let indices = &self.world.data.partitions[f.client];
@@ -141,13 +158,41 @@ impl FlEnvironment for VirtualClockEnv {
                 self.world.cfg.local_epochs,
                 self.world.cfg.lr as f32,
             )?;
-            agg.fold(f.region, &out.params, indices.len() as f64, out.loss);
+            if comm.codec.is_dense() {
+                agg.fold(f.region, &out.params, indices.len() as f64, out.loss)?;
+                continue;
+            }
+            let start = starts.for_region(f.region);
+            let mut delta = out.params;
+            delta.axpy(-1.0, start);
+            let mut crng = rng.split(COMM_STREAM).split(f.client as u64);
+            let residual = if comm.codec.has_error_feedback() {
+                let r = self
+                    .residuals
+                    .entry(f.client)
+                    .or_insert_with(|| vec![0.0; delta.n_values()]);
+                anyhow::ensure!(
+                    r.len() == delta.n_values(),
+                    "client {} carries a residual of {} values but the model has {}",
+                    f.client,
+                    r.len(),
+                    delta.n_values()
+                );
+                Some(r)
+            } else {
+                None
+            };
+            let frame = codec.encode(&delta, &mut EncodeCtx { rng: &mut crng, residual });
+            agg.fold_encoded(f.region, start, &frame, indices.len() as f64, out.loss)?;
         }
 
         let selected_h = region_histogram(m, fates.iter().map(|f| f.region));
         let alive = region_histogram(m, fates.iter().filter(|f| !f.dropped).map(|f| f.region));
         let regional = agg.into_regions();
         let submissions: Vec<usize> = regional.iter().map(|r| r.count()).collect();
+        let folded: usize = submissions.iter().sum();
+        let bytes_moved =
+            folded as u64 * comm.codec.wire_bytes(self.world.tm.n_model_values());
         let avail = ground_truth_avail(&self.world, &fates);
 
         Ok(RoundOutcome {
@@ -159,6 +204,7 @@ impl FlEnvironment for VirtualClockEnv {
             round_len: plan.round_len,
             deadline_hit: plan.deadline_hit,
             energy_j,
+            bytes_moved,
         })
     }
 
@@ -180,6 +226,39 @@ impl FlEnvironment for VirtualClockEnv {
 
     fn restore_churn_state(&mut self, state: ChurnState) -> Result<()> {
         self.world.dynamics.restore(state)
+    }
+
+    fn comm_state(&self) -> CommState {
+        if self.residuals.is_empty() {
+            CommState::Stateless
+        } else {
+            CommState::Residuals {
+                clients: self
+                    .residuals
+                    .iter()
+                    .map(|(k, v)| (*k, v.clone()))
+                    .collect(),
+            }
+        }
+    }
+
+    fn restore_comm_state(&mut self, state: CommState) -> Result<()> {
+        match state {
+            CommState::Stateless => {
+                self.residuals.clear();
+                Ok(())
+            }
+            CommState::Residuals { clients } => {
+                anyhow::ensure!(
+                    self.world.cfg.comm.codec.has_error_feedback(),
+                    "snapshot carries error-feedback residuals but the run's codec \
+                     ({}) keeps none",
+                    self.world.cfg.comm.codec.name()
+                );
+                self.residuals = clients.into_iter().collect();
+                Ok(())
+            }
+        }
     }
 
     fn set_fate_recording(&mut self, on: bool) {

@@ -132,6 +132,41 @@
 //!
 //! On the CLI this is `--selector slack|fedcs|oracle|random`.
 //!
+//! Submissions need not be dense: the [`comm`] subsystem frames each
+//! device→edge upload through an [`comm::UpdateCodec`] — stochastic f16
+//! or i8 quantization, or top-k sparsification with per-client
+//! error-feedback residuals — and the timing/energy models charge the
+//! *encoded* frame's exact bytes, so compression directly shortens
+//! rounds and cuts device energy. A relay axis hands the weakest
+//! clients' frames to their region's fastest peer. Dense (the default)
+//! is byte-identical to the pre-codec behavior.
+//!
+//! ```no_run
+//! # use hybridfl::scenario::Scenario;
+//! use hybridfl::comm::CommConfig;
+//!
+//! // Top-5% sparsification with error feedback, plus relaying the
+//! // slowest quarter of each region through its fastest peer:
+//! let compressed = Scenario::task1()
+//!     .mock()
+//!     .comm(CommConfig::parse_spec("topk:0.05+ef")?)
+//!     .relay(0.25)
+//!     .run()?;
+//! let dense = Scenario::task1().mock().run()?;
+//! println!(
+//!     "round {:.1}s vs dense {:.1}s, bytes/round {} vs {}",
+//!     compressed.summary.avg_round_len,
+//!     dense.summary.avg_round_len,
+//!     compressed.rounds[0].bytes_moved,
+//!     dense.rounds[0].bytes_moved,
+//! );
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! On the CLI this is `--comm topk:0.05+ef+relay:0.25` (or `f16`, `i8`,
+//! `dense`); every round's `bytes_moved` lands in the CSV and the
+//! `comm_tradeoff` bench sweeps codec × protocol into `BENCH_comm.json`.
+//!
 //! Long runs survive coordinator interruption: give the scenario a
 //! checkpoint directory and every round boundary writes a versioned
 //! binary [`snapshot::RunSnapshot`] (round index, global/regional models,
@@ -178,12 +213,16 @@
 //! clock — so peak resident model state per round is O(regions), not
 //! O(selected clients), and a 10⁵-client round costs the same model
 //! memory as a 10²-client one (see `tests/large_fleet.rs` and
-//! `benches/params_hotpath.rs`).
+//! `benches/params_hotpath.rs`). Encoded submissions keep that
+//! guarantee: a compressed frame decodes **into** the accumulator
+//! ([`aggregation::RegionAccumulator::fold_encoded`]) without ever
+//! materializing an intermediate dense model.
 
 pub mod aggregation;
 pub mod benchkit;
 pub mod churn;
 pub mod cli;
+pub mod comm;
 pub mod config;
 pub mod data;
 pub mod devices;

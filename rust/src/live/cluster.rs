@@ -7,8 +7,9 @@
 //! those live in `protocols/` above the [`crate::env::FlEnvironment`]
 //! trait and run identically on the virtual-clock backend. What the
 //! fabric provides is real concurrency: clients sleep their scaled
-//! completion times and train on their own threads, edges fold each
-//! arriving model into their region's [`RegionAccumulator`] in true
+//! completion times, train on their own threads and frame their updates
+//! with the configured [`crate::comm::UpdateCodec`]; edges decode each
+//! arriving frame into their region's [`RegionAccumulator`] in true
 //! arrival order (the mechanical Σ of eq. 17 — a transport-level fold,
 //! not a protocol decision) and relay model-free notices up, and the
 //! caller observes genuine out-of-order arrival, quota/deadline racing
@@ -24,12 +25,14 @@ use std::time::{Duration, Instant};
 use anyhow::Context;
 
 use crate::aggregation::RegionAccumulator;
+use crate::comm::{CodecSpec, EncodeCtx, COMM_STREAM};
 use crate::env::World;
 use crate::live::messages::{
     CloudToEdge, EdgeToClient, EdgeToCloud, RegionalReport, RoundJob, Submission,
     SubmissionNotice,
 };
 use crate::model::ModelParams;
+use crate::rng::Rng;
 use crate::runtime::mock::MockEngine;
 use crate::runtime::Engine;
 use crate::Result;
@@ -92,8 +95,13 @@ impl ClusterFabric {
             let engine = MockEngine::new(&world.cfg, Arc::clone(&world.data));
             let epochs = world.cfg.local_epochs;
             let lr = world.cfg.lr as f32;
+            let spec = world.cfg.comm.codec.clone();
+            let seed = world.cfg.seed;
             client_handles.push(std::thread::spawn(move || {
-                client_loop(rx, edge_tx, k, region, indices, engine, epochs, lr, time_scale);
+                client_loop(
+                    rx, edge_tx, k, region, indices, engine, epochs, lr, time_scale, spec,
+                    seed,
+                );
             }));
         }
 
@@ -236,12 +244,16 @@ fn edge_loop(
 ) {
     let mut cur_t = 0usize;
     let mut acc: Option<RegionAccumulator> = None;
+    // The round's start model, kept for decoding delta frames (compressed
+    // submissions fold as `start + decoded delta`).
+    let mut cur_start: Option<Arc<ModelParams>> = None;
     let mut folded: Vec<usize> = Vec::new();
     loop {
         match rx.recv() {
             Ok(EdgeInbox::Cmd(CloudToEdge::StartRound { t, start, jobs })) => {
                 cur_t = t;
                 acc = Some(RegionAccumulator::new(region, region_data, &start));
+                cur_start = Some(Arc::clone(&start));
                 folded.clear();
                 for job in jobs {
                     if let Some(tx) = my_clients.get(&job.client) {
@@ -276,19 +288,30 @@ fn edge_loop(
                 break;
             }
             Ok(EdgeInbox::Sub(s)) => {
-                // Fold in arrival order; the model is dropped here. The
-                // round-end signal closes the accumulator, so a
+                // Decode-and-fold in arrival order; the frame is dropped
+                // here. The round-end signal closes the accumulator, so a
                 // submission reaching the edge after it — or one from a
-                // stale round — is discarded, never folded.
+                // stale round — is discarded, never folded. A malformed
+                // frame is logged and skipped (not counted, not folded):
+                // the round simply proceeds without that client, exactly
+                // as if it had dropped out.
                 if s.t == cur_t {
-                    if let Some(a) = acc.as_mut() {
-                        a.fold(&s.model, s.data_size, s.loss);
-                        folded.push(s.client);
-                        let _ = cloud_tx.send(EdgeToCloud::Notice(SubmissionNotice {
-                            t: s.t,
-                            client: s.client,
-                            region: s.region,
-                        }));
+                    if let (Some(a), Some(start)) = (acc.as_mut(), cur_start.as_ref()) {
+                        match a.fold_encoded(start, &s.frame, s.data_size, s.loss) {
+                            Ok(()) => {
+                                folded.push(s.client);
+                                let _ = cloud_tx.send(EdgeToCloud::Notice(SubmissionNotice {
+                                    t: s.t,
+                                    client: s.client,
+                                    region: s.region,
+                                }));
+                            }
+                            Err(e) => eprintln!(
+                                "edge {region}: discarding malformed submission \
+                                 from client {}: {e}",
+                                s.client
+                            ),
+                        }
                     }
                 }
             }
@@ -298,7 +321,11 @@ fn edge_loop(
 
 /// Client actor: on a training job, either drop silently, or sleep the
 /// scaled completion time (interruptible by the round-end signal), train
-/// locally on the mock engine and submit through the edge.
+/// locally on the mock engine, frame the update with the configured codec
+/// and submit through the edge. The codec's randomness comes from the
+/// client's own `seed → COMM_STREAM → client → round` stream, so encoding
+/// is deterministic per (seed, client, round) regardless of thread
+/// scheduling; the dense codec never draws from it.
 #[allow(clippy::too_many_arguments)]
 fn client_loop(
     rx: Receiver<EdgeToClient>,
@@ -310,8 +337,11 @@ fn client_loop(
     epochs: usize,
     lr: f32,
     time_scale: f64,
+    spec: CodecSpec,
+    seed: u64,
 ) {
     let psize = indices.len() as f64;
+    let codec = spec.codec();
     while let Ok(msg) = rx.recv() {
         match msg {
             EdgeToClient::Train {
@@ -349,13 +379,31 @@ fn client_loop(
                     continue;
                 }
                 if let Ok(out) = engine.train_local(&start, &indices, epochs, lr) {
+                    let loss = out.loss;
+                    let mut crng = Rng::new(seed)
+                        .split(COMM_STREAM)
+                        .split(client as u64)
+                        .split(t as u64);
+                    let mut ctx = EncodeCtx {
+                        rng: &mut crng,
+                        residual: None, // +ef is sim-only; rejected upstream
+                    };
+                    let frame = if spec.is_dense() {
+                        // Legacy semantics: the full trained model.
+                        codec.encode(&out.params, &mut ctx)
+                    } else {
+                        // Compressed codecs frame the delta vs round start.
+                        let mut delta = out.params;
+                        delta.axpy(-1.0, &start);
+                        codec.encode(&delta, &mut ctx)
+                    };
                     let _ = edge_tx.send(EdgeInbox::Sub(Submission {
                         t,
                         client,
                         region,
                         data_size: psize,
-                        loss: out.loss,
-                        model: out.params,
+                        loss,
+                        frame,
                     }));
                 }
             }

@@ -16,10 +16,19 @@
 //! model-free [`SubmissionNotice`]s during the round plus one
 //! [`RegionalReport`] with the folded [`RegionAccumulator`] at round end
 //! — per-round edge→cloud model traffic is O(regions), not O(selected).
+//!
+//! Submissions ship as **encoded frames**: each client runs the
+//! configured [`crate::comm::UpdateCodec`] on its own thread and the
+//! envelope carries the actual [`EncodedUpdate`] — a dense clone under
+//! the default codec, a quantized or sparsified delta otherwise — which
+//! the edge decodes straight into its accumulator
+//! ([`crate::aggregation::RegionAccumulator::fold_encoded`]). What moves
+//! over the channel is exactly what `bytes_moved` accounts.
 
 use std::sync::Arc;
 
 use crate::aggregation::RegionAccumulator;
+use crate::comm::EncodedUpdate;
 use crate::model::ModelParams;
 
 /// One client's training job for a round. `dropped` and `completion` are
@@ -67,9 +76,12 @@ pub enum EdgeToClient {
     Shutdown,
 }
 
-/// Client → edge: a completed local update. The model is *moved* into the
-/// envelope and folded into the edge's accumulator on receipt — it never
-/// travels further up nor gets cloned.
+/// Client → edge: a completed local update, framed by the configured
+/// codec. The frame is *moved* into the envelope and decoded into the
+/// edge's accumulator on receipt — it never travels further up nor gets
+/// cloned. Under the dense default the payload is the full trained model
+/// (legacy semantics); compressed codecs carry the encoded delta vs the
+/// round-start model.
 #[derive(Debug)]
 pub struct Submission {
     pub t: usize,
@@ -81,7 +93,7 @@ pub struct Submission {
     pub data_size: f64,
     /// Local training loss (diagnostic).
     pub loss: f64,
-    pub model: ModelParams,
+    pub frame: EncodedUpdate,
 }
 
 /// Edge → cloud, per folded submission: the model-free receipt the cloud

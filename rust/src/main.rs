@@ -77,7 +77,11 @@ commands:
           --replay-fates FILE drive the world from a recorded or
           hand-written fate trace instead of drawing fates,
           --selector slack|fedcs|oracle|random client-selection strategy
-          (slack = the paper's estimator, default; oracle is sim-only))
+          (slack = the paper's estimator, default; oracle is sim-only),
+          --comm SPEC upload codec: dense | f16 | i8 | topk:RATIO,
+          '+ef' adds error feedback (sim-only), '+relay:Q' hands the
+          weakest Q quantile's uploads to strong relays
+          (e.g. topk:0.05+ef, i8+relay:0.25))
   fig2    slack-factor traces (paper Fig. 2) -> reports/fig2_traces.csv
   table3  Task-1 sweep: Table III + Fig. 4 traces + Fig. 5 energy
   table4  Task-2 sweep: Table IV + Fig. 6 traces + Fig. 7 energy
@@ -130,6 +134,9 @@ fn resolve_scenario(args: &Args, default_backend: Backend) -> hybridfl::Result<S
     }
     if let Some(s) = args.get("selector") {
         sc = sc.selector(hybridfl::selection::SelectorKind::parse(s)?);
+    }
+    if let Some(spec) = args.get("comm") {
+        sc = sc.comm(hybridfl::comm::CommConfig::parse_spec(spec)?);
     }
     if let Some(path) = args.get("replay-fates") {
         // Guard against *any* configured churn model — whether it came

@@ -18,7 +18,7 @@ pub fn traces_to_csv(rounds: &[RoundTrace]) -> String {
     let mut out = String::new();
     let n_regions = rounds.first().map_or(0, |r| r.submissions.len());
     let has_slack = rounds.first().is_some_and(|r| r.slack.is_some());
-    out.push_str("t,round_len,cum_time,accuracy,best_accuracy,eval_loss,cum_energy_wh,deadline_hit,cloud_aggregated");
+    out.push_str("t,round_len,cum_time,accuracy,best_accuracy,eval_loss,cum_energy_wh,bytes_moved,deadline_hit,cloud_aggregated");
     for r in 0..n_regions {
         let _ = write!(out, ",selected_r{r},alive_r{r},submissions_r{r},avail_r{r}");
         if has_slack {
@@ -29,7 +29,7 @@ pub fn traces_to_csv(rounds: &[RoundTrace]) -> String {
     for row in rounds {
         let _ = write!(
             out,
-            "{},{:.4},{:.4},{:.6},{:.6},{:.6},{:.6},{},{}",
+            "{},{:.4},{:.4},{:.6},{:.6},{:.6},{:.6},{},{},{}",
             row.t,
             row.round_len,
             row.cum_time,
@@ -37,6 +37,7 @@ pub fn traces_to_csv(rounds: &[RoundTrace]) -> String {
             row.best_accuracy,
             row.eval_loss,
             row.cum_energy_j / 3600.0,
+            row.bytes_moved,
             row.deadline_hit as u8,
             row.cloud_aggregated as u8,
         );
@@ -180,6 +181,7 @@ mod tests {
         assert!(lines[0].starts_with("t,round_len"));
         assert!(lines[0].contains("theta_r0")); // HybridFL slack columns
         assert!(lines[0].contains("avail_r0")); // ground-truth availability
+        assert!(lines[0].contains("bytes_moved")); // comm accounting
         // Every row has the same number of fields as the header.
         let n = lines[0].split(',').count();
         for l in &lines[1..] {

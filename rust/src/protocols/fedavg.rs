@@ -58,6 +58,7 @@ impl Protocol for FedAvg {
             submissions: out.submissions,
             avail: out.avail,
             energy_j: out.energy_j,
+            bytes_moved: out.bytes_moved,
             deadline_hit: out.deadline_hit,
             cloud_aggregated: true,
             mean_local_loss,

@@ -100,6 +100,7 @@ impl Protocol for HierFavg {
             submissions: out.submissions,
             avail: out.avail,
             energy_j: out.energy_j,
+            bytes_moved: out.bytes_moved,
             deadline_hit: out.deadline_hit,
             cloud_aggregated: cloud_round,
             mean_local_loss,

@@ -56,6 +56,10 @@ pub struct RoundRecord {
     pub avail: Vec<f64>,
     /// Total device energy spent this round (Joules).
     pub energy_j: f64,
+    /// Device→edge bytes shipped this round — folded submissions times the
+    /// configured codec's per-update wire size (backend ground truth,
+    /// identical on both backends).
+    pub bytes_moved: u64,
     /// Whether the quota / all-responses condition was met before T_lim.
     pub deadline_hit: bool,
     /// Whether this round updated the cloud's global model.

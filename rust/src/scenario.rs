@@ -154,6 +154,24 @@ impl Scenario {
         self
     }
 
+    /// Communication configuration for device→edge submissions (the comm
+    /// subsystem; see [`crate::comm`]): codec choice plus the optional
+    /// relay axis. The dense default reproduces pre-codec behavior bit
+    /// for bit; `topk+ef` is sim-only and rejected by the live backend.
+    pub fn comm(mut self, comm: crate::comm::CommConfig) -> Scenario {
+        self.cfg.comm = comm;
+        self
+    }
+
+    /// Relay quantile: the weakest `q` fraction of each region's selected
+    /// survivors hand their encoded updates to the region's fastest
+    /// peers, which upload the combined frames. Composes with any codec
+    /// (`.comm(..)` keeps its codec; this only sets the relay axis).
+    pub fn relay(mut self, q: f64) -> Scenario {
+        self.cfg.comm.relay = Some(q);
+        self
+    }
+
     /// Client-selection strategy (the selection zoo; see
     /// [`crate::selection`]). [`SelectorKind::Slack`] (the default) is
     /// the paper's estimator and reproduces pre-zoo behavior bit for
@@ -399,13 +417,17 @@ mod tests {
             .dropout(0.4)
             .c_fraction(0.2)
             .seed(7)
-            .rounds(12);
+            .rounds(12)
+            .comm(crate::comm::CommConfig::parse_spec("topk:0.05+ef").unwrap())
+            .relay(0.25);
         assert_eq!(sc.config().protocol, ProtocolKind::FedAvg);
         assert_eq!(sc.config().engine, EngineKind::Mock);
         assert_eq!(sc.config().dropout.mean, 0.4);
         assert_eq!(sc.config().c_fraction, 0.2);
         assert_eq!(sc.config().seed, 7);
         assert_eq!(sc.config().t_max, 12);
+        assert!(sc.config().comm.codec.has_error_feedback());
+        assert_eq!(sc.config().comm.relay, Some(0.25));
     }
 
     // Validation rejection cases live in tests/scenario_api.rs

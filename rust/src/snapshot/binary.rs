@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //! 0       8     magic            b"HFLSNAP\0"
-//! 8       4     format version   u32 LE (currently 1)
+//! 8       4     format version   u32 LE
 //! 12      8     payload length   u64 LE
 //! 20      8     payload checksum u64 LE (FNV-1a 64 over the payload)
 //! 28      ...   payload
@@ -34,13 +34,17 @@
 //!
 //! Any change to the payload layout bumps
 //! [`crate::snapshot::FORMAT_VERSION`]. Readers reject versions they do
-//! not know ([`SnapshotError::UnsupportedVersion`]); when a v2 appears,
-//! the v1 decode path stays supported so old checkpoints remain
-//! loadable. The checksum covers only the payload: a flipped bit
-//! anywhere in the body surfaces as
-//! [`SnapshotError::ChecksumMismatch`] before any field is interpreted.
+//! not know ([`SnapshotError::UnsupportedVersion`]). Old versions are
+//! retired, not kept: every bump so far rode a config-schema change
+//! (v2: `churn`, v3: `comm`), so a pre-bump snapshot cannot pass the
+//! config-fingerprint check anyway and a legacy decode path would be
+//! dead code (see [`crate::snapshot::FORMAT_VERSION`]). The checksum
+//! covers only the payload: a flipped bit anywhere in the body surfaces
+//! as [`SnapshotError::ChecksumMismatch`] before any field is
+//! interpreted.
 
 use crate::churn::ChurnState;
+use crate::comm::CommState;
 use crate::env::{DriverState, RoundTrace};
 use crate::model::ModelParams;
 use crate::protocols::ProtocolState;
@@ -73,6 +77,7 @@ impl SnapshotCodec for BinaryCodec {
         w.u64(snap.fingerprint);
         write_rng(&mut w, &snap.rng);
         write_churn(&mut w, &snap.churn);
+        write_comm(&mut w, &snap.comm);
         write_protocol(&mut w, &snap.protocol);
         write_driver(&mut w, &snap.driver);
         let payload = w.into_bytes();
@@ -139,6 +144,7 @@ impl SnapshotCodec for BinaryCodec {
         }
         let rng = read_rng(&mut r)?;
         let churn = read_churn(&mut r, 0)?;
+        let comm = read_comm(&mut r)?;
         let protocol = read_protocol(&mut r)?;
         let driver = read_driver(&mut r)?;
         r.finish()?;
@@ -148,6 +154,7 @@ impl SnapshotCodec for BinaryCodec {
             fingerprint,
             rng,
             churn,
+            comm,
             protocol,
             driver,
         })
@@ -242,6 +249,45 @@ fn read_churn(r: &mut Reader<'_>, depth: u8) -> Result<ChurnState, SnapshotError
         }
         tag => Err(SnapshotError::Malformed(format!(
             "unknown churn-state tag {tag}"
+        ))),
+    }
+}
+
+const COMM_STATELESS: u8 = 0;
+const COMM_RESIDUALS: u8 = 1;
+
+fn write_comm(w: &mut Writer, c: &CommState) {
+    match c {
+        CommState::Stateless => w.u8(COMM_STATELESS),
+        CommState::Residuals { clients } => {
+            w.u8(COMM_RESIDUALS);
+            w.u64(clients.len() as u64);
+            for (client, residual) in clients {
+                w.u64(*client as u64);
+                w.u64(residual.len() as u64);
+                w.f32s(residual);
+            }
+        }
+    }
+}
+
+fn read_comm(r: &mut Reader<'_>) -> Result<CommState, SnapshotError> {
+    match r.u8()? {
+        COMM_STATELESS => Ok(CommState::Stateless),
+        COMM_RESIDUALS => {
+            let n = r.u64()? as usize;
+            r.check_remaining(n, 16, "comm residuals")?;
+            let clients = (0..n)
+                .map(|_| {
+                    let client = r.u64()? as usize;
+                    let len = r.u64()? as usize;
+                    Ok((client, r.f32s(len)?))
+                })
+                .collect::<Result<_, SnapshotError>>()?;
+            Ok(CommState::Residuals { clients })
+        }
+        tag => Err(SnapshotError::Malformed(format!(
+            "unknown comm-state tag {tag}"
         ))),
     }
 }
@@ -466,6 +512,7 @@ pub(crate) fn write_round_trace(w: &mut Writer, row: &RoundTrace) {
     write_usize_vec(w, &row.submissions);
     write_f64_vec(w, &row.avail);
     w.f64(row.cum_energy_j);
+    w.u64(row.bytes_moved);
     w.u8(row.deadline_hit as u8);
     w.u8(row.cloud_aggregated as u8);
     match row.slack {
@@ -493,6 +540,7 @@ fn read_round_trace(r: &mut Reader<'_>) -> Result<RoundTrace, SnapshotError> {
         submissions: read_usize_vec(r)?,
         avail: read_f64_vec(r)?,
         cum_energy_j: r.f64()?,
+        bytes_moved: r.u64()?,
         deadline_hit: r.bool()?,
         cloud_aggregated: r.bool()?,
         slack: if r.bool()? {

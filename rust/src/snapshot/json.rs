@@ -19,6 +19,7 @@
 use std::collections::BTreeMap;
 
 use crate::churn::ChurnState;
+use crate::comm::CommState;
 use crate::env::{DriverState, RoundTrace};
 use crate::jsonx::Json;
 use crate::model::ModelParams;
@@ -59,6 +60,7 @@ impl SnapshotCodec for JsonCodec {
             .set("fingerprint", hex64(snap.fingerprint))
             .set("rng", rng_to_json(&snap.rng))
             .set("churn", churn_to_json(&snap.churn))
+            .set("comm", comm_to_json(&snap.comm))
             .set("protocol", protocol_to_json(&snap.protocol))
             .set("driver", driver_to_json(&snap.driver));
         j.pretty().into_bytes()
@@ -98,6 +100,7 @@ impl SnapshotCodec for JsonCodec {
             fingerprint,
             rng: rng_from_json(req(obj, "rng")?)?,
             churn: churn_from_json(req(obj, "churn")?, 0)?,
+            comm: comm_from_json(req(obj, "comm")?)?,
             protocol: protocol_from_json(req(obj, "protocol")?)?,
             driver: driver_from_json(req(obj, "driver")?)?,
         })
@@ -148,6 +151,30 @@ fn churn_to_json(c: &ChurnState) -> Json {
             .set(
                 "layers",
                 Json::Arr(layers.iter().map(churn_to_json).collect()),
+            ),
+    }
+}
+
+fn comm_to_json(c: &CommState) -> Json {
+    match c {
+        CommState::Stateless => Json::obj().set("kind", "stateless"),
+        CommState::Residuals { clients } => Json::obj()
+            .set("kind", "residuals")
+            .set(
+                "clients",
+                Json::Arr(
+                    clients
+                        .iter()
+                        .map(|(client, residual)| {
+                            Json::obj().set("client", *client).set(
+                                "residual",
+                                Json::Arr(
+                                    residual.iter().map(|&v| Json::Num(v as f64)).collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
             ),
     }
 }
@@ -245,6 +272,7 @@ fn trace_to_json(row: &RoundTrace) -> Json {
             Json::Arr(row.avail.iter().map(|&a| num(a)).collect()),
         )
         .set("cum_energy_j", num(row.cum_energy_j))
+        .set("bytes_moved", row.bytes_moved)
         .set("deadline_hit", row.deadline_hit)
         .set("cloud_aggregated", row.cloud_aggregated)
         .set(
@@ -408,6 +436,37 @@ fn churn_from_json(j: &Json, depth: u8) -> Result<ChurnState, SnapshotError> {
     }
 }
 
+fn comm_from_json(j: &Json) -> Result<CommState, SnapshotError> {
+    let obj = as_obj(j, "comm")?;
+    match req_str(obj, "kind")?.as_str() {
+        "stateless" => Ok(CommState::Stateless),
+        "residuals" => Ok(CommState::Residuals {
+            clients: req_arr(obj, "clients")?
+                .iter()
+                .map(|entry| {
+                    let e = as_obj(entry, "comm client")?;
+                    let client = req_usize(e, "client")?;
+                    let residual = match req(e, "residual")? {
+                        Json::Arr(v) => v
+                            .iter()
+                            .map(|x| f64_of(x, "residual").map(|f| f as f32))
+                            .collect::<Result<_, _>>()?,
+                        _ => {
+                            return Err(SnapshotError::Malformed(
+                                "residual: expected array".into(),
+                            ))
+                        }
+                    };
+                    Ok((client, residual))
+                })
+                .collect::<Result<_, SnapshotError>>()?,
+        }),
+        k => Err(SnapshotError::Malformed(format!(
+            "unknown comm-state kind '{k}'"
+        ))),
+    }
+}
+
 fn params_from_json(j: &Json) -> Result<ModelParams, SnapshotError> {
     let obj = as_obj(j, "params")?;
     let mut shapes = Vec::new();
@@ -547,6 +606,7 @@ fn trace_from_json(j: &Json) -> Result<RoundTrace, SnapshotError> {
             _ => return Err(SnapshotError::Malformed("avail: expected array".into())),
         },
         cum_energy_j: req_f64(obj, "cum_energy_j")?,
+        bytes_moved: req_u64(obj, "bytes_moved")?,
         deadline_hit: req_bool(obj, "deadline_hit")?,
         cloud_aggregated: req_bool(obj, "cloud_aggregated")?,
         slack: match req(obj, "slack")? {

@@ -25,6 +25,9 @@
 //! * the churn-process state ([`crate::churn::ChurnState`]: Markov
 //!   on/off flags, battery charge levels), so a resumed run continues
 //!   the exact reliability trajectory of a non-stationary world;
+//! * the communication state ([`crate::comm::CommState`]: the per-client
+//!   error-feedback residuals a `topk+ef` run carries between rounds),
+//!   so resumed compressed runs stay byte-identical;
 //! * the config fingerprint plus the full config JSON, so a resume
 //!   against a diverging config is a **hard error naming the diverging
 //!   fields** — never a silent hybrid run.
@@ -68,6 +71,7 @@ use std::fmt;
 use std::path::{Path, PathBuf};
 
 use crate::churn::ChurnState;
+use crate::comm::CommState;
 use crate::env::{DriverState, FlEnvironment};
 use crate::jsonx::Json;
 use crate::protocols::{Protocol, ProtocolState};
@@ -87,7 +91,13 @@ pub use json::JsonCodec;
 /// the same change, so no v1 snapshot can pass the config-fingerprint
 /// check against a config this build produces — a v1 decode path would
 /// be dead code behind a guaranteed `ConfigMismatch`.
-pub const FORMAT_VERSION: u32 = 2;
+///
+/// v3 (comm subsystem) added the communication state (per-client
+/// error-feedback residuals) to the payload and `bytes_moved` to every
+/// trace row. v2 support was retired by the same argument: the config
+/// schema gained the `comm` key in the same change, so every v2 snapshot
+/// is behind a guaranteed `ConfigMismatch` anyway.
+pub const FORMAT_VERSION: u32 = 3;
 
 /// Typed decode/validation errors. The codecs return these directly so
 /// callers (and tests) can distinguish a truncated file from a checksum
@@ -189,6 +199,9 @@ pub struct RunSnapshot {
     /// The churn-process state at the boundary (Markov flags, battery
     /// levels; [`ChurnState::Stateless`] for stationary/scripted worlds).
     pub churn: ChurnState,
+    /// The communication state at the boundary (per-client error-feedback
+    /// residuals under `topk+ef`; [`CommState::Stateless`] otherwise).
+    pub comm: CommState,
     /// The protocol's full mutable state at the boundary.
     pub protocol: ProtocolState,
     /// The driver's accumulators and per-round trace at the boundary.
@@ -210,6 +223,7 @@ impl RunSnapshot {
             config_json,
             rng: env.rng_state(),
             churn: env.churn_state(),
+            comm: env.comm_state(),
             protocol: protocol.snapshot_state(),
             driver: driver.clone(),
         }
@@ -263,6 +277,7 @@ impl RunSnapshot {
         );
         env.restore_rng_state(self.rng);
         env.restore_churn_state(self.churn)?;
+        env.restore_comm_state(self.comm)?;
         protocol.restore_state(self.protocol)?;
         Ok(self.driver)
     }

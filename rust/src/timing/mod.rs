@@ -13,6 +13,7 @@
 //! Units: config carries GHz/MHz/MB/Mbps (paper units); this module
 //! converts to Hz/bits/seconds once at construction.
 
+use crate::comm::CommConfig;
 use crate::config::ExperimentConfig;
 use crate::devices::ClientProfile;
 
@@ -70,6 +71,29 @@ impl TimingModel {
         3.0 * self.msize_bits / self.effective_bps(p)
     }
 
+    /// Number of f32 parameters in the model the config describes —
+    /// what the codec layer's wire-byte accounting is denominated in.
+    pub fn n_model_values(&self) -> usize {
+        (self.msize_bits / 32.0) as usize
+    }
+
+    /// Upload size in bits for one encoded submission under `comm`.
+    pub fn upload_bits(&self, comm: &CommConfig) -> f64 {
+        8.0 * comm.codec.wire_bytes(self.n_model_values()) as f64
+    }
+
+    /// Eq. (33) generalized to encoded submissions: the downlink still
+    /// moves the dense model (`msize`), the 2×-weighted uplink moves the
+    /// encoded frame. The dense codec takes the *exact* legacy expression
+    /// — `3·msize/bps`, not `(msize + 2·msize)/bps` — so default-config
+    /// runs stay bit-identical to the pre-codec seed.
+    pub fn t_comm_with(&self, p: &ClientProfile, comm: &CommConfig) -> f64 {
+        if comm.codec.is_dense() {
+            return self.t_comm(p);
+        }
+        (self.msize_bits + 2.0 * self.upload_bits(comm)) / self.effective_bps(p)
+    }
+
     /// Eq. (34): τ full-batch GD epochs over `|D_k|` samples.
     pub fn t_train(&self, p: &ClientProfile, partition_size: f64) -> f64 {
         partition_size * self.tau * self.cycles_per_sample_epoch / (p.perf_ghz * 1.0e9)
@@ -79,6 +103,17 @@ impl TimingModel {
     /// plus local training (measured from round start).
     pub fn completion(&self, p: &ClientProfile, partition_size: f64) -> f64 {
         self.t_comm(p) + self.t_train(p, partition_size)
+    }
+
+    /// [`Self::completion`] under an update codec: compressed uploads
+    /// shorten the communication leg, training is untouched.
+    pub fn completion_with(
+        &self,
+        p: &ClientProfile,
+        partition_size: f64,
+        comm: &CommConfig,
+    ) -> f64 {
+        self.t_comm_with(p, comm) + self.t_train(p, partition_size)
     }
 }
 
@@ -145,6 +180,33 @@ mod tests {
         cfg.bw_mhz = Dist::new(0.3, 0.2);
         let tm = TimingModel::new(&cfg);
         assert!(tm.t_lim.is_finite() && tm.t_lim > 0.0);
+    }
+
+    #[test]
+    fn codec_shortens_the_upload_leg_and_dense_is_bit_identical() {
+        let cfg = ExperimentConfig::task1_paper();
+        let tm = TimingModel::new(&cfg);
+        let p = avg_profile(&cfg);
+        // Dense must take the exact legacy expression, not an
+        // algebraically-equal rearrangement.
+        let dense = crate::comm::CommConfig::default();
+        assert_eq!(tm.t_comm_with(&p, &dense).to_bits(), tm.t_comm(&p).to_bits());
+        assert_eq!(
+            tm.completion_with(&p, 100.0, &dense).to_bits(),
+            tm.completion(&p, 100.0).to_bits()
+        );
+        // Task 1: 40 Mb model = 1.25 M f32 values.
+        assert_eq!(tm.n_model_values(), 1_250_000);
+        let topk = crate::comm::CommConfig::parse_spec("topk:0.05+ef").unwrap();
+        // topk:0.05 → k = 62 500 entries · 8 B = 4 Mb upload vs 40 Mb dense:
+        // t_comm drops from 3·msize/bps to (msize + 2·0.1·msize)/bps.
+        let expect = (1.2 * 40.0e6) / tm.effective_bps(&p);
+        assert!((tm.t_comm_with(&p, &topk) - expect).abs() < 1e-9);
+        assert!(tm.t_comm_with(&p, &topk) < tm.t_comm(&p) / 2.0);
+        // f16 halves the upload: (1 + 2·0.5)·msize/bps = 2·msize/bps.
+        let f16 = crate::comm::CommConfig::parse_spec("f16").unwrap();
+        let expect = 2.0 * 40.0e6 / tm.effective_bps(&p);
+        assert!((tm.t_comm_with(&p, &f16) - expect).abs() < 1e-9);
     }
 
     #[test]

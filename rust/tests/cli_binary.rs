@@ -230,6 +230,31 @@ fn checkpoint_every_without_dir_fails_loudly() {
 }
 
 #[test]
+fn run_with_comm_codec_and_bad_spec() {
+    let out = bin()
+        .args(["run", "--preset", "fig2", "--set", "t_max=3", "--comm", "i8"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("best accuracy"));
+
+    let out = bin()
+        .args(["run", "--preset", "fig2", "--comm", "gzip"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("gzip"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
 fn fig2_command_writes_traces() {
     let dir = std::env::temp_dir().join("hybridfl_cli_fig2");
     let _ = std::fs::remove_dir_all(&dir);

@@ -108,3 +108,44 @@ fn fifty_thousand_clients_checkpoint_resume_byte_identical() {
     );
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// The compressed data plane at fleet scale: a `topk:0.05+ef` run must
+/// keep the same O(regions) arena peak as the dense streaming plane.
+/// Compressed folds go decode-and-axpy straight into the per-region
+/// accumulators — an implementation that materialised a dense model per
+/// decoded frame would peak at one arena per in-time submission and fail
+/// here. (Error-feedback residuals are plain `Vec<f32>`s outside the
+/// arena accounting, so they don't mask a regression in model arenas.)
+#[test]
+#[ignore = "large-fleet compressed smoke (~50k clients); run with --ignored --release"]
+fn fifty_thousand_clients_topk_ef_keeps_flat_model_memory() {
+    let mut cfg = fleet_cfg();
+    cfg.comm = hybridfl::comm::CommConfig::parse_spec("topk:0.05+ef").unwrap();
+
+    model::reset_arena_peak();
+    let baseline = model::arena_count();
+    let result = Scenario::from_config(cfg).run().unwrap();
+    let peak = model::arena_peak();
+
+    assert_eq!(result.rounds.len(), 3);
+    for row in &result.rounds {
+        let subs: usize = row.submissions.iter().sum();
+        assert!(
+            subs >= 1_000,
+            "round {}: expected thousands of submissions, got {subs}",
+            row.t
+        );
+        assert!(
+            row.bytes_moved > 0,
+            "round {}: compressed submissions must report wire bytes",
+            row.t
+        );
+    }
+
+    let resident = peak - baseline;
+    assert!(
+        resident < 16 * M + 64,
+        "compressed-fold peak resident model arenas {resident} should be \
+         O(regions={M}), not O(submissions)"
+    );
+}

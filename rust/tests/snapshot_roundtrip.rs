@@ -8,6 +8,7 @@
 //!   generator continues the original draw sequence exactly).
 
 use hybridfl::churn::ChurnState;
+use hybridfl::comm::CommState;
 use hybridfl::config::ExperimentConfig;
 use hybridfl::env::DriverState;
 use hybridfl::model::ModelParams;
@@ -47,6 +48,15 @@ fn snap_with_churn(
     rng_state: RngState,
     churn: ChurnState,
 ) -> RunSnapshot {
+    snap_with_comm(protocol, rng_state, churn, CommState::Stateless)
+}
+
+fn snap_with_comm(
+    protocol: ProtocolState,
+    rng_state: RngState,
+    churn: ChurnState,
+    comm: CommState,
+) -> RunSnapshot {
     let config_json = ExperimentConfig::fig2().to_json().dump();
     RunSnapshot {
         backend: "sim".into(),
@@ -54,6 +64,7 @@ fn snap_with_churn(
         config_json,
         rng: rng_state,
         churn,
+        comm,
         protocol,
         driver: DriverState::fresh(),
     }
@@ -363,6 +374,38 @@ fn churn_state_roundtrips_both_codecs() {
         for codec in [&BinaryCodec as &dyn SnapshotCodec, &JsonCodec] {
             let back = codec.decode(&codec.encode(&snap)).unwrap();
             assert_eq!(back.churn, churn, "{} codec, state {i}", codec.name());
+            assert_same(&snap, &back);
+        }
+    }
+}
+
+/// Communication state (the `topk+ef` residuals) round-trips bit-exactly
+/// through both codecs — finite values only in the shared case, since the
+/// JSON codec documents NaN collapsing.
+#[test]
+fn comm_state_roundtrips_both_codecs() {
+    let states = vec![
+        CommState::Stateless,
+        CommState::Residuals { clients: vec![] },
+        CommState::Residuals {
+            clients: vec![
+                (3, vec![0.5, -1.25, 0.0, 1e-30]),
+                (17, vec![f32::MAX, f32::MIN_POSITIVE, -0.0]),
+            ],
+        },
+    ];
+    for (i, comm) in states.into_iter().enumerate() {
+        let snap = snap_with_comm(
+            ProtocolState::FedAvg {
+                global: ModelParams::new(vec![vec![1.0]], vec![vec![1]]),
+            },
+            rng_state(10 + i as u64),
+            ChurnState::Stateless,
+            comm.clone(),
+        );
+        for codec in [&BinaryCodec as &dyn SnapshotCodec, &JsonCodec] {
+            let back = codec.decode(&codec.encode(&snap)).unwrap();
+            assert_eq!(back.comm, comm, "{} codec, state {i}", codec.name());
             assert_same(&snap, &back);
         }
     }

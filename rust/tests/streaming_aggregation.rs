@@ -86,7 +86,7 @@ fn streamed_in_order(c: &Case, order: &[usize]) -> StreamingAggregator {
     let mut agg = StreamingAggregator::for_regions(&c.region_data, &template);
     for &i in order {
         let (r, w, d) = &c.submissions[i];
-        agg.fold(*r, w, *d, 0.0);
+        agg.fold(*r, w, *d, 0.0).unwrap();
     }
     agg
 }
@@ -185,7 +185,7 @@ fn overcoverage_errors_in_both_forms() {
     let w = rand_model(&mut rng);
     assert!(regional_with_cache(&[(&w, 150.0)], 100.0, &prev).is_err());
     let mut acc = RegionAccumulator::new(0, 100.0, &prev);
-    acc.fold(&w, 150.0, 0.0);
+    acc.fold(&w, 150.0, 0.0).unwrap();
     assert!(acc.finish_cached(&prev).is_err());
     // Exact full coverage stays fine.
     assert!(regional_with_cache(&[(&w, 100.0)], 100.0, &prev).is_ok());
