@@ -1,0 +1,116 @@
+//! Bench: virtual-clock rounds at fleet scale — the million-client
+//! headline. HybridFL on the mock engine over 100k / 500k / 1M clients
+//! (quick mode: 100k only), one/two rounds per cell, reporting round
+//! throughput (fleet clients per wall-second), the model-arena peak
+//! (must stay O(regions)) and the process peak RSS after each cell.
+//! Emits `BENCH_scale.json`.
+//!
+//! Cells run in ascending fleet order on purpose: `VmHWM` is a
+//! process-lifetime high-water mark, so each cell's reading is "the
+//! largest fleet so far" — the 1M entry is the one the nightly ceiling
+//! watches.
+//!
+//! Run: `cargo bench --bench scale_fleet` (`--quick` for the CI smoke
+//! cell, `--full` for more rounds per cell).
+
+use std::time::Instant;
+
+use hybridfl::benchkit::{peak_rss_bytes, write_report, BenchArgs};
+use hybridfl::config::{Dist, EngineKind, ExperimentConfig, ProtocolKind};
+use hybridfl::jsonx::Json;
+use hybridfl::model;
+use hybridfl::scenario::Scenario;
+
+fn cfg_for(n_clients: usize, t_max: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::task1_scaled();
+    cfg.engine = EngineKind::Mock;
+    cfg.protocol = ProtocolKind::HybridFl;
+    cfg.n_clients = n_clients;
+    cfg.n_edges = 16;
+    cfg.dataset_size = n_clients * 2; // tiny partitions, huge fleet
+    cfg.eval_size = 50;
+    cfg.c_fraction = 0.3;
+    cfg.dropout = Dist::new(0.2, 0.05);
+    cfg.t_max = t_max;
+    cfg.seed = 4242;
+    cfg
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let cells: &[usize] = if args.quick {
+        &[100_000]
+    } else {
+        &[100_000, 500_000, 1_000_000]
+    };
+    let rounds_for = |n: usize| -> usize {
+        if args.full {
+            3
+        } else if n >= 1_000_000 {
+            1
+        } else {
+            2
+        }
+    };
+
+    println!("=== fleet scale: HybridFL virtual-clock rounds, 16 regions ===");
+    let mut cell_reports = Vec::new();
+    for &n in cells {
+        let t_max = rounds_for(n);
+        let cfg = cfg_for(n, t_max);
+
+        model::reset_arena_peak();
+        let arena_baseline = model::arena_count();
+        let t0 = Instant::now();
+        let result = Scenario::from_config(cfg).run().expect("scale cell failed");
+        let elapsed = t0.elapsed().as_secs_f64();
+        let arena_peak = model::arena_peak() - arena_baseline;
+
+        let selected: usize = result
+            .rounds
+            .iter()
+            .map(|r| r.selected.iter().sum::<usize>())
+            .sum();
+        let submitted: usize = result
+            .rounds
+            .iter()
+            .map(|r| r.submissions.iter().sum::<usize>())
+            .sum();
+        let clients_per_sec = (n * t_max) as f64 / elapsed;
+        let rss = peak_rss_bytes();
+        println!(
+            "{n:>9} clients  {t_max} round(s) in {elapsed:>7.2}s  \
+             {clients_per_sec:>12.0} clients/s  selected {selected}  \
+             submitted {submitted}  arena_peak {arena_peak}  peak_rss {}",
+            rss.map_or("n/a".into(), |b| format!("{} MiB", b / (1024 * 1024)))
+        );
+
+        cell_reports.push(
+            Json::obj()
+                .set("n_clients", n)
+                .set("rounds", t_max)
+                .set("run_s", elapsed)
+                .set("clients_per_sec", clients_per_sec)
+                .set("selected", selected)
+                .set("submitted", submitted)
+                .set("arena_peak", arena_peak)
+                .set(
+                    "peak_rss_bytes",
+                    rss.map_or(Json::Null, |b| Json::Num(b as f64)),
+                ),
+        );
+    }
+
+    let mode = if args.quick {
+        "quick"
+    } else if args.full {
+        "full"
+    } else {
+        "default"
+    };
+    let report = Json::obj()
+        .set("bench", "scale_fleet")
+        .set("mode", mode)
+        .set("cells", Json::Arr(cell_reports));
+    write_report("scale", &report);
+}

@@ -97,6 +97,18 @@ pub fn write_report(stem: &str, report: &Json) {
     println!("report -> {path}");
 }
 
+/// The process's peak resident set size (`VmHWM`) in bytes, read from
+/// `/proc/self/status`. `None` off Linux or if the field is missing —
+/// callers report it as best-effort telemetry and skip assertions when
+/// absent. Note it is a process-lifetime high-water mark: it never
+/// decreases, so memory-ceiling checks must run ascending scales.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
 /// Parse common bench CLI flags: `--full` (paper scale) and
 /// `--quick` (minimal iterations for CI smoke).
 #[derive(Clone, Copy, Debug, Default)]

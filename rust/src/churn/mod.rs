@@ -20,12 +20,16 @@
 //! * [`WorldDynamics`] — the *runtime* process. Both
 //!   [`crate::env::FlEnvironment`] backends run one dynamics step at each
 //!   round boundary, **before** the round's fate draw: the step resets
-//!   the fleet to its pristine base profiles, then lets the model rewrite
-//!   per-client reliability (and, for mobility events, the topology) as a
-//!   deterministic function of its state, the round index and a dedicated
-//!   RNG substream. Protocols never observe any of this — they still see
-//!   only submission counts, exactly the paper's reliability-agnostic
-//!   contract.
+//!   the *dirty* slice of the fleet to its pristine base rows (only the
+//!   regions the previous step rewrote — [`Touched`]), then lets the
+//!   model rewrite per-client reliability (and, for mobility events, the
+//!   topology) as a deterministic function of its state, the round index
+//!   and a dedicated RNG substream. Script-only models additionally skip
+//!   the per-round event scan: an [`EventSchedule`] precomputes the round
+//!   boundaries at which the touched-region set can change and caches the
+//!   set between them, so a quiet round costs O(1) instead of O(n).
+//!   Protocols never observe any of this — they still see only submission
+//!   counts, exactly the paper's reliability-agnostic contract.
 //! * [`ChurnState`] — the process's mutable state at a round boundary
 //!   (Markov on/off flags, battery levels). Captured into a
 //!   [`crate::snapshot::RunSnapshot`] so a resumed run continues the
@@ -52,7 +56,7 @@ pub use fate_trace::{FateRecord, FateTrace};
 
 use anyhow::{bail, Context, Result};
 
-use crate::devices::ClientProfile;
+use crate::devices::FleetState;
 use crate::jsonx::Json;
 use crate::rng::Rng;
 use crate::topology::Topology;
@@ -703,14 +707,214 @@ pub enum ChurnState {
     Composed { layers: Vec<ChurnState> },
 }
 
+/// Which slice of the fleet a dynamics step rewrote (or reset back to
+/// base), in units of regions. Drives the O(dirty) base reset inside
+/// [`WorldDynamics::step`] and the availability-cache refresh in the
+/// environment — at million-client scale, a quiet script round must not
+/// pay an O(n) fleet sweep.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Touched {
+    /// No client's row differs from the pristine base.
+    None,
+    /// Only the named regions' clients were rewritten.
+    Regions(Vec<usize>),
+    /// Potentially every client (per-client stochastic layers, fleet-wide
+    /// events, active migrations).
+    All,
+}
+
+impl Touched {
+    pub fn is_none(&self) -> bool {
+        matches!(self, Touched::None)
+    }
+
+    /// Set union; region lists stay small (one entry per scripted event),
+    /// so the quadratic dedup is fine.
+    fn union(self, other: Touched) -> Touched {
+        match (self, other) {
+            (Touched::All, _) | (_, Touched::All) => Touched::All,
+            (Touched::None, o) => o,
+            (s, Touched::None) => s,
+            (Touched::Regions(mut a), Touched::Regions(b)) => {
+                for r in b {
+                    if !a.contains(&r) {
+                        a.push(r);
+                    }
+                }
+                Touched::Regions(a)
+            }
+        }
+    }
+}
+
+/// Result of one [`WorldDynamics::step`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepOutcome {
+    /// The topology changed relative to the base — the caller refreshes
+    /// region-data caches.
+    pub topo_changed: bool,
+    /// Regions whose per-client reliability may differ from *before* the
+    /// step: the union of what this step rewrote and what it reset back
+    /// to base. Both invalidate cached per-region availability.
+    pub changed: Touched,
+}
+
+/// Round boundaries at which a scripted model's touched-region set can
+/// change, precomputed from the event windows (`from_round`,
+/// `until_round`, `at_round`). Between two consecutive boundaries the set
+/// is constant, so [`WorldDynamics::step`] reuses a cached interval
+/// instead of re-walking the script — the pending-event replacement for
+/// the per-round full scan. Only built for models without per-round
+/// stochastic layers (those touch every client every round regardless).
+struct EventSchedule {
+    /// Sorted, deduped rounds at which some event activates or expires.
+    boundaries: Vec<usize>,
+    /// `[lo, hi) → touched` interval from the last lookup.
+    cached: Option<(usize, usize, Touched)>,
+}
+
+impl EventSchedule {
+    fn new(model: &ChurnModel) -> EventSchedule {
+        let mut boundaries = Vec::new();
+        collect_boundaries(model, &mut boundaries);
+        boundaries.sort_unstable();
+        boundaries.dedup();
+        EventSchedule {
+            boundaries,
+            cached: None,
+        }
+    }
+
+    /// Touched set for round `t`: O(1) while `t` stays inside the cached
+    /// interval, O(log B + events) when it crosses a boundary.
+    fn touched_at(&mut self, model: &ChurnModel, t: usize) -> Touched {
+        if let Some((lo, hi, touched)) = &self.cached {
+            if *lo <= t && t < *hi {
+                return touched.clone();
+            }
+        }
+        let i = self.boundaries.partition_point(|&b| b <= t);
+        let lo = if i == 0 { 0 } else { self.boundaries[i - 1] };
+        let hi = self.boundaries.get(i).copied().unwrap_or(usize::MAX);
+        let touched = script_touched(model, t);
+        self.cached = Some((lo, hi, touched.clone()));
+        touched
+    }
+}
+
+fn collect_boundaries(model: &ChurnModel, out: &mut Vec<usize>) {
+    match model {
+        ChurnModel::FaultScript { events } => {
+            for e in events {
+                match e {
+                    FaultEvent::RegionBlackout {
+                        from_round,
+                        until_round,
+                        ..
+                    }
+                    | FaultEvent::BandwidthDegrade {
+                        from_round,
+                        until_round,
+                        ..
+                    } => {
+                        out.push(*from_round);
+                        out.push(*until_round);
+                    }
+                    FaultEvent::DropoutShift { at_round, .. }
+                    | FaultEvent::Migrate { at_round, .. } => out.push(*at_round),
+                }
+            }
+        }
+        ChurnModel::Composed { layers } => {
+            for l in layers {
+                collect_boundaries(l, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Touched set of a script-only model at round `t` (pure function of the
+/// event windows).
+fn script_touched(model: &ChurnModel, t: usize) -> Touched {
+    match model {
+        ChurnModel::Stationary | ChurnModel::Replay { .. } => Touched::None,
+        ChurnModel::FaultScript { events } => events
+            .iter()
+            .fold(Touched::None, |acc, e| acc.union(event_touched(e, t))),
+        ChurnModel::Composed { layers } => layers
+            .iter()
+            .fold(Touched::None, |acc, l| acc.union(script_touched(l, t))),
+        // Per-round stochastic layers never build a schedule.
+        _ => Touched::All,
+    }
+}
+
+fn event_touched(e: &FaultEvent, t: usize) -> Touched {
+    match e {
+        FaultEvent::RegionBlackout {
+            region,
+            from_round,
+            until_round,
+        }
+        | FaultEvent::BandwidthDegrade {
+            region,
+            from_round,
+            until_round,
+            ..
+        } => {
+            if (*from_round..*until_round).contains(&t) {
+                Touched::Regions(vec![*region])
+            } else {
+                Touched::None
+            }
+        }
+        FaultEvent::DropoutShift {
+            region, at_round, ..
+        } => {
+            if t >= *at_round {
+                region.map_or(Touched::All, |r| Touched::Regions(vec![r]))
+            } else {
+                Touched::None
+            }
+        }
+        FaultEvent::Migrate { at_round, .. } => {
+            if t >= *at_round {
+                Touched::All
+            } else {
+                Touched::None
+            }
+        }
+    }
+}
+
+/// Whether any layer rewrites per-client state every round (Markov,
+/// diurnal, battery) — those models touch the whole fleet regardless of
+/// any schedule.
+fn has_per_round_layers(model: &ChurnModel) -> bool {
+    match model {
+        ChurnModel::MarkovOnOff { .. }
+        | ChurnModel::Diurnal { .. }
+        | ChurnModel::BatteryDrain { .. } => true,
+        ChurnModel::Composed { layers } => layers.iter().any(has_per_round_layers),
+        _ => false,
+    }
+}
+
 /// The runtime world dynamics: pristine base state plus the evolving
 /// churn process. Both backends call [`WorldDynamics::step`] at each
 /// round boundary, before the round's fate draw.
 pub struct WorldDynamics {
     model: ChurnModel,
-    base_profiles: Vec<ClientProfile>,
+    base: FleetState,
     base_topo: Topology,
     state: ChurnState,
+    /// Regions left dirty (≠ base) by the previous step, pending reset.
+    stale: Touched,
+    /// Boundary schedule for script-only models; `None` when the touched
+    /// set is constant (`None` for no-op models, `All` for per-round
+    /// stochastic layers and migrations).
+    schedule: Option<EventSchedule>,
 }
 
 /// Initial state for one model layer. `init_rng` staggers battery levels
@@ -759,16 +963,24 @@ impl WorldDynamics {
     /// advances the parent, so stationary runs are unaffected).
     pub fn new(
         model: ChurnModel,
-        profiles: &[ClientProfile],
+        fleet: &FleetState,
         topo: &Topology,
         init_rng: &mut Rng,
     ) -> WorldDynamics {
-        let state = init_state(&model, profiles.len(), init_rng);
+        let state = init_state(&model, fleet.len(), init_rng);
+        let schedule = if model.is_noop() || model.has_migrations() || has_per_round_layers(&model)
+        {
+            None
+        } else {
+            Some(EventSchedule::new(&model))
+        };
         WorldDynamics {
             model,
-            base_profiles: profiles.to_vec(),
+            base: fleet.clone(),
             base_topo: topo.clone(),
             state,
+            stale: Touched::None,
+            schedule,
         }
     }
 
@@ -794,43 +1006,86 @@ impl WorldDynamics {
     /// Restore a captured process state (resume path). Rejects a state of
     /// the wrong shape for this model.
     pub fn restore(&mut self, state: ChurnState) -> Result<()> {
-        if !state_matches(&self.model, &state, self.base_profiles.len()) {
+        if !state_matches(&self.model, &state, self.base.len()) {
             bail!(
                 "churn state does not fit the configured '{}' model \
                  ({} clients)",
                 self.model.kind_str(),
-                self.base_profiles.len()
+                self.base.len()
             );
         }
         self.state = state;
+        // The caller's fleet may be in any intermediate state; force the
+        // next step to reset everything back to base first.
+        self.stale = Touched::All;
         Ok(())
     }
 
-    /// Evolve the world for round `t` (1-based): reset the fleet to its
-    /// pristine base, rebuild the topology under any active migrations,
-    /// then let the model rewrite per-client reliability as a function of
-    /// its state, `t` and `rng`. Returns `true` when the topology changed
-    /// relative to the base (the caller refreshes region-data caches).
+    /// Evolve the world for round `t` (1-based): reset the *dirty* slice
+    /// of the fleet to its pristine base rows, rebuild the topology under
+    /// any active migrations, then let the model rewrite per-client
+    /// reliability as a function of its state, `t` and `rng`. The
+    /// returned [`StepOutcome`] names what changed so callers refresh
+    /// only the affected caches.
     ///
-    /// Deterministic: given the state at the round boundary and the
-    /// round's churn substream, the rewritten world is identical whether
-    /// the run is fresh or resumed.
+    /// Deterministic and byte-identical to a full-fleet reset: the reset
+    /// set always covers everything the previous step left different
+    /// from base, and layer rewrites consume the identical RNG draws.
+    /// Given the state at the round boundary and the round's churn
+    /// substream, the rewritten world is identical whether the run is
+    /// fresh or resumed.
     pub fn step(
         &mut self,
         t: usize,
         rng: &mut Rng,
-        profiles: &mut [ClientProfile],
+        fleet: &mut FleetState,
         topo: &mut Topology,
-    ) -> bool {
-        profiles.copy_from_slice(&self.base_profiles);
+    ) -> StepOutcome {
+        let touched_now = match &mut self.schedule {
+            Some(s) => s.touched_at(&self.model, t),
+            None if self.model.is_noop() => Touched::None,
+            None => Touched::All,
+        };
+        let changed = std::mem::replace(&mut self.stale, touched_now.clone()).union(touched_now);
+        self.reset_dirty(fleet, &changed);
         let topo_changed = if self.has_migrations() {
             *topo = self.base_topo.clone();
             apply_migrations(&self.model, t, topo)
         } else {
             false
         };
-        apply_layer(&self.model, &mut self.state, t, rng, &self.base_profiles, profiles, topo);
-        topo_changed
+        apply_layer(&self.model, &mut self.state, t, rng, fleet, topo);
+        StepOutcome {
+            topo_changed,
+            changed,
+        }
+    }
+
+    /// Copy pristine base rows back over the dirty slice. Region client
+    /// ids from `Topology::build` are contiguous ascending ranges, so a
+    /// regional reset is three `memcpy`s; a non-contiguous list (never
+    /// produced today — migrations force the `All` path) degrades to
+    /// per-client copies.
+    fn reset_dirty(&self, fleet: &mut FleetState, dirty: &Touched) {
+        match dirty {
+            Touched::None => {}
+            Touched::All => fleet.copy_all_from(&self.base),
+            Touched::Regions(rs) => {
+                for &r in rs {
+                    let cs = &self.base_topo.regions[r];
+                    if cs.is_empty() {
+                        continue;
+                    }
+                    if cs.windows(2).all(|w| w[1] == w[0] + 1) {
+                        fleet.copy_range_from(&self.base, cs[0], cs.len());
+                    } else {
+                        for &k in cs {
+                            fleet.copy_client_from(&self.base, k);
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -873,15 +1128,15 @@ fn apply_migrations(model: &ChurnModel, t: usize, topo: &mut Topology) -> bool {
 /// One model layer's rewrite of the (already base-reset) fleet. Layers of
 /// a composed model run in order, each on top of the previous layer's
 /// output; draws come sequentially from the shared churn substream, so
-/// the draw sequence is a deterministic function of (state, t).
-#[allow(clippy::too_many_arguments)]
+/// the draw sequence is a deterministic function of (state, t) — in
+/// particular it does not depend on how much of the fleet the reset
+/// touched.
 fn apply_layer(
     model: &ChurnModel,
     state: &mut ChurnState,
     t: usize,
     rng: &mut Rng,
-    base: &[ClientProfile],
-    profiles: &mut [ClientProfile],
+    fleet: &mut FleetState,
     topo: &Topology,
 ) {
     match (model, state) {
@@ -906,7 +1161,7 @@ fn apply_layer(
                     rng.bernoulli((p_recover * scale).clamp(0.0, 1.0))
                 };
                 if !*flag {
-                    profiles[k].dropout_p = profiles[k].dropout_p.max(*down_dropout);
+                    fleet.dropout_p[k] = fleet.dropout_p[k].max(*down_dropout);
                 }
             }
         }
@@ -920,14 +1175,14 @@ fn apply_layer(
         ) => {
             let m = topo.n_regions();
             let omega = std::f64::consts::TAU / *period as f64;
-            for (k, p) in profiles.iter_mut().enumerate() {
+            for (k, dp) in fleet.dropout_p.iter_mut().enumerate() {
                 let r = topo.region_of[k];
                 let phase = region_phase
                     .get(r)
                     .copied()
                     .unwrap_or(std::f64::consts::TAU * r as f64 / m as f64);
                 let wave = amplitude * (omega * (t as f64 - 1.0) + phase).sin();
-                p.dropout_p = (p.dropout_p + wave).clamp(0.0, 1.0);
+                *dp = (*dp + wave).clamp(0.0, 1.0);
             }
         }
         (
@@ -946,7 +1201,7 @@ fn apply_layer(
                     // Depleted this round; a recharge draw decides whether
                     // the client is back next round (draw count stays a
                     // deterministic function of the state).
-                    profiles[k].dropout_p = profiles[k].dropout_p.max(*depleted_dropout);
+                    fleet.dropout_p[k] = fleet.dropout_p[k].max(*depleted_dropout);
                     if rng.bernoulli(*recharge_p) {
                         *lvl = 1.0;
                     }
@@ -955,12 +1210,12 @@ fn apply_layer(
         }
         (ChurnModel::FaultScript { events }, _) => {
             for e in events {
-                apply_profile_event(e, t, base, profiles, topo);
+                apply_profile_event(e, t, fleet, topo);
             }
         }
         (ChurnModel::Composed { layers }, ChurnState::Composed { layers: states }) => {
             for (l, s) in layers.iter().zip(states.iter_mut()) {
-                apply_layer(l, s, t, rng, base, profiles, topo);
+                apply_layer(l, s, t, rng, fleet, topo);
             }
         }
         // Shape mismatches are rejected at construction/restore time;
@@ -972,13 +1227,7 @@ fn apply_layer(
 
 /// Profile-level effect of one scripted event at round `t` (migrations
 /// are handled separately, against the topology).
-fn apply_profile_event(
-    e: &FaultEvent,
-    t: usize,
-    _base: &[ClientProfile],
-    profiles: &mut [ClientProfile],
-    topo: &Topology,
-) {
+fn apply_profile_event(e: &FaultEvent, t: usize, fleet: &mut FleetState, topo: &Topology) {
     match e {
         FaultEvent::RegionBlackout {
             region,
@@ -987,7 +1236,7 @@ fn apply_profile_event(
         } => {
             if (*from_round..*until_round).contains(&t) {
                 for &k in &topo.regions[*region] {
-                    profiles[k].dropout_p = 1.0;
+                    fleet.dropout_p[k] = 1.0;
                 }
             }
         }
@@ -1000,12 +1249,12 @@ fn apply_profile_event(
                 match region {
                     Some(r) => {
                         for &k in &topo.regions[*r] {
-                            profiles[k].dropout_p = (profiles[k].dropout_p + delta).clamp(0.0, 1.0);
+                            fleet.dropout_p[k] = (fleet.dropout_p[k] + delta).clamp(0.0, 1.0);
                         }
                     }
                     None => {
-                        for p in profiles.iter_mut() {
-                            p.dropout_p = (p.dropout_p + delta).clamp(0.0, 1.0);
+                        for dp in fleet.dropout_p.iter_mut() {
+                            *dp = (*dp + delta).clamp(0.0, 1.0);
                         }
                     }
                 }
@@ -1019,7 +1268,7 @@ fn apply_profile_event(
         } => {
             if (*from_round..*until_round).contains(&t) {
                 for &k in &topo.regions[*region] {
-                    profiles[k].bw_mhz *= factor;
+                    fleet.bw_mhz[k] *= factor;
                 }
             }
         }
@@ -1032,30 +1281,31 @@ mod tests {
     use super::*;
     use crate::config::ExperimentConfig;
 
-    fn fixture() -> (Vec<ClientProfile>, Topology) {
+    fn fixture() -> (FleetState, Topology) {
         let mut cfg = ExperimentConfig::task1_scaled();
         cfg.n_clients = 12;
         cfg.n_edges = 3;
         let topo = Topology::build(&cfg, &mut Rng::new(1)).unwrap();
-        let profiles = crate::devices::sample_fleet(&cfg, &topo, &mut Rng::new(2)).unwrap();
-        (profiles, topo)
+        let fleet = crate::devices::sample_fleet(&cfg, &topo, &mut Rng::new(2)).unwrap();
+        (fleet, topo)
     }
 
-    fn dynamics(model: ChurnModel) -> (WorldDynamics, Vec<ClientProfile>, Topology) {
-        let (profiles, topo) = fixture();
-        let dyn_ = WorldDynamics::new(model, &profiles, &topo, &mut Rng::new(3));
-        (dyn_, profiles, topo)
+    fn dynamics(model: ChurnModel) -> (WorldDynamics, FleetState, Topology) {
+        let (fleet, topo) = fixture();
+        let dyn_ = WorldDynamics::new(model, &fleet, &topo, &mut Rng::new(3));
+        (dyn_, fleet, topo)
     }
 
     #[test]
     fn stationary_step_is_identity() {
         let (mut d, base, topo) = dynamics(ChurnModel::Stationary);
-        let mut profiles = base.clone();
+        let mut fleet = base.clone();
         let mut topo2 = topo.clone();
         for t in 1..=5 {
-            let changed = d.step(t, &mut Rng::new(t as u64), &mut profiles, &mut topo2);
-            assert!(!changed);
-            assert_eq!(profiles, base);
+            let out = d.step(t, &mut Rng::new(t as u64), &mut fleet, &mut topo2);
+            assert!(!out.topo_changed);
+            assert_eq!(out.changed, Touched::None);
+            assert_eq!(fleet, base);
         }
     }
 
@@ -1069,17 +1319,18 @@ mod tests {
         };
         let run = |seed_offset: u64| -> Vec<Vec<f64>> {
             let (mut d, base, topo) = dynamics(model.clone());
-            let mut profiles = base.clone();
+            let mut fleet = base.clone();
             let mut topo2 = topo;
             (1..=20u64)
                 .map(|t| {
-                    d.step(
+                    let out = d.step(
                         t as usize,
                         &mut Rng::new(t + seed_offset),
-                        &mut profiles,
+                        &mut fleet,
                         &mut topo2,
                     );
-                    profiles.iter().map(|p| p.dropout_p).collect()
+                    assert_eq!(out.changed, Touched::All);
+                    fleet.dropout_p.clone()
                 })
                 .collect()
         };
@@ -1103,21 +1354,21 @@ mod tests {
             region_scale: Vec::new(),
         };
         let (mut d, base, topo) = dynamics(model.clone());
-        let mut profiles = base.clone();
+        let mut fleet = base.clone();
         let mut topo2 = topo.clone();
         for t in 1..=7 {
-            d.step(t, &mut Rng::new(100 + t as u64), &mut profiles, &mut topo2);
+            d.step(t, &mut Rng::new(100 + t as u64), &mut fleet, &mut topo2);
         }
         let snap = d.state();
 
         let (mut resumed, _, _) = dynamics(model);
         resumed.restore(snap).unwrap();
-        let mut p2 = base.clone();
+        let mut f2 = base.clone();
         let mut t2 = topo;
         for t in 8..=20 {
-            d.step(t, &mut Rng::new(100 + t as u64), &mut profiles, &mut topo2);
-            resumed.step(t, &mut Rng::new(100 + t as u64), &mut p2, &mut t2);
-            assert_eq!(profiles, p2, "round {t} diverged after restore");
+            d.step(t, &mut Rng::new(100 + t as u64), &mut fleet, &mut topo2);
+            resumed.step(t, &mut Rng::new(100 + t as u64), &mut f2, &mut t2);
+            assert_eq!(fleet, f2, "round {t} diverged after restore");
         }
     }
 
@@ -1146,19 +1397,19 @@ mod tests {
             region_phase: vec![0.0, 0.0, 0.0],
         };
         let (mut d, base, topo) = dynamics(model);
-        let mut profiles = base.clone();
+        let mut fleet = base.clone();
         let mut topo2 = topo;
         let mut series = Vec::new();
         for t in 1..=8 {
-            d.step(t, &mut Rng::new(5), &mut profiles, &mut topo2);
-            series.push(profiles[0].dropout_p);
+            d.step(t, &mut Rng::new(5), &mut fleet, &mut topo2);
+            series.push(fleet.dropout_p[0]);
         }
         let max = series.iter().cloned().fold(f64::MIN, f64::max);
         let min = series.iter().cloned().fold(f64::MAX, f64::min);
         assert!(max - min > 0.3, "no cycle visible: {series:?}");
         // Full period returns to the starting value.
-        d.step(9, &mut Rng::new(5), &mut profiles, &mut topo2);
-        assert!((profiles[0].dropout_p - series[0]).abs() < 1e-12);
+        d.step(9, &mut Rng::new(5), &mut fleet, &mut topo2);
+        assert!((fleet.dropout_p[0] - series[0]).abs() < 1e-12);
     }
 
     #[test]
@@ -1169,15 +1420,15 @@ mod tests {
             depleted_dropout: 0.99,
         };
         let (mut d, base, topo) = dynamics(model);
-        let mut profiles = base.clone();
+        let mut fleet = base.clone();
         let mut topo2 = topo;
         let mut saw_depleted = false;
         let mut saw_recovered_after_depleted = false;
-        let mut depleted_before = vec![false; profiles.len()];
+        let mut depleted_before = vec![false; fleet.len()];
         for t in 1..=30 {
-            d.step(t, &mut Rng::new(40 + t as u64), &mut profiles, &mut topo2);
-            for (k, p) in profiles.iter().enumerate() {
-                let down = p.dropout_p >= 0.99;
+            d.step(t, &mut Rng::new(40 + t as u64), &mut fleet, &mut topo2);
+            for (k, &dp) in fleet.dropout_p.iter().enumerate() {
+                let down = dp >= 0.99;
                 if down {
                     saw_depleted = true;
                     depleted_before[k] = true;
@@ -1213,28 +1464,39 @@ mod tests {
             ],
         };
         let (mut d, base, topo) = dynamics(model);
-        let mut profiles = base.clone();
+        let mut fleet = base.clone();
         let mut topo2 = topo.clone();
         let r0 = topo.regions[0][0];
         let r1 = topo.regions[1][0];
         let r2 = topo.regions[2][0];
 
-        d.step(2, &mut Rng::new(0), &mut profiles, &mut topo2);
-        assert_eq!(profiles[r0].dropout_p, base[r0].dropout_p);
-        assert!((profiles[r2].bw_mhz - base[r2].bw_mhz * 0.5).abs() < 1e-12);
+        let out = d.step(2, &mut Rng::new(0), &mut fleet, &mut topo2);
+        assert_eq!(out.changed, Touched::Regions(vec![2]));
+        assert_eq!(fleet.dropout_p[r0], base.dropout_p[r0]);
+        assert!((fleet.bw_mhz[r2] - base.bw_mhz[r2] * 0.5).abs() < 1e-12);
 
-        d.step(3, &mut Rng::new(0), &mut profiles, &mut topo2);
-        assert_eq!(profiles[r0].dropout_p, 1.0);
-        assert_eq!(profiles[r1].dropout_p, base[r1].dropout_p);
+        let out = d.step(3, &mut Rng::new(0), &mut fleet, &mut topo2);
+        assert_eq!(out.changed, Touched::Regions(vec![2, 0]));
+        assert_eq!(fleet.dropout_p[r0], 1.0);
+        assert_eq!(fleet.dropout_p[r1], base.dropout_p[r1]);
 
-        d.step(4, &mut Rng::new(0), &mut profiles, &mut topo2);
-        assert_eq!(profiles[r0].dropout_p, 1.0);
-        assert!((profiles[r1].dropout_p - (base[r1].dropout_p + 0.2)).abs() < 1e-12);
+        let out = d.step(4, &mut Rng::new(0), &mut fleet, &mut topo2);
+        // Region 2's bandwidth window closes this round (reset to base),
+        // region 0's blackout continues, region 1's shift activates.
+        assert_eq!(out.changed, Touched::Regions(vec![0, 2, 1]));
+        assert_eq!(fleet.dropout_p[r0], 1.0);
+        assert!((fleet.dropout_p[r1] - (base.dropout_p[r1] + 0.2)).abs() < 1e-12);
+        assert_eq!(fleet.bw_mhz[r2], base.bw_mhz[r2]); // window closed
 
-        d.step(5, &mut Rng::new(0), &mut profiles, &mut topo2);
-        assert_eq!(profiles[r0].dropout_p, base[r0].dropout_p); // window closed
-        assert_eq!(profiles[r2].bw_mhz, base[r2].bw_mhz); // window closed
-        assert!((profiles[r1].dropout_p - (base[r1].dropout_p + 0.2)).abs() < 1e-12); // permanent
+        let out = d.step(5, &mut Rng::new(0), &mut fleet, &mut topo2);
+        // Region 0's blackout closes this round; region 1 stays shifted.
+        assert_eq!(out.changed, Touched::Regions(vec![0, 1]));
+        assert_eq!(fleet.dropout_p[r0], base.dropout_p[r0]); // window closed
+        assert_eq!(fleet.bw_mhz[r2], base.bw_mhz[r2]); // window closed
+        assert!((fleet.dropout_p[r1] - (base.dropout_p[r1] + 0.2)).abs() < 1e-12); // permanent
+
+        let out = d.step(6, &mut Rng::new(0), &mut fleet, &mut topo2);
+        assert_eq!(out.changed, Touched::Regions(vec![1]));
     }
 
     #[test]
@@ -1249,16 +1511,16 @@ mod tests {
             }],
         };
         let (mut d, base, _) = dynamics(model);
-        let mut profiles = base;
+        let mut fleet = base;
         let mut topo2 = topo.clone();
-        assert!(!d.step(2, &mut Rng::new(0), &mut profiles, &mut topo2));
+        assert!(!d.step(2, &mut Rng::new(0), &mut fleet, &mut topo2).topo_changed);
         assert_eq!(topo2.region_of[client], 0);
-        assert!(d.step(3, &mut Rng::new(0), &mut profiles, &mut topo2));
+        assert!(d.step(3, &mut Rng::new(0), &mut fleet, &mut topo2).topo_changed);
         assert_eq!(topo2.region_of[client], 1);
         assert!(!topo2.regions[0].contains(&client));
         assert!(topo2.regions[1].contains(&client));
         // Idempotent across later rounds.
-        assert!(d.step(4, &mut Rng::new(0), &mut profiles, &mut topo2));
+        assert!(d.step(4, &mut Rng::new(0), &mut fleet, &mut topo2).topo_changed);
         assert_eq!(
             topo2.regions[1].iter().filter(|&&k| k == client).count(),
             1
@@ -1285,15 +1547,119 @@ mod tests {
             ],
         };
         let (mut d, base, topo) = dynamics(model);
-        let mut profiles = base.clone();
+        let mut fleet = base.clone();
         let mut topo2 = topo.clone();
-        d.step(1, &mut Rng::new(0), &mut profiles, &mut topo2);
+        d.step(1, &mut Rng::new(0), &mut fleet, &mut topo2);
         for &k in &topo.regions[0] {
-            assert_eq!(profiles[k].dropout_p, 1.0);
+            assert_eq!(fleet.dropout_p[k], 1.0);
         }
         for &k in &topo.regions[1] {
-            assert_eq!(profiles[k].dropout_p, base[k].dropout_p);
+            assert_eq!(fleet.dropout_p[k], base.dropout_p[k]);
         }
+    }
+
+    #[test]
+    fn lazy_reset_matches_full_reset_reference() {
+        // The dirty-region reset plus boundary schedule must be
+        // indistinguishable from the historical full-fleet reset.
+        // Reference: copy the whole base every round, then apply the
+        // layers with an identically-seeded state.
+        let models = vec![
+            ChurnModel::FaultScript {
+                events: vec![
+                    FaultEvent::RegionBlackout {
+                        region: 0,
+                        from_round: 2,
+                        until_round: 6,
+                    },
+                    FaultEvent::BandwidthDegrade {
+                        region: 0,
+                        from_round: 4,
+                        until_round: 8,
+                        factor: 0.5,
+                    },
+                    FaultEvent::DropoutShift {
+                        region: None,
+                        at_round: 5,
+                        delta: 0.1,
+                    },
+                    FaultEvent::DropoutShift {
+                        region: Some(2),
+                        at_round: 3,
+                        delta: -0.05,
+                    },
+                ],
+            },
+            ChurnModel::Composed {
+                layers: vec![
+                    ChurnModel::MarkovOnOff {
+                        p_fail: 0.3,
+                        p_recover: 0.3,
+                        down_dropout: 0.95,
+                        region_scale: Vec::new(),
+                    },
+                    ChurnModel::FaultScript {
+                        events: vec![FaultEvent::BandwidthDegrade {
+                            region: 1,
+                            from_round: 3,
+                            until_round: 7,
+                            factor: 0.25,
+                        }],
+                    },
+                ],
+            },
+        ];
+        for model in models {
+            let (base, topo) = fixture();
+            let mut d = WorldDynamics::new(model.clone(), &base, &topo, &mut Rng::new(3));
+            let mut ref_state = init_state(&model, base.len(), &mut Rng::new(3));
+            let mut fleet = base.clone();
+            let mut ref_fleet = base.clone();
+            let mut topo2 = topo.clone();
+            for t in 1..=12 {
+                d.step(t, &mut Rng::new(700 + t as u64), &mut fleet, &mut topo2);
+                ref_fleet.copy_all_from(&base);
+                apply_layer(
+                    &model,
+                    &mut ref_state,
+                    t,
+                    &mut Rng::new(700 + t as u64),
+                    &mut ref_fleet,
+                    &topo,
+                );
+                assert_eq!(
+                    fleet,
+                    ref_fleet,
+                    "round {t} diverged from full-reset reference ({})",
+                    model.kind_str()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn restore_forces_full_reset_on_next_step() {
+        let model = ChurnModel::FaultScript {
+            events: vec![FaultEvent::RegionBlackout {
+                region: 0,
+                from_round: 2,
+                until_round: 3,
+            }],
+        };
+        let (mut d, base, topo) = dynamics(model);
+        d.restore(ChurnState::Stateless).unwrap();
+        // Simulate a resumed fleet that drifted from base in a region the
+        // schedule considers quiet at t=10; the post-restore step must
+        // still reset it.
+        let mut fleet = base.clone();
+        fleet.dropout_p[5] = 0.123;
+        let mut topo2 = topo;
+        let out = d.step(10, &mut Rng::new(0), &mut fleet, &mut topo2);
+        assert_eq!(out.changed, Touched::All);
+        assert_eq!(fleet, base);
+        // The following quiet round is back to zero work.
+        let out = d.step(11, &mut Rng::new(0), &mut fleet, &mut topo2);
+        assert_eq!(out.changed, Touched::None);
     }
 
     #[test]

@@ -611,16 +611,22 @@ pub fn f16_stochastic(x: f32, rng: &mut Rng) -> u16 {
 // ---------------------------------------------------------------------------
 
 /// The codec layer's only cross-round mutable state: per-client
-/// error-feedback residuals for `topk+ef`. Held as raw `Vec<f32>`
+/// error-feedback residuals for `topk+ef`. Held as raw `Arc<Vec<f32>>`
 /// device-side state (never `ModelParams` — 50k residual arenas would
 /// demolish the O(regions) arena-peak guarantee) and carried in
 /// [`crate::snapshot::RunSnapshot`] so resumed runs stay byte-identical.
+/// The `Arc` makes a snapshot a reference share, not a deep copy:
+/// checkpointing a 50k-client `+ef` run bumps 50k refcounts instead of
+/// doubling residual memory, and the environment copy-on-writes
+/// (`Arc::make_mut`) only the residuals the next round actually updates.
 #[derive(Clone, Debug, PartialEq)]
 pub enum CommState {
     /// No residuals in flight (every codec except `topk+ef`).
     Stateless,
     /// `(client, residual)` pairs, sorted by client id.
-    Residuals { clients: Vec<(usize, Vec<f32>)> },
+    Residuals {
+        clients: Vec<(usize, std::sync::Arc<Vec<f32>>)>,
+    },
 }
 
 impl CommState {

@@ -1,14 +1,23 @@
 //! Client device heterogeneity & reliability model (S5, paper §III.D).
 //!
-//! Every end device gets a [`ClientProfile`] sampled from the Table II
+//! Every end device gets a profile sampled from the Table II
 //! distributions: compute performance `s_k ~ 𝓝` (GHz), bandwidth
 //! `bw_k ~ 𝓝` (MHz) and a per-round drop-out probability `dr_k ~ 𝓝`.
 //!
+//! The fleet is stored as a struct-of-arrays [`FleetState`] — three
+//! parallel flat `f64` arrays indexed by global client id — so the
+//! per-round sweeps that dominate at fleet scale (availability means,
+//! oracle drop tables, completion-time ranking) walk one cache-linear
+//! array instead of striding over an array of structs, and churn resets
+//! copy contiguous slices. [`ClientProfile`] remains as the per-client
+//! *view* (`Copy`, three scalars) for the timing/energy call sites that
+//! reason about a single device.
+//!
 //! **Privacy boundary.** Profiles live on the *simulator* side of the
 //! system. Protocol code (selection, slack estimation, aggregation) never
-//! receives a `ClientProfile` — it only observes submission counts, exactly
-//! as the paper's reliability-agnostic setting prescribes. The type is
-//! deliberately not exported through the `protocols` API.
+//! receives a `ClientProfile` or a `FleetState` — it only observes
+//! submission counts, exactly as the paper's reliability-agnostic setting
+//! prescribes. Neither type is exported through the `protocols` API.
 
 use anyhow::{bail, ensure, Result};
 
@@ -16,7 +25,8 @@ use crate::config::ExperimentConfig;
 use crate::rng::Rng;
 use crate::topology::Topology;
 
-/// Static per-device truth (hidden from protocols).
+/// Static per-device truth (hidden from protocols) — the scalar view of
+/// one [`FleetState`] row.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ClientProfile {
     /// CPU performance s_k in GHz.
@@ -26,6 +36,93 @@ pub struct ClientProfile {
     /// Probability the client drops/opts out of a round (dr_k). The
     /// no-abort probability is P_k = 1 − dr_k.
     pub dropout_p: f64,
+}
+
+/// Struct-of-arrays per-client state of the whole fleet: `perf_ghz`,
+/// `bw_mhz` and `dropout_p` as parallel flat arrays indexed by global
+/// client id. Topology regions assign contiguous id ranges, so per-region
+/// sweeps and churn rewrites touch contiguous memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetState {
+    /// CPU performance s_k in GHz, per client.
+    pub perf_ghz: Vec<f64>,
+    /// Wireless bandwidth bw_k in MHz, per client.
+    pub bw_mhz: Vec<f64>,
+    /// Per-round drop-out probability dr_k, per client.
+    pub dropout_p: Vec<f64>,
+}
+
+impl FleetState {
+    /// An all-zero fleet of `n` clients (placeholder rows; a zero
+    /// `perf_ghz` divides in the timing model, so every row must be
+    /// written before use — [`sample_fleet`] enforces that).
+    pub fn zeros(n: usize) -> FleetState {
+        FleetState {
+            perf_ghz: vec![0.0; n],
+            bw_mhz: vec![0.0; n],
+            dropout_p: vec![0.0; n],
+        }
+    }
+
+    /// Assemble a fleet from an array-of-structs profile list (tests,
+    /// migration of older call sites).
+    pub fn from_profiles(profiles: &[ClientProfile]) -> FleetState {
+        FleetState {
+            perf_ghz: profiles.iter().map(|p| p.perf_ghz).collect(),
+            bw_mhz: profiles.iter().map(|p| p.bw_mhz).collect(),
+            dropout_p: profiles.iter().map(|p| p.dropout_p).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.perf_ghz.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perf_ghz.is_empty()
+    }
+
+    /// The scalar view of client `k`'s row (`Copy` — three loads).
+    pub fn profile(&self, k: usize) -> ClientProfile {
+        ClientProfile {
+            perf_ghz: self.perf_ghz[k],
+            bw_mhz: self.bw_mhz[k],
+            dropout_p: self.dropout_p[k],
+        }
+    }
+
+    /// Overwrite client `k`'s row from a scalar profile.
+    pub fn set_profile(&mut self, k: usize, p: ClientProfile) {
+        self.perf_ghz[k] = p.perf_ghz;
+        self.bw_mhz[k] = p.bw_mhz;
+        self.dropout_p[k] = p.dropout_p;
+    }
+
+    /// Restore every row from `base` (full pristine reset).
+    pub fn copy_all_from(&mut self, base: &FleetState) {
+        self.perf_ghz.copy_from_slice(&base.perf_ghz);
+        self.bw_mhz.copy_from_slice(&base.bw_mhz);
+        self.dropout_p.copy_from_slice(&base.dropout_p);
+    }
+
+    /// Restore the contiguous id range `[start, start + len)` from `base`
+    /// — the O(dirty-region) churn reset for regions whose clients hold a
+    /// contiguous id span (every region straight out of
+    /// [`Topology::build`]).
+    pub fn copy_range_from(&mut self, base: &FleetState, start: usize, len: usize) {
+        let end = start + len;
+        self.perf_ghz[start..end].copy_from_slice(&base.perf_ghz[start..end]);
+        self.bw_mhz[start..end].copy_from_slice(&base.bw_mhz[start..end]);
+        self.dropout_p[start..end].copy_from_slice(&base.dropout_p[start..end]);
+    }
+
+    /// Restore one client's row from `base` (non-contiguous regions, e.g.
+    /// after migration events).
+    pub fn copy_client_from(&mut self, base: &FleetState, k: usize) {
+        self.perf_ghz[k] = base.perf_ghz[k];
+        self.bw_mhz[k] = base.bw_mhz[k];
+        self.dropout_p[k] = base.dropout_p[k];
+    }
 }
 
 /// Floor on physical quantities so a pathological draw cannot produce a
@@ -53,24 +150,20 @@ pub fn sample_profile(
 
 /// Sample the whole fleet, honoring per-region drop-out overrides from the
 /// topology (explicit `RegionSpec`s) or the global `cfg.dropout.mean`.
+/// Draw order is regions in order, clients in region order — byte-for-byte
+/// the order the array-of-structs fleet used, so seeded worlds are
+/// unchanged by the SoA layout.
 ///
 /// Every client must be covered by exactly one topology region: a client
-/// left out would silently keep an all-zero placeholder profile, and its
+/// left out would silently keep an all-zero placeholder row, and its
 /// zero `perf_ghz` later divides inside `TimingModel::t_train`. Incomplete
 /// or overlapping coverage is therefore a hard error, not a latent NaN.
 pub fn sample_fleet(
     cfg: &ExperimentConfig,
     topo: &Topology,
     rng: &mut Rng,
-) -> Result<Vec<ClientProfile>> {
-    let mut profiles = vec![
-        ClientProfile {
-            perf_ghz: 0.0,
-            bw_mhz: 0.0,
-            dropout_p: 0.0
-        };
-        cfg.n_clients
-    ];
+) -> Result<FleetState> {
+    let mut fleet = FleetState::zeros(cfg.n_clients);
     let mut covered = vec![false; cfg.n_clients];
     let mut drng = rng.split(0xDE_01CE);
     for (r, clients) in topo.regions.iter().enumerate() {
@@ -88,7 +181,7 @@ pub fn sample_fleet(
                 "client {k} appears in more than one topology region"
             );
             covered[k] = true;
-            profiles[k] = sample_profile(cfg, mean, &mut drng);
+            fleet.set_profile(k, sample_profile(cfg, mean, &mut drng));
         }
     }
     if let Some(k) = covered.iter().position(|&c| !c) {
@@ -98,7 +191,7 @@ pub fn sample_fleet(
              timing model)"
         );
     }
-    Ok(profiles)
+    Ok(fleet)
 }
 
 #[cfg(test)]
@@ -112,10 +205,10 @@ mod tests {
         let topo = Topology::build(&cfg, &mut Rng::new(1)).unwrap();
         let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(2)).unwrap();
         assert_eq!(fleet.len(), cfg.n_clients);
-        for p in &fleet {
-            assert!(p.perf_ghz > 0.0);
-            assert!(p.bw_mhz > 0.0);
-            assert!((0.0..=DROPOUT_MAX).contains(&p.dropout_p));
+        for k in 0..fleet.len() {
+            assert!(fleet.perf_ghz[k] > 0.0);
+            assert!(fleet.bw_mhz[k] > 0.0);
+            assert!((0.0..=DROPOUT_MAX).contains(&fleet.dropout_p[k]));
         }
     }
 
@@ -124,8 +217,8 @@ mod tests {
         let cfg = ExperimentConfig::task2_scaled();
         let topo = Topology::build(&cfg, &mut Rng::new(1)).unwrap();
         let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(2)).unwrap();
-        let perf_min = fleet.iter().map(|p| p.perf_ghz).fold(f64::MAX, f64::min);
-        let perf_max = fleet.iter().map(|p| p.perf_ghz).fold(0.0, f64::max);
+        let perf_min = fleet.perf_ghz.iter().cloned().fold(f64::MAX, f64::min);
+        let perf_max = fleet.perf_ghz.iter().cloned().fold(0.0, f64::max);
         assert!(perf_max - perf_min > 0.1, "no heterogeneity sampled");
     }
 
@@ -143,7 +236,7 @@ mod tests {
         let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(4)).unwrap();
         let mean_r = |r: usize| -> f64 {
             let cs = &topo.regions[r];
-            cs.iter().map(|&k| fleet[k].dropout_p).sum::<f64>() / cs.len() as f64
+            cs.iter().map(|&k| fleet.dropout_p[k]).sum::<f64>() / cs.len() as f64
         };
         assert!(mean_r(0) < 0.2, "region 0 mean {}", mean_r(0));
         assert!(mean_r(1) > 0.7, "region 1 mean {}", mean_r(1));
@@ -158,9 +251,55 @@ mod tests {
         assert_eq!(a, b);
     }
 
+    /// The SoA layout is only a layout: sampling into `FleetState` row by
+    /// row must equal sampling profiles from the same stream one at a
+    /// time.
+    #[test]
+    fn soa_sampling_matches_profile_draw_order() {
+        let cfg = ExperimentConfig::task1_scaled();
+        let topo = Topology::build(&cfg, &mut Rng::new(5)).unwrap();
+        let fleet = sample_fleet(&cfg, &topo, &mut Rng::new(6)).unwrap();
+        let mut drng = Rng::new(6).split(0xDE_01CE);
+        let mut reference = vec![
+            ClientProfile { perf_ghz: 0.0, bw_mhz: 0.0, dropout_p: 0.0 };
+            cfg.n_clients
+        ];
+        for (r, clients) in topo.regions.iter().enumerate() {
+            let mean = topo.dropout_mean_override(r).unwrap_or(cfg.dropout.mean);
+            for &k in clients {
+                reference[k] = sample_profile(&cfg, mean, &mut drng);
+            }
+        }
+        assert_eq!(fleet, FleetState::from_profiles(&reference));
+        for k in 0..fleet.len() {
+            assert_eq!(fleet.profile(k), reference[k]);
+        }
+    }
+
+    #[test]
+    fn range_and_client_resets_restore_base_rows() {
+        let cfg = ExperimentConfig::task1_scaled();
+        let topo = Topology::build(&cfg, &mut Rng::new(5)).unwrap();
+        let base = sample_fleet(&cfg, &topo, &mut Rng::new(6)).unwrap();
+        let mut fleet = base.clone();
+        for k in 0..fleet.len() {
+            fleet.dropout_p[k] = 1.0;
+            fleet.bw_mhz[k] *= 0.5;
+        }
+        fleet.copy_range_from(&base, 2, 5);
+        for k in 2..7 {
+            assert_eq!(fleet.profile(k), base.profile(k));
+        }
+        assert_ne!(fleet.profile(0), base.profile(0));
+        fleet.copy_client_from(&base, 0);
+        assert_eq!(fleet.profile(0), base.profile(0));
+        fleet.copy_all_from(&base);
+        assert_eq!(fleet, base);
+    }
+
     /// The coverage guard: a topology that leaves a client out of every
     /// region (or lists one twice) is a hard error, never a silent
-    /// all-zero profile.
+    /// all-zero row.
     #[test]
     fn uncovered_client_is_a_hard_error() {
         let mut cfg = ExperimentConfig::task1_scaled();

@@ -143,7 +143,7 @@ impl FlEnvironment for LiveClusterEnv {
         // selector is rejected at construction, so no ground-truth table
         // exists here.
         let selected = draw_selection(&self.world, &selection, None, &mut rng);
-        let fates = draw_fates(&self.world, t, &selected, None, &mut rng);
+        let fates = draw_fates(&self.world, t, &selected, None, &mut rng)?;
         record_fates(&mut self.world, t, &fates);
 
         // Fan the jobs out to the edges (who relay to their clients).

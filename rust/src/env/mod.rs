@@ -122,6 +122,35 @@
 //!    nothing from the comm RNG stream and is byte-identical to the
 //!    pre-codec behavior.
 //!
+//! # The data plane at fleet scale
+//!
+//! Below the trait, both backends share one `World`, engineered so a
+//! round's cost scales with the *selected* set, not the fleet:
+//!
+//! * **Struct-of-arrays fleet.** The device fleet lives in a
+//!   [`FleetState`] — `perf_ghz`, `bw_mhz`, `dropout_p` as parallel flat
+//!   arrays (plus cached per-client partition sizes), with client ids as
+//!   the index. Completion-time ranking, oracle tables and churn rewrites
+//!   walk cache-linear `f64` arrays; `ClientProfile` survives only as the
+//!   scalar row view where a single client's numbers are needed.
+//! * **Lazy fate materialization.** The fate draw touches only the
+//!   selected clients, and each per-client draw comes from the same
+//!   substream discipline as ever — so the lazy path is byte-identical
+//!   to a full-fleet sweep. The oracle selector is the one declared
+//!   exception (its ground-truth table covers the fleet by definition).
+//! * **O(dirty) world dynamics.** The churn step resets and rewrites only
+//!   the regions its [`Touched`] outcome names, driven by a precomputed
+//!   event-boundary schedule; the per-region availability series is a
+//!   cache refreshed from the same outcome instead of an O(n) sweep.
+//! * **Parallel per-region folds.** On the virtual clock, regions'
+//!   select→train→fold work is independent (point 4 folds never cross
+//!   regions), so [`VirtualClockEnv`] fans regions out across scoped
+//!   worker threads when the engine permits — with within-region
+//!   completion order preserved, the folded sums are byte-identical to
+//!   the serial loop (pinned by test, like `harness::sweep`).
+//!
+//! [`FleetState`]: crate::devices::FleetState
+//! [`Touched`]: crate::churn::Touched
 //! [`ChurnModel::Stationary`]: crate::churn::ChurnModel::Stationary
 //! [`ChurnModel::Replay`]: crate::churn::ChurnModel::Replay
 //!
@@ -139,11 +168,11 @@ pub use virtual_clock::VirtualClockEnv;
 use std::sync::Arc;
 
 use crate::aggregation::RegionAccumulator;
-use crate::churn::{ChurnModel, ChurnState, FateTrace, WorldDynamics};
+use crate::churn::{ChurnModel, ChurnState, FateTrace, Touched, WorldDynamics};
 use crate::comm::CommState;
 use crate::config::ExperimentConfig;
 use crate::data::FederatedData;
-use crate::devices::{self, ClientProfile};
+use crate::devices::{self, FleetState};
 use crate::energy::EnergyModel;
 use crate::model::ModelParams;
 use crate::protocols::Protocol;
@@ -301,6 +330,33 @@ pub trait FlEnvironment {
     fn take_fate_trace(&mut self) -> Option<FateTrace>;
 }
 
+/// A selected client whose device parameters produce a non-finite
+/// completion time (zero or NaN compute/bandwidth). Surfaced as a typed
+/// error from the fate draw instead of letting the non-finite value
+/// poison the survivor sorts downstream — all fate-path float comparisons
+/// are `total_cmp` and therefore panic-free, so this error is the one
+/// loud signal that the world itself is malformed.
+#[derive(Clone, Debug)]
+pub struct DegenerateProfileError {
+    pub client: usize,
+    pub completion: f64,
+    pub perf_ghz: f64,
+    pub bw_mhz: f64,
+}
+
+impl std::fmt::Display for DegenerateProfileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "client {} has a degenerate device profile: completion time is {} \
+             (perf_ghz={}, bw_mhz={})",
+            self.client, self.completion, self.perf_ghz, self.bw_mhz
+        )
+    }
+}
+
+impl std::error::Error for DegenerateProfileError {}
+
 /// A selected client's fate in one round — drop-out draw plus completion
 /// time. Environment-internal ground truth: this type never crosses the
 /// [`FlEnvironment`] trait into protocol code.
@@ -324,7 +380,22 @@ pub(crate) struct World {
     pub cfg: ExperimentConfig,
     pub topo: Topology,
     pub data: Arc<FederatedData>,
-    pub profiles: Vec<ClientProfile>,
+    /// The device fleet in struct-of-arrays form: per-round sweeps
+    /// (fastest-first ranking, oracle tables, churn rewrites) walk one
+    /// cache-linear `f64` array instead of striding over profile structs.
+    pub fleet: FleetState,
+    /// `|D_k|` per client, cached as a flat array — the third hot operand
+    /// of the completion-time sweep (`data.partitions[k].len()` chases a
+    /// `Vec<Vec<_>>` indirection per lookup).
+    pub psize: Vec<f64>,
+    /// Per-region mean no-abort probability `E[1 − dr_k]` of the current
+    /// fleet — the `RoundOutcome::avail` series. Maintained incrementally
+    /// by [`step_world`] from the dynamics step's [`Touched`] set instead
+    /// of an O(n) fleet sweep every round.
+    pub avail: Vec<f64>,
+    /// Debug/test knob: recompute availability from the fleet every round
+    /// instead of trusting the incremental cache.
+    pub eager_sweeps: bool,
     pub tm: TimingModel,
     pub em: EnergyModel,
     /// Base stream for per-round draws (`split(t)` per round).
@@ -344,15 +415,18 @@ impl World {
         let rng = Rng::new(cfg.seed);
         let topo = Topology::build(&cfg, &mut rng.split(1))?;
         let data = Arc::new(crate::data::build(&cfg, &mut rng.split(2)));
-        let profiles = devices::sample_fleet(&cfg, &topo, &mut rng.split(3))?;
+        let fleet = devices::sample_fleet(&cfg, &topo, &mut rng.split(3))?;
+        let psize: Vec<f64> = data.partitions.iter().map(|p| p.len() as f64).collect();
+        let avail = (0..topo.n_regions())
+            .map(|r| region_avail(&topo, &fleet, r))
+            .collect();
         let tm = TimingModel::new(&cfg);
         let em = EnergyModel::new(&cfg);
         let round_rng = rng.split(4);
         // Stream 5 seeds churn-process initialization (battery jitter).
         // Splitting never advances the parent, so stationary worlds are
         // bit-identical with or without this stream existing.
-        let dynamics =
-            WorldDynamics::new(cfg.churn.clone(), &profiles, &topo, &mut rng.split(5));
+        let dynamics = WorldDynamics::new(cfg.churn.clone(), &fleet, &topo, &mut rng.split(5));
         let replay = match &cfg.churn {
             ChurnModel::Replay { path } => {
                 Some(FateTrace::load(std::path::Path::new(path))?)
@@ -363,7 +437,10 @@ impl World {
             cfg,
             topo,
             data,
-            profiles,
+            fleet,
+            psize,
+            avail,
+            eager_sweeps: false,
             tm,
             em,
             rng: round_rng,
@@ -381,6 +458,18 @@ impl World {
             .map(|cs| self.data.region_data_size(cs) as f64)
             .collect()
     }
+}
+
+/// Mean no-abort probability `E[1 − dr_k]` over region `r`'s fleet
+/// (0.0 for an empty region). The summation order matches the historical
+/// per-round sweep exactly, so the cached series is bit-identical to a
+/// recompute.
+pub(crate) fn region_avail(topo: &Topology, fleet: &FleetState, r: usize) -> f64 {
+    let cs = &topo.regions[r];
+    if cs.is_empty() {
+        return 0.0;
+    }
+    cs.iter().map(|&k| 1.0 - fleet.dropout_p[k]).sum::<f64>() / cs.len() as f64
 }
 
 /// Pick the concrete client set per the [`Selection`] spec and the
@@ -410,8 +499,10 @@ pub(crate) fn draw_selection(
                 out
             }
             Selection::Uniform(count) => {
-                let all: Vec<usize> = (0..topo.n_clients()).collect();
-                select_clients(&all, *count, rng)
+                // Fleet-wide uniform draw over the identity index set —
+                // sample directly instead of materializing `0..n` (the
+                // sparse sampler keeps this O(selected) at fleet scale).
+                rng.sample_indices(topo.n_clients(), *count)
             }
         },
         SelectorKind::FedCs => match selection {
@@ -444,22 +535,41 @@ pub(crate) fn draw_selection(
 /// (ascending, client-id tie-break) and keep the first `count` — the
 /// FedCS-style deadline-aware pick, also used by the oracle once the
 /// candidate set is narrowed to ground-truth survivors.
+///
+/// Runs every round for the `fedcs` and `oracle` selectors, so it avoids
+/// the full O(n log n) sort: `select_nth_unstable` partitions the `count`
+/// fastest to the front in O(n), and only that prefix is sorted. The
+/// comparator is `f64::total_cmp` (identical to `partial_cmp` for the
+/// finite completions the timing model produces, and panic-free for
+/// degenerate ones) with the same client-id tie-break as the historical
+/// full sort — output ranks are pinned identical by test.
 fn fastest_first(
     world: &World,
     candidates: impl Iterator<Item = usize>,
     count: usize,
 ) -> Vec<usize> {
+    let cmp = |a: &(f64, usize), b: &(f64, usize)| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1));
     let mut ranked: Vec<(f64, usize)> = candidates
         .map(|k| {
-            let psize = world.data.partitions[k].len() as f64;
             (
-                world.tm.completion_with(&world.profiles[k], psize, &world.cfg.comm),
+                world.tm.completion_with_of(
+                    world.fleet.perf_ghz[k],
+                    world.fleet.bw_mhz[k],
+                    world.psize[k],
+                    &world.cfg.comm,
+                ),
                 k,
             )
         })
         .collect();
-    ranked.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    ranked.truncate(count);
+    if count == 0 {
+        return Vec::new();
+    }
+    if count < ranked.len() {
+        ranked.select_nth_unstable_by(count - 1, cmp);
+        ranked.truncate(count);
+    }
+    ranked.sort_unstable_by(cmp);
     ranked.into_iter().map(|(_, k)| k).collect()
 }
 
@@ -496,7 +606,7 @@ pub(crate) fn oracle_drop_table(world: &World, t: usize) -> Option<Vec<bool>> {
     let mut orng = world.rng.split(t as u64).split(ORACLE_STREAM);
     Some(
         (0..n)
-            .map(|k| orng.bernoulli(world.profiles[k].dropout_p))
+            .map(|k| orng.bernoulli(world.fleet.dropout_p[k]))
             .collect(),
     )
 }
@@ -511,20 +621,42 @@ const CHURN_STREAM: u64 = 0xC0_0C_AA;
 /// draw). Returns `true` when the topology changed (migration events) and
 /// region-data caches must be refreshed. A no-op world (stationary /
 /// replayed fates) returns immediately without touching anything.
+///
+/// The step's [`Touched`] outcome drives an incremental refresh of the
+/// per-region availability cache: only regions the step rewrote (or reset
+/// back to base) are re-summed, so a quiet script round costs O(1).
 pub(crate) fn step_world(world: &mut World, t: usize) -> bool {
     if world.dynamics.is_noop() {
         return false;
     }
     let mut crng = world.rng.split(t as u64).split(CHURN_STREAM);
-    world
+    let out = world
         .dynamics
-        .step(t, &mut crng, &mut world.profiles, &mut world.topo)
+        .step(t, &mut crng, &mut world.fleet, &mut world.topo);
+    match &out.changed {
+        Touched::None => {}
+        Touched::All => {
+            world.avail = (0..world.topo.n_regions())
+                .map(|r| region_avail(&world.topo, &world.fleet, r))
+                .collect();
+        }
+        Touched::Regions(rs) => {
+            for &r in rs {
+                world.avail[r] = region_avail(&world.topo, &world.fleet, r);
+            }
+        }
+    }
+    out.topo_changed
 }
 
 /// Per-region ground-truth availability for this round.
 ///
 /// * Normally: the mean no-abort probability `1 − dr_k` over each
-///   region's fleet, as the world stands after the dynamics step.
+///   region's fleet, as the world stands after the dynamics step — read
+///   from the incrementally maintained `World::avail` cache (or re-summed
+///   from the fleet under the `eager_sweeps` debug knob; the two are
+///   bit-identical because the cache refresh uses the same summation
+///   order).
 /// * Under fate replay the base profiles say nothing about the replayed
 ///   world, so the series reports the *realized* availability of the
 ///   round's replayed fates instead (alive/selected per region; NaN for
@@ -544,20 +676,12 @@ pub(crate) fn ground_truth_avail(world: &World, fates: &[ClientFate]) -> Vec<f64
             })
             .collect();
     }
-    world
-        .topo
-        .regions
-        .iter()
-        .map(|cs| {
-            if cs.is_empty() {
-                return 0.0;
-            }
-            cs.iter()
-                .map(|&k| 1.0 - world.profiles[k].dropout_p)
-                .sum::<f64>()
-                / cs.len() as f64
-        })
-        .collect()
+    if world.eager_sweeps {
+        return (0..m)
+            .map(|r| region_avail(&world.topo, &world.fleet, r))
+            .collect();
+    }
+    world.avail.clone()
 }
 
 /// Resolve each selected client's fate for round `t`.
@@ -583,16 +707,19 @@ pub(crate) fn ground_truth_avail(world: &World, fates: &[ClientFate]) -> Vec<f64
 /// survivors through its fastest one — but only on freshly drawn fates:
 /// a replayed trace already carries the transformed completions, so
 /// replay stays a fixed point.
+///
+/// A device whose parameters yield a non-finite completion time surfaces
+/// as a typed [`DegenerateProfileError`] instead of a downstream panic.
 pub(crate) fn draw_fates(
     world: &World,
     t: usize,
     selected: &[usize],
     oracle_drops: Option<&[bool]>,
     rng: &mut Rng,
-) -> Vec<ClientFate> {
+) -> Result<Vec<ClientFate>> {
     if let Some(trace) = &world.replay {
         let m = world.topo.n_regions();
-        return selected
+        return Ok(selected
             .iter()
             .map(|&k| match trace.get(t, k) {
                 Some(rec) => {
@@ -619,32 +746,43 @@ pub(crate) fn draw_fates(
                     completion: f64::INFINITY,
                 },
             })
-            .collect();
+            .collect());
     }
-    let mut fates: Vec<ClientFate> = selected
-        .iter()
-        .map(|&k| {
-            let p = &world.profiles[k];
-            let dropped = match oracle_drops {
-                Some(table) => table[k],
-                None => rng.bernoulli(p.dropout_p),
-            };
-            let psize = world.data.partitions[k].len() as f64;
-            let completion = if dropped {
-                f64::INFINITY
-            } else {
-                world.tm.completion_with(p, psize, &world.cfg.comm)
-            };
-            ClientFate {
-                client: k,
-                region: world.topo.region_of[k],
-                dropped,
-                completion,
+    let mut fates: Vec<ClientFate> = Vec::with_capacity(selected.len());
+    for &k in selected {
+        let dropped = match oracle_drops {
+            Some(table) => table[k],
+            None => rng.bernoulli(world.fleet.dropout_p[k]),
+        };
+        let completion = if dropped {
+            f64::INFINITY
+        } else {
+            let c = world.tm.completion_with_of(
+                world.fleet.perf_ghz[k],
+                world.fleet.bw_mhz[k],
+                world.psize[k],
+                &world.cfg.comm,
+            );
+            if !c.is_finite() {
+                return Err(DegenerateProfileError {
+                    client: k,
+                    completion: c,
+                    perf_ghz: world.fleet.perf_ghz[k],
+                    bw_mhz: world.fleet.bw_mhz[k],
+                }
+                .into());
             }
-        })
-        .collect();
+            c
+        };
+        fates.push(ClientFate {
+            client: k,
+            region: world.topo.region_of[k],
+            dropped,
+            completion,
+        });
+    }
     apply_relay(world, &mut fates);
-    fates
+    Ok(fates)
 }
 
 /// The relay post-pass (contract point 7): per region, the slowest
@@ -691,8 +829,7 @@ pub(crate) fn apply_relay(world: &World, fates: &mut [ClientFate]) {
         ranked.sort_by(|&a, &b| {
             fates[b]
                 .completion
-                .partial_cmp(&fates[a].completion)
-                .expect("survivor completions are finite")
+                .total_cmp(&fates[a].completion)
                 .then(fates[a].client.cmp(&fates[b].client))
         });
         let (weak, strong) = ranked.split_at(n_weak);
@@ -701,14 +838,13 @@ pub(crate) fn apply_relay(world: &World, fates: &mut [ClientFate]) {
         strong.sort_by(|&a, &b| {
             fates[a]
                 .completion
-                .partial_cmp(&fates[b].completion)
-                .expect("survivor completions are finite")
+                .total_cmp(&fates[b].completion)
                 .then(fates[a].client.cmp(&fates[b].client))
         });
         for (i, &w) in weak.iter().enumerate() {
             let s = strong[i % strong.len()];
-            let bps_w = world.tm.effective_bps(&world.profiles[fates[w].client]);
-            let bps_s = world.tm.effective_bps(&world.profiles[fates[s].client]);
+            let bps_w = world.tm.effective_bps_of(world.fleet.bw_mhz[fates[w].client]);
+            let bps_s = world.tm.effective_bps_of(world.fleet.bw_mhz[fates[s].client]);
             let handoff = fates[w].completion - upload_bits / bps_w;
             let relay_done =
                 fates[s].completion.max(handoff) + 2.0 * upload_bits / bps_s;
@@ -750,7 +886,7 @@ pub(crate) fn resolve_cutoff(
                 .filter(|f| !f.dropped)
                 .map(|f| f.completion)
                 .collect();
-            completions.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            completions.sort_unstable_by(f64::total_cmp);
             let (cut, met) = if completions.len() >= q && completions[q - 1] <= tm.t_lim {
                 (completions[q - 1], true)
             } else {
@@ -801,14 +937,14 @@ pub(crate) fn resolve_cutoff(
 pub(crate) fn charge_energy(world: &World, fates: &[ClientFate], cuts: &[f64]) -> f64 {
     let mut total = 0.0;
     for f in fates {
-        let p = &world.profiles[f.client];
-        let psize = world.data.partitions[f.client].len() as f64;
+        let p = world.fleet.profile(f.client);
+        let psize = world.psize[f.client];
         let spend = if f.dropped {
-            world.em.aborted_round(p, &world.tm, psize).total_j()
+            world.em.aborted_round(&p, &world.tm, psize).total_j()
         } else {
             let full = world
                 .em
-                .full_round_with(p, &world.tm, psize, &world.cfg.comm)
+                .full_round_with(&p, &world.tm, psize, &world.cfg.comm)
                 .total_j();
             let cut = cuts[f.region];
             if f.completion <= cut {
@@ -1057,4 +1193,103 @@ pub fn run_resumable(
         summary,
         rounds: st.rounds,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::churn::FaultEvent;
+
+    fn world() -> World {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.n_clients = 24;
+        cfg.n_edges = 3;
+        World::build(cfg).unwrap()
+    }
+
+    /// The historical implementation: full sort, then truncate. The
+    /// partial-selection rewrite must produce identical ranks.
+    fn full_sort_reference(w: &World, cands: &[usize], count: usize) -> Vec<usize> {
+        let mut ranked: Vec<(f64, usize)> = cands
+            .iter()
+            .map(|&k| {
+                let p = w.fleet.profile(k);
+                (w.tm.completion_with(&p, w.psize[k], &w.cfg.comm), k)
+            })
+            .collect();
+        ranked.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ranked.truncate(count);
+        ranked.into_iter().map(|(_, k)| k).collect()
+    }
+
+    #[test]
+    fn fastest_first_matches_full_sort_rank() {
+        let w = world();
+        let all: Vec<usize> = (0..w.topo.n_clients()).collect();
+        for count in [0usize, 1, 5, 12, 23, 24, 30] {
+            assert_eq!(
+                fastest_first(&w, all.iter().copied(), count),
+                full_sort_reference(&w, &all, count),
+                "count={count}"
+            );
+        }
+        for r in 0..w.topo.n_regions() {
+            let cs = &w.topo.regions[r];
+            assert_eq!(
+                fastest_first(&w, cs.iter().copied(), 3),
+                full_sort_reference(&w, cs, 3),
+                "region {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_profile_surfaces_typed_error() {
+        let mut w = world();
+        // Zero compute → infinite training time; zero bandwidth → infinite
+        // upload. Both must surface as the typed error, not a panic.
+        for (client, zero_perf) in [(3usize, true), (4usize, false)] {
+            if zero_perf {
+                w.fleet.perf_ghz[client] = 0.0;
+            } else {
+                w.fleet.bw_mhz[client] = 0.0;
+            }
+            w.fleet.dropout_p[client] = 0.0; // guarantee a survival draw
+            let err = draw_fates(&w, 1, &[client], None, &mut Rng::new(7)).unwrap_err();
+            let d = err
+                .downcast_ref::<DegenerateProfileError>()
+                .expect("typed DegenerateProfileError");
+            assert_eq!(d.client, client);
+            assert!(!d.completion.is_finite());
+        }
+    }
+
+    #[test]
+    fn avail_cache_tracks_churn_exactly() {
+        let mut cfg = ExperimentConfig::task1_scaled();
+        cfg.n_clients = 24;
+        cfg.n_edges = 3;
+        cfg.churn = ChurnModel::FaultScript {
+            events: vec![
+                FaultEvent::RegionBlackout {
+                    region: 1,
+                    from_round: 2,
+                    until_round: 4,
+                },
+                FaultEvent::DropoutShift {
+                    region: Some(0),
+                    at_round: 3,
+                    delta: 0.3,
+                },
+            ],
+        };
+        let mut w = World::build(cfg).unwrap();
+        for t in 1..=6 {
+            step_world(&mut w, t);
+            let eager: Vec<f64> = (0..w.topo.n_regions())
+                .map(|r| region_avail(&w.topo, &w.fleet, r))
+                .collect();
+            assert_eq!(w.avail, eager, "cached avail diverged at round {t}");
+        }
+    }
 }

@@ -12,15 +12,24 @@
 //! per-region [`RegionAccumulator`]s one at a time, in completion-time
 //! order with a stable client-id tie-break — the deterministic image of
 //! the live backend's arrival order. At no point does the environment
-//! hold more than one trained model plus the O(regions) accumulators.
+//! hold more than one trained model per worker plus the O(regions)
+//! accumulators.
+//!
+//! When the round qualifies (mock engine, no error-feedback codec,
+//! enough survivors), the per-region train→fold work fans out across
+//! scoped worker threads. Folds never cross regions and within-region
+//! order is preserved, so the parallel round is byte-identical to the
+//! serial one — pinned by test, and forceable off via
+//! [`VirtualClockEnv::set_serial_fold`].
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::aggregation::StreamingAggregator;
+use crate::aggregation::{RegionAccumulator, StreamingAggregator};
 use crate::churn::{ChurnState, FateTrace};
-use crate::comm::{CommState, EncodeCtx, COMM_STREAM};
-use crate::config::ExperimentConfig;
+use crate::comm::{CommConfig, CommState, EncodeCtx, COMM_STREAM};
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::data::FederatedData;
 use crate::env::{
     charge_energy, draw_fates, draw_selection, ground_truth_avail, oracle_drop_table,
     record_fates, region_histogram, resolve_cutoff, step_world, ClientFate, CutoffPolicy,
@@ -32,15 +41,25 @@ use crate::runtime::{build_engine, Engine, EvalResult};
 use crate::timing::TimingModel;
 use crate::Result;
 
+/// Below this many in-time survivors a round folds serially — the
+/// thread-spawn overhead would dominate.
+const MIN_PARALLEL_SURVIVORS: usize = 8;
+
 pub struct VirtualClockEnv {
     world: World,
     engine: Box<dyn Engine>,
     region_data: Vec<f64>,
-    /// Per-client error-feedback residuals (`topk+ef` only). Raw vectors,
-    /// deliberately outside the `ModelParams` arena accounting: they are
-    /// device-side state, not in-flight models, and only clients that have
-    /// actually submitted under `+ef` hold one.
-    residuals: BTreeMap<usize, Vec<f32>>,
+    /// Per-client error-feedback residuals (`topk+ef` only), shared by
+    /// `Arc` so a checkpoint snapshots them by reference instead of
+    /// deep-cloning every vector (copy-on-write via `Arc::make_mut` when
+    /// the next round updates one). Deliberately outside the
+    /// `ModelParams` arena accounting: they are device-side state, not
+    /// in-flight models, and only clients that have actually submitted
+    /// under `+ef` hold one.
+    residuals: BTreeMap<usize, Arc<Vec<f32>>>,
+    /// Debug/test knob: force the serial fold even when the round
+    /// qualifies for the parallel per-region path.
+    serial_fold: bool,
 }
 
 impl VirtualClockEnv {
@@ -55,12 +74,26 @@ impl VirtualClockEnv {
             engine,
             region_data,
             residuals: BTreeMap::new(),
+            serial_fold: false,
         })
     }
 
     /// The timing model in effect (deadline `t_lim`, RTT, completions).
     pub fn timing(&self) -> &TimingModel {
         &self.world.tm
+    }
+
+    /// Force the serial fold path — the parallel path's byte-identity
+    /// reference (identity is pinned by test against this knob).
+    pub fn set_serial_fold(&mut self, on: bool) {
+        self.serial_fold = on;
+    }
+
+    /// Recompute the availability sweep from the fleet every round
+    /// instead of reading the incremental cache — the lazy path's
+    /// byte-identity reference.
+    pub fn set_eager_sweeps(&mut self, on: bool) {
+        self.world.eager_sweeps = on;
     }
 }
 
@@ -115,7 +148,7 @@ impl FlEnvironment for VirtualClockEnv {
         // stream, and feeds both steps so they agree on who survives.
         let oracle_drops = oracle_drop_table(&self.world, t);
         let selected = draw_selection(&self.world, &selection, oracle_drops.as_deref(), &mut rng);
-        let fates = draw_fates(&self.world, t, &selected, oracle_drops.as_deref(), &mut rng);
+        let fates = draw_fates(&self.world, t, &selected, oracle_drops.as_deref(), &mut rng)?;
         record_fates(&mut self.world, t, &fates);
 
         // Round cut per policy, then energy accounting against it.
@@ -123,76 +156,50 @@ impl FlEnvironment for VirtualClockEnv {
         let energy_j = charge_energy(&self.world, &fates, &plan.cuts);
 
         // Stream the in-time survivors: train each and fold it into its
-        // region's accumulator immediately, in completion-time order with
-        // a stable client-id tie-break (the deterministic stand-in for
-        // the live backend's arrival order). The trained model is dropped
-        // right after the fold — peak resident models stay O(regions).
+        // region's accumulator, in completion-time order with a stable
+        // client-id tie-break (the deterministic stand-in for the live
+        // backend's arrival order). The trained model is dropped right
+        // after the fold — peak resident models stay O(regions).
         let mut survivors: Vec<&ClientFate> = fates
             .iter()
             .filter(|f| !f.dropped && f.completion <= plan.cuts[f.region])
             .collect();
         survivors.sort_by(|a, b| {
             a.completion
-                .partial_cmp(&b.completion)
-                .expect("survivor completion times are finite")
+                .total_cmp(&b.completion)
                 .then(a.client.cmp(&b.client))
         });
 
-        // All regions run the same architecture, so region 0's start
-        // model provides the zeros template for every accumulator.
-        //
-        // Under a compressed codec each trained model is framed exactly as
-        // the device would frame it — delta vs the region's start model,
-        // stochastic rounding from the client's own comm stream, error
-        // feedback against its carried residual — and the frame decodes
-        // straight into the accumulator (`fold_encoded`), never through an
-        // intermediate dense model. Dense keeps the legacy fold verbatim.
         let comm = self.world.cfg.comm.clone();
-        let codec = comm.codec.codec();
-        let mut agg = StreamingAggregator::for_regions(&self.region_data, starts.for_region(0));
-        for f in survivors {
-            let indices = &self.world.data.partitions[f.client];
-            let out = self.engine.train_local(
-                starts.for_region(f.region),
-                indices,
-                self.world.cfg.local_epochs,
-                self.world.cfg.lr as f32,
-            )?;
-            if comm.codec.is_dense() {
-                agg.fold(f.region, &out.params, indices.len() as f64, out.loss)?;
-                continue;
+        let use_parallel = !self.serial_fold
+            && matches!(self.world.cfg.engine, EngineKind::Mock)
+            && !comm.codec.has_error_feedback()
+            && survivors.len() >= MIN_PARALLEL_SURVIVORS;
+        let regional = if use_parallel {
+            // Partition by region, preserving within-region completion
+            // order — the only order the per-region f32 folds depend on.
+            let mut by_region: Vec<Vec<ClientFate>> = vec![Vec::new(); m];
+            for f in &survivors {
+                by_region[f.region].push(**f);
             }
-            let start = starts.for_region(f.region);
-            let mut delta = out.params;
-            delta.axpy(-1.0, start);
-            let mut crng = rng.split(COMM_STREAM).split(f.client as u64);
-            let residual = if comm.codec.has_error_feedback() {
-                let r = self
-                    .residuals
-                    .entry(f.client)
-                    .or_insert_with(|| vec![0.0; delta.n_values()]);
-                anyhow::ensure!(
-                    r.len() == delta.n_values(),
-                    "client {} carries a residual of {} values but the model has {}",
-                    f.client,
-                    r.len(),
-                    delta.n_values()
-                );
-                Some(r)
-            } else {
-                None
-            };
-            let frame = codec.encode(&delta, &mut EncodeCtx { rng: &mut crng, residual });
-            agg.fold_encoded(f.region, start, &frame, indices.len() as f64, out.loss)?;
-        }
+            fold_regions_parallel(
+                &self.world.cfg,
+                &self.world.data,
+                &self.region_data,
+                &by_region,
+                starts,
+                &rng,
+                &comm,
+            )?
+        } else {
+            self.fold_serial(&survivors, starts, &rng, &comm)?
+        };
 
         let selected_h = region_histogram(m, fates.iter().map(|f| f.region));
         let alive = region_histogram(m, fates.iter().filter(|f| !f.dropped).map(|f| f.region));
-        let regional = agg.into_regions();
         let submissions: Vec<usize> = regional.iter().map(|r| r.count()).collect();
         let folded: usize = submissions.iter().sum();
-        let bytes_moved =
-            folded as u64 * comm.codec.wire_bytes(self.world.tm.n_model_values());
+        let bytes_moved = folded as u64 * comm.codec.wire_bytes(self.world.tm.n_model_values());
         let avail = ground_truth_avail(&self.world, &fates);
 
         Ok(RoundOutcome {
@@ -232,11 +239,14 @@ impl FlEnvironment for VirtualClockEnv {
         if self.residuals.is_empty() {
             CommState::Stateless
         } else {
+            // O(clients) Arc bumps — no residual vector is copied here,
+            // so checkpointing a large `topk+ef` run never transiently
+            // doubles residual memory (pinned by test).
             CommState::Residuals {
                 clients: self
                     .residuals
                     .iter()
-                    .map(|(k, v)| (*k, v.clone()))
+                    .map(|(k, v)| (*k, Arc::clone(v)))
                     .collect(),
             }
         }
@@ -268,4 +278,170 @@ impl FlEnvironment for VirtualClockEnv {
     fn take_fate_trace(&mut self) -> Option<FateTrace> {
         self.world.recorder.take()
     }
+}
+
+impl VirtualClockEnv {
+    /// The serial fold: the historical single-threaded streaming loop in
+    /// global completion order, and the only path that services
+    /// error-feedback codecs (per-client residuals are sequential state)
+    /// and non-mock engines (one engine instance per run).
+    fn fold_serial(
+        &mut self,
+        survivors: &[&ClientFate],
+        starts: Starts<'_>,
+        rng: &Rng,
+        comm: &CommConfig,
+    ) -> Result<Vec<RegionAccumulator>> {
+        // All regions run the same architecture, so region 0's start
+        // model provides the zeros template for every accumulator.
+        //
+        // Under a compressed codec each trained model is framed exactly as
+        // the device would frame it — delta vs the region's start model,
+        // stochastic rounding from the client's own comm stream, error
+        // feedback against its carried residual — and the frame decodes
+        // straight into the accumulator (`fold_encoded`), never through an
+        // intermediate dense model. Dense keeps the legacy fold verbatim.
+        let codec = comm.codec.codec();
+        let mut agg = StreamingAggregator::for_regions(&self.region_data, starts.for_region(0));
+        for f in survivors {
+            let indices = &self.world.data.partitions[f.client];
+            let out = self.engine.train_local(
+                starts.for_region(f.region),
+                indices,
+                self.world.cfg.local_epochs,
+                self.world.cfg.lr as f32,
+            )?;
+            if comm.codec.is_dense() {
+                agg.fold(f.region, &out.params, indices.len() as f64, out.loss)?;
+                continue;
+            }
+            let start = starts.for_region(f.region);
+            let mut delta = out.params;
+            delta.axpy(-1.0, start);
+            let mut crng = rng.split(COMM_STREAM).split(f.client as u64);
+            let residual = if comm.codec.has_error_feedback() {
+                let r = self
+                    .residuals
+                    .entry(f.client)
+                    .or_insert_with(|| Arc::new(vec![0.0; delta.n_values()]));
+                anyhow::ensure!(
+                    r.len() == delta.n_values(),
+                    "client {} carries a residual of {} values but the model has {}",
+                    f.client,
+                    r.len(),
+                    delta.n_values()
+                );
+                Some(Arc::make_mut(r))
+            } else {
+                None
+            };
+            let frame = codec.encode(&delta, &mut EncodeCtx { rng: &mut crng, residual });
+            agg.fold_encoded(f.region, start, &frame, indices.len() as f64, out.loss)?;
+        }
+        Ok(agg.into_regions())
+    }
+}
+
+/// Fan the per-region train→fold work out across scoped worker threads,
+/// regions chunked contiguously over up to `available_parallelism`
+/// workers.
+///
+/// Byte-identical to [`VirtualClockEnv::fold_serial`] because (a) a fold
+/// only ever touches its own region's accumulator, and within-region
+/// completion order — the only order the f32 accumulation depends on — is
+/// preserved by the partition; (b) the mock engine is a pure function of
+/// its training inputs, and each worker builds its own instance; (c) each
+/// client's comm substream is derived by *splitting* (never advancing)
+/// the round RNG, so the draws are independent of scheduling. Pinned by
+/// the parallel-vs-serial identity tests.
+fn fold_regions_parallel(
+    cfg: &ExperimentConfig,
+    data: &Arc<FederatedData>,
+    region_data: &[f64],
+    by_region: &[Vec<ClientFate>],
+    starts: Starts<'_>,
+    rng: &Rng,
+    comm: &CommConfig,
+) -> Result<Vec<RegionAccumulator>> {
+    let m = by_region.len();
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, m);
+    let chunk = m.div_ceil(workers);
+    let chunk_results: Vec<Result<Vec<RegionAccumulator>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let lo = (w * chunk).min(m);
+                let hi = (lo + chunk).min(m);
+                s.spawn(move || -> Result<Vec<RegionAccumulator>> {
+                    let mut engine = build_engine(cfg, Arc::clone(data))?;
+                    (lo..hi)
+                        .map(|r| {
+                            fold_one_region(
+                                engine.as_mut(),
+                                cfg,
+                                data.as_ref(),
+                                comm,
+                                rng,
+                                r,
+                                region_data[r],
+                                starts.for_region(r),
+                                &by_region[r],
+                            )
+                        })
+                        .collect()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("region fold worker panicked"))
+            .collect()
+    });
+    let mut out = Vec::with_capacity(m);
+    for res in chunk_results {
+        out.extend(res?);
+    }
+    Ok(out)
+}
+
+/// One region's train→fold loop, in the given (completion-order) survivor
+/// order — the unit of work a fold worker executes. Error-feedback codecs
+/// never reach this path (gated in `run_round`), so no residual state is
+/// threaded through.
+#[allow(clippy::too_many_arguments)]
+fn fold_one_region(
+    engine: &mut dyn Engine,
+    cfg: &ExperimentConfig,
+    data: &FederatedData,
+    comm: &CommConfig,
+    rng: &Rng,
+    r: usize,
+    region_data: f64,
+    start: &ModelParams,
+    survivors: &[ClientFate],
+) -> Result<RegionAccumulator> {
+    let codec = comm.codec.codec();
+    let mut acc = RegionAccumulator::new(r, region_data, start);
+    for f in survivors {
+        let indices = &data.partitions[f.client];
+        let out = engine.train_local(start, indices, cfg.local_epochs, cfg.lr as f32)?;
+        if comm.codec.is_dense() {
+            acc.fold(&out.params, indices.len() as f64, out.loss)?;
+            continue;
+        }
+        let mut delta = out.params;
+        delta.axpy(-1.0, start);
+        let mut crng = rng.split(COMM_STREAM).split(f.client as u64);
+        let frame = codec.encode(
+            &delta,
+            &mut EncodeCtx {
+                rng: &mut crng,
+                residual: None,
+            },
+        );
+        acc.fold_encoded(start, &frame, indices.len() as f64, out.loss)?;
+    }
+    Ok(acc)
 }

@@ -217,6 +217,19 @@
 //! guarantee: a compressed frame decodes **into** the accumulator
 //! ([`aggregation::RegionAccumulator::fold_encoded`]) without ever
 //! materializing an intermediate dense model.
+//!
+//! The *fleet* side scales the same way: device parameters live in a
+//! struct-of-arrays [`devices::FleetState`] (flat `f64` arrays indexed by
+//! client id) rather than a `Vec` of profile structs, per-round fate and
+//! selection draws touch only the **selected** clients (sparse
+//! Fisher–Yates in [`rng::Rng::sample_indices`], byte-identical to the
+//! dense shuffle), churn resets rewrite only the regions the round's
+//! events touched ([`churn::Touched`]), and the virtual clock fans the
+//! per-region train→fold work across scoped worker threads when the
+//! engine permits — so a round's cost tracks O(selected + regions), and
+//! a **million-client** fleet completes rounds in seconds within a flat
+//! memory ceiling (see `tests/scale_identity.rs` for the byte-identity
+//! pins and `benches/scale_fleet.rs` for the 100k/500k/1M ladder).
 
 pub mod aggregation;
 pub mod benchkit;

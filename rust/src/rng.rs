@@ -173,7 +173,29 @@ impl Rng {
     /// Sample `k` distinct items from `0..n` (partial Fisher–Yates). The
     /// paper's client selection step draws `C_r(t) · n_r` clients uniformly
     /// without replacement.
+    ///
+    /// Dispatches between two byte-identical implementations: the dense
+    /// materialized shuffle ([`Self::sample_indices_dense`]) and, when
+    /// `k ≪ n`, a sparse O(k) variant ([`Self::sample_indices_sparse`])
+    /// that never allocates the `0..n` array — at million-client fleet
+    /// sizes the selection draw stops scaling with the fleet. Both consume
+    /// the identical [`Self::below`] draws and return the identical
+    /// output, so seeded runs do not depend on which one ran.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        // Crossover: the sparse path pays hashing per draw, the dense path
+        // pays an O(n) allocation + writes. Well before k ~ n/8 the dense
+        // path has amortized its allocation.
+        if k.saturating_mul(8) < n {
+            self.sample_indices_sparse(n, k)
+        } else {
+            self.sample_indices_dense(n, k)
+        }
+    }
+
+    /// [`Self::sample_indices`], always via the materialized partial
+    /// Fisher–Yates over an explicit `0..n` array. O(n) time and memory.
+    pub fn sample_indices_dense(&mut self, n: usize, k: usize) -> Vec<usize> {
         let k = k.min(n);
         let mut idx: Vec<usize> = (0..n).collect();
         for i in 0..k {
@@ -182,6 +204,29 @@ impl Rng {
         }
         idx.truncate(k);
         idx
+    }
+
+    /// [`Self::sample_indices`] in O(k) time and memory: simulates the
+    /// partial Fisher–Yates against a *virtual* identity array, recording
+    /// only displaced entries in a hash map. Draw `i` swaps virtual
+    /// positions `i` and `j = i + below(n−i)`; since every later draw
+    /// reads positions `≥ i+1` only, it suffices to emit the value at `j`
+    /// and stash the value displaced from `i` into `j`'s slot. The
+    /// `below` draws — and therefore the output — are byte-identical to
+    /// the dense variant for every `(state, n, k)`.
+    pub fn sample_indices_sparse(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut displaced: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            let v_j = displaced.get(&j).copied().unwrap_or(j);
+            let v_i = displaced.get(&i).copied().unwrap_or(i);
+            displaced.insert(j, v_i);
+            out.push(v_j);
+        }
+        out
     }
 }
 
@@ -286,6 +331,48 @@ mod tests {
     fn sample_indices_k_exceeding_n_caps() {
         let mut r = Rng::new(1);
         assert_eq!(r.sample_indices(4, 10).len(), 4);
+        assert_eq!(r.sample_indices_sparse(4, 10).len(), 4);
+    }
+
+    #[test]
+    fn sparse_sampling_is_byte_identical_to_dense() {
+        // Lazy fate sampling leans on this: for every (seed, n, k) the
+        // sparse simulation must consume the same `below` draws and emit
+        // the same indices as the materialized shuffle, leaving the RNG
+        // in the same state.
+        for seed in [0u64, 7, 42, 0xDEAD_BEEF] {
+            for &(n, k) in &[
+                (1usize, 0usize),
+                (1, 1),
+                (25, 3),
+                (25, 25),
+                (100, 1),
+                (100, 99),
+                (1000, 8),
+                (1000, 1000),
+                (4, 10), // k > n caps at n
+            ] {
+                let mut dense = Rng::new(seed);
+                let mut sparse = Rng::new(seed);
+                assert_eq!(
+                    dense.sample_indices_dense(n, k),
+                    sparse.sample_indices_sparse(n, k),
+                    "n={n} k={k} seed={seed}"
+                );
+                assert_eq!(dense.next_u64(), sparse.next_u64(), "post-state n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn sample_indices_dispatch_matches_dense_across_threshold() {
+        // The public entry point picks an implementation by k/n ratio;
+        // both sides of the crossover must agree with the dense reference.
+        for &(n, k) in &[(1000usize, 8usize), (1000, 200), (1000, 999)] {
+            let mut a = Rng::new(99);
+            let mut b = Rng::new(99);
+            assert_eq!(a.sample_indices(n, k), b.sample_indices_dense(n, k));
+        }
     }
 
     #[test]

@@ -71,6 +71,8 @@ pub struct Scenario {
     resume_from: Option<PathBuf>,
     snapshot_codec: CodecKind,
     record_fates: Option<PathBuf>,
+    serial_fold: bool,
+    eager_sweeps: bool,
 }
 
 impl Scenario {
@@ -89,6 +91,8 @@ impl Scenario {
             resume_from: None,
             snapshot_codec: CodecKind::Binary,
             record_fates: None,
+            serial_fold: false,
+            eager_sweeps: false,
         }
     }
 
@@ -282,6 +286,27 @@ impl Scenario {
         self
     }
 
+    /// Force the virtual clock's serial fold path even when a round
+    /// qualifies for the parallel per-region fold. Debug/verification
+    /// knob — the two paths are byte-identical by contract (pinned in
+    /// `tests/scale_identity.rs`), so this only trades wall-clock for a
+    /// single-threaded execution. Not part of the experiment config:
+    /// snapshots from either path are interchangeable.
+    pub fn serial_fold(mut self, on: bool) -> Scenario {
+        self.serial_fold = on;
+        self
+    }
+
+    /// Recompute the virtual clock's availability sweep from the full
+    /// fleet every round instead of reading the incremental cache.
+    /// Debug/verification knob — the lazy cache is byte-identical by
+    /// contract (pinned in `tests/scale_identity.rs`). Not part of the
+    /// experiment config.
+    pub fn eager_sweeps(mut self, on: bool) -> Scenario {
+        self.eager_sweeps = on;
+        self
+    }
+
     // --- checkpoint / resume ------------------------------------------------
 
     /// Write a [`RunSnapshot`] into `dir` at round boundaries (every
@@ -346,7 +371,12 @@ impl Scenario {
 
         let backend = self.backend;
         let mut env: Box<dyn FlEnvironment> = match backend {
-            Backend::Sim => Box::new(VirtualClockEnv::new(self.cfg.clone())?),
+            Backend::Sim => {
+                let mut env = VirtualClockEnv::new(self.cfg.clone())?;
+                env.set_serial_fold(self.serial_fold);
+                env.set_eager_sweeps(self.eager_sweeps);
+                Box::new(env)
+            }
             Backend::Live => Box::new(LiveClusterEnv::new(self.cfg.clone(), self.time_scale)?),
         };
         let mut protocol = protocol_for(env.as_ref());

@@ -112,6 +112,12 @@ impl SelectorKind {
 /// Uniformly select `count` clients (without replacement) from a region's
 /// client list — the pick rule of the `slack` and `random` selectors, for
 /// every protocol.
+///
+/// Cost is O(count) when the draw is sparse relative to the region
+/// (`Rng::sample_indices` dispatches to the hash-simulated Fisher–Yates),
+/// so selecting a few hundred clients from a million-client region never
+/// materializes the region-sized index pool. The draws are byte-identical
+/// to the dense shuffle either way (pinned in `rng` and below).
 pub fn select_clients(region_clients: &[usize], count: usize, rng: &mut Rng) -> Vec<usize> {
     rng.sample_indices(region_clients.len(), count)
         .into_iter()
@@ -347,6 +353,23 @@ mod tests {
             s.dedup();
             assert_eq!(s.len(), 3);
             assert!(sel.iter().all(|c| clients.contains(c)));
+        }
+    }
+
+    /// A sparse draw (few clients from a huge region) must pick the exact
+    /// clients the dense reference implementation would — the selection
+    /// layer's half of the lazy-sampling byte-identity pin.
+    #[test]
+    fn sparse_region_draw_matches_dense_reference() {
+        let clients: Vec<usize> = (0..100_000).map(|k| k * 2 + 1).collect();
+        for seed in [0u64, 9, 77] {
+            let sel = select_clients(&clients, 40, &mut Rng::new(seed));
+            let dense: Vec<usize> = Rng::new(seed)
+                .sample_indices_dense(clients.len(), 40)
+                .into_iter()
+                .map(|i| clients[i])
+                .collect();
+            assert_eq!(sel, dense, "seed {seed}");
         }
     }
 

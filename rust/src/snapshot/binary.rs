@@ -281,7 +281,7 @@ fn read_comm(r: &mut Reader<'_>) -> Result<CommState, SnapshotError> {
                 .map(|_| {
                     let client = r.u64()? as usize;
                     let len = r.u64()? as usize;
-                    Ok((client, r.f32s(len)?))
+                    Ok((client, std::sync::Arc::new(r.f32s(len)?)))
                 })
                 .collect::<Result<_, SnapshotError>>()?;
             Ok(CommState::Residuals { clients })

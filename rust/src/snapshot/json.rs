@@ -446,7 +446,7 @@ fn comm_from_json(j: &Json) -> Result<CommState, SnapshotError> {
                 .map(|entry| {
                     let e = as_obj(entry, "comm client")?;
                     let client = req_usize(e, "client")?;
-                    let residual = match req(e, "residual")? {
+                    let residual: Vec<f32> = match req(e, "residual")? {
                         Json::Arr(v) => v
                             .iter()
                             .map(|x| f64_of(x, "residual").map(|f| f as f32))
@@ -457,7 +457,7 @@ fn comm_from_json(j: &Json) -> Result<CommState, SnapshotError> {
                             ))
                         }
                     };
-                    Ok((client, residual))
+                    Ok((client, std::sync::Arc::new(residual)))
                 })
                 .collect::<Result<_, SnapshotError>>()?,
         }),

@@ -60,15 +60,29 @@ impl TimingModel {
         tm
     }
 
+    /// Effective wireless bitrate (bits/s) for a `bw_mhz` MHz channel:
+    /// Shannon capacity. Scalar form for the struct-of-arrays hot paths
+    /// (`FleetState` sweeps read `bw_mhz[k]` straight off the flat array);
+    /// the expression is exactly [`Self::effective_bps`]'s, so both forms
+    /// are bit-identical.
+    pub fn effective_bps_of(&self, bw_mhz: f64) -> f64 {
+        bw_mhz * 1.0e6 * self.spectral_eff
+    }
+
     /// Effective wireless bitrate for a client (bits/s): Shannon capacity
     /// of its `bw_k` MHz channel.
     pub fn effective_bps(&self, p: &ClientProfile) -> f64 {
-        p.bw_mhz * 1.0e6 * self.spectral_eff
+        self.effective_bps_of(p.bw_mhz)
+    }
+
+    /// Eq. (33), scalar form (see [`Self::effective_bps_of`]).
+    pub fn t_comm_of(&self, bw_mhz: f64) -> f64 {
+        3.0 * self.msize_bits / self.effective_bps_of(bw_mhz)
     }
 
     /// Eq. (33): download + 2× upload of the model.
     pub fn t_comm(&self, p: &ClientProfile) -> f64 {
-        3.0 * self.msize_bits / self.effective_bps(p)
+        self.t_comm_of(p.bw_mhz)
     }
 
     /// Number of f32 parameters in the model the config describes —
@@ -88,15 +102,25 @@ impl TimingModel {
     /// — `3·msize/bps`, not `(msize + 2·msize)/bps` — so default-config
     /// runs stay bit-identical to the pre-codec seed.
     pub fn t_comm_with(&self, p: &ClientProfile, comm: &CommConfig) -> f64 {
+        self.t_comm_with_of(p.bw_mhz, comm)
+    }
+
+    /// [`Self::t_comm_with`], scalar form (see [`Self::effective_bps_of`]).
+    pub fn t_comm_with_of(&self, bw_mhz: f64, comm: &CommConfig) -> f64 {
         if comm.codec.is_dense() {
-            return self.t_comm(p);
+            return self.t_comm_of(bw_mhz);
         }
-        (self.msize_bits + 2.0 * self.upload_bits(comm)) / self.effective_bps(p)
+        (self.msize_bits + 2.0 * self.upload_bits(comm)) / self.effective_bps_of(bw_mhz)
+    }
+
+    /// Eq. (34), scalar form (see [`Self::effective_bps_of`]).
+    pub fn t_train_of(&self, perf_ghz: f64, partition_size: f64) -> f64 {
+        partition_size * self.tau * self.cycles_per_sample_epoch / (perf_ghz * 1.0e9)
     }
 
     /// Eq. (34): τ full-batch GD epochs over `|D_k|` samples.
     pub fn t_train(&self, p: &ClientProfile, partition_size: f64) -> f64 {
-        partition_size * self.tau * self.cycles_per_sample_epoch / (p.perf_ghz * 1.0e9)
+        self.t_train_of(p.perf_ghz, partition_size)
     }
 
     /// Completion time of a client that does not drop out: communication
@@ -113,7 +137,20 @@ impl TimingModel {
         partition_size: f64,
         comm: &CommConfig,
     ) -> f64 {
-        self.t_comm_with(p, comm) + self.t_train(p, partition_size)
+        self.completion_with_of(p.perf_ghz, p.bw_mhz, partition_size, comm)
+    }
+
+    /// [`Self::completion_with`], scalar form — the `FleetState` ranking
+    /// and fate hot paths feed `perf_ghz[k]` / `bw_mhz[k]` straight from
+    /// the flat arrays.
+    pub fn completion_with_of(
+        &self,
+        perf_ghz: f64,
+        bw_mhz: f64,
+        partition_size: f64,
+        comm: &CommConfig,
+    ) -> f64 {
+        self.t_comm_with_of(bw_mhz, comm) + self.t_train_of(perf_ghz, partition_size)
     }
 }
 
@@ -207,6 +244,41 @@ mod tests {
         let f16 = crate::comm::CommConfig::parse_spec("f16").unwrap();
         let expect = 2.0 * 40.0e6 / tm.effective_bps(&p);
         assert!((tm.t_comm_with(&p, &f16) - expect).abs() < 1e-9);
+    }
+
+    /// The scalar (`*_of`) forms are what the SoA hot paths call; they
+    /// must be bit-identical to the profile forms, not merely close.
+    #[test]
+    fn scalar_forms_are_bit_identical_to_profile_forms() {
+        let cfg = ExperimentConfig::task1_paper();
+        let tm = TimingModel::new(&cfg);
+        let topk = crate::comm::CommConfig::parse_spec("topk:0.05+ef").unwrap();
+        let dense = crate::comm::CommConfig::default();
+        for p in [
+            avg_profile(&cfg),
+            ClientProfile { perf_ghz: 0.31, bw_mhz: 0.77, dropout_p: 0.4 },
+            ClientProfile { perf_ghz: 1.9, bw_mhz: 0.08, dropout_p: 0.0 },
+        ] {
+            assert_eq!(
+                tm.effective_bps(&p).to_bits(),
+                tm.effective_bps_of(p.bw_mhz).to_bits()
+            );
+            assert_eq!(tm.t_comm(&p).to_bits(), tm.t_comm_of(p.bw_mhz).to_bits());
+            assert_eq!(
+                tm.t_train(&p, 117.0).to_bits(),
+                tm.t_train_of(p.perf_ghz, 117.0).to_bits()
+            );
+            for comm in [&dense, &topk] {
+                assert_eq!(
+                    tm.t_comm_with(&p, comm).to_bits(),
+                    tm.t_comm_with_of(p.bw_mhz, comm).to_bits()
+                );
+                assert_eq!(
+                    tm.completion_with(&p, 117.0, comm).to_bits(),
+                    tm.completion_with_of(p.perf_ghz, p.bw_mhz, 117.0, comm).to_bits()
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,12 +1,17 @@
-//! Large-fleet smoke: a 50k-client HybridFL scenario on the virtual clock
-//! with a tiny (mock) model, proving the streaming data plane keeps peak
-//! resident model state O(regions) while thousands of clients submit per
-//! round. Ignored by default (it builds a 300k-sample corpus and runs
-//! ~45k client-rounds); run with:
+//! Large-fleet smoke: 50k- and 1M-client HybridFL scenarios on the
+//! virtual clock with a tiny (mock) model, proving the streaming data
+//! plane keeps peak resident model state O(regions) — and, at the 1M
+//! cell, that whole-process memory stays bounded (`VmHWM` ceiling) while
+//! hundreds of thousands of clients are selected per round. Ignored by
+//! default; run with:
 //!
 //! ```text
-//! cargo test --release --test large_fleet -- --ignored
+//! cargo test --release --test large_fleet -- --ignored --test-threads=1
 //! ```
+//!
+//! Single-threaded matters twice: the arena counters are process-global,
+//! and `VmHWM` is a process-lifetime high-water mark, so the million
+//! cell's name sorts after the 50k cells to keep the ceiling meaningful.
 //!
 //! The memory claim is checked with the arena instrumentation in
 //! `hybridfl::model`: every live `ModelParams` allocation (not handle)
@@ -148,4 +153,91 @@ fn fifty_thousand_clients_topk_ef_keeps_flat_model_memory() {
         "compressed-fold peak resident model arenas {resident} should be \
          O(regions={M}), not O(submissions)"
     );
+}
+
+/// The million-client cell: one full HybridFL round over a 1M-client,
+/// 16-region fleet. Beyond the O(regions) arena bar, this pins a hard
+/// whole-process memory ceiling: the SoA fleet, lazy fate draws and
+/// O(dirty) dynamics keep per-round state proportional to the *selected*
+/// set, so the process must fit comfortably in a few GiB — an
+/// accidentally revived O(n)-per-round allocation (eager fate vectors, a
+/// fleet-wide sort, a profile clone per sweep) shows up here first.
+#[test]
+#[ignore = "million-client round (~1M clients); run with --ignored --release --test-threads=1"]
+fn million_clients_complete_a_round_within_memory_ceiling() {
+    let mut cfg = fleet_cfg();
+    cfg.n_clients = 1_000_000;
+    cfg.n_edges = 16;
+    cfg.dataset_size = 2_000_000; // 2 samples per client
+    cfg.t_max = 1;
+
+    model::reset_arena_peak();
+    let baseline = model::arena_count();
+    let result = Scenario::from_config(cfg.clone()).run().unwrap();
+    let peak = model::arena_peak();
+
+    assert_eq!(result.rounds.len(), 1);
+    let subs: usize = result.rounds[0].submissions.iter().sum();
+    assert!(
+        subs >= 100_000,
+        "expected ~C·n submissions at 1M clients, got {subs}"
+    );
+
+    let resident = peak - baseline;
+    assert!(
+        resident < 16 * 16 + 64,
+        "peak resident model arenas {resident} should be O(regions), \
+         independent of the 1M fleet"
+    );
+
+    // VmHWM covers everything this process ever held — corpus,
+    // partitions, fleet arrays, the round's transients, and the smaller
+    // cells that ran before this one. The structures above total well
+    // under 1 GiB; 4 GiB of headroom means "no O(n) blow-up", not a
+    // tight fit.
+    if let Some(rss) = hybridfl::benchkit::peak_rss_bytes() {
+        let ceiling = 4 * 1024 * 1024 * 1024u64;
+        assert!(
+            rss < ceiling,
+            "peak RSS {} MiB exceeds the {} MiB million-client ceiling",
+            rss / (1024 * 1024),
+            ceiling / (1024 * 1024)
+        );
+    }
+}
+
+/// Checkpointing must not deep-clone error-feedback residuals: the
+/// snapshot shares each residual vector with the environment by `Arc`
+/// (pointer equality, not just value equality), so `comm_state()` on a
+/// 50k-client `topk+ef` run is O(clients) refcount bumps rather than a
+/// transient doubling of residual memory. Small fleet — the sharing
+/// property is scale-independent, so this runs in tier-1.
+#[test]
+fn comm_state_snapshots_share_residuals_by_reference() {
+    use hybridfl::comm::CommState;
+    use hybridfl::env::{run_to_completion, FlEnvironment, VirtualClockEnv};
+    use hybridfl::protocols::protocol_for;
+
+    let mut cfg = fleet_cfg();
+    cfg.n_clients = 24;
+    cfg.n_edges = 3;
+    cfg.dataset_size = 240;
+    cfg.comm = hybridfl::comm::CommConfig::parse_spec("topk:0.25+ef").unwrap();
+
+    let mut env = VirtualClockEnv::new(cfg).unwrap();
+    let mut protocol = protocol_for(&env);
+    run_to_completion(&mut env, protocol.as_mut()).unwrap();
+
+    let (a, b) = (env.comm_state(), env.comm_state());
+    let (CommState::Residuals { clients: a }, CommState::Residuals { clients: b }) = (a, b) else {
+        panic!("a topk+ef run must carry residual state after 3 rounds");
+    };
+    assert!(!a.is_empty());
+    for ((ka, ra), (kb, rb)) in a.iter().zip(&b) {
+        assert_eq!(ka, kb);
+        assert!(
+            std::sync::Arc::ptr_eq(ra, rb),
+            "client {ka}: snapshot cloned the residual instead of sharing it"
+        );
+    }
 }

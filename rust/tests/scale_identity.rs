@@ -1,0 +1,171 @@
+//! The fleet-scale data plane's acceptance bar: every fast path the
+//! virtual clock grew for million-client rounds — lazy fate/availability
+//! sweeps, the parallel per-region fold, Arc-shared residual snapshots —
+//! must be **byte-identical** to its slow reference path on seeded runs.
+//!
+//! "Byte-identical" is literal, as in `resume_determinism`:
+//! `snapshot::run_result_bytes` serializes a `RunResult` with raw
+//! IEEE-754 bits and the encodings are compared as byte vectors. The
+//! reference paths are reachable through the `Scenario` debug knobs
+//! (`serial_fold`, `eager_sweeps`), so these tests drive the public API
+//! end to end.
+
+use hybridfl::churn::{ChurnModel, FaultEvent};
+use hybridfl::comm::CommConfig;
+use hybridfl::config::{Dist, EngineKind, ExperimentConfig, ProtocolKind};
+use hybridfl::scenario::Scenario;
+use hybridfl::snapshot::run_result_bytes;
+
+/// A fleet big enough that every round clears the parallel fold's
+/// survivor threshold on all three protocols, with real drop-outs so
+/// region partitions are non-trivial.
+fn scale_cfg(protocol: ProtocolKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::task1_scaled();
+    cfg.engine = EngineKind::Mock;
+    cfg.protocol = protocol;
+    cfg.n_clients = 48;
+    cfg.n_edges = 3;
+    cfg.dataset_size = 480;
+    cfg.eval_size = 50;
+    cfg.t_max = 6;
+    cfg.c_fraction = 0.4;
+    cfg.dropout = Dist::new(0.15, 0.05);
+    cfg.seed = 2024;
+    cfg
+}
+
+/// A pure fault script: drives the boundary-scheduled O(dirty-region)
+/// reset path (no stochastic layer forces a full-fleet rewrite).
+fn script_only() -> ChurnModel {
+    ChurnModel::FaultScript {
+        events: vec![
+            FaultEvent::RegionBlackout {
+                region: 1,
+                from_round: 2,
+                until_round: 4,
+            },
+            FaultEvent::DropoutShift {
+                region: Some(0),
+                at_round: 3,
+                delta: 0.2,
+            },
+        ],
+    }
+}
+
+/// A churn composition that exercises both the boundary-scheduled script
+/// path and the every-round stochastic (full-rewrite) path.
+fn churny() -> ChurnModel {
+    ChurnModel::Composed {
+        layers: vec![
+            ChurnModel::MarkovOnOff {
+                p_fail: 0.25,
+                p_recover: 0.4,
+                down_dropout: 0.95,
+                region_scale: Vec::new(),
+            },
+            script_only(),
+        ],
+    }
+}
+
+/// The parallel per-region fold reproduces the serial streaming loop
+/// byte for byte, for every protocol (each exercises a different
+/// start-model / cutoff shape through the fold).
+#[test]
+fn parallel_fold_matches_serial_for_every_protocol() {
+    for protocol in ProtocolKind::ALL {
+        let cfg = scale_cfg(protocol);
+        let parallel = Scenario::from_config(cfg.clone()).run().unwrap();
+        let serial = Scenario::from_config(cfg).serial_fold(true).run().unwrap();
+        assert_eq!(
+            run_result_bytes(&parallel),
+            run_result_bytes(&serial),
+            "{protocol:?}: parallel fold diverged from the serial reference"
+        );
+    }
+}
+
+/// Same bar under a compressed (non-error-feedback) codec: the parallel
+/// workers frame and fold encoded updates exactly as the serial loop
+/// does, including the per-client comm substream draws.
+#[test]
+fn parallel_fold_matches_serial_under_compression() {
+    let mut cfg = scale_cfg(ProtocolKind::HybridFl);
+    cfg.comm = CommConfig::parse_spec("topk:0.25").unwrap();
+    let parallel = Scenario::from_config(cfg.clone()).run().unwrap();
+    let serial = Scenario::from_config(cfg).serial_fold(true).run().unwrap();
+    assert_eq!(
+        run_result_bytes(&parallel),
+        run_result_bytes(&serial),
+        "compressed parallel fold diverged from the serial reference"
+    );
+}
+
+/// The incremental availability cache and the O(dirty) churn reset
+/// reproduce the full-fleet recompute byte for byte across a churny run
+/// — on every protocol, with the parallel fold active too (the knobs
+/// compose).
+#[test]
+fn lazy_sweeps_match_eager_reference_under_churn() {
+    for (protocol, churn) in ProtocolKind::ALL
+        .into_iter()
+        .flat_map(|p| [(p, script_only()), (p, churny())])
+    {
+        let mut cfg = scale_cfg(protocol);
+        cfg.churn = churn;
+        let lazy = Scenario::from_config(cfg.clone()).run().unwrap();
+        let eager = Scenario::from_config(cfg.clone())
+            .eager_sweeps(true)
+            .run()
+            .unwrap();
+        assert_eq!(
+            run_result_bytes(&lazy),
+            run_result_bytes(&eager),
+            "{protocol:?}: lazy sweeps diverged from the eager reference"
+        );
+        // And the full cross: serial + eager (the pre-refactor execution
+        // shape) against the default fast path.
+        let reference = Scenario::from_config(cfg)
+            .serial_fold(true)
+            .eager_sweeps(true)
+            .run()
+            .unwrap();
+        assert_eq!(
+            run_result_bytes(&lazy),
+            run_result_bytes(&reference),
+            "{protocol:?}: fast path diverged from the serial+eager reference"
+        );
+    }
+}
+
+/// Snapshots are interchangeable across fold paths: a run checkpointed
+/// under the serial fold, resumed with the default (parallel-eligible)
+/// path, lands byte-identical to the uninterrupted default run — the
+/// knobs are execution strategy, not world state.
+#[test]
+fn resume_crosses_fold_paths_byte_identically() {
+    let mut cfg = scale_cfg(ProtocolKind::HybridFl);
+    cfg.churn = churny();
+    let full = Scenario::from_config(cfg.clone()).run().unwrap();
+
+    let dir = std::env::temp_dir().join("hybridfl_scale_identity_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    Scenario::from_config(cfg.clone())
+        .serial_fold(true)
+        .eager_sweeps(true)
+        .checkpoint_dir(&dir)
+        .checkpoint_every(3)
+        .run()
+        .unwrap();
+    let resumed = Scenario::from_config(cfg)
+        .resume_from(dir.join("snapshot_round_000003.hflsnap"))
+        .run()
+        .unwrap();
+    assert_eq!(
+        run_result_bytes(&full),
+        run_result_bytes(&resumed),
+        "serial-checkpointed run resumed on the parallel path diverged"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

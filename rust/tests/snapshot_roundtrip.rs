@@ -389,8 +389,8 @@ fn comm_state_roundtrips_both_codecs() {
         CommState::Residuals { clients: vec![] },
         CommState::Residuals {
             clients: vec![
-                (3, vec![0.5, -1.25, 0.0, 1e-30]),
-                (17, vec![f32::MAX, f32::MIN_POSITIVE, -0.0]),
+                (3, std::sync::Arc::new(vec![0.5, -1.25, 0.0, 1e-30])),
+                (17, std::sync::Arc::new(vec![f32::MAX, f32::MIN_POSITIVE, -0.0])),
             ],
         },
     ];
