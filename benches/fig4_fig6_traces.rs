@@ -55,6 +55,7 @@ fn main() -> hybridfl::Result<()> {
                 cfg.dropout.mean = dr;
                 cfg.c_fraction = c;
                 cfg.t_max = rounds;
+                let schema = metrics::CsvSchema::from_config(&cfg);
                 let result = FlRun::new(cfg)?.run()?;
                 // Sample 40 points for the sparkline.
                 let step = (result.rounds.len() / 40).max(1);
@@ -70,11 +71,12 @@ fn main() -> hybridfl::Result<()> {
                     spark(&series),
                     result.summary.best_accuracy
                 );
-                metrics::write_csv(
+                metrics::write_csv_with(
                     &out.join(format!(
                         "{fig}_dr{dr}_c{c}_{}.csv",
                         proto.as_str()
                     )),
+                    &schema,
                     &result.rounds,
                 )?;
             }

@@ -38,6 +38,7 @@ fn main() -> hybridfl::Result<()> {
         }
 
         eprintln!("[{}] training...", proto.as_str());
+        let schema = metrics::CsvSchema::from_config(sc.config());
         let result = sc.run()?;
 
         println!("--- {} ---", proto.as_str());
@@ -53,8 +54,9 @@ fn main() -> hybridfl::Result<()> {
             " => best acc {:.3}, avg round {:.1}s, energy {:.4} Wh/device\n",
             s.best_accuracy, s.avg_round_len, s.mean_device_energy_wh
         );
-        metrics::write_csv(
+        metrics::write_csv_with(
             &out_dir.join(format!("e2e_mnist_{}.csv", proto.as_str())),
+            &schema,
             &result.rounds,
         )?;
         wins.push((

@@ -239,7 +239,22 @@ impl FaultEvent {
         Ok(())
     }
 
-    fn to_json(&self) -> Json {
+    /// First round at which the event has any effect: `from_round` for
+    /// windowed events, `at_round` for point events. The ops control
+    /// plane uses this to reject injections into rounds already run.
+    pub fn start_round(&self) -> usize {
+        match self {
+            FaultEvent::RegionBlackout { from_round, .. }
+            | FaultEvent::BandwidthDegrade { from_round, .. } => *from_round,
+            FaultEvent::DropoutShift { at_round, .. } | FaultEvent::Migrate { at_round, .. } => {
+                *at_round
+            }
+        }
+    }
+
+    /// JSON form, the same encoding the snapshot codec and the ops
+    /// `inject` command use.
+    pub fn to_json(&self) -> Json {
         match self {
             FaultEvent::RegionBlackout {
                 region,
@@ -285,7 +300,8 @@ impl FaultEvent {
         }
     }
 
-    fn from_json(j: &Json) -> Result<FaultEvent> {
+    /// Parse the [`FaultEvent::to_json`] encoding.
+    pub fn from_json(j: &Json) -> Result<FaultEvent> {
         let kind = j.req("kind")?.as_str()?;
         Ok(match kind {
             "region_blackout" => FaultEvent::RegionBlackout {
@@ -1018,6 +1034,73 @@ impl WorldDynamics {
         // The caller's fleet may be in any intermediate state; force the
         // next step to reset everything back to base first.
         self.stale = Touched::All;
+        Ok(())
+    }
+
+    /// Splice a scripted fault into the *running* model (live injection
+    /// from the ops control plane). The event lands in a
+    /// [`ChurnModel::FaultScript`] layer exactly as if it had been
+    /// configured up front: script layers draw no RNG and are inert
+    /// outside their round windows, so — provided the event only touches
+    /// rounds that have not run yet — the continued run is byte-identical
+    /// to one that scripted the event from round 1.
+    ///
+    /// Stationary worlds become a bare script; a script gains an event;
+    /// stochastic models are wrapped into a [`ChurnModel::Composed`] with
+    /// the script as a new last layer (the existing layer state is
+    /// rewrapped, preserving its trajectory). Replayed worlds reject
+    /// injection: the recorded trace *is* the ground truth there.
+    pub fn inject(&mut self, event: FaultEvent) -> Result<()> {
+        event.validate(self.base_topo.n_regions(), self.base.len())?;
+        match &mut self.model {
+            ChurnModel::Replay { .. } => bail!(
+                "cannot inject faults into a replayed world: fates come \
+                 from the recorded trace, so the event would be ignored"
+            ),
+            ChurnModel::Stationary => {
+                self.model = ChurnModel::FaultScript {
+                    events: vec![event],
+                };
+            }
+            ChurnModel::FaultScript { events } => events.push(event),
+            ChurnModel::Composed { layers } => {
+                if let Some(ChurnModel::FaultScript { events }) = layers.last_mut() {
+                    events.push(event);
+                } else {
+                    layers.push(ChurnModel::FaultScript {
+                        events: vec![event],
+                    });
+                    if let ChurnState::Composed { layers: states } = &mut self.state {
+                        states.push(ChurnState::Stateless);
+                    }
+                }
+            }
+            _ => {
+                let prev = std::mem::replace(&mut self.model, ChurnModel::Stationary);
+                let prev_state = std::mem::replace(&mut self.state, ChurnState::Stateless);
+                self.model = ChurnModel::Composed {
+                    layers: vec![
+                        prev,
+                        ChurnModel::FaultScript {
+                            events: vec![event],
+                        },
+                    ],
+                };
+                self.state = ChurnState::Composed {
+                    layers: vec![prev_state, ChurnState::Stateless],
+                };
+            }
+        }
+        // Same schedule rule as `new`: the rewritten model may have gone
+        // from no-op to scripted, or gained migration/per-round layers.
+        self.schedule = if self.model.is_noop()
+            || self.model.has_migrations()
+            || has_per_round_layers(&self.model)
+        {
+            None
+        } else {
+            Some(EventSchedule::new(&self.model))
+        };
         Ok(())
     }
 

@@ -21,7 +21,7 @@ pub struct Args {
 const VALUE_KEYS: &[&str] = &[
     "set", "preset", "config", "out", "seed", "protocol", "rounds", "c", "e-dr",
     "scale", "target", "backend", "checkpoint-dir", "checkpoint-every", "resume",
-    "churn", "record-fates", "replay-fates", "selector", "comm",
+    "churn", "record-fates", "replay-fates", "selector", "comm", "ops-listen",
 ];
 
 /// Boolean switches (no value).
@@ -203,6 +203,12 @@ mod tests {
     fn comm_is_a_value_key() {
         let a = parse(&["run", "--comm", "topk:0.05+ef"]);
         assert_eq!(a.get("comm"), Some("topk:0.05+ef"));
+    }
+
+    #[test]
+    fn ops_listen_is_a_value_key() {
+        let a = parse(&["run", "--ops-listen", "127.0.0.1:9184"]);
+        assert_eq!(a.get("ops-listen"), Some("127.0.0.1:9184"));
     }
 
     #[test]

@@ -26,17 +26,18 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::churn::{ChurnState, FateTrace};
+use crate::churn::{FateTrace, FaultEvent};
+use crate::comm::CommState;
 use crate::config::{EngineKind, ExperimentConfig};
 use crate::env::{
-    charge_energy, draw_fates, draw_selection, ground_truth_avail, record_fates,
-    region_histogram, resolve_cutoff, step_world, CutPlan, CutoffPolicy, FlEnvironment,
-    RoundOutcome, Selection, Starts, World,
+    charge_energy, draw_fates, draw_selection, ground_truth_avail, inject_world_fault,
+    record_fates, region_histogram, resolve_cutoff, step_world, CutPlan, CutoffPolicy, EnvState,
+    FlEnvironment, RoundOutcome, Selection, Starts, World,
 };
 use crate::live::cluster::ClusterFabric;
 use crate::live::messages::RoundJob;
 use crate::model::ModelParams;
-use crate::rng::{Rng, RngState};
+use crate::rng::Rng;
 use crate::runtime::{build_engine, Engine, EvalResult};
 use crate::Result;
 
@@ -258,20 +259,33 @@ impl FlEnvironment for LiveClusterEnv {
         self.eval_engine.evaluate(model)
     }
 
-    fn rng_state(&self) -> RngState {
-        self.world.rng.state()
+    fn capture_state(&self) -> EnvState {
+        // No comm residuals here: the live backend rejects error-feedback
+        // codecs at construction, so its comm state is always stateless.
+        EnvState {
+            rng: self.world.rng.state(),
+            churn: self.world.dynamics.state(),
+            comm: CommState::Stateless,
+        }
     }
 
-    fn restore_rng_state(&mut self, state: RngState) {
-        self.world.rng = Rng::from_state(state);
+    fn restore_state(&mut self, state: EnvState) -> Result<()> {
+        anyhow::ensure!(
+            state.comm.is_stateless(),
+            "snapshot carries error-feedback residuals but the live backend \
+             holds no codec state"
+        );
+        self.world.rng = Rng::from_state(state.rng);
+        self.world.dynamics.restore(state.churn)
     }
 
-    fn churn_state(&self) -> ChurnState {
-        self.world.dynamics.state()
-    }
-
-    fn restore_churn_state(&mut self, state: ChurnState) -> Result<()> {
-        self.world.dynamics.restore(state)
+    fn inject_fault(&mut self, event: FaultEvent) -> Result<()> {
+        anyhow::ensure!(
+            !matches!(event, FaultEvent::Migrate { .. }),
+            "cannot inject a migration into the live backend: client \
+             threads are bound to their edge channels at spawn"
+        );
+        inject_world_fault(&mut self.world, event)
     }
 
     fn set_fate_recording(&mut self, on: bool) {

@@ -121,6 +121,16 @@
 //!    honestly ride a coordinator snapshot). The dense default draws
 //!    nothing from the comm RNG stream and is byte-identical to the
 //!    pre-codec behavior.
+//! 8. **Observability.** Round-boundary observers
+//!    ([`crate::ops::RunObserver`], which the live metrics endpoint and
+//!    the report sinks implement) see only what already crosses the trait:
+//!    the [`RoundTrace`] aggregates (per-region selection/submission
+//!    counts, availability means, slack telemetry, bytes moved) plus
+//!    driver accumulators. No environment may hand an observer a
+//!    `ClientProfile`, a per-client fate, a drop-out probability, or a
+//!    device model — reliability-agnosticism holds on the wire exactly as
+//!    it holds at the protocol boundary, so a scraped `/metrics` page can
+//!    never leak more ground truth than the run's own trace artifact.
 //!
 //! # The data plane at fleet scale
 //!
@@ -168,7 +178,7 @@ pub use virtual_clock::VirtualClockEnv;
 use std::sync::Arc;
 
 use crate::aggregation::RegionAccumulator;
-use crate::churn::{ChurnModel, ChurnState, FateTrace, Touched, WorldDynamics};
+use crate::churn::{ChurnModel, ChurnState, FateTrace, FaultEvent, Touched, WorldDynamics};
 use crate::comm::CommState;
 use crate::config::ExperimentConfig;
 use crate::data::FederatedData;
@@ -287,47 +297,51 @@ pub trait FlEnvironment {
     ) -> Result<RoundOutcome>;
     /// Cloud-side evaluation of a model on the held-out set.
     fn evaluate(&mut self, model: &ModelParams) -> Result<EvalResult>;
-    /// The round-stream RNG state, captured at a round boundary for a
-    /// [`crate::snapshot::RunSnapshot`]. Both backends derive every
-    /// per-round draw from this stream, so it is the only RNG state a
-    /// resumed run needs.
-    fn rng_state(&self) -> RngState;
-    /// Restore a round-stream RNG captured by [`Self::rng_state`]
-    /// (resume path).
-    fn restore_rng_state(&mut self, state: RngState);
-    /// The churn process state at the round boundary (checkpoint path) —
-    /// together with [`Self::rng_state`] this pins the world's entire
-    /// reliability trajectory.
-    fn churn_state(&self) -> ChurnState;
-    /// Restore churn state captured by [`Self::churn_state`] (resume
-    /// path). Errors on a state whose shape does not fit the configured
-    /// churn model.
-    fn restore_churn_state(&mut self, state: ChurnState) -> Result<()>;
-    /// The comm subsystem's cross-round state — per-client error-feedback
-    /// residuals for `topk+ef` — captured at a round boundary (checkpoint
-    /// path). Environments holding no codec state report
-    /// [`CommState::Stateless`], the default.
-    fn comm_state(&self) -> CommState {
-        CommState::Stateless
-    }
-    /// Restore comm state captured by [`Self::comm_state`] (resume path).
-    /// The default accepts only [`CommState::Stateless`]: an environment
-    /// that cannot hold residuals must refuse a snapshot that carries
-    /// them rather than silently dropping error-feedback mass.
-    fn restore_comm_state(&mut self, state: CommState) -> Result<()> {
-        anyhow::ensure!(
-            state.is_stateless(),
-            "snapshot carries error-feedback residuals but this environment \
-             holds no codec state"
-        );
-        Ok(())
-    }
+    /// Capture the environment's entire cross-round state as one
+    /// [`EnvState`] bundle at a round boundary: the round-stream RNG
+    /// (both backends derive every per-round draw from it), the churn
+    /// process state (together they pin the world's whole reliability
+    /// trajectory), and the comm subsystem's cross-round residuals
+    /// (`topk+ef`; [`CommState::Stateless`] for environments holding no
+    /// codec state). This is the checkpoint path —
+    /// [`crate::snapshot::RunSnapshot::capture`] and the ops
+    /// `checkpoint-now` command both consume it. Capturing must not
+    /// perturb the run.
+    fn capture_state(&self) -> EnvState;
+    /// Restore a bundle captured by [`Self::capture_state`] (resume
+    /// path). Errors on churn state whose shape does not fit the
+    /// configured model, and on residuals the environment cannot hold —
+    /// an environment without codec state must refuse a snapshot that
+    /// carries error-feedback mass rather than silently dropping it.
+    fn restore_state(&mut self, state: EnvState) -> Result<()>;
+    /// Splice a scripted fault into the running world (ops control
+    /// plane). The event must only touch rounds that have not run yet;
+    /// under that condition the continued run is byte-identical to one
+    /// that scripted the event from round 1 (see
+    /// [`crate::churn::WorldDynamics::inject`]). The injected script
+    /// becomes part of the environment's effective config, so snapshots
+    /// taken afterwards fingerprint — and resume under — the world that
+    /// actually ran.
+    fn inject_fault(&mut self, event: FaultEvent) -> Result<()>;
     /// Start (or stop) recording each round's ground-truth fates into an
-    /// in-memory [`FateTrace`].
+    /// in-memory [`FateTrace`]. A control toggle, not captured state —
+    /// deliberately outside [`EnvState`].
     fn set_fate_recording(&mut self, on: bool);
     /// Take the recorded fate trace (ends recording). `None` when
     /// recording was never enabled.
     fn take_fate_trace(&mut self) -> Option<FateTrace>;
+}
+
+/// Everything an environment must persist across a process boundary for a
+/// resumed run to be byte-identical: the round-stream RNG, the churn
+/// process state, and cross-round comm residuals. One bundle instead of
+/// three per-subsystem accessor pairs — [`crate::snapshot::RunSnapshot`]
+/// and the ops `checkpoint-now` path both consume it whole.
+#[derive(Clone, Debug)]
+pub struct EnvState {
+    pub rng: RngState,
+    pub churn: ChurnState,
+    pub comm: CommState,
 }
 
 /// A selected client whose device parameters produce a non-finite
@@ -647,6 +661,19 @@ pub(crate) fn step_world(world: &mut World, t: usize) -> bool {
         }
     }
     out.topo_changed
+}
+
+/// Shared [`FlEnvironment::inject_fault`] body: splice the event into the
+/// running [`WorldDynamics`] and mirror the rewritten churn model into the
+/// world's effective config, so every snapshot taken after the injection
+/// fingerprints — and resumes under — the model that actually ran. With
+/// the config updated, a `Stationary` run that injects a blackout is
+/// indistinguishable, on disk and in its trace, from one configured with
+/// the equivalent [`ChurnModel::FaultScript`] up front.
+pub(crate) fn inject_world_fault(world: &mut World, event: FaultEvent) -> Result<()> {
+    world.dynamics.inject(event)?;
+    world.cfg.churn = world.dynamics.model().clone();
+    Ok(())
 }
 
 /// Per-region ground-truth availability for this round.
@@ -1073,12 +1100,6 @@ impl DriverState {
     }
 }
 
-/// Round-boundary hook signature for [`run_resumable`]: observes the
-/// environment, the protocol and the driver state after each completed
-/// round (the checkpoint point of the run loop).
-pub type RoundHook<'a> =
-    dyn FnMut(&mut dyn FlEnvironment, &dyn Protocol, &DriverState) -> Result<()> + 'a;
-
 /// Drive a protocol for `t_max` rounds (or until `target_accuracy`) over
 /// any backend, recording the full trace. This is the single round loop
 /// shared by sim runs, live runs and the sweep harness.
@@ -1086,20 +1107,28 @@ pub fn run_to_completion(
     env: &mut dyn FlEnvironment,
     protocol: &mut dyn Protocol,
 ) -> Result<RunResult> {
-    run_resumable(env, protocol, DriverState::fresh(), &mut |_, _, _| Ok(()))
+    run_resumable(
+        env,
+        protocol,
+        DriverState::fresh(),
+        &mut crate::ops::RunControl::new(),
+    )
 }
 
 /// [`run_to_completion`] with an explicit starting [`DriverState`] (fresh
-/// or restored from a snapshot) and a hook invoked after every completed
-/// round. On the live backend the hook runs on the cloud leader thread,
-/// between the round-end reports and the next round's fan-out, so the
-/// fabric is quiescent while state is captured. A hook error aborts the
-/// run.
+/// or restored from a snapshot) and a [`crate::ops::RunControl`] serviced
+/// after every completed round: observers receive the typed round-boundary
+/// event stream ([`crate::ops::RunEvent`]), scheduled checkpoints are
+/// written, and pending ops commands (pause/resume, `checkpoint-now`,
+/// fault injection) are executed. On the live backend the boundary runs on
+/// the cloud leader thread, between the round-end reports and the next
+/// round's fan-out, so the fabric is quiescent while state is captured. An
+/// observer or control error aborts the run.
 pub fn run_resumable(
     env: &mut dyn FlEnvironment,
     protocol: &mut dyn Protocol,
     mut st: DriverState,
-    after_round: &mut RoundHook<'_>,
+    ctl: &mut crate::ops::RunControl<'_>,
 ) -> Result<RunResult> {
     let t_max = env.cfg().t_max;
     let eval_every = env.cfg().eval_every;
@@ -1166,7 +1195,7 @@ pub fn run_resumable(
             slack: protocol.slack_states(),
         });
         st.rounds_done = t;
-        after_round(env, protocol, &st)?;
+        ctl.round_closed(env, protocol, &st)?;
 
         if let Some(target) = target_accuracy {
             if st.best_acc >= target && rounds_to_target.is_none() {
@@ -1189,10 +1218,12 @@ pub fn run_resumable(
         total_time: st.cum_time,
         final_loss: st.last_loss,
     };
-    Ok(RunResult {
+    let result = RunResult {
         summary,
         rounds: st.rounds,
-    })
+    };
+    ctl.run_finished(&result)?;
+    Ok(result)
 }
 
 #[cfg(test)]

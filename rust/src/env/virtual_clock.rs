@@ -26,17 +26,17 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::aggregation::{RegionAccumulator, StreamingAggregator};
-use crate::churn::{ChurnState, FateTrace};
+use crate::churn::{FateTrace, FaultEvent};
 use crate::comm::{CommConfig, CommState, EncodeCtx, COMM_STREAM};
 use crate::config::{EngineKind, ExperimentConfig};
 use crate::data::FederatedData;
 use crate::env::{
-    charge_energy, draw_fates, draw_selection, ground_truth_avail, oracle_drop_table,
-    record_fates, region_histogram, resolve_cutoff, step_world, ClientFate, CutoffPolicy,
-    FlEnvironment, RoundOutcome, Selection, Starts, World,
+    charge_energy, draw_fates, draw_selection, ground_truth_avail, inject_world_fault,
+    oracle_drop_table, record_fates, region_histogram, resolve_cutoff, step_world, ClientFate,
+    CutoffPolicy, EnvState, FlEnvironment, RoundOutcome, Selection, Starts, World,
 };
 use crate::model::ModelParams;
-use crate::rng::{Rng, RngState};
+use crate::rng::Rng;
 use crate::runtime::{build_engine, Engine, EvalResult};
 use crate::timing::TimingModel;
 use crate::Result;
@@ -219,24 +219,8 @@ impl FlEnvironment for VirtualClockEnv {
         self.engine.evaluate(model)
     }
 
-    fn rng_state(&self) -> RngState {
-        self.world.rng.state()
-    }
-
-    fn restore_rng_state(&mut self, state: RngState) {
-        self.world.rng = Rng::from_state(state);
-    }
-
-    fn churn_state(&self) -> ChurnState {
-        self.world.dynamics.state()
-    }
-
-    fn restore_churn_state(&mut self, state: ChurnState) -> Result<()> {
-        self.world.dynamics.restore(state)
-    }
-
-    fn comm_state(&self) -> CommState {
-        if self.residuals.is_empty() {
+    fn capture_state(&self) -> EnvState {
+        let comm = if self.residuals.is_empty() {
             CommState::Stateless
         } else {
             // O(clients) Arc bumps — no residual vector is copied here,
@@ -249,14 +233,20 @@ impl FlEnvironment for VirtualClockEnv {
                     .map(|(k, v)| (*k, Arc::clone(v)))
                     .collect(),
             }
+        };
+        EnvState {
+            rng: self.world.rng.state(),
+            churn: self.world.dynamics.state(),
+            comm,
         }
     }
 
-    fn restore_comm_state(&mut self, state: CommState) -> Result<()> {
-        match state {
+    fn restore_state(&mut self, state: EnvState) -> Result<()> {
+        self.world.rng = Rng::from_state(state.rng);
+        self.world.dynamics.restore(state.churn)?;
+        match state.comm {
             CommState::Stateless => {
                 self.residuals.clear();
-                Ok(())
             }
             CommState::Residuals { clients } => {
                 anyhow::ensure!(
@@ -266,9 +256,13 @@ impl FlEnvironment for VirtualClockEnv {
                     self.world.cfg.comm.codec.name()
                 );
                 self.residuals = clients.into_iter().collect();
-                Ok(())
             }
         }
+        Ok(())
+    }
+
+    fn inject_fault(&mut self, event: FaultEvent) -> Result<()> {
+        inject_world_fault(&mut self.world, event)
     }
 
     fn set_fate_recording(&mut self, on: bool) {

@@ -31,6 +31,7 @@ pub fn run_fig2(out_dir: &Path, seed: u64) -> Result<(RunResult, Fig2Stats)> {
     cfg.seed = seed;
     let region_sizes: Vec<usize> = cfg.regions.iter().map(|r| r.n_clients).collect();
     let c = cfg.c_fraction;
+    let schema = metrics::CsvSchema::from_config(&cfg);
     let result = FlRun::new(cfg)?.run()?;
 
     // Converged means over the last quarter of rounds.
@@ -56,7 +57,7 @@ pub fn run_fig2(out_dir: &Path, seed: u64) -> Result<(RunResult, Fig2Stats)> {
     }
 
     std::fs::create_dir_all(out_dir)?;
-    metrics::write_csv(&out_dir.join("fig2_traces.csv"), &result.rounds)?;
+    metrics::write_csv_with(&out_dir.join("fig2_traces.csv"), &schema, &result.rounds)?;
 
     let stats = Fig2Stats {
         theta_converged: theta,

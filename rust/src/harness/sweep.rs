@@ -224,8 +224,9 @@ pub fn run_task_sweep(
                 result.rounds.last().map_or(0.0, |r| r.cum_energy_j),
             ),
         };
-        metrics::write_csv(
+        metrics::write_csv_with(
             &out_dir.join(format!("trace_{}.csv", cfg.name)),
+            &metrics::CsvSchema::from_config(cfg),
             &result.rounds,
         )?;
         cells.push(CellResult {

@@ -188,6 +188,33 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 //!
+//! And a *running* experiment is not a black box: the [`ops`] control
+//! plane serves a Prometheus-text `/metrics` scrape (round index,
+//! per-region availability / selected proportion / slack θ̂, arena peak,
+//! peak RSS, `bytes_moved`, quota/deadline counters) and a line-oriented
+//! control socket (`pause` / `resume` / `checkpoint-now` / live
+//! `inject`) on one std TCP listener. Under the hood both are
+//! [`ops::RunObserver`]s on the driver's typed round-boundary event
+//! stream — the same stream [`metrics::ReportSink`] turns into CSV/JSON
+//! artifacts — and observers see only protocol-visible aggregates, so
+//! reliability-agnosticism holds on the wire (env contract point 8).
+//!
+//! ```no_run
+//! # use hybridfl::scenario::Scenario;
+//! // Serve /metrics and the control socket on port 9184 while running:
+//! let result = Scenario::task1()
+//!     .mock()
+//!     .checkpoint_dir("ckpts")
+//!     .ops_listen("127.0.0.1:9184")
+//!     .run()?;
+//! // Meanwhile:   curl -s http://127.0.0.1:9184/metrics
+//! //              printf 'pause\n' | nc 127.0.0.1 9184   (etc.)
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! On the CLI this is `--ops-listen 127.0.0.1:9184`; see the README's
+//! "Operating a run" section for scrape and control transcripts.
+//!
 //! The layering underneath, for code that needs more control:
 //!
 //! * [`env`] — the [`env::FlEnvironment`] backend trait and its two
@@ -246,6 +273,7 @@ pub mod jsonx;
 pub mod live;
 pub mod metrics;
 pub mod model;
+pub mod ops;
 pub mod protocols;
 pub mod rng;
 pub mod runtime;

@@ -6,7 +6,7 @@
 //!                 [--checkpoint-dir D [--checkpoint-every N]]
 //!                 [--resume snapshot.hflsnap]
 //!                 [--churn SPEC] [--record-fates f.json]
-//!                 [--replay-fates f.json]
+//!                 [--replay-fates f.json] [--ops-listen ADDR]
 //! hybridfl fig2   [--out dir] [--seed N]
 //! hybridfl table3 [--full|--quick] [--mock] [--serial] [--target A] [--out dir]
 //! hybridfl table4 [--full|--quick] [--mock] [--serial] [--target A] [--out dir]
@@ -81,7 +81,11 @@ commands:
           --comm SPEC upload codec: dense | f16 | i8 | topk:RATIO,
           '+ef' adds error feedback (sim-only), '+relay:Q' hands the
           weakest Q quantile's uploads to strong relays
-          (e.g. topk:0.05+ef, i8+relay:0.25))
+          (e.g. topk:0.05+ef, i8+relay:0.25),
+          --ops-listen ADDR serve the operations control plane while the
+          run is in flight: GET /metrics is a Prometheus-text scrape,
+          anything else is a line-oriented control session
+          (status | pause | resume | checkpoint-now [DIR] | inject JSON))
   fig2    slack-factor traces (paper Fig. 2) -> reports/fig2_traces.csv
   table3  Task-1 sweep: Table III + Fig. 4 traces + Fig. 5 energy
   table4  Task-2 sweep: Table IV + Fig. 6 traces + Fig. 7 energy
@@ -156,6 +160,9 @@ fn resolve_scenario(args: &Args, default_backend: Backend) -> hybridfl::Result<S
     if let Some(path) = args.get("record-fates") {
         sc = sc.record_fates(path);
     }
+    if let Some(addr) = args.get("ops-listen") {
+        sc = sc.ops_listen(addr);
+    }
     Ok(sc)
 }
 
@@ -185,10 +192,16 @@ fn cmd_run(args: &Args) -> hybridfl::Result<()> {
         cfg.engine.as_str(),
         args.get("backend").unwrap_or("sim"),
     );
+    if let Some(addr) = args.get("ops-listen") {
+        println!("ops endpoint on {addr} (GET /metrics, or a control session)");
+    }
+    // The CSV schema is derived from the config, not from the first trace
+    // row; compute it before run() consumes the scenario.
+    let schema = metrics::CsvSchema::from_config(cfg);
     let result = sc.run()?;
     print_summary(&result);
     if let Some(out) = args.get("out") {
-        metrics::write_csv(std::path::Path::new(out), &result.rounds)?;
+        metrics::write_csv_with(std::path::Path::new(out), &schema, &result.rounds)?;
         println!("trace written to {out}");
     }
     Ok(())

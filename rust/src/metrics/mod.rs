@@ -1,23 +1,59 @@
 //! Metrics output (S17): CSV trace emission, fixed-width table rendering,
 //! and JSON report building for the experiment harness.
+//!
+//! Since the ops control plane landed, the preferred way to produce run
+//! artifacts is event-driven: [`ReportSink`] implements
+//! [`crate::ops::RunObserver`] and builds its CSV/JSON from the same
+//! round-boundary stream the live `/metrics` endpoint consumes. The free
+//! functions remain for post-hoc conversion of an existing
+//! [`RunResult`]; the schema-blind variants ([`traces_to_csv`],
+//! [`write_csv`]) are deprecated because they guess the column layout
+//! from the first trace row.
 
 use std::fmt::Write as _;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::Context;
 
+use crate::config::{ExperimentConfig, ProtocolKind};
 use crate::jsonx::Json;
+use crate::ops::{RunEvent, RunObserver};
 use crate::sim::{RoundTrace, RunResult, RunSummary};
 use crate::Result;
 
-/// Render per-round traces as CSV (one row per round; slack columns appear
-/// when present — HybridFL runs; `avail_rN` is the per-region ground-truth
-/// availability after the round's world-dynamics step, the series churn
-/// analyses plot against the protocol's observables).
-pub fn traces_to_csv(rounds: &[RoundTrace]) -> String {
+/// The CSV column layout: how many per-region column groups, and whether
+/// the slack telemetry columns (`theta_rN,c_rN,q_rN`) are present. Derived
+/// from the *config*, never from trace rows — a resumed or segmented
+/// trace can therefore never emit a header that disagrees with later
+/// rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CsvSchema {
+    pub n_regions: usize,
+    pub has_slack: bool,
+}
+
+impl CsvSchema {
+    /// The schema of any run under `cfg`: one column group per edge
+    /// region; slack columns exactly when the protocol reports slack
+    /// telemetry (HybridFL).
+    pub fn from_config(cfg: &ExperimentConfig) -> CsvSchema {
+        CsvSchema {
+            n_regions: cfg.n_edges,
+            has_slack: cfg.protocol == ProtocolKind::HybridFl,
+        }
+    }
+}
+
+/// Render per-round traces as CSV under an explicit [`CsvSchema`] (one
+/// row per round; `avail_rN` is the per-region ground-truth availability
+/// after the round's world-dynamics step, the series churn analyses plot
+/// against the protocol's observables).
+pub fn traces_to_csv_with(schema: &CsvSchema, rounds: &[RoundTrace]) -> String {
     let mut out = String::new();
-    let n_regions = rounds.first().map_or(0, |r| r.submissions.len());
-    let has_slack = rounds.first().is_some_and(|r| r.slack.is_some());
+    let CsvSchema {
+        n_regions,
+        has_slack,
+    } = *schema;
     out.push_str("t,round_len,cum_time,accuracy,best_accuracy,eval_loss,cum_energy_wh,bytes_moved,deadline_hit,cloud_aggregated");
     for r in 0..n_regions {
         let _ = write!(out, ",selected_r{r},alive_r{r},submissions_r{r},avail_r{r}");
@@ -63,12 +99,130 @@ pub fn traces_to_csv(rounds: &[RoundTrace]) -> String {
     out
 }
 
-pub fn write_csv(path: &Path, rounds: &[RoundTrace]) -> Result<()> {
+/// [`traces_to_csv_with`] straight to a file (parent dirs created).
+pub fn write_csv_with(path: &Path, schema: &CsvSchema, rounds: &[RoundTrace]) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::write(path, traces_to_csv(rounds))
+    std::fs::write(path, traces_to_csv_with(schema, rounds))
         .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Guess a [`CsvSchema`] from the first trace row — the legacy behavior
+/// the deprecated entry points preserve.
+fn schema_from_first_row(rounds: &[RoundTrace]) -> CsvSchema {
+    CsvSchema {
+        n_regions: rounds.first().map_or(0, |r| r.submissions.len()),
+        has_slack: rounds.first().is_some_and(|r| r.slack.is_some()),
+    }
+}
+
+#[deprecated(
+    since = "0.9.0",
+    note = "derives the column schema from the first trace row; use \
+            `traces_to_csv_with(&CsvSchema::from_config(cfg), rounds)` or a \
+            `ReportSink` observer"
+)]
+pub fn traces_to_csv(rounds: &[RoundTrace]) -> String {
+    traces_to_csv_with(&schema_from_first_row(rounds), rounds)
+}
+
+#[deprecated(
+    since = "0.9.0",
+    note = "derives the column schema from the first trace row; use \
+            `write_csv_with(path, &CsvSchema::from_config(cfg), rounds)` or a \
+            `ReportSink` observer"
+)]
+pub fn write_csv(path: &Path, rounds: &[RoundTrace]) -> Result<()> {
+    write_csv_with(path, &schema_from_first_row(rounds), rounds)
+}
+
+/// Event-driven artifact writer: a [`RunObserver`] that renders the run's
+/// CSV trace (and, optionally, the JSON summary report) from the same
+/// round-boundary stream the ops endpoint consumes. The CSV body is
+/// appended row by row as rounds close — restored rows from a resumed
+/// run are caught up on the first event — and files are flushed once, on
+/// [`RunEvent::RunFinished`].
+pub struct ReportSink {
+    schema: CsvSchema,
+    csv_path: Option<PathBuf>,
+    report_path: Option<PathBuf>,
+    /// CSV accumulated so far (header + every row seen).
+    csv: String,
+    rows_seen: usize,
+}
+
+impl ReportSink {
+    /// A sink for runs under `cfg`; attach paths with [`ReportSink::csv`]
+    /// / [`ReportSink::json_report`].
+    pub fn new(cfg: &ExperimentConfig) -> ReportSink {
+        ReportSink {
+            schema: CsvSchema::from_config(cfg),
+            csv_path: None,
+            report_path: None,
+            csv: String::new(),
+            rows_seen: 0,
+        }
+    }
+
+    /// Write the per-round CSV trace here at run end.
+    pub fn csv(mut self, path: impl Into<PathBuf>) -> ReportSink {
+        self.csv_path = Some(path.into());
+        self
+    }
+
+    /// Write the JSON summary report here at run end.
+    pub fn json_report(mut self, path: impl Into<PathBuf>) -> ReportSink {
+        self.report_path = Some(path.into());
+        self
+    }
+
+    /// The rendered CSV so far (header + closed rounds) — what the file
+    /// will contain, exposed for tests and custom writers.
+    pub fn csv_text(&self) -> &str {
+        &self.csv
+    }
+
+    fn append_rows(&mut self, rounds: &[RoundTrace]) {
+        if self.csv.is_empty() {
+            self.csv = traces_to_csv_with(&self.schema, &[]);
+        }
+        for row in rounds.iter().skip(self.rows_seen) {
+            let body = traces_to_csv_with(&self.schema, std::slice::from_ref(row));
+            // Strip the header line the single-row render repeats.
+            if let Some(nl) = body.find('\n') {
+                self.csv.push_str(&body[nl + 1..]);
+            }
+        }
+        self.rows_seen = rounds.len();
+    }
+}
+
+impl RunObserver for ReportSink {
+    fn observe(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+        match ev {
+            RunEvent::RoundClosed { driver, .. } => self.append_rows(&driver.rounds),
+            RunEvent::RunFinished { result } => {
+                self.append_rows(&result.rounds);
+                if let Some(path) = &self.csv_path {
+                    if let Some(dir) = path.parent() {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                    std::fs::write(path, &self.csv)
+                        .with_context(|| format!("writing {}", path.display()))?;
+                }
+                if let Some(path) = &self.report_path {
+                    if let Some(dir) = path.parent() {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                    std::fs::write(path, result_to_json(result).dump())
+                        .with_context(|| format!("writing {}", path.display()))?;
+                }
+            }
+            RunEvent::CheckpointWritten { .. } | RunEvent::FaultInjected { .. } => {}
+        }
+        Ok(())
+    }
 }
 
 /// Summary → JSON (machine-readable reports under `reports/`).
@@ -160,7 +314,7 @@ mod tests {
     use crate::config::{EngineKind, ExperimentConfig, ProtocolKind};
     use crate::sim::FlRun;
 
-    fn tiny_result() -> RunResult {
+    fn tiny_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::task1_scaled();
         cfg.engine = EngineKind::Mock;
         cfg.protocol = ProtocolKind::HybridFl;
@@ -169,13 +323,17 @@ mod tests {
         cfg.n_edges = 2;
         cfg.dataset_size = 200;
         cfg.eval_size = 50;
-        FlRun::new(cfg).unwrap().run().unwrap()
+        cfg
+    }
+
+    fn tiny_result() -> RunResult {
+        FlRun::new(tiny_cfg()).unwrap().run().unwrap()
     }
 
     #[test]
     fn csv_has_header_and_rows() {
         let r = tiny_result();
-        let csv = traces_to_csv(&r.rounds);
+        let csv = traces_to_csv_with(&CsvSchema::from_config(&tiny_cfg()), &r.rounds);
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6); // header + 5 rounds
         assert!(lines[0].starts_with("t,round_len"));
@@ -187,6 +345,58 @@ mod tests {
         for l in &lines[1..] {
             assert_eq!(l.split(',').count(), n, "row: {l}");
         }
+    }
+
+    /// The config-derived schema matches what the legacy first-row guess
+    /// produced on a complete trace — and, unlike it, stays correct on an
+    /// empty or truncated segment.
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_wrappers_match_config_schema() {
+        let cfg = tiny_cfg();
+        let r = tiny_result();
+        let schema = CsvSchema::from_config(&cfg);
+        assert_eq!(
+            schema,
+            CsvSchema {
+                n_regions: 2,
+                has_slack: true
+            }
+        );
+        assert_eq!(
+            traces_to_csv(&r.rounds),
+            traces_to_csv_with(&schema, &r.rounds)
+        );
+        // The legacy guess degrades on an empty trace (headerless
+        // region columns); the config-derived header never does.
+        assert!(!traces_to_csv(&[]).contains("avail_r0"));
+        assert!(traces_to_csv_with(&schema, &[]).contains("avail_r0"));
+    }
+
+    /// `ReportSink` consuming the event stream produces exactly the CSV
+    /// the post-hoc renderer produces from the final result.
+    #[test]
+    fn report_sink_matches_post_hoc_csv() {
+        use crate::env::DriverState;
+
+        let cfg = tiny_cfg();
+        let r = tiny_result();
+        let mut sink = ReportSink::new(&cfg);
+        let mut driver = DriverState::fresh();
+        for row in &r.rounds {
+            driver.rounds.push(row.clone());
+            driver.rounds_done = row.t;
+            sink.observe(&RunEvent::RoundClosed {
+                trace: driver.rounds.last().unwrap(),
+                driver: &driver,
+            })
+            .unwrap();
+        }
+        sink.observe(&RunEvent::RunFinished { result: &r }).unwrap();
+        assert_eq!(
+            sink.csv_text(),
+            traces_to_csv_with(&CsvSchema::from_config(&cfg), &r.rounds)
+        );
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Operations control plane — observe and steer a running experiment.
+//!
+//! A multi-hour, million-client, churning run must not be a black box
+//! until it writes artifacts. This module turns the checkpoint + churn
+//! subsystems into an operable system, in three pieces:
+//!
+//! * **[`RunObserver`]** — the typed round-boundary event stream. The
+//!   driver ([`crate::env::run_resumable`]) emits [`RunEvent`]s on *both*
+//!   backends: one [`RunEvent::RoundClosed`] per completed round, a
+//!   [`RunEvent::CheckpointWritten`] per snapshot (scheduled or
+//!   on-demand), a [`RunEvent::FaultInjected`] per live-injected churn
+//!   event, and one final [`RunEvent::RunFinished`]. Observers see only
+//!   protocol-visible aggregates (env contract point 8) — per-region
+//!   counts, availability means, slack telemetry — never per-client
+//!   ground truth.
+//! * **[`OpsServer`]** — a Prometheus-text `/metrics` endpoint plus a
+//!   line-oriented control socket, multiplexed on one std
+//!   [`std::net::TcpListener`] (no new dependencies). Scrapes report the
+//!   round index, per-region availability / selected proportion / slack
+//!   θ̂, arena peak, peak RSS, cumulative `bytes_moved`, and
+//!   quota/deadline counters.
+//! * **[`RunControl`]** — what the driver services at every round
+//!   boundary: fan out events to observers, write scheduled checkpoints
+//!   ([`CheckpointPlan`]), and execute pending control commands
+//!   (`pause`/`resume`, `checkpoint-now`, `inject`). Injected faults are
+//!   spliced into the running churn model via
+//!   [`crate::env::FlEnvironment::inject_fault`], so an injected blackout
+//!   is indistinguishable from a scripted one.
+//!
+//! # Control protocol
+//!
+//! Connect to the ops address and send newline-terminated commands; each
+//! gets one `ok …` or `err …` reply line (HTTP `GET` on the same port is
+//! sniffed and served as a scrape):
+//!
+//! ```text
+//! status                    → ok round=12 paused=false
+//! pause                     → ok paused          (takes effect at the round boundary)
+//! checkpoint-now [DIR]      → ok <path written>  (DIR defaults to the run's checkpoint dir)
+//! inject {"kind":"region_blackout","region":1,"from_round":40,"until_round":50}
+//!                           → ok injected
+//! resume                    → ok resumed
+//! quit                      → closes the connection
+//! ```
+//!
+//! Replies are sent when the *driver* has executed the command, so a
+//! client that has seen `ok` for `checkpoint-now` can rely on the file
+//! being on disk. `pause` blocks the run at the next round boundary —
+//! command servicing keeps working while paused, which is exactly what
+//! makes `pause → checkpoint-now → resume` a consistent, byte-identical
+//! maneuver (pinned by test against `snapshot::run_result_bytes`).
+
+mod server;
+
+pub use server::{OpsServer, RunInfo};
+
+use std::path::{Path, PathBuf};
+
+use crate::churn::FaultEvent;
+use crate::env::{DriverState, FlEnvironment, RoundTrace, RunResult};
+use crate::protocols::Protocol;
+use crate::snapshot::{self, CodecKind, RunSnapshot};
+use crate::Result;
+
+pub(crate) use server::OpsDriver;
+
+/// One typed round-boundary event. Borrowed views into driver-owned data
+/// — observers read, the driver keeps ownership.
+#[derive(Debug)]
+pub enum RunEvent<'a> {
+    /// A round completed; `trace` is its [`RoundTrace`] row and `driver`
+    /// the full accumulator state (including every prior row).
+    RoundClosed {
+        trace: &'a RoundTrace,
+        driver: &'a DriverState,
+    },
+    /// A snapshot was written — by the schedule or by `checkpoint-now`.
+    CheckpointWritten { round: usize, path: &'a Path },
+    /// A fault event was live-injected into the world at round `round`
+    /// (it takes effect at `event.start_round()`).
+    FaultInjected { round: usize, event: &'a FaultEvent },
+    /// The run is over; `result` is what the driver is about to return.
+    RunFinished { result: &'a RunResult },
+}
+
+/// A consumer of the round-boundary event stream. Implemented by
+/// [`crate::metrics::ReportSink`] (CSV / JSON report artifacts) and by the
+/// ops endpoint's internal state; an error aborts the run.
+pub trait RunObserver {
+    fn observe(&mut self, ev: &RunEvent<'_>) -> Result<()>;
+}
+
+/// Scheduled checkpointing: write a snapshot to `dir` with codec `kind`
+/// every `every` rounds (at rounds where `rounds_done % every == 0`).
+#[derive(Clone, Debug)]
+pub struct CheckpointPlan {
+    pub dir: PathBuf,
+    pub kind: CodecKind,
+    pub every: usize,
+}
+
+/// Everything [`crate::env::run_resumable`] services at a round boundary:
+/// observers, the checkpoint schedule, and the ops command queue. A plain
+/// run uses `RunControl::new()` (no observers, no checkpoints, no ops) —
+/// the boundary then costs one branch per concern.
+pub struct RunControl<'a> {
+    /// Backend label written into snapshots (`sim` / `live`).
+    backend: String,
+    observers: Vec<&'a mut dyn RunObserver>,
+    checkpoints: Option<CheckpointPlan>,
+    ops: Option<OpsDriver>,
+}
+
+impl Default for RunControl<'_> {
+    fn default() -> Self {
+        RunControl::new()
+    }
+}
+
+impl<'a> RunControl<'a> {
+    /// An inert control: no observers, no checkpoints, no ops endpoint.
+    pub fn new() -> RunControl<'a> {
+        RunControl {
+            backend: "sim".to_string(),
+            observers: Vec::new(),
+            checkpoints: None,
+            ops: None,
+        }
+    }
+
+    /// Set the backend label snapshots are stamped with (`sim` is the
+    /// default; [`crate::scenario::Scenario`] passes its own).
+    pub fn backend(mut self, label: impl Into<String>) -> RunControl<'a> {
+        self.backend = label.into();
+        self
+    }
+
+    /// Attach an observer; events are fanned out in attachment order.
+    pub fn observe_with(mut self, obs: &'a mut dyn RunObserver) -> RunControl<'a> {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Attach a checkpoint schedule.
+    pub fn checkpoints(mut self, plan: CheckpointPlan) -> RunControl<'a> {
+        self.checkpoints = Some(plan);
+        self
+    }
+
+    /// Attach a driver-side ops handle (from [`OpsServer::attach`]).
+    pub fn ops(mut self, driver: OpsDriver) -> RunControl<'a> {
+        self.ops = Some(driver);
+        self
+    }
+
+    /// The driver's round boundary: emit [`RunEvent::RoundClosed`], write
+    /// a scheduled checkpoint if one is due, then drain (and, while
+    /// paused, block on) the ops command queue.
+    pub(crate) fn round_closed(
+        &mut self,
+        env: &mut dyn FlEnvironment,
+        protocol: &dyn Protocol,
+        st: &DriverState,
+    ) -> Result<()> {
+        let trace = st
+            .rounds
+            .last()
+            .expect("round_closed with an empty trace");
+        self.emit(&RunEvent::RoundClosed { trace, driver: st })?;
+        if let Some(plan) = &self.checkpoints {
+            if plan.every > 0 && st.rounds_done % plan.every == 0 {
+                let snap = RunSnapshot::capture(&self.backend, env, protocol, st);
+                let path = snapshot::save_to_dir(&plan.dir, plan.kind, &snap)?;
+                self.emit(&RunEvent::CheckpointWritten {
+                    round: st.rounds_done,
+                    path: &path,
+                })?;
+            }
+        }
+        self.service_commands(env, protocol, st)
+    }
+
+    /// End of run: emit [`RunEvent::RunFinished`].
+    pub(crate) fn run_finished(&mut self, result: &RunResult) -> Result<()> {
+        self.emit(&RunEvent::RunFinished { result })
+    }
+
+    fn emit(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+        for obs in self.observers.iter_mut() {
+            obs.observe(ev)?;
+        }
+        if let Some(ops) = self.ops.as_mut() {
+            ops.observe(ev)?;
+        }
+        Ok(())
+    }
+
+    /// Execute every pending ops command. While paused this *blocks* on
+    /// the queue — the run sits at the boundary, still answering
+    /// `status` / `checkpoint-now` / `inject`, until `resume` arrives.
+    fn service_commands(
+        &mut self,
+        env: &mut dyn FlEnvironment,
+        protocol: &dyn Protocol,
+        st: &DriverState,
+    ) -> Result<()> {
+        // Take the driver handle out so command handlers can borrow the
+        // rest of `self` (checkpoint plan, observers) freely.
+        let Some(mut ops) = self.ops.take() else {
+            return Ok(());
+        };
+        let res = self.service_loop(&mut ops, env, protocol, st);
+        self.ops = Some(ops);
+        res
+    }
+
+    fn service_loop(
+        &mut self,
+        ops: &mut OpsDriver,
+        env: &mut dyn FlEnvironment,
+        protocol: &dyn Protocol,
+        st: &DriverState,
+    ) -> Result<()> {
+        loop {
+            let Some(req) = (if ops.paused() {
+                ops.wait_next()
+            } else {
+                ops.try_next()
+            }) else {
+                return Ok(());
+            };
+            let reply = match req.cmd {
+                server::Command::Status => {
+                    format!("ok round={} paused={}", st.rounds_done, ops.paused())
+                }
+                server::Command::Pause => {
+                    ops.set_paused(true);
+                    "ok paused".to_string()
+                }
+                server::Command::Resume => {
+                    ops.set_paused(false);
+                    "ok resumed".to_string()
+                }
+                server::Command::CheckpointNow { dir } => {
+                    match dir.or_else(|| self.checkpoints.as_ref().map(|p| p.dir.clone())) {
+                        None => "err no checkpoint directory: this run has no schedule, \
+                                 pass one explicitly (checkpoint-now DIR)"
+                            .to_string(),
+                        Some(dir) => {
+                            let kind = self
+                                .checkpoints
+                                .as_ref()
+                                .map_or(CodecKind::Binary, |p| p.kind);
+                            let snap = RunSnapshot::capture(&self.backend, env, protocol, st);
+                            match snapshot::save_to_dir(&dir, kind, &snap) {
+                                Ok(path) => {
+                                    let ev = RunEvent::CheckpointWritten {
+                                        round: st.rounds_done,
+                                        path: &path,
+                                    };
+                                    for obs in self.observers.iter_mut() {
+                                        obs.observe(&ev)?;
+                                    }
+                                    ops.observe(&ev)?;
+                                    format!("ok {}", path.display())
+                                }
+                                Err(e) => format!("err {e:#}"),
+                            }
+                        }
+                    }
+                }
+                server::Command::Inject(event) => {
+                    if event.start_round() <= st.rounds_done {
+                        format!(
+                            "err event starts at round {} but {} rounds have already run \
+                             (injection must only touch future rounds)",
+                            event.start_round(),
+                            st.rounds_done
+                        )
+                    } else {
+                        match env.inject_fault(event.clone()) {
+                            Ok(()) => {
+                                let ev = RunEvent::FaultInjected {
+                                    round: st.rounds_done,
+                                    event: &event,
+                                };
+                                for obs in self.observers.iter_mut() {
+                                    obs.observe(&ev)?;
+                                }
+                                ops.observe(&ev)?;
+                                "ok injected".to_string()
+                            }
+                            Err(e) => format!("err {e:#}"),
+                        }
+                    }
+                }
+            };
+            req.respond(reply);
+        }
+    }
+}

@@ -1,0 +1,561 @@
+//! The ops listener: Prometheus-text scrapes and the line-oriented
+//! control protocol, multiplexed on one std [`TcpListener`].
+//!
+//! One acceptor thread takes connections and sniffs the first line: an
+//! HTTP `GET` is answered as a scrape (rendered from the shared
+//! [`MetricsState`], which [`OpsDriver::observe`] refreshes at every
+//! round boundary), anything else enters control mode — one command per
+//! line, one `ok …`/`err …` reply per command. Control commands travel to
+//! the driver over an mpsc queue and are executed *by the run loop* at
+//! round boundaries (see [`super::RunControl`]), so a reply certifies the
+//! command's effect, not just its receipt.
+//!
+//! Everything here is std-only: `TcpListener`, `thread`, `mpsc`, `Mutex`
+//! — no new dependencies (hard constraint of the repo).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::churn::FaultEvent;
+use crate::jsonx::Json;
+use crate::ops::{RunEvent, RunObserver};
+use crate::Result;
+
+/// What the run loop tells the endpoint about itself at attach time.
+#[derive(Clone, Debug)]
+pub struct RunInfo {
+    /// Backend label (`sim` / `live`).
+    pub backend: String,
+    /// Protocol label (`hybridfl` / `fedavg` / `hierfavg`).
+    pub protocol: String,
+    /// Clients per region — the denominators of the selected-proportion
+    /// gauges. Protocol-visible topology facts, not per-client state.
+    pub region_sizes: Vec<usize>,
+}
+
+/// A parsed control command, queued for the driver.
+#[derive(Clone, Debug)]
+pub(crate) enum Command {
+    Status,
+    Pause,
+    Resume,
+    CheckpointNow { dir: Option<std::path::PathBuf> },
+    Inject(FaultEvent),
+}
+
+/// One queued command plus its reply line channel.
+pub(crate) struct OpsRequest {
+    pub(crate) cmd: Command,
+    reply: Sender<String>,
+}
+
+impl OpsRequest {
+    /// Send the reply line back to the waiting control connection. A gone
+    /// client is not an error — the command already took effect.
+    pub(crate) fn respond(self, line: String) {
+        let _ = self.reply.send(line);
+    }
+}
+
+/// The scrape's source of truth — refreshed by [`OpsDriver::observe`] at
+/// round boundaries, read by HTTP handler threads. Holds round-trace
+/// aggregates only (env contract point 8).
+#[derive(Default)]
+struct MetricsState {
+    attached: bool,
+    backend: String,
+    protocol: String,
+    region_sizes: Vec<usize>,
+    round: usize,
+    accuracy: f64,
+    best_accuracy: f64,
+    avail: Vec<f64>,
+    selected_proportion: Vec<f64>,
+    slack_theta: Option<Vec<f64>>,
+    bytes_moved_total: u64,
+    quota_rounds_total: u64,
+    deadline_rounds_total: u64,
+    checkpoints_written_total: u64,
+    faults_injected_total: u64,
+    paused: bool,
+    finished: bool,
+}
+
+struct Shared {
+    metrics: Mutex<MetricsState>,
+    /// Cloned (under the lock) by each control connection handler.
+    cmd_tx: Mutex<Sender<OpsRequest>>,
+    shutdown: AtomicBool,
+}
+
+/// The ops endpoint. Bind it (explicitly or via
+/// [`crate::scenario::Scenario::ops_listen`]), hand [`OpsServer::attach`]'s
+/// driver handle to the run, and the listener serves scrapes and control
+/// sessions until the server is dropped.
+pub struct OpsServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    /// Taken by `attach`; commands queued before the run starts are
+    /// serviced at its first round boundary.
+    cmd_rx: Option<Receiver<OpsRequest>>,
+}
+
+impl OpsServer {
+    /// Bind the listener and start accepting. `addr` is anything
+    /// `ToSocketAddrs` takes — use port 0 to let the OS pick (the bound
+    /// address is [`OpsServer::local_addr`]).
+    pub fn bind(addr: impl ToSocketAddrs) -> Result<OpsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let shared = Arc::new(Shared {
+            metrics: Mutex::new(MetricsState::default()),
+            cmd_tx: Mutex::new(cmd_tx),
+            shutdown: AtomicBool::new(false),
+        });
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("ops-acceptor".to_string())
+                .spawn(move || accept_loop(listener, shared))?
+        };
+        Ok(OpsServer {
+            shared,
+            addr,
+            acceptor: Some(acceptor),
+            cmd_rx: Some(cmd_rx),
+        })
+    }
+
+    /// The address the listener actually bound.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Hand the run loop its side of the endpoint. Call once per server;
+    /// the returned [`OpsDriver`] goes into
+    /// [`super::RunControl::ops`].
+    pub fn attach(&mut self, info: RunInfo) -> Result<OpsDriver> {
+        let rx = self
+            .cmd_rx
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("ops server is already attached to a run"))?;
+        {
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.attached = true;
+            m.backend = info.backend;
+            m.protocol = info.protocol;
+            m.region_sizes = info.region_sizes;
+        }
+        Ok(OpsDriver {
+            shared: Arc::clone(&self.shared),
+            rx,
+            paused: false,
+        })
+    }
+}
+
+impl Drop for OpsServer {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Unblock `accept` with a throwaway connection to ourselves.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The run-loop side of the endpoint: consumes queued commands
+/// ([`super::RunControl`] executes them at round boundaries) and mirrors
+/// the event stream into the scrape state.
+pub(crate) struct OpsDriver {
+    shared: Arc<Shared>,
+    rx: Receiver<OpsRequest>,
+    paused: bool,
+}
+
+impl OpsDriver {
+    pub(crate) fn paused(&self) -> bool {
+        self.paused
+    }
+
+    pub(crate) fn set_paused(&mut self, on: bool) {
+        self.paused = on;
+        self.shared.metrics.lock().unwrap().paused = on;
+    }
+
+    /// Non-blocking poll (the normal, unpaused boundary).
+    pub(crate) fn try_next(&self) -> Option<OpsRequest> {
+        match self.rx.try_recv() {
+            Ok(req) => Some(req),
+            Err(TryRecvError::Empty | TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Blocking wait (the paused boundary). `None` only if every sender
+    /// is gone — impossible while the server lives, since [`Shared`]
+    /// keeps one.
+    pub(crate) fn wait_next(&self) -> Option<OpsRequest> {
+        self.rx.recv().ok()
+    }
+}
+
+impl RunObserver for OpsDriver {
+    fn observe(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+        let mut m = self.shared.metrics.lock().unwrap();
+        match ev {
+            RunEvent::RoundClosed { trace, .. } => {
+                m.round = trace.t;
+                m.accuracy = trace.accuracy;
+                m.best_accuracy = trace.best_accuracy;
+                m.avail = trace.avail.clone();
+                m.selected_proportion = trace
+                    .selected
+                    .iter()
+                    .zip(m.region_sizes.iter())
+                    .map(|(&sel, &size)| {
+                        if size == 0 {
+                            0.0
+                        } else {
+                            sel as f64 / size as f64
+                        }
+                    })
+                    .collect();
+                m.slack_theta = trace
+                    .slack
+                    .as_ref()
+                    .map(|ss| ss.iter().map(|s| s.theta).collect());
+                m.bytes_moved_total += trace.bytes_moved;
+                if trace.deadline_hit {
+                    m.deadline_rounds_total += 1;
+                } else {
+                    m.quota_rounds_total += 1;
+                }
+            }
+            RunEvent::CheckpointWritten { .. } => m.checkpoints_written_total += 1,
+            RunEvent::FaultInjected { .. } => m.faults_injected_total += 1,
+            RunEvent::RunFinished { .. } => m.finished = true,
+        }
+        Ok(())
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        let shared = Arc::clone(&shared);
+        let _ = std::thread::Builder::new()
+            .name("ops-conn".to_string())
+            .spawn(move || {
+                let _ = handle_connection(stream, shared);
+            });
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut first = String::new();
+    if reader.read_line(&mut first)? == 0 {
+        return Ok(());
+    }
+    if let Some(request) = first.strip_prefix("GET ") {
+        // HTTP mode: drain the header block, answer one scrape, close.
+        let path = request.split_whitespace().next().unwrap_or("/");
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 || line == "\r\n" || line == "\n" {
+                break;
+            }
+        }
+        return match path {
+            "/metrics" => {
+                let body = render_metrics(&shared.metrics.lock().unwrap());
+                http_respond(&mut writer, "200 OK", &body)
+            }
+            _ => http_respond(&mut writer, "404 Not Found", "try /metrics\n"),
+        };
+    }
+
+    // Control mode: one command per line until `quit` or EOF.
+    let mut line = first;
+    loop {
+        let reply = match parse_command(line.trim()) {
+            ParsedLine::Empty => None,
+            ParsedLine::Quit => return Ok(()),
+            ParsedLine::Err(msg) => Some(format!("err {msg}")),
+            ParsedLine::Cmd(cmd) => Some(dispatch(&shared, cmd)),
+        };
+        if let Some(reply) = reply {
+            writer.write_all(reply.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+        }
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+    }
+}
+
+/// Queue a command for the driver and wait for its reply line.
+fn dispatch(shared: &Shared, cmd: Command) -> String {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let sent = {
+        let tx = shared.cmd_tx.lock().unwrap().clone();
+        tx.send(OpsRequest {
+            cmd,
+            reply: reply_tx,
+        })
+    };
+    if sent.is_err() {
+        return "err no active run (driver detached)".to_string();
+    }
+    match reply_rx.recv() {
+        Ok(line) => line,
+        // The driver dropped the queue (run ended) with our command
+        // still pending.
+        Err(_) => "err run ended before the command was serviced".to_string(),
+    }
+}
+
+enum ParsedLine {
+    Empty,
+    Quit,
+    Cmd(Command),
+    Err(String),
+}
+
+fn parse_command(line: &str) -> ParsedLine {
+    if line.is_empty() {
+        return ParsedLine::Empty;
+    }
+    let (verb, rest) = match line.split_once(char::is_whitespace) {
+        Some((v, r)) => (v, r.trim()),
+        None => (line, ""),
+    };
+    match verb {
+        "quit" => ParsedLine::Quit,
+        "status" => ParsedLine::Cmd(Command::Status),
+        "pause" => ParsedLine::Cmd(Command::Pause),
+        "resume" => ParsedLine::Cmd(Command::Resume),
+        "checkpoint-now" => ParsedLine::Cmd(Command::CheckpointNow {
+            dir: (!rest.is_empty()).then(|| std::path::PathBuf::from(rest)),
+        }),
+        "inject" => match Json::parse(rest).and_then(|j| FaultEvent::from_json(&j)) {
+            Ok(event) => ParsedLine::Cmd(Command::Inject(event)),
+            Err(e) => ParsedLine::Err(format!("bad inject payload: {e:#}")),
+        },
+        other => ParsedLine::Err(format!(
+            "unknown command '{other}' (commands: status, pause, resume, \
+             checkpoint-now [DIR], inject JSON, quit)"
+        )),
+    }
+}
+
+fn http_respond(writer: &mut TcpStream, status: &str, body: &str) -> std::io::Result<()> {
+    write!(
+        writer,
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    writer.flush()
+}
+
+/// Render the Prometheus text exposition. Gauges come from the shared
+/// round-boundary state; the arena peak and RSS are read live at scrape
+/// time (they are process-level observables, not round aggregates).
+fn render_metrics(m: &MetricsState) -> String {
+    let mut out = String::with_capacity(1024);
+    let mut gauge = |name: &str, help: &str, value: String| {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {value}\n"
+        ));
+    };
+    gauge(
+        "hybridfl_round",
+        "Rounds completed so far.",
+        m.round.to_string(),
+    );
+    gauge(
+        "hybridfl_paused",
+        "1 while the run is paused at a round boundary.",
+        u8::from(m.paused).to_string(),
+    );
+    gauge(
+        "hybridfl_finished",
+        "1 once the run has produced its final result.",
+        u8::from(m.finished).to_string(),
+    );
+    gauge(
+        "hybridfl_accuracy",
+        "Global-model accuracy at the last evaluation.",
+        m.accuracy.to_string(),
+    );
+    gauge(
+        "hybridfl_best_accuracy",
+        "Best global-model accuracy so far.",
+        m.best_accuracy.to_string(),
+    );
+    gauge(
+        "hybridfl_arena_models_peak",
+        "Peak count of live model buffers in the params arena.",
+        crate::model::arena_peak().to_string(),
+    );
+    if let Some(rss) = crate::benchkit::peak_rss_bytes() {
+        gauge(
+            "hybridfl_peak_rss_bytes",
+            "Peak resident set size of this process (VmHWM).",
+            rss.to_string(),
+        );
+    }
+
+    let mut counter = |name: &str, help: &str, value: u64| {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} counter\n{name} {value}\n"
+        ));
+    };
+    counter(
+        "hybridfl_bytes_moved_total",
+        "Cumulative device-to-edge bytes moved (folded submissions x wire bytes).",
+        m.bytes_moved_total,
+    );
+    counter(
+        "hybridfl_quota_rounds_total",
+        "Rounds whose cutoff policy was satisfied before the deadline.",
+        m.quota_rounds_total,
+    );
+    counter(
+        "hybridfl_deadline_rounds_total",
+        "Rounds cut by the T_lim deadline instead of the cutoff policy.",
+        m.deadline_rounds_total,
+    );
+    counter(
+        "hybridfl_checkpoints_written_total",
+        "Snapshots written (scheduled + checkpoint-now).",
+        m.checkpoints_written_total,
+    );
+    counter(
+        "hybridfl_faults_injected_total",
+        "Churn fault events injected over the control interface.",
+        m.faults_injected_total,
+    );
+
+    let mut region_gauge = |name: &str, help: &str, values: &[f64]| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+        for (r, v) in values.iter().enumerate() {
+            out.push_str(&format!("{name}{{region=\"{r}\"}} {v}\n"));
+        }
+    };
+    region_gauge(
+        "hybridfl_region_availability",
+        "Per-region mean availability after this round's churn step.",
+        &m.avail,
+    );
+    region_gauge(
+        "hybridfl_region_selected_proportion",
+        "Selected clients this round as a fraction of the region's fleet.",
+        &m.selected_proportion,
+    );
+    if let Some(theta) = &m.slack_theta {
+        region_gauge(
+            "hybridfl_region_slack_theta",
+            "HybridFL slack estimate (theta-hat) per region.",
+            theta,
+        );
+    }
+
+    if m.attached {
+        out.push_str(&format!(
+            "# HELP hybridfl_run_info Static run labels.\n\
+             # TYPE hybridfl_run_info gauge\n\
+             hybridfl_run_info{{backend=\"{}\",protocol=\"{}\"}} 1\n",
+            m.backend, m.protocol
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_commands() {
+        assert!(matches!(parse_command(""), ParsedLine::Empty));
+        assert!(matches!(parse_command("quit"), ParsedLine::Quit));
+        assert!(matches!(
+            parse_command("status"),
+            ParsedLine::Cmd(Command::Status)
+        ));
+        assert!(matches!(
+            parse_command("checkpoint-now"),
+            ParsedLine::Cmd(Command::CheckpointNow { dir: None })
+        ));
+        match parse_command("checkpoint-now /tmp/ckpts") {
+            ParsedLine::Cmd(Command::CheckpointNow { dir: Some(d) }) => {
+                assert_eq!(d, std::path::PathBuf::from("/tmp/ckpts"));
+            }
+            _ => panic!("expected checkpoint-now with a dir"),
+        }
+        match parse_command(
+            r#"inject {"kind":"region_blackout","region":1,"from_round":4,"until_round":9}"#,
+        ) {
+            ParsedLine::Cmd(Command::Inject(FaultEvent::RegionBlackout {
+                region,
+                from_round,
+                until_round,
+            })) => {
+                assert_eq!((region, from_round, until_round), (1, 4, 9));
+            }
+            _ => panic!("expected a parsed blackout"),
+        }
+        assert!(matches!(parse_command("inject {"), ParsedLine::Err(_)));
+        assert!(matches!(parse_command("frobnicate"), ParsedLine::Err(_)));
+    }
+
+    #[test]
+    fn render_includes_required_gauges() {
+        let mut m = MetricsState {
+            attached: true,
+            backend: "sim".into(),
+            protocol: "hybridfl".into(),
+            region_sizes: vec![10, 10],
+            round: 7,
+            avail: vec![0.75, 0.5],
+            selected_proportion: vec![0.3, 0.2],
+            slack_theta: Some(vec![1.5, 2.0]),
+            bytes_moved_total: 4096,
+            quota_rounds_total: 6,
+            deadline_rounds_total: 1,
+            ..MetricsState::default()
+        };
+        m.accuracy = 0.5;
+        let text = render_metrics(&m);
+        for needle in [
+            "hybridfl_round 7\n",
+            "hybridfl_region_availability{region=\"0\"} 0.75\n",
+            "hybridfl_region_availability{region=\"1\"} 0.5\n",
+            "hybridfl_region_selected_proportion{region=\"0\"} 0.3\n",
+            "hybridfl_region_slack_theta{region=\"1\"} 2\n",
+            "hybridfl_bytes_moved_total 4096\n",
+            "hybridfl_quota_rounds_total 6\n",
+            "hybridfl_deadline_rounds_total 1\n",
+            "hybridfl_arena_models_peak ",
+            "hybridfl_run_info{backend=\"sim\",protocol=\"hybridfl\"} 1\n",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+}

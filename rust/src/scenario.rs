@@ -27,8 +27,9 @@ use crate::config::{CacheMode, EngineKind, ExperimentConfig, ProtocolKind};
 use crate::env::{
     run_resumable, DriverState, FlEnvironment, LiveClusterEnv, RunResult, VirtualClockEnv,
 };
-use crate::protocols::{protocol_for, Protocol};
-use crate::snapshot::{self, CodecKind, RunSnapshot};
+use crate::ops::{CheckpointPlan, OpsServer, RunControl, RunInfo};
+use crate::protocols::protocol_for;
+use crate::snapshot::{self, CodecKind};
 use crate::Result;
 
 /// Which [`crate::env::FlEnvironment`] implementation executes the rounds.
@@ -73,6 +74,7 @@ pub struct Scenario {
     record_fates: Option<PathBuf>,
     serial_fold: bool,
     eager_sweeps: bool,
+    ops_listen: Option<String>,
 }
 
 impl Scenario {
@@ -93,6 +95,7 @@ impl Scenario {
             record_fates: None,
             serial_fold: false,
             eager_sweeps: false,
+            ops_listen: None,
         }
     }
 
@@ -344,6 +347,19 @@ impl Scenario {
         self
     }
 
+    // --- ops endpoint -------------------------------------------------------
+
+    /// Serve the operations control plane on `addr` while the run is in
+    /// flight: a Prometheus-text `/metrics` scrape plus a line-oriented
+    /// control socket (`pause`/`resume`, `checkpoint-now`, live fault
+    /// `inject`) on one listener — see [`crate::ops`]. Like
+    /// [`Self::serial_fold`], this is operational, not part of the
+    /// experiment config: it never perturbs the run or its snapshots.
+    pub fn ops_listen(mut self, addr: impl Into<String>) -> Scenario {
+        self.ops_listen = Some(addr.into());
+        self
+    }
+
     /// The resolved config (inspection / serialization).
     pub fn config(&self) -> &ExperimentConfig {
         &self.cfg
@@ -351,9 +367,26 @@ impl Scenario {
 
     /// Validate the config, build the backend and the protocol, restore a
     /// snapshot when resuming, and drive the run to completion —
-    /// checkpointing at round boundaries when a checkpoint dir is set.
+    /// checkpointing at round boundaries when a checkpoint dir is set and
+    /// serving the ops endpoint when [`Self::ops_listen`] is set.
     /// Identical [`RunResult`] shape on every backend.
     pub fn run(self) -> Result<RunResult> {
+        let server = match &self.ops_listen {
+            Some(addr) => Some(OpsServer::bind(addr.as_str())?),
+            None => None,
+        };
+        self.run_inner(server)
+    }
+
+    /// Like [`Self::run`], but serve the ops endpoint on an
+    /// already-bound [`OpsServer`] — the way to run against an
+    /// OS-assigned port (`OpsServer::bind("127.0.0.1:0")`, read
+    /// [`OpsServer::local_addr`], then hand the server over).
+    pub fn run_with_ops(self, server: OpsServer) -> Result<RunResult> {
+        self.run_inner(Some(server))
+    }
+
+    fn run_inner(self, ops_server: Option<OpsServer>) -> Result<RunResult> {
         self.cfg.validate()?;
         if self.checkpoint_every.is_some() && self.checkpoint_dir.is_none() {
             anyhow::bail!("checkpoint_every(n) requires checkpoint_dir(..)");
@@ -394,18 +427,25 @@ impl Scenario {
             env.set_fate_recording(true);
         }
 
-        let result = match self.checkpoint_dir {
-            Some(dir) => {
-                let every = self.checkpoint_every.unwrap_or(1);
-                let kind = self.snapshot_codec;
-                run_resumable(env.as_mut(), protocol.as_mut(), driver, &mut |env, proto, st| {
-                    write_checkpoint(&dir, kind, every, backend, &*env, proto, st)
-                })?
-            }
-            None => {
-                run_resumable(env.as_mut(), protocol.as_mut(), driver, &mut |_, _, _| Ok(()))?
-            }
-        };
+        let mut ctl = RunControl::new().backend(backend.as_str());
+        if let Some(dir) = &self.checkpoint_dir {
+            ctl = ctl.checkpoints(CheckpointPlan {
+                dir: dir.clone(),
+                kind: self.snapshot_codec,
+                every: self.checkpoint_every.unwrap_or(1),
+            });
+        }
+        let mut server = ops_server;
+        if let Some(server) = server.as_mut() {
+            let info = RunInfo {
+                backend: backend.as_str().to_string(),
+                protocol: self.cfg.protocol.as_str().to_string(),
+                region_sizes: (0..env.n_regions()).map(|r| env.region_size(r)).collect(),
+            };
+            ctl = ctl.ops(server.attach(info)?);
+        }
+
+        let result = run_resumable(env.as_mut(), protocol.as_mut(), driver, &mut ctl)?;
 
         if let Some(path) = &self.record_fates {
             let trace = env
@@ -415,24 +455,6 @@ impl Scenario {
         }
         Ok(result)
     }
-}
-
-/// The scenario's round-boundary hook: capture and atomically write a
-/// snapshot every `every` completed rounds.
-fn write_checkpoint(
-    dir: &std::path::Path,
-    kind: CodecKind,
-    every: usize,
-    backend: Backend,
-    env: &dyn FlEnvironment,
-    proto: &dyn Protocol,
-    st: &DriverState,
-) -> Result<()> {
-    if st.rounds_done % every == 0 {
-        let snap = RunSnapshot::capture(backend.as_str(), env, proto, st);
-        snapshot::save_to_dir(dir, kind, &snap)?;
-    }
-    Ok(())
 }
 
 #[cfg(test)]

@@ -217,13 +217,14 @@ impl RunSnapshot {
         driver: &DriverState,
     ) -> RunSnapshot {
         let config_json = env.cfg().to_json().dump();
+        let state = env.capture_state();
         RunSnapshot {
             backend: backend.to_string(),
             fingerprint: fnv1a64(config_json.as_bytes()),
             config_json,
-            rng: env.rng_state(),
-            churn: env.churn_state(),
-            comm: env.comm_state(),
+            rng: state.rng,
+            churn: state.churn,
+            comm: state.comm,
             protocol: protocol.snapshot_state(),
             driver: driver.clone(),
         }
@@ -275,9 +276,11 @@ impl RunSnapshot {
             self.driver.rounds_done,
             env.cfg().t_max
         );
-        env.restore_rng_state(self.rng);
-        env.restore_churn_state(self.churn)?;
-        env.restore_comm_state(self.comm)?;
+        env.restore_state(crate::env::EnvState {
+            rng: self.rng,
+            churn: self.churn,
+            comm: self.comm,
+        })?;
         protocol.restore_state(self.protocol)?;
         Ok(self.driver)
     }

@@ -208,7 +208,7 @@ fn million_clients_complete_a_round_within_memory_ceiling() {
 
 /// Checkpointing must not deep-clone error-feedback residuals: the
 /// snapshot shares each residual vector with the environment by `Arc`
-/// (pointer equality, not just value equality), so `comm_state()` on a
+/// (pointer equality, not just value equality), so `capture_state()` on a
 /// 50k-client `topk+ef` run is O(clients) refcount bumps rather than a
 /// transient doubling of residual memory. Small fleet — the sharing
 /// property is scale-independent, so this runs in tier-1.
@@ -228,7 +228,7 @@ fn comm_state_snapshots_share_residuals_by_reference() {
     let mut protocol = protocol_for(&env);
     run_to_completion(&mut env, protocol.as_mut()).unwrap();
 
-    let (a, b) = (env.comm_state(), env.comm_state());
+    let (a, b) = (env.capture_state().comm, env.capture_state().comm);
     let (CommState::Residuals { clients: a }, CommState::Residuals { clients: b }) = (a, b) else {
         panic!("a topk+ef run must carry residual state after 3 rounds");
     };

@@ -1,0 +1,371 @@
+//! Acceptance tests for the operations control plane (`hybridfl::ops`):
+//!
+//! * a live `/metrics` scrape of a paused 10k-client sim reports exactly
+//!   the gauges of the round the run is paused at (values compared
+//!   verbatim — f64 `Display` is shortest-round-trip, so the scrape text
+//!   must match `to_string()` of the trace fields bit for bit);
+//! * `pause → checkpoint-now → resume` over the control socket is
+//!   byte-identical to the uninterrupted run on both backends, and the
+//!   on-demand snapshot is itself a valid resume point;
+//! * a fault injected over the control socket replays byte-identically
+//!   to the same event pre-scripted as a `ChurnModel::FaultScript`.
+//!
+//! Sequencing is deterministic without polling: commands sent before the
+//! run starts queue in the server's channel and are serviced at the first
+//! round boundary, and a control reply certifies the command's *effect*
+//! (the driver executed it), not just receipt. So `pause` sent pre-run
+//! always lands at the round-1 boundary, and everything after it happens
+//! against a world frozen at round 1.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use hybridfl::churn::{ChurnModel, FaultEvent};
+use hybridfl::config::{Dist, EngineKind, ExperimentConfig, ProtocolKind};
+use hybridfl::env::FlEnvironment;
+use hybridfl::ops::OpsServer;
+use hybridfl::scenario::{Backend, Scenario};
+use hybridfl::snapshot::run_result_bytes;
+
+fn mock_cfg(protocol: ProtocolKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::task1_scaled();
+    cfg.engine = EngineKind::Mock;
+    cfg.protocol = protocol;
+    cfg.n_clients = 20;
+    cfg.n_edges = 2;
+    cfg.dataset_size = 400;
+    cfg.eval_size = 50;
+    cfg.t_max = 9;
+    cfg.dropout = Dist::new(0.25, 0.05);
+    cfg.seed = 11;
+    cfg
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A control-protocol client: one line out, one reply line back.
+struct Control {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Control {
+    fn connect(addr: SocketAddr) -> Control {
+        let stream = TcpStream::connect(addr).unwrap();
+        Control {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    /// Send a command without waiting for the reply (used to queue
+    /// commands before the run starts).
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    /// Block until the next reply line arrives.
+    fn recv(&mut self) -> String {
+        let mut s = String::new();
+        self.reader.read_line(&mut s).unwrap();
+        s.trim_end().to_string()
+    }
+
+    fn cmd(&mut self, line: &str) -> String {
+        self.send(line);
+        self.recv()
+    }
+}
+
+/// One HTTP GET against the ops listener; returns the response body.
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: ops\r\n\r\n").unwrap();
+    stream.flush().unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap(); // server closes after one response
+    let body = raw.find("\r\n\r\n").expect("missing header terminator") + 4;
+    raw[body..].to_string()
+}
+
+/// Scrape a paused 10k-client sim and hold every gauge to the round
+/// trace, value-exact.
+#[test]
+fn live_scrape_matches_round_trace_at_10k_clients() {
+    let mut cfg = ExperimentConfig::task1_scaled();
+    cfg.engine = EngineKind::Mock;
+    cfg.protocol = ProtocolKind::HybridFl;
+    cfg.n_clients = 10_000;
+    cfg.n_edges = 4;
+    cfg.dataset_size = 60_000;
+    cfg.eval_size = 50;
+    cfg.c_fraction = 0.3;
+    cfg.dropout = Dist::new(0.2, 0.05);
+    cfg.t_max = 3;
+    cfg.seed = 4242;
+
+    // Protocol-visible region sizes — the selected-proportion denominators.
+    let region_sizes: Vec<usize> = {
+        let env = hybridfl::env::VirtualClockEnv::new(cfg.clone()).unwrap();
+        (0..env.n_regions()).map(|r| env.region_size(r)).collect()
+    };
+
+    let mut server = OpsServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+
+    // An unattached server already scrapes (round 0, no run_info).
+    let idle = http_get(addr, "/metrics");
+    assert!(idle.contains("hybridfl_round 0\n"), "{idle}");
+    assert!(!idle.contains("hybridfl_run_info"), "{idle}");
+    assert!(http_get(addr, "/other").contains("try /metrics"));
+
+    let mut ctl = Control::connect(addr);
+    ctl.send("pause"); // queued; lands at the round-1 boundary
+    let run = {
+        let sc = Scenario::from_config(cfg.clone());
+        std::thread::spawn(move || sc.run_with_ops(server).unwrap())
+    };
+    assert_eq!(ctl.recv(), "ok paused");
+    assert_eq!(ctl.cmd("status"), "ok round=1 paused=true");
+
+    let text = http_get(addr, "/metrics");
+    assert_eq!(ctl.cmd("resume"), "ok resumed");
+    let result = run.join().unwrap();
+
+    // The scrape happened frozen at the round-1 boundary: every gauge
+    // must equal the corresponding round-1 trace field, textually.
+    let row = &result.rounds[0];
+    assert_eq!(row.t, 1);
+    let mut expected = vec![
+        "hybridfl_round 1\n".to_string(),
+        "hybridfl_paused 1\n".to_string(),
+        "hybridfl_finished 0\n".to_string(),
+        format!("hybridfl_accuracy {}\n", row.accuracy),
+        format!("hybridfl_best_accuracy {}\n", row.best_accuracy),
+        format!("hybridfl_bytes_moved_total {}\n", row.bytes_moved),
+        format!(
+            "hybridfl_quota_rounds_total {}\n",
+            u8::from(!row.deadline_hit)
+        ),
+        format!(
+            "hybridfl_deadline_rounds_total {}\n",
+            u8::from(row.deadline_hit)
+        ),
+        "hybridfl_run_info{backend=\"sim\",protocol=\"hybridfl\"} 1\n".to_string(),
+    ];
+    for (r, &avail) in row.avail.iter().enumerate() {
+        expected.push(format!(
+            "hybridfl_region_availability{{region=\"{r}\"}} {avail}\n"
+        ));
+    }
+    for (r, (&sel, &size)) in row.selected.iter().zip(&region_sizes).enumerate() {
+        expected.push(format!(
+            "hybridfl_region_selected_proportion{{region=\"{r}\"}} {}\n",
+            sel as f64 / size as f64
+        ));
+    }
+    let slack = row.slack.as_ref().expect("HybridFL exposes slack telemetry");
+    for (r, s) in slack.iter().enumerate() {
+        expected.push(format!(
+            "hybridfl_region_slack_theta{{region=\"{r}\"}} {}\n",
+            s.theta
+        ));
+    }
+    for needle in &expected {
+        assert!(text.contains(needle), "missing {needle:?} in scrape:\n{text}");
+    }
+    // Process-level observables are present (values are scrape-time).
+    assert!(text.contains("hybridfl_arena_models_peak "), "{text}");
+    if hybridfl::benchkit::peak_rss_bytes().is_some() {
+        assert!(text.contains("hybridfl_peak_rss_bytes "), "{text}");
+    }
+
+    // The ops endpoint never perturbs the run.
+    let plain = Scenario::from_config(cfg).run().unwrap();
+    assert_eq!(run_result_bytes(&plain), run_result_bytes(&result));
+}
+
+/// Drive `pause → checkpoint-now DIR → resume` over the control socket and
+/// return the finished result plus the snapshot path the reply certified.
+fn run_with_midflight_checkpoint(sc: Scenario, dir: &std::path::Path) -> (hybridfl::env::RunResult, PathBuf) {
+    let server = OpsServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let mut ctl = Control::connect(addr);
+    ctl.send("pause");
+    let run = std::thread::spawn(move || sc.run_with_ops(server).unwrap());
+    assert_eq!(ctl.recv(), "ok paused");
+    let reply = ctl.cmd(&format!("checkpoint-now {}", dir.display()));
+    let path = reply
+        .strip_prefix("ok ")
+        .unwrap_or_else(|| panic!("checkpoint-now failed: {reply}"));
+    let path = PathBuf::from(path);
+    assert!(path.is_file(), "certified path {} is not on disk", path.display());
+    assert_eq!(ctl.cmd("resume"), "ok resumed");
+    (run.join().unwrap(), path)
+}
+
+/// Sim backend: the pause → checkpoint-now → resume maneuver neither
+/// perturbs the run nor writes a snapshot that would.
+#[test]
+fn sim_pause_checkpoint_resume_is_byte_identical() {
+    let cfg = mock_cfg(ProtocolKind::HybridFl);
+    let full = Scenario::from_config(cfg.clone()).run().unwrap();
+    let full_bytes = run_result_bytes(&full);
+
+    let dir = fresh_dir("hybridfl_ops_ckpt_sim");
+    let (steered, snap) = run_with_midflight_checkpoint(Scenario::from_config(cfg.clone()), &dir);
+    assert_eq!(full_bytes, run_result_bytes(&steered), "pause/checkpoint/resume perturbed the run");
+
+    // The on-demand snapshot resumes to the same bytes in a new process
+    // image (fresh env, protocol, driver).
+    let resumed = Scenario::from_config(cfg)
+        .resume_from(&snap)
+        .run()
+        .unwrap();
+    assert_eq!(full_bytes, run_result_bytes(&resumed), "checkpoint-now snapshot diverged on resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The same maneuver on the live threaded backend (the jitter-safe regime
+/// of `tests/resume_determinism.rs`).
+#[test]
+fn live_pause_checkpoint_resume_is_byte_identical() {
+    let mut cfg = mock_cfg(ProtocolKind::HybridFl);
+    cfg.n_clients = 12;
+    cfg.dataset_size = 360;
+    cfg.t_max = 3;
+    cfg.seed = 42;
+    let scale = 1e-2;
+
+    let full = Scenario::from_config(cfg.clone())
+        .backend(Backend::Live)
+        .time_scale(scale)
+        .run()
+        .unwrap();
+    let full_bytes = run_result_bytes(&full);
+
+    let dir = fresh_dir("hybridfl_ops_ckpt_live");
+    let sc = Scenario::from_config(cfg.clone())
+        .backend(Backend::Live)
+        .time_scale(scale);
+    let (steered, snap) = run_with_midflight_checkpoint(sc, &dir);
+    assert_eq!(full_bytes, run_result_bytes(&steered));
+
+    let resumed = Scenario::from_config(cfg)
+        .backend(Backend::Live)
+        .time_scale(scale)
+        .resume_from(&snap)
+        .run()
+        .unwrap();
+    assert_eq!(full_bytes, run_result_bytes(&resumed));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A blackout injected over the control socket is indistinguishable from
+/// the same event pre-scripted as churn config: byte-identical results.
+#[test]
+fn injected_blackout_matches_scripted_fault() {
+    let event = FaultEvent::RegionBlackout {
+        region: 1,
+        from_round: 4,
+        until_round: 8,
+    };
+
+    let mut scripted_cfg = mock_cfg(ProtocolKind::HybridFl);
+    scripted_cfg.churn = ChurnModel::FaultScript {
+        events: vec![event.clone()],
+    };
+    let scripted = Scenario::from_config(scripted_cfg).run().unwrap();
+
+    // Same config, stationary churn; the event arrives over the wire at
+    // the round-1 boundary instead.
+    let server = OpsServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let mut ctl = Control::connect(addr);
+    ctl.send("pause");
+    let sc = Scenario::from_config(mock_cfg(ProtocolKind::HybridFl));
+    let run = std::thread::spawn(move || sc.run_with_ops(server).unwrap());
+    assert_eq!(ctl.recv(), "ok paused");
+
+    // Rejected: an event whose window has already begun cannot be
+    // injected retroactively.
+    let past = ctl.cmd(r#"inject {"kind":"region_blackout","region":1,"from_round":1,"until_round":8}"#);
+    assert!(past.starts_with("err "), "{past}");
+    // Rejected: malformed payloads never reach the driver.
+    let bad = ctl.cmd("inject {not json");
+    assert!(bad.starts_with("err "), "{bad}");
+
+    assert_eq!(
+        ctl.cmd(r#"inject {"kind":"region_blackout","region":1,"from_round":4,"until_round":8}"#),
+        "ok injected"
+    );
+    assert_eq!(ctl.cmd("resume"), "ok resumed");
+    let injected = run.join().unwrap();
+
+    assert_eq!(
+        run_result_bytes(&scripted),
+        run_result_bytes(&injected),
+        "live-injected blackout diverged from the scripted equivalent"
+    );
+    // The blackout actually bit: region 1 availability collapses inside
+    // the window.
+    let in_window = &injected.rounds[4]; // t = 5 ∈ [4, 8)
+    assert!(
+        in_window.avail[1] < 0.05,
+        "round 5 region-1 availability {} — blackout did not take effect",
+        in_window.avail[1]
+    );
+}
+
+/// Injection composes with checkpointing: a snapshot taken *after* an
+/// injection carries the spliced script, so a resumed run replays the
+/// injected world, not the configured one.
+#[test]
+fn snapshot_after_injection_carries_the_injected_fault() {
+    let dir = fresh_dir("hybridfl_ops_inject_snapshot");
+    let server = OpsServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let mut ctl = Control::connect(addr);
+    ctl.send("pause");
+    let sc = Scenario::from_config(mock_cfg(ProtocolKind::HybridFl));
+    let run = std::thread::spawn(move || sc.run_with_ops(server).unwrap());
+    assert_eq!(ctl.recv(), "ok paused");
+    assert_eq!(
+        ctl.cmd(r#"inject {"kind":"region_blackout","region":1,"from_round":4,"until_round":8}"#),
+        "ok injected"
+    );
+    let reply = ctl.cmd(&format!("checkpoint-now {}", dir.display()));
+    let snap = PathBuf::from(reply.strip_prefix("ok ").expect("checkpoint-now after inject"));
+    assert_eq!(ctl.cmd("resume"), "ok resumed");
+    let injected = run.join().unwrap();
+
+    // Resuming demands the *injected* config fingerprint...
+    let err = Scenario::from_config(mock_cfg(ProtocolKind::HybridFl))
+        .resume_from(&snap)
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("churn"), "{err}");
+
+    // ...and with it, resumes into the injected world byte for byte.
+    let mut resumed_cfg = mock_cfg(ProtocolKind::HybridFl);
+    resumed_cfg.churn = ChurnModel::FaultScript {
+        events: vec![FaultEvent::RegionBlackout {
+            region: 1,
+            from_round: 4,
+            until_round: 8,
+        }],
+    };
+    let resumed = Scenario::from_config(resumed_cfg)
+        .resume_from(&snap)
+        .run()
+        .unwrap();
+    assert_eq!(run_result_bytes(&injected), run_result_bytes(&resumed));
+    let _ = std::fs::remove_dir_all(&dir);
+}
