@@ -77,6 +77,22 @@ fn main() {
     stats.report("select 150 of 500 clients");
     report = report.set("select_150_of_500_mean_s", stats.mean.as_secs_f64());
 
+    // Trace histogram: the per-observation cost every span/submission
+    // pays on the ops scrape path, plus a scrape-sized merge + quantile.
+    let mut rng = Rng::new(23);
+    let draws: Vec<f64> = (0..1000).map(|_| rng.uniform() * 200.0).collect();
+    let stats = bench(10, iters, || {
+        let mut h = hybridfl::trace::Histo::new();
+        for &v in &draws {
+            h.record(black_box(v));
+        }
+        let mut merged = hybridfl::trace::Histo::new();
+        merged.merge(&h);
+        black_box(merged.quantile(0.99));
+    });
+    stats.report("histo: 1000 record + merge + p99");
+    report = report.set("histo_1000_record_mean_s", stats.mean.as_secs_f64());
+
     // Full protocol round, mock engine: pure coordinator overhead.
     let mut cfg = ExperimentConfig::task2_scaled();
     cfg.engine = EngineKind::Mock;

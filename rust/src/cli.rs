@@ -22,6 +22,7 @@ const VALUE_KEYS: &[&str] = &[
     "set", "preset", "config", "out", "seed", "protocol", "rounds", "c", "e-dr",
     "scale", "target", "backend", "checkpoint-dir", "checkpoint-every", "resume",
     "churn", "record-fates", "replay-fates", "selector", "comm", "ops-listen",
+    "ops-token", "trace-out",
 ];
 
 /// Boolean switches (no value).
@@ -209,6 +210,19 @@ mod tests {
     fn ops_listen_is_a_value_key() {
         let a = parse(&["run", "--ops-listen", "127.0.0.1:9184"]);
         assert_eq!(a.get("ops-listen"), Some("127.0.0.1:9184"));
+    }
+
+    #[test]
+    fn ops_token_and_trace_out_are_value_keys() {
+        let a = parse(&[
+            "run",
+            "--ops-token",
+            "s3cret",
+            "--trace-out",
+            "spans.json",
+        ]);
+        assert_eq!(a.get("ops-token"), Some("s3cret"));
+        assert_eq!(a.get("trace-out"), Some("spans.json"));
     }
 
     #[test]

@@ -135,17 +135,31 @@ impl FlEnvironment for LiveClusterEnv {
     ) -> Result<RoundOutcome> {
         // World dynamics first (contract point 6) — identical step to the
         // virtual-clock backend; migrations are rejected at construction,
-        // so the fabric's client↔edge binding never goes stale.
+        // so the fabric's client↔edge binding never goes stale. Spans
+        // bracket each phase (contract point 8) exactly like the sim.
+        self.world.tracer.begin_round(t);
+        let sp = crate::trace::SpanStart::begin();
         step_world(&mut self.world, t);
+        self.world
+            .tracer
+            .finish(sp, crate::trace::Phase::ChurnStep, None, 0.0);
         let m = self.world.topo.n_regions();
         let mut rng = self.world.rng.split(t as u64);
 
         // Same world derivation as the virtual clock backend. The oracle
         // selector is rejected at construction, so no ground-truth table
         // exists here.
+        let sp = crate::trace::SpanStart::begin();
         let selected = draw_selection(&self.world, &selection, None, &mut rng);
+        self.world
+            .tracer
+            .finish(sp, crate::trace::Phase::Selection, None, 0.0);
+        let sp = crate::trace::SpanStart::begin();
         let fates = draw_fates(&self.world, t, &selected, None, &mut rng)?;
         record_fates(&mut self.world, t, &fates);
+        self.world
+            .tracer
+            .finish(sp, crate::trace::Phase::FateDraw, None, 0.0);
 
         // Fan the jobs out to the edges (who relay to their clients).
         let mut jobs: Vec<Vec<RoundJob>> = vec![Vec::new(); m];
@@ -188,7 +202,22 @@ impl FlEnvironment for LiveClusterEnv {
         // each edge folded before the round-end signal reached it *is*
         // the round's submission set, so counts, cut time and energy are
         // all derived from the same set and cannot diverge.
+        let train_sp = crate::trace::SpanStart::begin();
         let reports = self.fabric.round(t, &start_arcs, jobs, target, deadline)?;
+
+        // Submission latencies (virtual seconds): each folded client's
+        // drawn completion time, per its edge's report — the same values
+        // that drive the quota cut below.
+        let completion_of: HashMap<usize, f64> =
+            fates.iter().map(|f| (f.client, f.completion)).collect();
+        for rep in &reports {
+            let region = rep.agg.region();
+            for c in &rep.clients {
+                if let Some(&comp) = completion_of.get(c) {
+                    self.world.tracer.record_submission(region, comp);
+                }
+            }
+        }
 
         // Accounting: for the wait-all policies the cut point is fully
         // determined by the fates; for the quota policy it is whatever
@@ -198,8 +227,6 @@ impl FlEnvironment for LiveClusterEnv {
             CutoffPolicy::Quota(q) => {
                 let folded: usize = reports.iter().map(|r| r.agg.count()).sum();
                 if folded >= q {
-                    let completion_of: HashMap<usize, f64> =
-                        fates.iter().map(|f| (f.client, f.completion)).collect();
                     let cut = reports
                         .iter()
                         .flat_map(|r| r.clients.iter())
@@ -223,6 +250,14 @@ impl FlEnvironment for LiveClusterEnv {
                 resolve_cutoff(&self.world.tm, m, &fates, policy)
             }
         };
+        // The enacted round is the train+fold phase: virtual duration is
+        // the resolved cut; wall time is what the fabric actually took.
+        self.world.tracer.finish(
+            train_sp,
+            crate::trace::Phase::TrainFold,
+            None,
+            plan.round_len,
+        );
         let energy_j = charge_energy(&self.world, &fates, &plan.cuts);
 
         let selected_h = region_histogram(m, fates.iter().map(|f| f.region));
@@ -280,11 +315,9 @@ impl FlEnvironment for LiveClusterEnv {
     }
 
     fn inject_fault(&mut self, event: FaultEvent) -> Result<()> {
-        anyhow::ensure!(
-            !matches!(event, FaultEvent::Migrate { .. }),
-            "cannot inject a migration into the live backend: client \
-             threads are bound to their edge channels at spawn"
-        );
+        if matches!(event, FaultEvent::Migrate { .. }) {
+            return Err(MigrateInjectError.into());
+        }
         inject_world_fault(&mut self.world, event)
     }
 
@@ -295,4 +328,28 @@ impl FlEnvironment for LiveClusterEnv {
     fn take_fate_trace(&mut self) -> Option<FateTrace> {
         self.world.recorder.take()
     }
+
+    fn tracer(&mut self) -> &mut crate::trace::SpanRecorder {
+        &mut self.world.tracer
+    }
 }
+
+/// A `Migrate` fault injected into the live backend — a sim-only event,
+/// like the churn/oracle construction-time rejections. Typed so the ops
+/// control plane's `inject` reply surfaces the virtual-clock constraint
+/// verbatim instead of a generic error.
+#[derive(Clone, Copy, Debug)]
+pub struct MigrateInjectError;
+
+impl std::fmt::Display for MigrateInjectError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "client-mobility (migrate) events cannot be injected into the \
+             live backend: client threads are bound to their edge channels \
+             at spawn — run migration scenarios on the virtual clock"
+        )
+    }
+}
+
+impl std::error::Error for MigrateInjectError {}

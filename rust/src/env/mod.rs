@@ -131,6 +131,15 @@
 //!    device model — reliability-agnosticism holds on the wire exactly as
 //!    it holds at the protocol boundary, so a scraped `/metrics` page can
 //!    never leak more ground truth than the run's own trace artifact.
+//!    Phase spans ([`crate::trace::SpanRecorder`], drained per round into
+//!    [`crate::ops::RunEvent::RoundClosed`]) follow the same line: a
+//!    span's **virtual-clock duration** and the per-region submission
+//!    latencies are protocol-visible aggregates (deterministic in the
+//!    seed, fair game for observers and scrape histograms), while its
+//!    **host wall time** is profiling-only — it may vary freely between
+//!    hosts and runs, and therefore never enters [`RoundTrace`],
+//!    [`EnvState`], snapshots, or config fingerprints. Tracing consumes
+//!    zero RNG draws, so a traced run is byte-identical to a plain one.
 //!
 //! # The data plane at fleet scale
 //!
@@ -330,6 +339,11 @@ pub trait FlEnvironment {
     /// Take the recorded fate trace (ends recording). `None` when
     /// recording was never enabled.
     fn take_fate_trace(&mut self) -> Option<FateTrace>;
+    /// The environment's span recorder (contract point 8). Both backends
+    /// record every round phase into it; the driver drains it at each
+    /// round boundary. Observer-side state — deliberately outside
+    /// [`EnvState`].
+    fn tracer(&mut self) -> &mut crate::trace::SpanRecorder;
 }
 
 /// Everything an environment must persist across a process boundary for a
@@ -337,6 +351,11 @@ pub trait FlEnvironment {
 /// process state, and cross-round comm residuals. One bundle instead of
 /// three per-subsystem accessor pairs — [`crate::snapshot::RunSnapshot`]
 /// and the ops `checkpoint-now` path both consume it whole.
+///
+/// Deliberately absent: phase spans and scrape histograms
+/// ([`crate::trace`]). They are observer-side state — wall times would
+/// make two captures of the same round differ — so they never ride in
+/// snapshots or config fingerprints.
 #[derive(Clone, Debug)]
 pub struct EnvState {
     pub rng: RngState,
@@ -421,6 +440,10 @@ pub(crate) struct World {
     pub replay: Option<FateTrace>,
     /// In-flight fate recording (`--record-fates`).
     pub recorder: Option<FateTrace>,
+    /// Round-phase span log (contract point 8). Always on: recording is
+    /// a `Vec` push per phase and consumes no RNG. Drained by the driver
+    /// at round boundaries; never snapshotted.
+    pub tracer: crate::trace::SpanRecorder,
 }
 
 impl World {
@@ -461,6 +484,7 @@ impl World {
             dynamics,
             replay,
             recorder: None,
+            tracer: crate::trace::SpanRecorder::new(),
         })
     }
 

@@ -135,10 +135,17 @@ impl FlEnvironment for VirtualClockEnv {
     ) -> Result<RoundOutcome> {
         // World dynamics first (contract point 6): churn may rewrite
         // per-client reliability — and, under migration events, the
-        // topology — before anything about this round is drawn.
+        // topology — before anything about this round is drawn. Spans
+        // bracket each phase (contract point 8); the bookkeeping phases
+        // charge zero virtual time.
+        self.world.tracer.begin_round(t);
+        let sp = crate::trace::SpanStart::begin();
         if step_world(&mut self.world, t) {
             self.region_data = self.world.region_data_sizes();
         }
+        self.world
+            .tracer
+            .finish(sp, crate::trace::Phase::ChurnStep, None, 0.0);
         let m = self.world.topo.n_regions();
         let mut rng = self.world.rng.split(t as u64);
 
@@ -146,10 +153,18 @@ impl FlEnvironment for VirtualClockEnv {
         // live backend so both inhabit the same random world. The oracle's
         // ground-truth table (when configured) is drawn once, from a child
         // stream, and feeds both steps so they agree on who survives.
+        let sp = crate::trace::SpanStart::begin();
         let oracle_drops = oracle_drop_table(&self.world, t);
         let selected = draw_selection(&self.world, &selection, oracle_drops.as_deref(), &mut rng);
+        self.world
+            .tracer
+            .finish(sp, crate::trace::Phase::Selection, None, 0.0);
+        let sp = crate::trace::SpanStart::begin();
         let fates = draw_fates(&self.world, t, &selected, oracle_drops.as_deref(), &mut rng)?;
         record_fates(&mut self.world, t, &fates);
+        self.world
+            .tracer
+            .finish(sp, crate::trace::Phase::FateDraw, None, 0.0);
 
         // Round cut per policy, then energy accounting against it.
         let plan = resolve_cutoff(&self.world.tm, m, &fates, policy);
@@ -171,6 +186,7 @@ impl FlEnvironment for VirtualClockEnv {
         });
 
         let comm = self.world.cfg.comm.clone();
+        let train_sp = crate::trace::SpanStart::begin();
         let use_parallel = !self.serial_fold
             && matches!(self.world.cfg.engine, EngineKind::Mock)
             && !comm.codec.has_error_feedback()
@@ -194,6 +210,18 @@ impl FlEnvironment for VirtualClockEnv {
         } else {
             self.fold_serial(&survivors, starts, &rng, &comm)?
         };
+        // The train+fold phase is the round on the virtual clock: its
+        // virtual duration is the cut's round length. Each survivor's
+        // completion is its submission latency.
+        self.world.tracer.finish(
+            train_sp,
+            crate::trace::Phase::TrainFold,
+            None,
+            plan.round_len,
+        );
+        for f in &survivors {
+            self.world.tracer.record_submission(f.region, f.completion);
+        }
 
         let selected_h = region_histogram(m, fates.iter().map(|f| f.region));
         let alive = region_histogram(m, fates.iter().filter(|f| !f.dropped).map(|f| f.region));
@@ -271,6 +299,10 @@ impl FlEnvironment for VirtualClockEnv {
 
     fn take_fate_trace(&mut self) -> Option<FateTrace> {
         self.world.recorder.take()
+    }
+
+    fn tracer(&mut self) -> &mut crate::trace::SpanRecorder {
+        &mut self.world.tracer
     }
 }
 

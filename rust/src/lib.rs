@@ -199,6 +199,19 @@
 //! artifacts — and observers see only protocol-visible aggregates, so
 //! reliability-agnosticism holds on the wire (env contract point 8).
 //!
+//! Distributions, not just gauges: every round phase (selection, churn
+//! step, fate draw, train+fold, regional/cloud aggregation, checkpoint)
+//! is bracketed by a [`trace`] span on both backends, and the scrape
+//! exposes Prometheus **histograms** — round length, per-region
+//! submission latency, per-phase duration (virtual-clock seconds,
+//! protocol-visible) and per-phase wall time (profiling-only, never
+//! fingerprinted) — built on the no-deps log₂-bucket [`trace::Histo`].
+//! `--trace-out FILE` / [`trace::TraceWriter`] additionally emits a
+//! Chrome trace-event JSON (one complete event per span, pid = region)
+//! loadable in Perfetto for flamegraph-style round profiling. None of
+//! it perturbs the run: a traced, ops-attached run stays byte-identical
+//! to a plain one.
+//!
 //! ```no_run
 //! # use hybridfl::scenario::Scenario;
 //! // Serve /metrics and the control socket on port 9184 while running:
@@ -283,6 +296,7 @@ pub mod sim;
 pub mod snapshot;
 pub mod timing;
 pub mod topology;
+pub mod trace;
 
 /// Crate-wide result alias (anyhow-based; the coordinator is an application
 /// stack, not a library with typed error recovery).

@@ -7,6 +7,7 @@
 //!                 [--resume snapshot.hflsnap]
 //!                 [--churn SPEC] [--record-fates f.json]
 //!                 [--replay-fates f.json] [--ops-listen ADDR]
+//!                 [--ops-token TOKEN] [--trace-out trace.json]
 //! hybridfl fig2   [--out dir] [--seed N]
 //! hybridfl table3 [--full|--quick] [--mock] [--serial] [--target A] [--out dir]
 //! hybridfl table4 [--full|--quick] [--mock] [--serial] [--target A] [--out dir]
@@ -83,9 +84,16 @@ commands:
           weakest Q quantile's uploads to strong relays
           (e.g. topk:0.05+ef, i8+relay:0.25),
           --ops-listen ADDR serve the operations control plane while the
-          run is in flight: GET /metrics is a Prometheus-text scrape,
-          anything else is a line-oriented control session
-          (status | pause | resume | checkpoint-now [DIR] | inject JSON))
+          run is in flight: GET /metrics is a Prometheus-text scrape
+          (gauges, counters, and round-length / submission-latency /
+          phase-duration histograms), anything else is a line-oriented
+          control session
+          (status | pause | resume | checkpoint-now [DIR] | inject JSON),
+          --ops-token TOKEN guard the ops endpoint: /metrics needs
+          ?token=TOKEN and control sessions must open with 'auth TOKEN';
+          required when --ops-listen is not a loopback address,
+          --trace-out FILE write a Chrome trace-event JSON of every
+          round-phase span at run end (open in Perfetto))
   fig2    slack-factor traces (paper Fig. 2) -> reports/fig2_traces.csv
   table3  Task-1 sweep: Table III + Fig. 4 traces + Fig. 5 energy
   table4  Task-2 sweep: Table IV + Fig. 6 traces + Fig. 7 energy
@@ -163,6 +171,12 @@ fn resolve_scenario(args: &Args, default_backend: Backend) -> hybridfl::Result<S
     if let Some(addr) = args.get("ops-listen") {
         sc = sc.ops_listen(addr);
     }
+    if let Some(token) = args.get("ops-token") {
+        sc = sc.ops_token(token);
+    }
+    if let Some(path) = args.get("trace-out") {
+        sc = sc.trace_out(path);
+    }
     Ok(sc)
 }
 
@@ -195,13 +209,21 @@ fn cmd_run(args: &Args) -> hybridfl::Result<()> {
     if let Some(addr) = args.get("ops-listen") {
         println!("ops endpoint on {addr} (GET /metrics, or a control session)");
     }
-    // The CSV schema is derived from the config, not from the first trace
-    // row; compute it before run() consumes the scenario.
-    let schema = metrics::CsvSchema::from_config(cfg);
-    let result = sc.run()?;
+    // --out streams row by row as a RunObserver on the round-boundary
+    // event stream (the same events the ops endpoint consumes), instead
+    // of rendering post-hoc from the final result.
+    let mut sink = args
+        .get("out")
+        .map(|out| metrics::ReportSink::new(cfg).csv(out));
+    let result = match sink.as_mut() {
+        Some(sink) => {
+            let mut observers: [&mut dyn hybridfl::ops::RunObserver; 1] = [sink];
+            sc.run_observed(&mut observers)?
+        }
+        None => sc.run()?,
+    };
     print_summary(&result);
     if let Some(out) = args.get("out") {
-        metrics::write_csv_with(std::path::Path::new(out), &schema, &result.rounds)?;
         println!("trace written to {out}");
     }
     Ok(())

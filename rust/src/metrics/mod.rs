@@ -386,9 +386,11 @@ mod tests {
         for row in &r.rounds {
             driver.rounds.push(row.clone());
             driver.rounds_done = row.t;
+            let spans = crate::trace::RoundSpans::empty(row.t);
             sink.observe(&RunEvent::RoundClosed {
                 trace: driver.rounds.last().unwrap(),
                 driver: &driver,
+                spans: &spans,
             })
             .unwrap();
         }

@@ -68,11 +68,16 @@ pub(crate) use server::OpsDriver;
 /// — observers read, the driver keeps ownership.
 #[derive(Debug)]
 pub enum RunEvent<'a> {
-    /// A round completed; `trace` is its [`RoundTrace`] row and `driver`
-    /// the full accumulator state (including every prior row).
+    /// A round completed; `trace` is its [`RoundTrace`] row, `driver`
+    /// the full accumulator state (including every prior row), and
+    /// `spans` the round's drained phase spans + per-region submission
+    /// latencies ([`crate::trace`]) — virtual durations are
+    /// protocol-visible, wall times profiling-only (env contract
+    /// point 8).
     RoundClosed {
         trace: &'a RoundTrace,
         driver: &'a DriverState,
+        spans: &'a crate::trace::RoundSpans,
     },
     /// A snapshot was written — by the schedule or by `checkpoint-now`.
     CheckpointWritten { round: usize, path: &'a Path },
@@ -153,9 +158,11 @@ impl<'a> RunControl<'a> {
         self
     }
 
-    /// The driver's round boundary: emit [`RunEvent::RoundClosed`], write
-    /// a scheduled checkpoint if one is due, then drain (and, while
-    /// paused, block on) the ops command queue.
+    /// The driver's round boundary: write a scheduled checkpoint if one
+    /// is due (span-bracketed, so it lands in this round's trace), drain
+    /// the environment's span recorder, emit [`RunEvent::RoundClosed`]
+    /// (and the checkpoint's event), then drain (and, while paused,
+    /// block on) the ops command queue.
     pub(crate) fn round_closed(
         &mut self,
         env: &mut dyn FlEnvironment,
@@ -166,16 +173,28 @@ impl<'a> RunControl<'a> {
             .rounds
             .last()
             .expect("round_closed with an empty trace");
-        self.emit(&RunEvent::RoundClosed { trace, driver: st })?;
+        let mut ckpt_path = None;
         if let Some(plan) = &self.checkpoints {
             if plan.every > 0 && st.rounds_done % plan.every == 0 {
+                let sp = crate::trace::SpanStart::begin();
                 let snap = RunSnapshot::capture(&self.backend, env, protocol, st);
                 let path = snapshot::save_to_dir(&plan.dir, plan.kind, &snap)?;
-                self.emit(&RunEvent::CheckpointWritten {
-                    round: st.rounds_done,
-                    path: &path,
-                })?;
+                env.tracer()
+                    .finish(sp, crate::trace::Phase::Checkpoint, None, 0.0);
+                ckpt_path = Some(path);
             }
+        }
+        let spans = env.tracer().take_round();
+        self.emit(&RunEvent::RoundClosed {
+            trace,
+            driver: st,
+            spans: &spans,
+        })?;
+        if let Some(path) = ckpt_path {
+            self.emit(&RunEvent::CheckpointWritten {
+                round: st.rounds_done,
+                path: &path,
+            })?;
         }
         self.service_commands(env, protocol, st)
     }
@@ -251,9 +270,18 @@ impl<'a> RunControl<'a> {
                                 .checkpoints
                                 .as_ref()
                                 .map_or(CodecKind::Binary, |p| p.kind);
+                            // This boundary's spans are already drained;
+                            // the span rides the next round's set.
+                            let sp = crate::trace::SpanStart::begin();
                             let snap = RunSnapshot::capture(&self.backend, env, protocol, st);
                             match snapshot::save_to_dir(&dir, kind, &snap) {
                                 Ok(path) => {
+                                    env.tracer().finish(
+                                        sp,
+                                        crate::trace::Phase::Checkpoint,
+                                        None,
+                                        0.0,
+                                    );
                                     let ev = RunEvent::CheckpointWritten {
                                         round: st.rounds_done,
                                         path: &path,

@@ -23,6 +23,7 @@ use std::thread::JoinHandle;
 use crate::churn::FaultEvent;
 use crate::jsonx::Json;
 use crate::ops::{RunEvent, RunObserver};
+use crate::trace::{Histo, Phase};
 use crate::Result;
 
 /// What the run loop tells the endpoint about itself at attach time.
@@ -83,6 +84,17 @@ struct MetricsState {
     faults_injected_total: u64,
     paused: bool,
     finished: bool,
+    /// Whole-run virtual-clock round-length distribution.
+    round_length: Histo,
+    /// Per-region submission-latency distributions (virtual seconds from
+    /// round start to each in-time model's arrival at its edge).
+    submission_latency: Vec<Histo>,
+    /// Per-phase virtual-duration distributions, indexed by
+    /// [`Phase::index`] (protocol-visible durations).
+    phase_virtual: Vec<Histo>,
+    /// Per-phase host wall-time distributions (profiling-only — env
+    /// contract point 8: these never feed back into the run).
+    phase_wall: Vec<Histo>,
 }
 
 struct Shared {
@@ -90,6 +102,9 @@ struct Shared {
     /// Cloned (under the lock) by each control connection handler.
     cmd_tx: Mutex<Sender<OpsRequest>>,
     shutdown: AtomicBool,
+    /// When set, `/metrics` requires `?token=` and control sessions must
+    /// open with `auth TOKEN`. Mandatory for non-loopback binds.
+    token: Option<String>,
 }
 
 /// The ops endpoint. Bind it (explicitly or via
@@ -106,17 +121,38 @@ pub struct OpsServer {
 }
 
 impl OpsServer {
-    /// Bind the listener and start accepting. `addr` is anything
-    /// `ToSocketAddrs` takes — use port 0 to let the OS pick (the bound
-    /// address is [`OpsServer::local_addr`]).
+    /// Bind the listener and start accepting, with no access token.
+    /// `addr` is anything `ToSocketAddrs` takes — use port 0 to let the
+    /// OS pick (the bound address is [`OpsServer::local_addr`]). Refuses
+    /// non-loopback addresses; use [`OpsServer::bind_with_token`] to
+    /// expose the endpoint beyond the host.
     pub fn bind(addr: impl ToSocketAddrs) -> Result<OpsServer> {
+        OpsServer::bind_with_token(addr, None)
+    }
+
+    /// Bind with an optional access token. When `token` is set, `/metrics`
+    /// requires a matching `?token=` query parameter and control sessions
+    /// must send `auth TOKEN` as their first line. A non-loopback bind
+    /// without a token is refused outright: the control socket can pause
+    /// runs and inject faults, so it never goes on the network bare.
+    pub fn bind_with_token(
+        addr: impl ToSocketAddrs,
+        token: Option<String>,
+    ) -> Result<OpsServer> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
+        if !addr.ip().is_loopback() && token.is_none() {
+            anyhow::bail!(
+                "refusing to serve the ops control plane on non-loopback address {addr} \
+                 without a token: pass --ops-token TOKEN (or bind to 127.0.0.1)"
+            );
+        }
         let (cmd_tx, cmd_rx) = mpsc::channel();
         let shared = Arc::new(Shared {
             metrics: Mutex::new(MetricsState::default()),
             cmd_tx: Mutex::new(cmd_tx),
             shutdown: AtomicBool::new(false),
+            token,
         });
         let acceptor = {
             let shared = Arc::clone(&shared);
@@ -210,7 +246,7 @@ impl RunObserver for OpsDriver {
     fn observe(&mut self, ev: &RunEvent<'_>) -> Result<()> {
         let mut m = self.shared.metrics.lock().unwrap();
         match ev {
-            RunEvent::RoundClosed { trace, .. } => {
+            RunEvent::RoundClosed { trace, spans, .. } => {
                 m.round = trace.t;
                 m.accuracy = trace.accuracy;
                 m.best_accuracy = trace.best_accuracy;
@@ -236,6 +272,27 @@ impl RunObserver for OpsDriver {
                     m.deadline_rounds_total += 1;
                 } else {
                     m.quota_rounds_total += 1;
+                }
+                // Histograms: accumulated over the whole run from the
+                // round's span set. Observer-side state only — never
+                // snapshotted, never fingerprinted.
+                m.round_length.record(trace.round_len);
+                for (r, subs) in spans.submissions.iter().enumerate() {
+                    if m.submission_latency.len() <= r {
+                        m.submission_latency.resize_with(r + 1, Histo::new);
+                    }
+                    for &lat in subs {
+                        m.submission_latency[r].record(lat);
+                    }
+                }
+                if m.phase_virtual.is_empty() {
+                    m.phase_virtual.resize_with(Phase::ALL.len(), Histo::new);
+                    m.phase_wall.resize_with(Phase::ALL.len(), Histo::new);
+                }
+                for span in &spans.spans {
+                    let i = span.phase.index();
+                    m.phase_virtual[i].record(span.virtual_s);
+                    m.phase_wall[i].record(span.wall_s);
                 }
             }
             RunEvent::CheckpointWritten { .. } => m.checkpoints_written_total += 1,
@@ -270,12 +327,28 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> std::io::Result<
     }
     if let Some(request) = first.strip_prefix("GET ") {
         // HTTP mode: drain the header block, answer one scrape, close.
-        let path = request.split_whitespace().next().unwrap_or("/");
+        let target = request.split_whitespace().next().unwrap_or("/");
+        let (path, query) = match target.split_once('?') {
+            Some((p, q)) => (p, q),
+            None => (target, ""),
+        };
         let mut line = String::new();
         loop {
             line.clear();
             if reader.read_line(&mut line)? == 0 || line == "\r\n" || line == "\n" {
                 break;
+            }
+        }
+        if let Some(tok) = &shared.token {
+            let authed = query
+                .split('&')
+                .any(|kv| kv.strip_prefix("token=") == Some(tok.as_str()));
+            if !authed {
+                return http_respond(
+                    &mut writer,
+                    "401 Unauthorized",
+                    "missing or wrong token: scrape /metrics?token=TOKEN\n",
+                );
             }
         }
         return match path {
@@ -287,8 +360,26 @@ fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> std::io::Result<
         };
     }
 
-    // Control mode: one command per line until `quit` or EOF.
+    // Control mode: one command per line until `quit` or EOF. With a
+    // token configured, the session's first line must authenticate.
     let mut line = first;
+    if let Some(tok) = &shared.token {
+        let authed = match line.trim().split_once(char::is_whitespace) {
+            Some(("auth", rest)) => rest.trim() == tok,
+            _ => false,
+        };
+        if !authed {
+            writer.write_all(b"err auth required: first line must be 'auth TOKEN'\n")?;
+            writer.flush()?;
+            return Ok(());
+        }
+        writer.write_all(b"ok authenticated\n")?;
+        writer.flush()?;
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+    }
     loop {
         let reply = match parse_command(line.trim()) {
             ParsedLine::Empty => None,
@@ -352,6 +443,11 @@ fn parse_command(line: &str) -> ParsedLine {
         "checkpoint-now" => ParsedLine::Cmd(Command::CheckpointNow {
             dir: (!rest.is_empty()).then(|| std::path::PathBuf::from(rest)),
         }),
+        "auth" => ParsedLine::Err(
+            "unexpected auth: it is only accepted as a session's first line, and only \
+             when the server was started with a token (--ops-token)"
+                .to_string(),
+        ),
         "inject" => match Json::parse(rest).and_then(|j| FaultEvent::from_json(&j)) {
             Ok(event) => ParsedLine::Cmd(Command::Inject(event)),
             Err(e) => ParsedLine::Err(format!("bad inject payload: {e:#}")),
@@ -484,6 +580,71 @@ fn render_metrics(m: &MetricsState) -> String {
             m.backend, m.protocol
         ));
     }
+
+    // Histogram families, accumulated over the whole run from the span
+    // stream (env contract point 8: virtual durations are
+    // protocol-visible, wall time is profiling-only). Families appear
+    // once the first round has closed.
+    let histo_header = |out: &mut String, name: &str, help: &str| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    };
+    if !m.round_length.is_empty() {
+        histo_header(
+            &mut out,
+            "hybridfl_round_length_seconds",
+            "Virtual-clock round length distribution.",
+        );
+        m.round_length
+            .render_into(&mut out, "hybridfl_round_length_seconds", "");
+    }
+    if m.submission_latency.iter().any(|h| !h.is_empty()) {
+        histo_header(
+            &mut out,
+            "hybridfl_submission_latency_seconds",
+            "Per-region in-time submission latency (virtual seconds from round start).",
+        );
+        for (r, h) in m.submission_latency.iter().enumerate() {
+            if !h.is_empty() {
+                h.render_into(
+                    &mut out,
+                    "hybridfl_submission_latency_seconds",
+                    &format!("region=\"{r}\""),
+                );
+            }
+        }
+    }
+    if m.phase_virtual.iter().any(|h| !h.is_empty()) {
+        histo_header(
+            &mut out,
+            "hybridfl_phase_duration_seconds",
+            "Per-phase virtual-clock duration (protocol-visible).",
+        );
+        for (p, h) in Phase::ALL.iter().zip(m.phase_virtual.iter()) {
+            if !h.is_empty() {
+                h.render_into(
+                    &mut out,
+                    "hybridfl_phase_duration_seconds",
+                    &format!("phase=\"{}\"", p.as_str()),
+                );
+            }
+        }
+    }
+    if m.phase_wall.iter().any(|h| !h.is_empty()) {
+        histo_header(
+            &mut out,
+            "hybridfl_phase_wall_seconds",
+            "Per-phase host wall time (profiling-only, non-deterministic).",
+        );
+        for (p, h) in Phase::ALL.iter().zip(m.phase_wall.iter()) {
+            if !h.is_empty() {
+                h.render_into(
+                    &mut out,
+                    "hybridfl_phase_wall_seconds",
+                    &format!("phase=\"{}\"", p.as_str()),
+                );
+            }
+        }
+    }
     out
 }
 
@@ -523,6 +684,25 @@ mod tests {
         }
         assert!(matches!(parse_command("inject {"), ParsedLine::Err(_)));
         assert!(matches!(parse_command("frobnicate"), ParsedLine::Err(_)));
+        // `auth` is consumed by the session handshake, never by the
+        // command loop — mid-session it is a helpful error.
+        assert!(matches!(parse_command("auth s3cret"), ParsedLine::Err(_)));
+    }
+
+    #[test]
+    fn non_loopback_bind_requires_a_token() {
+        let err = OpsServer::bind_with_token("0.0.0.0:0", None).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("--ops-token"),
+            "refusal should name the fix: {err:#}"
+        );
+        // Same address with a token is fine …
+        let with_token =
+            OpsServer::bind_with_token("0.0.0.0:0", Some("s3cret".to_string())).unwrap();
+        drop(with_token);
+        // … and loopback never needs one.
+        let loopback = OpsServer::bind("127.0.0.1:0").unwrap();
+        drop(loopback);
     }
 
     #[test]
@@ -557,5 +737,42 @@ mod tests {
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }
+        // No rounds closed yet ⇒ no histogram families.
+        assert!(!text.contains("histogram"), "{text}");
+    }
+
+    #[test]
+    fn render_includes_histogram_families_once_rounds_closed() {
+        let mut m = MetricsState::default();
+        m.round_length.record(64.0);
+        m.round_length.record(100.0);
+        m.submission_latency.resize_with(2, Histo::new);
+        m.submission_latency[1].record(2.0);
+        m.phase_virtual.resize_with(Phase::ALL.len(), Histo::new);
+        m.phase_wall.resize_with(Phase::ALL.len(), Histo::new);
+        m.phase_virtual[Phase::TrainFold.index()].record(64.0);
+        m.phase_wall[Phase::CloudAgg.index()].record(0.001);
+        let text = render_metrics(&m);
+        for needle in [
+            "# TYPE hybridfl_round_length_seconds histogram\n",
+            "hybridfl_round_length_seconds_bucket{le=\"64\"} 1\n",
+            "hybridfl_round_length_seconds_bucket{le=\"128\"} 2\n",
+            "hybridfl_round_length_seconds_bucket{le=\"+Inf\"} 2\n",
+            "hybridfl_round_length_seconds_sum 164\n",
+            "hybridfl_round_length_seconds_count 2\n",
+            "# TYPE hybridfl_submission_latency_seconds histogram\n",
+            "hybridfl_submission_latency_seconds_bucket{region=\"1\",le=\"2\"} 1\n",
+            "hybridfl_submission_latency_seconds_count{region=\"1\"} 1\n",
+            "# TYPE hybridfl_phase_duration_seconds histogram\n",
+            "hybridfl_phase_duration_seconds_bucket{phase=\"train_fold\",le=\"64\"} 1\n",
+            "hybridfl_phase_duration_seconds_sum{phase=\"train_fold\"} 64\n",
+            "# TYPE hybridfl_phase_wall_seconds histogram\n",
+            "hybridfl_phase_wall_seconds_count{phase=\"cloud_agg\"} 1\n",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Empty regions/phases are elided, not rendered as zero series.
+        assert!(!text.contains("region=\"0\""), "{text}");
+        assert!(!text.contains("phase=\"selection\""), "{text}");
     }
 }

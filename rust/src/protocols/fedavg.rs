@@ -44,9 +44,14 @@ impl Protocol for FedAvg {
         // The environment folded each in-time model into per-region
         // partial sums as it arrived; recombining them with |D^r|/EDC
         // weights is exactly global FedAvg (no edge layer in the math).
+        // Two-layer protocol: the cloud recombination charges no edge
+        // RTT, so the span's virtual duration is zero.
+        let sp = crate::trace::SpanStart::begin();
         if let Some(w) = crate::aggregation::fedavg_from_regions(&out.regional) {
             self.global = w;
         }
+        env.tracer()
+            .finish(sp, crate::trace::Phase::CloudAgg, None, 0.0);
         let mean_local_loss = mean_loss(&out);
 
         Ok(RoundRecord {

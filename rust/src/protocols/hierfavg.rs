@@ -66,14 +66,21 @@ impl Protocol for HierFavg {
         // sum; `fedavg()` rescales it to the plain weighted average. An
         // empty region returns None and keeps its previous model.
         for agg in &out.regional {
+            let sp = crate::trace::SpanStart::begin();
+            let r = agg.region();
             if let Some(w) = agg.fedavg() {
-                self.regionals[agg.region()] = w;
+                self.regionals[r] = w;
             }
+            env.tracer()
+                .finish(sp, crate::trace::Phase::RegionalAgg, Some(r), 0.0);
         }
 
         // --- cloud aggregation every κ₂ rounds --------------------------------
+        // The cloud-agg span exists only on cloud rounds, charging the
+        // edge RTT added to `round_len` below.
         let cloud_round = t % self.kappa2 == 0;
         if cloud_round {
+            let sp = crate::trace::SpanStart::begin();
             let refs: Vec<(&ModelParams, f64)> = self
                 .regionals
                 .iter()
@@ -87,6 +94,9 @@ impl Protocol for HierFavg {
             for r in 0..m {
                 self.regionals[r] = self.global.clone();
             }
+            let rtt = env.t_c2e2c();
+            env.tracer()
+                .finish(sp, crate::trace::Phase::CloudAgg, None, rtt);
         }
         let mean_local_loss = mean_loss(&out);
 

@@ -82,6 +82,7 @@ impl Protocol for HybridFl {
         // eq. 17); only the cache/rescale finisher runs here.
         let mut regional_models: Vec<(ModelParams, f64)> = Vec::with_capacity(m);
         for agg in &out.regional {
+            let sp = crate::trace::SpanStart::begin();
             let r = agg.region();
             let edc_r = agg.edc();
             let w_r = match self.cache_mode {
@@ -91,9 +92,13 @@ impl Protocol for HybridFl {
                     .unwrap_or_else(|| self.regionals[r].clone()),
             };
             regional_models.push((w_r, edc_r));
+            env.tracer()
+                .finish(sp, crate::trace::Phase::RegionalAgg, Some(r), 0.0);
         }
 
         // --- immediate EDC-weighted cloud aggregation (eqs. 18–20) -------------
+        // Its virtual cost is the edge↔cloud exchange charged below.
+        let sp = crate::trace::SpanStart::begin();
         let refs: Vec<(&ModelParams, f64)> = regional_models
             .iter()
             .map(|(w, edc)| (w, *edc))
@@ -101,6 +106,9 @@ impl Protocol for HybridFl {
         if let Some(w) = crate::aggregation::edc_cloud(&refs) {
             self.global = w;
         }
+        let rtt = env.t_c2e2c();
+        env.tracer()
+            .finish(sp, crate::trace::Phase::CloudAgg, None, rtt);
         // The regional cache advances regardless (w^r(t) is defined by
         // eq. 17 whether or not the cloud used it).
         for (r, (w_r, _)) in regional_models.into_iter().enumerate() {

@@ -27,9 +27,10 @@ use crate::config::{CacheMode, EngineKind, ExperimentConfig, ProtocolKind};
 use crate::env::{
     run_resumable, DriverState, FlEnvironment, LiveClusterEnv, RunResult, VirtualClockEnv,
 };
-use crate::ops::{CheckpointPlan, OpsServer, RunControl, RunInfo};
+use crate::ops::{CheckpointPlan, OpsServer, RunControl, RunInfo, RunObserver};
 use crate::protocols::protocol_for;
 use crate::snapshot::{self, CodecKind};
+use crate::trace::TraceWriter;
 use crate::Result;
 
 /// Which [`crate::env::FlEnvironment`] implementation executes the rounds.
@@ -75,6 +76,8 @@ pub struct Scenario {
     serial_fold: bool,
     eager_sweeps: bool,
     ops_listen: Option<String>,
+    ops_token: Option<String>,
+    trace_out: Option<PathBuf>,
 }
 
 impl Scenario {
@@ -96,6 +99,8 @@ impl Scenario {
             serial_fold: false,
             eager_sweeps: false,
             ops_listen: None,
+            ops_token: None,
+            trace_out: None,
         }
     }
 
@@ -360,6 +365,26 @@ impl Scenario {
         self
     }
 
+    /// Guard the ops endpoint with an access token: `/metrics` requires
+    /// `?token=TOKEN` and control sessions must open with `auth TOKEN`.
+    /// Mandatory when [`Self::ops_listen`] names a non-loopback address
+    /// (the bind is refused otherwise — see
+    /// [`OpsServer::bind_with_token`]).
+    pub fn ops_token(mut self, token: impl Into<String>) -> Scenario {
+        self.ops_token = Some(token.into());
+        self
+    }
+
+    /// Write a Chrome trace-event JSON of every round-phase span to
+    /// `path` when the run completes — load it in Perfetto /
+    /// `chrome://tracing` (see [`crate::trace::TraceWriter`]). Like the
+    /// ops endpoint, tracing is observational: the traced run is
+    /// byte-identical to a plain one.
+    pub fn trace_out(mut self, path: impl Into<PathBuf>) -> Scenario {
+        self.trace_out = Some(path.into());
+        self
+    }
+
     /// The resolved config (inspection / serialization).
     pub fn config(&self) -> &ExperimentConfig {
         &self.cfg
@@ -371,11 +396,30 @@ impl Scenario {
     /// serving the ops endpoint when [`Self::ops_listen`] is set.
     /// Identical [`RunResult`] shape on every backend.
     pub fn run(self) -> Result<RunResult> {
+        self.run_observed(&mut [])
+    }
+
+    /// Like [`Self::run`], with caller-supplied [`RunObserver`]s attached
+    /// to the round-boundary event stream (in slice order, ahead of any
+    /// [`Self::trace_out`] writer). This is how the CLI streams its CSV
+    /// trace ([`crate::metrics::ReportSink`]) from the same events the
+    /// ops endpoint consumes.
+    pub fn run_observed(mut self, observers: &mut [&mut dyn RunObserver]) -> Result<RunResult> {
         let server = match &self.ops_listen {
-            Some(addr) => Some(OpsServer::bind(addr.as_str())?),
-            None => None,
+            Some(addr) => Some(OpsServer::bind_with_token(
+                addr.as_str(),
+                self.ops_token.take(),
+            )?),
+            None => {
+                anyhow::ensure!(
+                    self.ops_token.is_none(),
+                    "ops_token without ops_listen: the token guards the ops endpoint, \
+                     which this run does not serve"
+                );
+                None
+            }
         };
-        self.run_inner(server)
+        self.run_inner(server, observers)
     }
 
     /// Like [`Self::run`], but serve the ops endpoint on an
@@ -383,10 +427,19 @@ impl Scenario {
     /// OS-assigned port (`OpsServer::bind("127.0.0.1:0")`, read
     /// [`OpsServer::local_addr`], then hand the server over).
     pub fn run_with_ops(self, server: OpsServer) -> Result<RunResult> {
-        self.run_inner(Some(server))
+        anyhow::ensure!(
+            self.ops_token.is_none(),
+            "ops_token is applied at bind time: either use ops_listen + ops_token, or \
+             bind yourself with OpsServer::bind_with_token and pass the server here"
+        );
+        self.run_inner(Some(server), &mut [])
     }
 
-    fn run_inner(self, ops_server: Option<OpsServer>) -> Result<RunResult> {
+    fn run_inner(
+        self,
+        ops_server: Option<OpsServer>,
+        observers: &mut [&mut dyn RunObserver],
+    ) -> Result<RunResult> {
         self.cfg.validate()?;
         if self.checkpoint_every.is_some() && self.checkpoint_dir.is_none() {
             anyhow::bail!("checkpoint_every(n) requires checkpoint_dir(..)");
@@ -427,7 +480,16 @@ impl Scenario {
             env.set_fate_recording(true);
         }
 
+        // Declared before `ctl` so the borrow it hands over outlives it.
+        let mut trace_writer = self.trace_out.as_ref().map(|p| TraceWriter::new(p.clone()));
+
         let mut ctl = RunControl::new().backend(backend.as_str());
+        for obs in observers.iter_mut() {
+            ctl = ctl.observe_with(&mut **obs);
+        }
+        if let Some(tw) = trace_writer.as_mut() {
+            ctl = ctl.observe_with(tw);
+        }
         if let Some(dir) = &self.checkpoint_dir {
             ctl = ctl.checkpoints(CheckpointPlan {
                 dir: dir.clone(),
@@ -497,6 +559,20 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("checkpoint_dir"), "{err}");
+    }
+
+    #[test]
+    fn ops_token_without_listen_is_rejected() {
+        let err = Scenario::task1()
+            .mock()
+            .rounds(1)
+            .clients(8)
+            .edges(2)
+            .ops_token("s3cret")
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ops_listen"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,632 @@
+//! Round-phase tracing spans and latency histograms.
+//!
+//! The paper's headline claims are distributional — round length cut up
+//! to 12×, device energy up to 58% — so point gauges are not enough to
+//! see *where* a round spends its time or how the straggler tail
+//! behaves. This module provides the observability substrate, with no
+//! new dependencies:
+//!
+//! * **[`SpanRecorder`]** — a per-round span log owned by the
+//!   environment's `World`. Both backends (and the protocols running on
+//!   them) bracket every round phase — churn step, selection, fate
+//!   draw, train+fold, regional aggregation, cloud aggregation,
+//!   checkpoint — with a [`Phase`]-tagged [`Span`]. Each span carries
+//!   two durations with very different contracts (env contract point
+//!   8):
+//!
+//!   - `virtual_s` — the **virtual-clock** duration the protocol
+//!     charges the phase (round length for train+fold, the cloud↔edge
+//!     RTT for cloud aggregation, zero for bookkeeping phases). This
+//!     is protocol-visible, deterministic in the seed, and identical
+//!     across hosts.
+//!   - `wall_s` / `start_wall_s` — **host wall time**, profiling-only.
+//!     It never enters `RoundTrace`, `RunResult`, `EnvState`,
+//!     snapshots, or fingerprints, so it can vary freely between runs
+//!     without perturbing byte-identity.
+//!
+//! * **[`Histo`]** — a fixed log₂-bucket histogram: mergeable,
+//!   quantile-queryable, rendered straight into Prometheus
+//!   `histogram`-type exposition (`_bucket`/`_sum`/`_count` with
+//!   cumulative `le` labels). The ops server aggregates round-length,
+//!   per-region submission-latency, and per-phase duration histograms
+//!   from the span stream.
+//!
+//! * **[`TraceWriter`]** — a [`RunObserver`] that renders every span as
+//!   a Chrome trace-event *complete event* (`"ph":"X"`, microsecond
+//!   timestamps, `pid` = region) and writes one JSON file on
+//!   [`RunEvent::RunFinished`]. Load it in Perfetto / `chrome://tracing`
+//!   for flamegraph-style round profiling. On the CLI: `--trace-out
+//!   FILE`.
+//!
+//! Spans are recorded unconditionally (the recorder costs one `Vec`
+//! push per phase and consumes **zero** RNG draws), then drained by the
+//! driver at each round boundary and handed to observers via
+//! [`RunEvent::RoundClosed`]. Nothing here feeds back into the run:
+//! a traced, histogrammed, ops-attached run is byte-identical to a
+//! plain one (pinned in `tests/ops_control.rs`).
+//!
+//! [`RunObserver`]: crate::ops::RunObserver
+//! [`RunEvent::RoundClosed`]: crate::ops::RunEvent::RoundClosed
+//! [`RunEvent::RunFinished`]: crate::ops::RunEvent::RunFinished
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::jsonx::Json;
+use crate::ops::{RunEvent, RunObserver};
+use crate::Result;
+
+/// A round phase — the tracing vocabulary. Every span names one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// World dynamics step (churn) at the round boundary.
+    ChurnStep,
+    /// Client selection (strategy counts + pick rule).
+    Selection,
+    /// Ground-truth fate draw for the selected set.
+    FateDraw,
+    /// Local training + streaming fold (the bulk of the round).
+    TrainFold,
+    /// Regional (edge) aggregation finisher.
+    RegionalAgg,
+    /// Cloud aggregation (EDC-weighted or FedAvg recombination).
+    CloudAgg,
+    /// Snapshot capture + write (scheduled or `checkpoint-now`).
+    Checkpoint,
+}
+
+impl Phase {
+    /// Every phase, in fixed index order (the histogram-vector layout).
+    pub const ALL: [Phase; 7] = [
+        Phase::ChurnStep,
+        Phase::Selection,
+        Phase::FateDraw,
+        Phase::TrainFold,
+        Phase::RegionalAgg,
+        Phase::CloudAgg,
+        Phase::Checkpoint,
+    ];
+
+    /// Stable label — Prometheus `phase` label value and Chrome event name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::ChurnStep => "churn_step",
+            Phase::Selection => "selection",
+            Phase::FateDraw => "fate_draw",
+            Phase::TrainFold => "train_fold",
+            Phase::RegionalAgg => "regional_agg",
+            Phase::CloudAgg => "cloud_agg",
+            Phase::Checkpoint => "checkpoint",
+        }
+    }
+
+    /// Position in [`Phase::ALL`].
+    pub fn index(self) -> usize {
+        Phase::ALL
+            .iter()
+            .position(|p| *p == self)
+            .expect("Phase::ALL covers every variant")
+    }
+}
+
+/// An open span: captured wall-clock start. Create with
+/// [`SpanStart::begin`] *before* the phase runs, close with
+/// [`SpanRecorder::finish`] after — the start handle deliberately does
+/// not borrow the recorder, so phases that need `&mut` world access
+/// (i.e. all of them) can hold one across the work.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanStart {
+    at: Instant,
+}
+
+impl SpanStart {
+    pub fn begin() -> SpanStart {
+        SpanStart { at: Instant::now() }
+    }
+}
+
+/// One closed span.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub phase: Phase,
+    /// Region the phase ran for; `None` for fleet/coordinator scope.
+    pub region: Option<usize>,
+    /// Virtual-clock seconds the protocol charges this phase
+    /// (protocol-visible, deterministic).
+    pub virtual_s: f64,
+    /// Host wall seconds the phase took (profiling-only).
+    pub wall_s: f64,
+    /// Host wall seconds from the recorder's epoch to the span start
+    /// (profiling-only; the Chrome-trace `ts`).
+    pub start_wall_s: f64,
+}
+
+/// Every span of one round, plus the round's per-region submission
+/// latencies (virtual seconds from round start to each in-time model's
+/// arrival at its edge) — the raw material for the ops histograms.
+#[derive(Clone, Debug)]
+pub struct RoundSpans {
+    /// The round index the spans belong to.
+    pub t: usize,
+    pub spans: Vec<Span>,
+    /// `submissions[r]` = completion time of every in-time submission
+    /// from region `r`, in fold order.
+    pub submissions: Vec<Vec<f64>>,
+}
+
+impl RoundSpans {
+    /// An empty span set for round `t`.
+    pub fn empty(t: usize) -> RoundSpans {
+        RoundSpans {
+            t,
+            spans: Vec::new(),
+            submissions: Vec::new(),
+        }
+    }
+}
+
+/// The per-`World` span log. Always on — recording costs one `Vec` push
+/// per phase, consumes no RNG, and its contents are observer-side state:
+/// they ride [`crate::ops::RunEvent::RoundClosed`] but never enter
+/// `RoundTrace`, `EnvState`, snapshots, or fingerprints.
+#[derive(Debug)]
+pub struct SpanRecorder {
+    /// Wall-clock epoch all `start_wall_s` offsets are relative to.
+    epoch: Instant,
+    round: RoundSpans,
+}
+
+impl Default for SpanRecorder {
+    fn default() -> Self {
+        SpanRecorder::new()
+    }
+}
+
+impl SpanRecorder {
+    pub fn new() -> SpanRecorder {
+        SpanRecorder {
+            epoch: Instant::now(),
+            round: RoundSpans::empty(0),
+        }
+    }
+
+    /// Start round `t`'s span set. Spans recorded since the last drain
+    /// (a `checkpoint-now` serviced at the previous round boundary) are
+    /// kept and attributed to round `t`; a checkpoint at the *final*
+    /// boundary has no next round and is dropped — an accepted gap,
+    /// since the profile it would describe is the run teardown.
+    pub fn begin_round(&mut self, t: usize) {
+        self.round.t = t;
+    }
+
+    /// Close a span opened with [`SpanStart::begin`].
+    pub fn finish(&mut self, start: SpanStart, phase: Phase, region: Option<usize>, virtual_s: f64) {
+        let now = Instant::now();
+        self.round.spans.push(Span {
+            phase,
+            region,
+            virtual_s,
+            wall_s: now.saturating_duration_since(start.at).as_secs_f64(),
+            start_wall_s: start.at.saturating_duration_since(self.epoch).as_secs_f64(),
+        });
+    }
+
+    /// Record one in-time submission's completion latency for `region`.
+    pub fn record_submission(&mut self, region: usize, latency_s: f64) {
+        if self.round.submissions.len() <= region {
+            self.round.submissions.resize(region + 1, Vec::new());
+        }
+        self.round.submissions[region].push(latency_s);
+    }
+
+    /// Drain the current round's spans (the driver calls this once per
+    /// round boundary and hands the result to observers).
+    pub fn take_round(&mut self) -> RoundSpans {
+        let t = self.round.t;
+        std::mem::replace(&mut self.round, RoundSpans::empty(t))
+    }
+}
+
+/// Number of finite buckets in a [`Histo`]. Bounds span 2⁻²⁰ s (~1 µs)
+/// to 2¹⁹ s (~6 days) in exact powers of two — wide enough for both
+/// wall-time microprofiles and multi-hour virtual rounds.
+pub const HISTO_BUCKETS: usize = 40;
+
+/// Upper bounds (inclusive, `le` semantics) of the finite buckets.
+/// Powers of two are exactly representable in f64, so bucket assignment
+/// is deterministic across hosts — no float log, no libm.
+pub const HISTO_BOUNDS: [f64; HISTO_BUCKETS] = histo_bounds();
+
+const fn histo_bounds() -> [f64; HISTO_BUCKETS] {
+    let mut b = [0.0; HISTO_BUCKETS];
+    // 2^-20 exactly.
+    let mut bound = 9.5367431640625e-7;
+    let mut i = 0;
+    while i < HISTO_BUCKETS {
+        b[i] = bound;
+        bound *= 2.0;
+        i += 1;
+    }
+    b
+}
+
+/// A fixed log₂-bucket histogram: mergeable, quantile-queryable, and
+/// renderable as a Prometheus `histogram` family. Values are seconds.
+///
+/// Semantics:
+/// * `NaN` observations are ignored entirely (they are not a duration);
+/// * negative observations clamp to `0.0` (land in the first bucket);
+/// * `+∞` (and anything above the top bound) lands in the overflow
+///   bucket and is excluded from `sum`, which stays finite.
+#[derive(Clone, Debug)]
+pub struct Histo {
+    /// Finite buckets `..HISTO_BUCKETS`, then one overflow (+Inf) bucket.
+    counts: [u64; HISTO_BUCKETS + 1],
+    count: u64,
+    sum: f64,
+}
+
+impl Default for Histo {
+    fn default() -> Self {
+        Histo::new()
+    }
+}
+
+impl Histo {
+    pub fn new() -> Histo {
+        Histo {
+            counts: [0; HISTO_BUCKETS + 1],
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Record one observation (seconds).
+    pub fn record(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        let v = v.max(0.0);
+        let idx = HISTO_BOUNDS.partition_point(|b| *b < v);
+        self.counts[idx] += 1;
+        self.count += 1;
+        if v.is_finite() {
+            self.sum += v;
+        }
+    }
+
+    /// Fold another histogram into this one. Merging is associative and
+    /// commutative (integer counts; f64 sums agree to rounding).
+    pub fn merge(&mut self, other: &Histo) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Upper bucket bound containing the `q`-quantile observation
+    /// (`q` clamped to `[0, 1]`); `None` when empty, `+∞` when the
+    /// rank lands in the overflow bucket. The true value is bracketed
+    /// by the returned bound and the previous bucket's bound.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(if i < HISTO_BUCKETS {
+                    HISTO_BOUNDS[i]
+                } else {
+                    f64::INFINITY
+                });
+            }
+        }
+        Some(f64::INFINITY)
+    }
+
+    /// Render as one Prometheus histogram series: cumulative
+    /// `NAME_bucket{LABELS,le="..."}` lines (empty buckets elided except
+    /// the mandatory `+Inf`), then `NAME_sum` / `NAME_count`. `labels`
+    /// is either empty or a ready `key="value"` list without braces.
+    pub fn render_into(&self, out: &mut String, name: &str, labels: &str) {
+        use std::fmt::Write as _;
+        let sep = if labels.is_empty() { "" } else { "," };
+        let mut cum = 0u64;
+        for (i, c) in self.counts[..HISTO_BUCKETS].iter().enumerate() {
+            cum += c;
+            if *c != 0 {
+                let _ = writeln!(
+                    out,
+                    "{name}_bucket{{{labels}{sep}le=\"{}\"}} {cum}",
+                    HISTO_BOUNDS[i]
+                );
+            }
+        }
+        let _ = writeln!(
+            out,
+            "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}",
+            self.count
+        );
+        if labels.is_empty() {
+            let _ = writeln!(out, "{name}_sum {}", self.sum);
+            let _ = writeln!(out, "{name}_count {}", self.count);
+        } else {
+            let _ = writeln!(out, "{name}_sum{{{labels}}} {}", self.sum);
+            let _ = writeln!(out, "{name}_count{{{labels}}} {}", self.count);
+        }
+    }
+}
+
+/// A [`RunObserver`] that accumulates every round's spans as Chrome
+/// trace-event *complete events* and writes one JSON file at run end —
+/// loadable in Perfetto / `chrome://tracing`. `pid` 0 is the
+/// coordinator; region-scoped spans get `pid` = region + 1 (named via
+/// `process_name` metadata events). Timestamps are host wall time in
+/// microseconds (profiling-only — the file is an artifact, never part
+/// of the result).
+pub struct TraceWriter {
+    path: PathBuf,
+    events: Vec<Json>,
+    /// Highest region pid seen, for the process_name metadata.
+    max_region: Option<usize>,
+}
+
+impl TraceWriter {
+    pub fn new(path: impl Into<PathBuf>) -> TraceWriter {
+        TraceWriter {
+            path: path.into(),
+            events: Vec::new(),
+            max_region: None,
+        }
+    }
+
+    fn push_span(&mut self, t: usize, span: &Span) {
+        let pid = match span.region {
+            Some(r) => {
+                self.max_region = Some(self.max_region.map_or(r, |m| m.max(r)));
+                r + 1
+            }
+            None => 0,
+        };
+        self.events.push(
+            Json::obj()
+                .set("name", span.phase.as_str())
+                .set("ph", "X")
+                .set("ts", span.start_wall_s * 1e6)
+                .set("dur", (span.wall_s * 1e6).max(1.0))
+                .set("pid", pid)
+                .set("tid", 0usize)
+                .set(
+                    "args",
+                    Json::obj()
+                        .set("round", t)
+                        .set("virtual_s", span.virtual_s),
+                ),
+        );
+    }
+
+    fn write(&self) -> Result<()> {
+        let mut events = Vec::with_capacity(self.events.len() + 8);
+        let meta = |pid: usize, name: &str| {
+            Json::obj()
+                .set("name", "process_name")
+                .set("ph", "M")
+                .set("pid", pid)
+                .set("tid", 0usize)
+                .set("args", Json::obj().set("name", name))
+        };
+        events.push(meta(0, "coordinator"));
+        if let Some(max) = self.max_region {
+            for r in 0..=max {
+                events.push(meta(r + 1, &format!("region {r}")));
+            }
+        }
+        events.extend(self.events.iter().cloned());
+        let doc = Json::obj()
+            .set("traceEvents", Json::Arr(events))
+            .set("displayTimeUnit", "ms");
+        std::fs::write(&self.path, doc.dump()).map_err(|e| {
+            anyhow::anyhow!("writing trace file {}: {e}", self.path.display())
+        })
+    }
+}
+
+impl RunObserver for TraceWriter {
+    fn observe(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+        match ev {
+            RunEvent::RoundClosed { spans, .. } => {
+                for span in &spans.spans {
+                    self.push_span(spans.t, span);
+                }
+            }
+            RunEvent::RunFinished { .. } => self.write()?,
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn bounds_are_exact_powers_of_two() {
+        assert_eq!(HISTO_BOUNDS[0], 2f64.powi(-20));
+        assert_eq!(HISTO_BOUNDS[HISTO_BUCKETS - 1], 2f64.powi(19));
+        for w in HISTO_BOUNDS.windows(2) {
+            assert_eq!(w[1], w[0] * 2.0);
+        }
+    }
+
+    #[test]
+    fn record_places_values_on_le_boundaries() {
+        let mut h = Histo::new();
+        h.record(0.0); // first bucket (clamp floor)
+        h.record(HISTO_BOUNDS[4]); // exactly on a bound ⇒ that bucket (le)
+        h.record(HISTO_BOUNDS[4] * 1.0000001); // just above ⇒ next bucket
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[4], 1);
+        assert_eq!(h.counts[5], 1);
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn nan_ignored_negative_clamped_inf_overflows() {
+        let mut h = Histo::new();
+        h.record(f64::NAN);
+        assert!(h.is_empty());
+        h.record(-3.0);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.sum(), 0.0);
+        h.record(f64::INFINITY);
+        h.record(1e12); // above the top bound
+        assert_eq!(h.counts[HISTO_BUCKETS], 2);
+        assert_eq!(h.count(), 3);
+        assert!(h.sum().is_finite(), "overflow values must not poison sum");
+    }
+
+    /// Merge is associative and agrees with recording everything into
+    /// one histogram, over arbitrary (dyadic, exactly-representable)
+    /// observation streams.
+    #[test]
+    fn merge_associativity_property() {
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let draws: Vec<f64> = (0..60)
+                // Dyadic values: k / 2^10 with k ∈ [0, 2^24) — sums are
+                // exact in f64, so equality (not approx) must hold.
+                .map(|_| (rng.uniform() * (1 << 24) as f64).floor() / 1024.0)
+                .collect();
+            let (a, rest) = draws.split_at(20);
+            let (b, c) = rest.split_at(20);
+            let histo_of = |vals: &[f64]| {
+                let mut h = Histo::new();
+                for &v in vals {
+                    h.record(v);
+                }
+                h
+            };
+            let (ha, hb, hc) = (histo_of(a), histo_of(b), histo_of(c));
+
+            // (a ⊕ b) ⊕ c
+            let mut left = ha.clone();
+            left.merge(&hb);
+            left.merge(&hc);
+            // a ⊕ (b ⊕ c)
+            let mut bc = hb.clone();
+            bc.merge(&hc);
+            let mut right = ha.clone();
+            right.merge(&bc);
+            // direct
+            let all = histo_of(&draws);
+
+            assert_eq!(left.counts, right.counts);
+            assert_eq!(left.count(), right.count());
+            assert_eq!(left.sum(), right.sum());
+            assert_eq!(left.counts, all.counts);
+            assert_eq!(left.sum(), all.sum());
+        }
+    }
+
+    /// quantile() returns a bucket upper bound that brackets the true
+    /// order statistic: value ≤ bound and value > previous bound.
+    #[test]
+    fn quantile_brackets_true_order_statistic() {
+        let mut rng = Rng::new(7);
+        for _ in 0..30 {
+            let mut vals: Vec<f64> = (0..80).map(|_| rng.uniform() * 100.0).collect();
+            let mut h = Histo::new();
+            for &v in &vals {
+                h.record(v);
+            }
+            vals.sort_by(f64::total_cmp);
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                let bound = h.quantile(q).unwrap();
+                let rank = ((q * vals.len() as f64).ceil() as usize).max(1);
+                let true_v = vals[rank - 1];
+                assert!(true_v <= bound, "q={q}: {true_v} > bound {bound}");
+                let idx = HISTO_BOUNDS.partition_point(|b| *b < bound);
+                if idx > 0 && bound.is_finite() {
+                    assert!(
+                        true_v > HISTO_BOUNDS[idx - 1] || true_v == 0.0 || idx == 0,
+                        "q={q}: {true_v} not in ({}, {bound}]",
+                        HISTO_BOUNDS[idx - 1]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_empty_and_overflow() {
+        let h = Histo::new();
+        assert_eq!(h.quantile(0.5), None);
+        let mut h = Histo::new();
+        h.record(1e12);
+        assert_eq!(h.quantile(0.5), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn render_is_cumulative_and_ends_with_inf() {
+        let mut h = Histo::new();
+        h.record(0.5);
+        h.record(0.5);
+        h.record(3.0);
+        let mut out = String::new();
+        h.render_into(&mut out, "x_seconds", "region=\"1\"");
+        assert!(out.contains("x_seconds_bucket{region=\"1\",le=\"0.5\"} 2\n"), "{out}");
+        assert!(out.contains("x_seconds_bucket{region=\"1\",le=\"4\"} 3\n"), "{out}");
+        assert!(out.contains("x_seconds_bucket{region=\"1\",le=\"+Inf\"} 3\n"), "{out}");
+        assert!(out.contains("x_seconds_sum{region=\"1\"} 4\n"), "{out}");
+        assert!(out.contains("x_seconds_count{region=\"1\"} 3\n"), "{out}");
+
+        let mut bare = String::new();
+        h.render_into(&mut bare, "y_seconds", "");
+        assert!(bare.contains("y_seconds_bucket{le=\"+Inf\"} 3\n"), "{bare}");
+        assert!(bare.contains("y_seconds_sum 4\n"), "{bare}");
+        assert!(bare.contains("y_seconds_count 3\n"), "{bare}");
+    }
+
+    #[test]
+    fn recorder_drains_per_round_and_consumes_no_rng() {
+        let mut rec = SpanRecorder::new();
+        rec.begin_round(3);
+        let sp = SpanStart::begin();
+        rec.finish(sp, Phase::Selection, None, 0.0);
+        rec.record_submission(1, 2.5);
+        let round = rec.take_round();
+        assert_eq!(round.t, 3);
+        assert_eq!(round.spans.len(), 1);
+        assert_eq!(round.spans[0].phase, Phase::Selection);
+        assert_eq!(round.submissions.len(), 2);
+        assert_eq!(round.submissions[1], vec![2.5]);
+        // Drained: a second take is empty.
+        assert!(rec.take_round().spans.is_empty());
+    }
+
+    #[test]
+    fn phase_index_matches_all_order() {
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+    }
+}

@@ -8,7 +8,14 @@
 //!   byte-identical to the uninterrupted run on both backends, and the
 //!   on-demand snapshot is itself a valid resume point;
 //! * a fault injected over the control socket replays byte-identically
-//!   to the same event pre-scripted as a `ChurnModel::FaultScript`.
+//!   to the same event pre-scripted as a `ChurnModel::FaultScript`;
+//! * the scrape's histogram families (round length, per-region
+//!   submission latency, per-phase duration) hold `_sum`/`_count`
+//!   value-exact against the round trace, and neither histograms nor
+//!   `--trace-out` Chrome-trace export perturb the run on either
+//!   backend;
+//! * a configured `--ops-token` gates both the scrape (`?token=`) and
+//!   control sessions (`auth TOKEN` first line).
 //!
 //! Sequencing is deterministic without polling: commands sent before the
 //! run starts queue in the server's channel and are serviced at the first
@@ -368,4 +375,252 @@ fn snapshot_after_injection_carries_the_injected_fault() {
         .unwrap();
     assert_eq!(run_result_bytes(&injected), run_result_bytes(&resumed));
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Tentpole acceptance: scrape a run paused at the round-1 boundary and
+/// hold the histogram families' `_sum`/`_count` value-exact against the
+/// round trace (f64 `Display` is shortest-round-trip, so textual equality
+/// is bit equality) — and pin that the histogram machinery never perturbs
+/// the run.
+#[test]
+fn histogram_scrape_matches_round_trace() {
+    let cfg = mock_cfg(ProtocolKind::HybridFl);
+    // The cloud-agg span charges exactly the config-derived edge↔cloud
+    // RTT as its virtual duration.
+    let rtt = hybridfl::env::VirtualClockEnv::new(cfg.clone())
+        .unwrap()
+        .t_c2e2c();
+
+    let server = OpsServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+
+    // No rounds closed yet: no histogram families in the scrape.
+    let idle = http_get(addr, "/metrics");
+    assert!(!idle.contains("_bucket{le="), "{idle}");
+
+    let mut ctl = Control::connect(addr);
+    ctl.send("pause"); // lands at the round-1 boundary
+    let run = {
+        let sc = Scenario::from_config(cfg.clone());
+        std::thread::spawn(move || sc.run_with_ops(server).unwrap())
+    };
+    assert_eq!(ctl.recv(), "ok paused");
+
+    let text = http_get(addr, "/metrics");
+    assert_eq!(ctl.cmd("resume"), "ok resumed");
+    let result = run.join().unwrap();
+    let row = &result.rounds[0];
+
+    for needle in [
+        // Round-length family: exactly one observation — round 1.
+        format!("hybridfl_round_length_seconds_sum {}\n", row.round_len),
+        "hybridfl_round_length_seconds_count 1\n".to_string(),
+        "hybridfl_round_length_seconds_bucket{le=\"+Inf\"} 1\n".to_string(),
+        // Per-phase virtual durations: cloud agg charges the RTT,
+        // bookkeeping phases ran exactly once, regional agg once per edge.
+        format!("hybridfl_phase_duration_seconds_sum{{phase=\"cloud_agg\"}} {rtt}\n"),
+        "hybridfl_phase_duration_seconds_count{phase=\"cloud_agg\"} 1\n".to_string(),
+        "hybridfl_phase_duration_seconds_count{phase=\"train_fold\"} 1\n".to_string(),
+        "hybridfl_phase_duration_seconds_count{phase=\"selection\"} 1\n".to_string(),
+        "hybridfl_phase_duration_seconds_count{phase=\"fate_draw\"} 1\n".to_string(),
+        "hybridfl_phase_duration_seconds_count{phase=\"churn_step\"} 1\n".to_string(),
+        "hybridfl_phase_duration_seconds_count{phase=\"regional_agg\"} 2\n".to_string(),
+    ] {
+        assert!(
+            text.contains(needle.as_str()),
+            "missing {needle:?} in scrape:\n{text}"
+        );
+    }
+    // Per-region submission-latency counts equal the trace's submission
+    // counts; a region with zero in-time submissions has no series
+    // (empty histograms are elided, not rendered as zeros).
+    for (r, &subs) in row.submissions.iter().enumerate() {
+        let series = format!("hybridfl_submission_latency_seconds_count{{region=\"{r}\"}}");
+        if subs > 0 {
+            let needle = format!("{series} {subs}\n");
+            assert!(text.contains(&needle), "missing {needle:?} in scrape:\n{text}");
+        } else {
+            assert!(!text.contains(&series), "{text}");
+        }
+    }
+    // Wall-time histograms are present but profiling-only: counts match
+    // the span stream, values are host-dependent and unasserted.
+    assert!(
+        text.contains("hybridfl_phase_wall_seconds_count{phase=\"train_fold\"} 1\n"),
+        "{text}"
+    );
+
+    // Histograms are observer-side state: the run is byte-identical to a
+    // plain one.
+    let plain = Scenario::from_config(cfg).run().unwrap();
+    assert_eq!(run_result_bytes(&plain), run_result_bytes(&result));
+}
+
+/// `--trace-out` writes a parseable Chrome trace-event JSON covering
+/// every round phase, and tracing is byte-invisible to the result — on
+/// both backends.
+#[test]
+fn trace_out_is_valid_chrome_json_and_never_perturbs() {
+    use hybridfl::jsonx::Json;
+
+    let assert_valid_trace = |path: &std::path::Path, n_rounds: usize| {
+        let raw = std::fs::read_to_string(path).unwrap();
+        let doc = Json::parse(&raw).unwrap();
+        let events = match doc.req("traceEvents").unwrap() {
+            Json::Arr(v) => v,
+            other => panic!("traceEvents must be an array, got {other:?}"),
+        };
+        // Phase complete-events: ≥ 7 per round (churn, selection, fate,
+        // train+fold, 2× regional agg, cloud agg) plus metadata events.
+        let complete: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").map(|p| p.as_str().unwrap()) == Some("X"))
+            .collect();
+        assert!(
+            complete.len() >= 7 * n_rounds,
+            "{} complete events for {n_rounds} rounds",
+            complete.len()
+        );
+        for phase in [
+            "churn_step",
+            "selection",
+            "fate_draw",
+            "train_fold",
+            "regional_agg",
+            "cloud_agg",
+        ] {
+            assert!(
+                complete
+                    .iter()
+                    .any(|e| e.get("name").map(|n| n.as_str().unwrap()) == Some(phase)),
+                "no {phase} event in {}",
+                path.display()
+            );
+        }
+        // Region-scoped spans carry pid = region + 1; the metadata names
+        // the coordinator process.
+        assert!(
+            complete
+                .iter()
+                .any(|e| e.get("pid").map(|p| p.as_usize().unwrap()) == Some(2)),
+            "no region-1 (pid 2) span"
+        );
+        assert!(
+            events
+                .iter()
+                .any(|e| e.get("name").map(|n| n.as_str().unwrap()) == Some("process_name")),
+            "missing process_name metadata"
+        );
+    };
+
+    let dir = fresh_dir("hybridfl_trace_out");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Sim backend.
+    let cfg = mock_cfg(ProtocolKind::HybridFl);
+    let plain = Scenario::from_config(cfg.clone()).run().unwrap();
+    let sim_path = dir.join("sim_trace.json");
+    let traced = Scenario::from_config(cfg)
+        .trace_out(&sim_path)
+        .run()
+        .unwrap();
+    assert_eq!(
+        run_result_bytes(&plain),
+        run_result_bytes(&traced),
+        "tracing perturbed the sim run"
+    );
+    assert_valid_trace(&sim_path, traced.rounds.len());
+
+    // Live backend (jitter-safe regime).
+    let mut live_cfg = mock_cfg(ProtocolKind::HybridFl);
+    live_cfg.n_clients = 12;
+    live_cfg.dataset_size = 360;
+    live_cfg.t_max = 3;
+    live_cfg.seed = 42;
+    let plain_live = Scenario::from_config(live_cfg.clone())
+        .backend(Backend::Live)
+        .time_scale(1e-2)
+        .run()
+        .unwrap();
+    let live_path = dir.join("live_trace.json");
+    let traced_live = Scenario::from_config(live_cfg)
+        .backend(Backend::Live)
+        .time_scale(1e-2)
+        .trace_out(&live_path)
+        .run()
+        .unwrap();
+    assert_eq!(
+        run_result_bytes(&plain_live),
+        run_result_bytes(&traced_live),
+        "tracing perturbed the live run"
+    );
+    assert_valid_trace(&live_path, traced_live.rounds.len());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The live backend rejects an injected `migrate` with the typed
+/// sim-only error naming the virtual-clock constraint (matching the
+/// churn/oracle construction-time precedent), instead of a generic
+/// failure.
+#[test]
+fn live_inject_migrate_names_the_virtual_clock_constraint() {
+    let mut cfg = mock_cfg(ProtocolKind::HybridFl);
+    cfg.n_clients = 12;
+    cfg.dataset_size = 360;
+    cfg.t_max = 3;
+    let server = OpsServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let mut ctl = Control::connect(addr);
+    ctl.send("pause");
+    let sc = Scenario::from_config(cfg)
+        .backend(Backend::Live)
+        .time_scale(1e-2);
+    let run = std::thread::spawn(move || sc.run_with_ops(server).unwrap());
+    assert_eq!(ctl.recv(), "ok paused");
+
+    let reply = ctl.cmd(r#"inject {"kind":"migrate","client":3,"at_round":2,"to_region":1}"#);
+    assert!(reply.starts_with("err "), "{reply}");
+    assert!(
+        reply.contains("virtual clock"),
+        "the reply should name the virtual-clock constraint: {reply}"
+    );
+    assert!(reply.contains("migrate"), "{reply}");
+
+    assert_eq!(ctl.cmd("resume"), "ok resumed");
+    run.join().unwrap();
+}
+
+/// A configured token gates both faces of the endpoint: `/metrics` wants
+/// `?token=`, control sessions must open with `auth TOKEN`.
+#[test]
+fn token_gates_scrape_and_control_sessions() {
+    let server = OpsServer::bind_with_token("127.0.0.1:0", Some("s3cret".to_string())).unwrap();
+    let addr = server.local_addr();
+
+    // Scrape: 401 without (or with a wrong) token, body with it.
+    let denied = http_get(addr, "/metrics");
+    assert!(denied.contains("token"), "{denied}");
+    assert!(!denied.contains("hybridfl_round"), "{denied}");
+    let wrong = http_get(addr, "/metrics?token=nope");
+    assert!(!wrong.contains("hybridfl_round"), "{wrong}");
+    let ok = http_get(addr, "/metrics?token=s3cret");
+    assert!(ok.contains("hybridfl_round 0\n"), "{ok}");
+
+    // Control: anything but `auth TOKEN` as the first line is refused
+    // and the session closed.
+    let mut unauth = Control::connect(addr);
+    let reply = unauth.cmd("status");
+    assert!(reply.starts_with("err auth required"), "{reply}");
+    let mut wrong_tok = Control::connect(addr);
+    let reply = wrong_tok.cmd("auth nope");
+    assert!(reply.starts_with("err auth required"), "{reply}");
+
+    let mut authed = Control::connect(addr);
+    assert_eq!(authed.cmd("auth s3cret"), "ok authenticated");
+    // Past the handshake the vocabulary is unchanged; a stray re-auth is
+    // a helpful error served without touching the driver queue.
+    let reply = authed.cmd("auth s3cret");
+    assert!(reply.starts_with("err "), "{reply}");
+    assert!(reply.contains("first line"), "{reply}");
 }
